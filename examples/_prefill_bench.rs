@@ -1,0 +1,21 @@
+fn main() {
+    use codecflow::runtime::{engine::Engine, tensor::Tensor};
+    let eng = Engine::load(&codecflow::config::artifacts_dir()).unwrap();
+    let spec = eng.model_spec("internvl3_sim").unwrap();
+    let (t, d) = (336usize, spec.llm_dim);
+    let emb = vec![0.01f32; t * d];
+    let pos: Vec<i32> = (0..t as i32).collect();
+    let inputs = [
+        Tensor::f32(&[t, d], emb),
+        Tensor::i32(&[t], pos),
+        Tensor::f32(&[t], vec![1.0; t]),
+        Tensor::scalar_i32(t as i32 - 1),
+    ];
+    let _ = eng.execute("internvl3_sim", "prefill_full_t336", &inputs).unwrap(); // compile+warm
+    let mut total = 0.0;
+    for _ in 0..10 {
+        let (_, s) = eng.execute_timed("internvl3_sim", "prefill_full_t336", &inputs).unwrap();
+        total += s;
+    }
+    println!("prefill_full_t336 mean: {:.2}ms", total / 10.0 * 1e3);
+}

@@ -1,0 +1,80 @@
+//! Codec substrate inspector: encodes a clip, then dumps per-frame
+//! codec metadata (frame types, bits, MV field statistics, residuals)
+//! and the patch-level motion masks + pruning decisions they induce —
+//! a debugging lens on the exact signal CodecFlow consumes.
+//!
+//! Run: `cargo run --release --example codec_inspect`
+
+use codecflow::codec::decoder::Decoder;
+use codecflow::codec::encoder::{encode_sequence, EncoderConfig};
+use codecflow::codec::jpeg;
+use codecflow::util::table::Table;
+use codecflow::video::{Corpus, CorpusConfig};
+use codecflow::vision::analyzer::MotionAnalyzer;
+use codecflow::vision::layout::PatchLayout;
+use codecflow::vision::pruner::{PrunerConfig, TokenPruner};
+
+fn main() {
+    let corpus = Corpus::generate(CorpusConfig {
+        videos: 3,
+        frames_per_video: 32,
+        ..Default::default()
+    });
+    let clip = corpus
+        .clips
+        .iter()
+        .find(|c| c.is_anomalous())
+        .unwrap_or(&corpus.clips[0]);
+    println!(
+        "clip {} ({} motion), anomaly={:?}",
+        clip.id,
+        clip.motion.name(),
+        clip.event
+    );
+
+    let (bits, _) = encode_sequence(&clip.frames, EncoderConfig::default());
+    let jpeg_total: usize = clip.frames.iter().map(|f| jpeg::encode(f, 6).len()).sum();
+    println!(
+        "bitstream: {} bytes vs per-frame JPEG: {} bytes ({:.1}x smaller)\n",
+        bits.len(),
+        jpeg_total,
+        jpeg_total as f64 / bits.len() as f64
+    );
+
+    let layout = PatchLayout::new(64, 64, 8, 2);
+    let analyzer = MotionAnalyzer::default();
+    let mut pruner = TokenPruner::new(layout, PrunerConfig::default());
+
+    let mut dec = Decoder::new(bits).expect("header");
+    let mut t = Table::new(
+        "per-frame codec metadata + pruning decisions (tau=0.25)",
+        &["frame", "type", "bytes", "max|MV|", "mean SAD", "retained", "pruned%"],
+    );
+    let mut idx = 0;
+    while let Some((frame, meta)) = dec.next_frame().expect("decode") {
+        let psnr = clip.frames[idx].psnr(&frame);
+        assert!(psnr > 25.0, "decode quality");
+        let max_mv = meta.mvs.iter().map(|m| m.magnitude()).fold(0.0f32, f32::max);
+        let mean_sad = if meta.residual_sad.is_empty() {
+            0.0
+        } else {
+            meta.residual_sad.iter().sum::<u32>() as f64 / meta.residual_sad.len() as f64
+        };
+        let mask = analyzer.analyze(&layout, &meta);
+        let sel = pruner.select(&mask);
+        t.row(&[
+            format!("{idx}"),
+            format!("{:?}", meta.frame_type),
+            format!("{}", meta.bits / 8),
+            format!("{max_mv:.2}"),
+            format!("{mean_sad:.0}"),
+            format!("{}/{}", sel.groups.len(), sel.total_groups),
+            format!("{:.0}%", sel.pruned_token_ratio() * 100.0),
+        ]);
+        idx += 1;
+        if idx >= 20 {
+            break;
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,79 @@
+//! Quickstart: the minimal CodecFlow round trip.
+//!
+//! Generates one synthetic surveillance clip, encodes it with the
+//! inter-frame codec, serves it through the CodecFlow pipeline
+//! (codec-guided pruning + selective KVC refresh on the real PJRT
+//! engine), and prints per-window answers and stage timings.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use codecflow::baselines::Variant;
+use codecflow::config::{artifacts_dir, PipelineConfig};
+use codecflow::coordinator::session::StreamSession;
+use codecflow::runtime::engine::Engine;
+use codecflow::video::{Corpus, CorpusConfig};
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    println!("loaded engine with models: {:?}", engine.model_names());
+
+    // One anomalous clip from the synthetic corpus.
+    let corpus = Corpus::generate(CorpusConfig {
+        videos: 3,
+        frames_per_video: 48,
+        ..Default::default()
+    });
+    let clip = corpus
+        .clips
+        .iter()
+        .find(|c| c.is_anomalous())
+        .unwrap_or(&corpus.clips[0]);
+    println!(
+        "clip {}: {} frames, motion={}, anomaly={:?}",
+        clip.id,
+        clip.frames.len(),
+        clip.motion.name(),
+        clip.event
+    );
+
+    let cfg = PipelineConfig::default();
+    let mut session = StreamSession::new(
+        0,
+        &engine,
+        "internvl3_sim",
+        Variant::CodecFlow,
+        &cfg,
+        &clip.frames,
+    );
+
+    println!(
+        "\n{:>3} {:>11} {:>7} {:>7} {:>7} {:>9} {:>10} answer",
+        "win", "frames", "tokens", "reused", "pruned", "lat(ms)", "GFLOPs"
+    );
+    while let Some(r) = session.step() {
+        println!(
+            "{:>3} {:>5}..{:<5} {:>7} {:>7} {:>6.0}% {:>9.1} {:>10.2} ids={:?}",
+            session.next_window_idx() - 1,
+            r.start,
+            r.end,
+            r.seq_tokens,
+            r.reused_tokens,
+            r.pruned_ratio * 100.0,
+            r.times.total() * 1e3,
+            r.flops as f64 / 1e9,
+            r.decoded_ids,
+        );
+    }
+    let stats = engine.stats.borrow();
+    println!(
+        "\nengine: {} compiles ({:.2}s), exec families: {:?}",
+        stats.compiles,
+        stats.compile_s,
+        stats.families.keys().collect::<Vec<_>>()
+    );
+}

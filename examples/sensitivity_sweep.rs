@@ -1,0 +1,20 @@
+//! Sensitivity sweep driver: regenerates the paper's §6.3 analysis
+//! (stride ratio, MV threshold, GOP size) in one run, printing the
+//! combined accuracy-latency trade-off tables.
+//!
+//! Run: `cargo run --release --example sensitivity_sweep`
+//! Env: CF_VIDEOS / CF_FRAMES control corpus size.
+
+fn main() {
+    let dir = codecflow::config::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    println!("=== Fig 16: stride ratio ===");
+    codecflow::exp::fig16::run();
+    println!("\n=== Fig 17: MV threshold ===");
+    codecflow::exp::fig17::run();
+    println!("\n=== Fig 18: GOP size ===");
+    codecflow::exp::fig18::run();
+}

@@ -1,0 +1,95 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Loads the real small model (AOT artifacts on PJRT), serves batched
+//! multi-stream surveillance traffic through the full coordinator
+//! (admission queue, backpressure, KV pool), for both Full-Comp and
+//! CodecFlow, and reports latency/throughput plus video-level
+//! anomaly-detection accuracy via the calibrated probe.
+//!
+//! Run: `cargo run --release --example streaming_surveillance`
+//! Env: CF_STREAMS (default 4), CF_FRAMES (default 60), CF_MODEL.
+
+use codecflow::baselines::Variant;
+use codecflow::config::{artifacts_dir, env_usize, ServingConfig};
+use codecflow::coordinator::serve::Server;
+use codecflow::exp::common::{quick_experiment_cfg, Harness};
+use codecflow::runtime::engine::Engine;
+use codecflow::util::table::Table;
+use codecflow::video::{Corpus, CorpusConfig};
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let model =
+        std::env::var("CF_MODEL").unwrap_or_else(|_| "internvl3_sim".to_string());
+    let streams = env_usize("CF_STREAMS", 4);
+    let frames = env_usize("CF_FRAMES", 60);
+
+    let engine = Engine::load(&dir).expect("engine");
+    let corpus = Corpus::generate(CorpusConfig {
+        videos: streams,
+        frames_per_video: frames,
+        ..Default::default()
+    });
+    let clips: Vec<Vec<codecflow::codec::types::Frame>> =
+        corpus.clips.iter().map(|c| c.frames.clone()).collect();
+
+    let cfg = ServingConfig::default();
+    let server = Server::new(&engine, &model, cfg.clone());
+    let fps = 2.0;
+
+    let mut t = Table::new(
+        &format!("streaming_surveillance — {streams} streams x {frames} frames, {model}"),
+        &["Variant", "windows", "mean lat(ms)", "p90(ms)", "queue p90(ms)",
+          "dropped", "evictions", "streams/executor", "GFLOPs"],
+    );
+    let mut reports = Vec::new();
+    for variant in [Variant::FullComp, Variant::CodecFlow] {
+        let report = server.run(&clips, variant, fps);
+        let lat = report.metrics.latency_summary();
+        let q = codecflow::util::stats::Summary::of(&report.metrics.queue_delay);
+        t.row(&[
+            variant.name().to_string(),
+            format!("{}", report.metrics.windows()),
+            format!("{:.1}", lat.mean * 1e3),
+            format!("{:.1}", lat.p90 * 1e3),
+            format!("{:.1}", q.p90 * 1e3),
+            format!("{}", report.metrics.dropped),
+            format!("{}", report.metrics.kv_evictions),
+            format!("{:.1}", report.sustainable_streams),
+            format!("{:.1}", report.metrics.flops as f64 / 1e9),
+        ]);
+        reports.push((variant, report));
+    }
+    t.print();
+
+    let speedup = reports[0].1.metrics.latency_summary().mean
+        / reports[1].1.metrics.latency_summary().mean;
+    println!("end-to-end serving speedup (CodecFlow vs Full-Comp): {speedup:.2}x");
+    println!(
+        "throughput: {:.1} -> {:.1} sustainable streams per executor\n",
+        reports[0].1.sustainable_streams, reports[1].1.sustainable_streams
+    );
+
+    // Accuracy on the same corpus through the experiment harness
+    // (calibrated probe, video-level F1).
+    println!("accuracy check (probe-calibrated, video-level):");
+    if let Some(mut h) = Harness::with_cfg(quick_experiment_cfg()) {
+        let labels = h.video_labels();
+        let cfg = h.cfg.pipeline.clone();
+        for variant in [Variant::FullComp, Variant::CodecFlow] {
+            let ev = h.run_variant(&model, variant, &cfg);
+            let m = ev.video_prf1(&labels);
+            println!(
+                "  {:>10}: precision={:.2} recall={:.2} f1={:.2}",
+                variant.name(),
+                m.precision(),
+                m.recall(),
+                m.f1()
+            );
+        }
+    }
+}

@@ -1,0 +1,321 @@
+"""AOT pipeline: lower every (artifact x bucket) to HLO text + manifest.
+
+Run once via `make artifacts` (python never executes on the request
+path). Outputs, under `artifacts/`:
+
+  <model>/<family>_<bucket>.hlo.txt   HLO text modules (the interchange
+                                      format — xla_extension 0.5.1
+                                      rejects jax>=0.5 serialized protos,
+                                      the text parser reassigns ids)
+  weights_<model>.bin                 deterministic parameters (params.py)
+  manifest.json                       everything the rust runtime needs:
+                                      model dims, artifact files, ordered
+                                      parameter lists, input/output specs
+  golden/<model>.json                 small input/output vectors for the
+                                      rust integration tests (checksums
+                                      for large tensors)
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models a,b] [--force]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import MODELS, prompt_ids, YES_TOKEN, NO_TOKEN
+from . import model as M
+from . import params as P
+
+F32, I32 = "f32", "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=np.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _iospec(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class ArtifactBuilder:
+    def __init__(self, cfg, params, out_dir, force):
+        self.cfg = cfg
+        self.params = params
+        self.out_dir = out_dir
+        self.force = force
+        self.entries = []
+        os.makedirs(os.path.join(out_dir, cfg.name), exist_ok=True)
+
+    def build(self, name, fn, param_names, act_specs, inputs, outputs, bucket):
+        """Lower fn(params..., *activations) and record a manifest entry."""
+        rel = f"{self.cfg.name}/{name}.hlo.txt"
+        path = os.path.join(self.out_dir, rel)
+        self.entries.append({
+            "model": self.cfg.name,
+            "name": name,
+            "file": rel,
+            "params": param_names,
+            "inputs": inputs,
+            "outputs": outputs,
+            "bucket": bucket,
+        })
+        if os.path.exists(path) and not self.force:
+            return
+        pspecs = [_spec(self.params[n].shape, self.params[n].dtype)
+                  for n in param_names]
+        lowered = jax.jit(fn).lower(*(pspecs + act_specs))
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {rel} ({len(text) // 1024} KiB)")
+
+
+def build_model_artifacts(cfg, out_dir, force):
+    print(f"[{cfg.name}] generating parameters + artifacts")
+    params = P.make_params(cfg)
+    P.save_weights(os.path.join(out_dir, f"weights_{cfg.name}.bin"), params)
+    b = ArtifactBuilder(cfg, params, out_dir, force)
+
+    vit_names = P.vit_param_names(cfg)
+    llm_names = P.llm_param_names(cfg)
+    llm_embed_names = P.llm_param_names(cfg, embed=True)
+    nvp, ld, hd = len(vit_names), cfg.llm_dim, cfg.head_dim
+    L, H, V = cfg.llm_layers, cfg.llm_heads, cfg.vocab
+
+    # --- vit_encode buckets -------------------------------------------
+    for n in cfg.vit_buckets:
+        g = cfg.merge * cfg.merge
+
+        def fn(*args, n=n):
+            plist = list(args[:nvp])
+            patches, pos_ids, mask = args[nvp:]
+            return (M.vit_encode(cfg, plist, patches, pos_ids, mask),)
+
+        b.build(
+            f"vit_encode_n{n}", fn, vit_names,
+            [_spec((n, cfg.patch_dim)), _spec((n,), np.int32), _spec((n,))],
+            inputs=[_iospec("patches", (n, cfg.patch_dim)),
+                    _iospec("pos_ids", (n,), I32), _iospec("mask", (n,))],
+            outputs=[_iospec("tokens", (n // g, ld))],
+            bucket={"n": n},
+        )
+
+    # --- embed_text ----------------------------------------------------
+    s = cfg.text_len
+
+    def fn_embed(tok_embed, ids):
+        return (M.embed_text(cfg, [tok_embed], ids),)
+
+    b.build(
+        "embed_text", fn_embed, ["llm.tok_embed"],
+        [_spec((s,), np.int32)],
+        inputs=[_iospec("ids", (s,), I32)],
+        outputs=[_iospec("emb", (s, ld))],
+        bucket={"s": s},
+    )
+
+    # --- prefill_full buckets -------------------------------------------
+    nlp = len(llm_names)
+    for t in cfg.prefill_buckets:
+        def fn(*args, t=t):
+            plist = list(args[:nlp])
+            emb, pos, mask, last_idx = args[nlp:]
+            return M.prefill_full(cfg, plist, emb, pos, mask, last_idx)
+
+        b.build(
+            f"prefill_full_t{t}", fn, llm_names,
+            [_spec((t, ld)), _spec((t,), np.int32), _spec((t,)),
+             _spec((), np.int32)],
+            inputs=[_iospec("emb", (t, ld)), _iospec("pos", (t,), I32),
+                    _iospec("mask", (t,)), _iospec("last_idx", (), I32)],
+            outputs=[_iospec("last_hidden", (ld,)), _iospec("pooled", (ld,)),
+                     _iospec("logits", (V,)),
+                     _iospec("k", (L, H, t, hd)), _iospec("v", (L, H, t, hd))],
+            bucket={"t": t},
+        )
+
+    # --- prefill_incr bucket grid ---------------------------------------
+    for tn in cfg.incr_new_buckets:
+        for to in cfg.incr_old_buckets:
+            def fn(*args, tn=tn, to=to):
+                plist = list(args[:nlp])
+                (new_emb, new_pos, new_mask, old_k, old_v, old_mask,
+                 last_idx) = args[nlp:]
+                return M.prefill_incr(cfg, plist, new_emb, new_pos, new_mask,
+                                      old_k, old_v, old_mask, last_idx)
+
+            b.build(
+                f"prefill_incr_n{tn}_o{to}", fn, llm_names,
+                [_spec((tn, ld)), _spec((tn,), np.int32), _spec((tn,)),
+                 _spec((L, H, to, hd)), _spec((L, H, to, hd)), _spec((to,)),
+                 _spec((), np.int32)],
+                inputs=[_iospec("new_emb", (tn, ld)),
+                        _iospec("new_pos", (tn,), I32),
+                        _iospec("new_mask", (tn,)),
+                        _iospec("old_k", (L, H, to, hd)),
+                        _iospec("old_v", (L, H, to, hd)),
+                        _iospec("old_mask", (to,)),
+                        _iospec("last_idx", (), I32)],
+                outputs=[_iospec("last_hidden", (ld,)),
+                         _iospec("pooled", (ld,)),
+                         _iospec("logits", (V,)),
+                         _iospec("k_new", (L, H, tn, hd)),
+                         _iospec("v_new", (L, H, tn, hd))],
+                bucket={"new": tn, "old": to},
+            )
+
+    # --- decode_step -----------------------------------------------------
+    slots = cfg.decode_slots
+    nle = len(llm_embed_names)
+
+    def fn_decode(*args):
+        plist = list(args[:nle])
+        tok_id, pos, k_cache, v_cache, cache_mask = args[nle:]
+        return M.decode_step(cfg, plist, tok_id, pos, k_cache, v_cache,
+                             cache_mask)
+
+    b.build(
+        "decode_step", fn_decode, llm_embed_names,
+        [_spec((), np.int32), _spec((), np.int32),
+         _spec((L, H, slots, hd)), _spec((L, H, slots, hd)), _spec((slots,))],
+        inputs=[_iospec("tok_id", (), I32), _iospec("pos", (), I32),
+                _iospec("k_cache", (L, H, slots, hd)),
+                _iospec("v_cache", (L, H, slots, hd)),
+                _iospec("cache_mask", (slots,))],
+        outputs=[_iospec("logits", (V,)), _iospec("k_new", (L, H, hd)),
+                 _iospec("v_new", (L, H, hd))],
+        bucket={"slots": slots},
+    )
+
+    write_golden(cfg, params, out_dir)
+    return b.entries
+
+
+def _chk(a):
+    a = np.asarray(a, np.float64).ravel()
+    return {"sum": float(a.sum()), "l2": float(np.sqrt((a * a).sum())),
+            "first8": [float(x) for x in a[:8]]}
+
+
+def write_golden(cfg, params, out_dir):
+    """Cross-language fixtures: the rust integration tests execute the
+    same artifacts with these inputs and must match these outputs."""
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+    rng = np.random.default_rng(99)
+    g = {"model": cfg.name}
+
+    vit_p = [jnp.asarray(params[n]) for n in P.vit_param_names(cfg)]
+    llm_p = [jnp.asarray(params[n]) for n in P.llm_param_names(cfg)]
+
+    n = cfg.vit_buckets[0]
+    patches = rng.standard_normal((n, cfg.patch_dim)).astype(np.float32)
+    pos_ids = np.arange(n, dtype=np.int32)
+    mask = np.ones((n,), np.float32)
+    toks = M.vit_encode(cfg, vit_p, jnp.asarray(patches),
+                        jnp.asarray(pos_ids), jnp.asarray(mask),
+                        use_pallas=True)
+    g["vit_encode"] = {
+        "bucket": n,
+        "patches": patches.ravel().tolist(),
+        "pos_ids": pos_ids.tolist(),
+        "mask": mask.tolist(),
+        "tokens": np.asarray(toks).ravel().tolist(),
+    }
+
+    t = cfg.prefill_buckets[0]
+    emb = (rng.standard_normal((t, cfg.llm_dim)) * 0.1).astype(np.float32)
+    pos = np.arange(t, dtype=np.int32)
+    m = np.ones((t,), np.float32)
+    last, pooled, logits, k, v = M.prefill_full(
+        cfg, llm_p, jnp.asarray(emb), jnp.asarray(pos), jnp.asarray(m),
+        jnp.int32(t - 1), use_pallas=True)
+    g["prefill_full"] = {
+        "bucket": t,
+        "emb": emb.ravel().tolist(),
+        "last_hidden": np.asarray(last).ravel().tolist(),
+        "pooled": np.asarray(pooled).ravel().tolist(),
+        "logits": np.asarray(logits).ravel().tolist(),
+        "k_check": _chk(k), "v_check": _chk(v),
+    }
+
+    # rope correction fixture: rotate K by a delta, verify vs recompute.
+    hk = np.asarray(k)[:, :, : 8, :]  # [L, H, 8, hd]
+    delta = np.full((8,), -3, np.int32)
+    from .kernels import ref
+    rot = np.stack([
+        np.asarray(ref.rope_correct(jnp.asarray(hk[l]), jnp.asarray(delta),
+                                    cfg.rope_base))
+        for l in range(hk.shape[0])
+    ])
+    g["rope_correct"] = {
+        "k_in": hk.ravel().tolist(), "delta": int(delta[0]),
+        "shape": list(hk.shape), "k_out": rot.ravel().tolist(),
+        "rope_base": cfg.rope_base,
+    }
+
+    with open(os.path.join(out_dir, "golden", f"{cfg.name}.json"), "w") as f:
+        json.dump(g, f)
+    print(f"  wrote golden/{cfg.name}.json")
+
+
+def model_manifest_entry(cfg):
+    return {
+        "name": cfg.name,
+        "weights": f"weights_{cfg.name}.bin",
+        "frame": cfg.frame, "patch": cfg.patch, "merge": cfg.merge,
+        "grid": cfg.grid, "patches_per_frame": cfg.patches_per_frame,
+        "patch_dim": cfg.patch_dim, "tokens_per_frame": cfg.tokens_per_frame,
+        "window_frames": cfg.window_frames,
+        "vit_dim": cfg.vit_dim, "vit_layers": cfg.vit_layers,
+        "vit_heads": cfg.vit_heads, "vit_mlp": cfg.vit_mlp,
+        "llm_dim": cfg.llm_dim, "llm_layers": cfg.llm_layers,
+        "llm_heads": cfg.llm_heads, "head_dim": cfg.head_dim,
+        "llm_mlp": cfg.llm_mlp, "vocab": cfg.vocab,
+        "text_len": cfg.text_len, "rope_base": cfg.rope_base,
+        "vit_buckets": cfg.vit_buckets,
+        "prefill_buckets": cfg.prefill_buckets,
+        "incr_new_buckets": cfg.incr_new_buckets,
+        "incr_old_buckets": cfg.incr_old_buckets,
+        "decode_slots": cfg.decode_slots,
+        "max_decode_tokens": cfg.max_decode_tokens,
+        "prompt_ids": prompt_ids(cfg),
+        "yes_token": YES_TOKEN, "no_token": NO_TOKEN,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "models": [], "artifacts": []}
+    for name in args.models.split(","):
+        cfg = MODELS[name]
+        manifest["models"].append(model_manifest_entry(cfg))
+        manifest["artifacts"] += build_model_artifacts(cfg, args.out_dir,
+                                                       args.force)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts, "
+          f"{len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Model configurations for the CodecFlow reproduction.
+
+Two synthetic VLM configs stand in for InternVL3-14B and Qwen3-VL-32B
+(see DESIGN.md §3 for the substitution rationale). Every artifact the
+rust runtime loads is described here: the shape buckets are the static
+shapes we AOT-compile; the rust side selects the smallest bucket that
+fits and pads with validity masks.
+
+The numbers are chosen so that a full window prefill is ~1 GFLOP —
+large enough that pruning/reuse visibly moves wall-clock on the CPU
+PJRT backend, small enough that the full experiment grid runs in
+minutes.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    # --- video / patch geometry -------------------------------------
+    frame: int = 64          # frame side length (pixels, luma plane)
+    patch: int = 8           # ViT patch side length
+    merge: int = 2           # spatial merge factor (2x2 patches -> 1 token)
+    window_frames: int = 20  # frames per sliding window
+    # --- ViT encoder --------------------------------------------------
+    vit_dim: int = 128
+    vit_layers: int = 4
+    vit_heads: int = 4
+    vit_mlp: int = 4         # MLP expansion factor
+    # --- LLM backbone -------------------------------------------------
+    llm_dim: int = 192
+    llm_layers: int = 5
+    llm_heads: int = 6
+    head_dim: int = 32
+    llm_mlp: int = 4
+    vocab: int = 64
+    text_len: int = 16       # fixed prompt length (tokens)
+    rope_base: float = 10000.0
+    # --- AOT shape buckets ---------------------------------------------
+    # patches per frame fed to the ViT (multiples of merge**2 = 4)
+    vit_buckets: List[int] = field(default_factory=lambda: [16, 32, 48, 64])
+    # total sequence length for full prefill
+    prefill_buckets: List[int] = field(default_factory=lambda: [96, 192, 288, 336])
+    # (new-token, reused-token) bucket grid for incremental prefill
+    incr_new_buckets: List[int] = field(default_factory=lambda: [48, 96, 144, 192, 240])
+    incr_old_buckets: List[int] = field(default_factory=lambda: [96, 192, 288])
+    # KV slots for the decode step (window tokens + generated answer)
+    decode_slots: int = 352
+    max_decode_tokens: int = 4
+    seed: int = 0
+
+    @property
+    def grid(self) -> int:
+        """Patch grid side (patches per frame row)."""
+        return self.frame // self.patch
+
+    @property
+    def patches_per_frame(self) -> int:
+        return self.grid * self.grid
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch
+
+    @property
+    def tokens_per_frame(self) -> int:
+        return self.patches_per_frame // (self.merge * self.merge)
+
+    @property
+    def max_visual_tokens(self) -> int:
+        return self.window_frames * self.tokens_per_frame
+
+    @property
+    def max_seq(self) -> int:
+        return self.max_visual_tokens + self.text_len
+
+
+INTERNVL3_SIM = ModelConfig(
+    name="internvl3_sim",
+    vit_dim=128, vit_layers=4, vit_heads=4,
+    llm_dim=192, llm_layers=5, llm_heads=6, head_dim=32,
+    seed=1234,
+)
+
+QWEN3VL_SIM = ModelConfig(
+    name="qwen3vl_sim",
+    vit_dim=192, vit_layers=5, vit_heads=6,
+    llm_dim=256, llm_layers=6, llm_heads=8, head_dim=32,
+    seed=5678,
+)
+
+MODELS = {m.name: m for m in (INTERNVL3_SIM, QWEN3VL_SIM)}
+
+# Prompt token ids for the anomaly query template (fixed-length, small
+# vocab). Mirrors "Describe the frames and determine if they show any
+# abuse. Start your response with 'Yes' or 'No'." hashed into the tiny
+# vocab; ids 1 and 2 are reserved for the "Yes" / "No" answer tokens.
+YES_TOKEN = 1
+NO_TOKEN = 2
+
+
+def prompt_ids(cfg: ModelConfig) -> List[int]:
+    import zlib
+    words = ("describe the frames and determine if they show any "
+             "abuse start your response with yes or no").split()
+    # crc32, not hash(): hash() is salted per process and the prompt must
+    # be identical between the AOT pass and the rust runtime.
+    ids = [3 + (zlib.crc32(w.encode()) % (cfg.vocab - 3)) for w in words]
+    ids = ids[: cfg.text_len]
+    while len(ids) < cfg.text_len:
+        ids.append(0)
+    return ids

@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: fused multi-head attention with online softmax.
+
+This is the compute hot-spot of the whole stack — every ViT layer and
+every LLM prefill layer calls it. The structure is the TPU re-expression
+of the paper's A100 attention path (DESIGN.md §7):
+
+  * grid = (heads, query tiles): each program instance owns one
+    (head, q-tile) pair and keeps the running softmax state
+    (m, l, acc) live for the whole K sweep;
+  * K/V are swept in `block_k`-sized chunks with `pl.dslice`, the
+    HBM->VMEM streaming schedule that CUDA flash-attention expresses
+    with threadblocks (BlockSpec pins the per-head K/V panel, the inner
+    fori_loop walks it chunk by chunk);
+  * the two matmuls per chunk are full-tile `jnp.dot`s with f32
+    accumulation so the Mosaic path would map them onto the MXU
+    systolic array.
+
+`interpret=True` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel lowers to plain HLO (a while loop
+over k-chunks) which both the python tests and the rust runtime run.
+Real-TPU efficiency is estimated from the block geometry in
+`estimate.py` (see EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale, block_k):
+    """One (head, q-tile) program instance.
+
+    Block shapes (leading head axis already peeled by BlockSpec):
+      q_ref:    [block_q, hd]
+      k_ref:    [Tk, hd]   (per-head panel; streamed in block_k chunks)
+      v_ref:    [Tk, hd]
+      bias_ref: [block_q, Tk]
+      o_ref:    [block_q, hd]
+    """
+    q = q_ref[...] * scale
+    block_q, hd = q.shape
+    tk = k_ref.shape[0]
+    nk = tk // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_chunk = k_ref[pl.dslice(i * block_k, block_k), :]
+        v_chunk = v_ref[pl.dslice(i * block_k, block_k), :]
+        b_chunk = bias_ref[:, pl.dslice(i * block_k, block_k)]
+        # MXU matmul #1: scores for this chunk.
+        s = jnp.dot(q, k_chunk.T, preferred_element_type=jnp.float32) + b_chunk
+        # Online softmax update (flash-attention recurrence).
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        # MXU matmul #2: weighted values, rescaled accumulator.
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(
+            p, v_chunk, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, hd), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    # Fully-masked (padding) query rows still accumulate exp(0) mass, so
+    # l >= 1 always and the divide is safe.
+    o_ref[...] = acc / l[:, None]
+
+
+def _pick_block(t, preferred):
+    """Largest divisor of t that is <= preferred (t is bucket-sized)."""
+    b = min(preferred, t)
+    while t % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_q", "block_k"))
+def attention(q, k, v, bias, scale, block_q=128, block_k=128):
+    # Default block preference 128 (picks 112 for the 336-token
+    # buckets): the estimate.py sweep scores it highest — VMEM 245 KiB
+    # (2% of budget, double-buffered), best MXU occupancy and 34.5
+    # FLOPs/HBM-byte vs 18.9 at 48x48. See EXPERIMENTS.md §Perf.
+    """Fused MHA; drop-in for ref.attention (same signature semantics).
+
+    q: [H, Tq, hd], k/v: [H, Tk, hd], bias: [Tq, Tk] additive.
+    """
+    h, tq, hd = q.shape
+    tk = k.shape[1]
+    bq = _pick_block(tq, block_q)
+    bk = _pick_block(tk, block_k)
+
+    grid = (h, tq // bq)
+    kernel = functools.partial(_attn_kernel, scale=scale, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, hd), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, tk, hd), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, tk, hd), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((bq, tk), lambda hi, qi: (qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, hd), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, hd), jnp.float32),
+        interpret=True,
+    )(q, k, v, bias)

@@ -1,0 +1,117 @@
+"""L1 perf: VMEM-footprint + MXU-utilization estimator for the Pallas
+attention kernel's block geometry.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the
+kernel is optimized *structurally* (DESIGN.md §7/§8): the estimator
+scores a (block_q, block_k) choice by
+
+  * VMEM residency: q tile + k/v chunks + bias tile + softmax state
+    must fit comfortably in ~16 MiB VMEM (with double-buffering
+    headroom for the k/v streams);
+  * MXU occupancy: matmul tiles should fill the 128x128 systolic array
+    — penalize tiles whose M/N/K dims are far below 128 lanes or not
+    8-aligned (f32 sublane packing);
+  * arithmetic intensity: FLOPs per HBM byte moved, assuming K/V are
+    streamed once per q-tile sweep.
+
+Run: python -m compile.kernels.estimate   (prints the sweep table the
+EXPERIMENTS.md §Perf L1 section records).
+"""
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU = 128
+F32 = 4
+
+
+@dataclass
+class BlockChoice:
+    block_q: int
+    block_k: int
+    heads: int
+    t_q: int
+    t_k: int
+    head_dim: int
+
+    # ---- VMEM ---------------------------------------------------------
+    def vmem_bytes(self, double_buffer=True):
+        """Peak VMEM per program instance (one head, one q tile)."""
+        q = self.block_q * self.head_dim * F32
+        kv_chunk = 2 * self.block_k * self.head_dim * F32
+        if double_buffer:
+            kv_chunk *= 2  # next chunk prefetched while computing
+        bias = self.block_q * self.t_k * F32
+        state = self.block_q * (2 + self.head_dim) * F32  # m, l, acc
+        out = self.block_q * self.head_dim * F32
+        return q + kv_chunk + bias + state + out
+
+    def vmem_ok(self):
+        return self.vmem_bytes() < VMEM_BYTES // 4  # leave headroom
+
+    # ---- MXU ----------------------------------------------------------
+    def mxu_utilization(self):
+        """Fraction of the systolic array the two matmuls keep busy.
+
+        Matmul 1: [bq, hd] x [hd, bk]; matmul 2: [bq, bk] x [bk, hd].
+        The MXU processes 128x128 tiles; occupancy is the product of
+        per-dim fill ratios, averaged over the two matmuls.
+        """
+        def occ(m, k, n):
+            fill = lambda d: min(d, MXU) / MXU
+            align = 1.0 if m % 8 == 0 and n % 8 == 0 else 0.5
+            return fill(m) * fill(n) * min(k / MXU, 1.0) ** 0.5 * align
+
+        m1 = occ(self.block_q, self.head_dim, self.block_k)
+        m2 = occ(self.block_q, self.block_k, self.head_dim)
+        return (m1 + m2) / 2
+
+    # ---- roofline -------------------------------------------------------
+    def flops(self):
+        # per (head, q-tile, k-chunk): 2 matmuls of 2*bq*bk*hd
+        n_q = self.t_q // self.block_q
+        n_k = self.t_k // self.block_k
+        return self.heads * n_q * n_k * 2 * (2 * self.block_q * self.block_k * self.head_dim)
+
+    def hbm_bytes(self):
+        # q read once; k/v streamed once per q tile; out written once
+        n_q = self.t_q // self.block_q
+        q_io = self.heads * self.t_q * self.head_dim * F32 * 2  # q + out
+        kv_io = self.heads * n_q * self.t_k * self.head_dim * F32 * 2
+        bias_io = n_q * self.block_q * self.t_k * F32
+        return q_io + kv_io + bias_io
+
+    def intensity(self):
+        return self.flops() / self.hbm_bytes()
+
+    def score(self):
+        if not self.vmem_ok():
+            return 0.0
+        return self.mxu_utilization() * min(self.intensity() / 20.0, 1.0)
+
+
+def sweep(heads=6, t_q=336, t_k=336, head_dim=32):
+    rows = []
+    for bq in (8, 16, 32, 48, 64, 112):
+        if t_q % bq:
+            continue
+        for bk in (8, 16, 32, 48, 64, 112):
+            if t_k % bk:
+                continue
+            c = BlockChoice(bq, bk, heads, t_q, t_k, head_dim)
+            rows.append(c)
+    rows.sort(key=lambda c: -c.score())
+    return rows
+
+
+def main():
+    print(f"{'bq':>4} {'bk':>4} {'VMEM KiB':>9} {'MXU':>6} {'F/B':>6} {'score':>6}")
+    for c in sweep():
+        print(
+            f"{c.block_q:>4} {c.block_k:>4} {c.vmem_bytes() // 1024:>9}"
+            f" {c.mxu_utilization():>6.2f} {c.intensity():>6.1f} {c.score():>6.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything in this file is the *correctness ground truth*: the Pallas
+kernels in `attention.py` must match these functions to float32
+tolerance (enforced by `python/tests/test_kernel.py`), and the L2 model
+uses these implementations when `use_pallas=False` so model-level tests
+can isolate kernel bugs from model bugs.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def attention(q, k, v, bias, scale):
+    """Multi-head scaled dot-product attention with an additive bias.
+
+    Args:
+      q: [H, Tq, hd] queries.
+      k: [H, Tk, hd] keys.
+      v: [H, Tk, hd] values.
+      bias: [Tq, Tk] additive mask (0 for allowed, NEG_INF for blocked),
+        shared across heads.
+      scale: softmax temperature (typically hd ** -0.5).
+
+    Returns:
+      [H, Tq, hd] attention output.
+    """
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale + bias[None, :, :]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", e / l, v)
+
+
+def rope_angles(positions, head_dim, base):
+    """Rotary angles for integer positions: [T, hd/2]."""
+    half = head_dim // 2
+    inv_freq = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+
+
+def apply_rope(x, positions, base):
+    """Apply rotary position embedding (half-split convention).
+
+    Args:
+      x: [H, T, hd]; positions: [T] int32; base: rope theta base.
+    Returns: [H, T, hd] rotated.
+    """
+    hd = x.shape[-1]
+    ang = rope_angles(positions, hd, base)          # [T, hd/2]
+    cos, sin = jnp.cos(ang)[None], jnp.sin(ang)[None]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope_correct(k, delta, base):
+    """Rotate cached keys by a position delta (paper eq. 5).
+
+    k: [H, T, hd] cached keys (already carrying their old positions);
+    delta: [T] int32, new_pos - old_pos per token.
+    Equivalent to apply_rope(k, delta) because rotations compose:
+    R(p_new) = R(p_new - p_old) . R(p_old).
+    """
+    return apply_rope(k, delta, base)
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x ** 3)))

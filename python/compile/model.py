@@ -1,0 +1,276 @@
+"""L2: the JAX VLM compute graph (build-time only).
+
+Five artifact families, each lowered to HLO text by `aot.py`:
+
+  vit_encode    patches -> merged visual tokens (pruned patch set only)
+  embed_text    prompt token ids -> embeddings
+  prefill_full  embeddings -> last hidden, logits, full KV cache
+  prefill_incr  NEW embeddings + REUSED (position-corrected) KV ->
+                last hidden, logits, KV for the new tokens only
+  decode_step   one generated token -> logits + its KV entry
+
+All functions take `params` as an *ordered list* of arrays (the order is
+the manifest contract with the rust runtime — see params.py) followed by
+activations. Attention dispatches to the L1 Pallas kernel
+(`use_pallas=True`, the AOT default) or the pure-jnp oracle.
+
+`prefill_incr` is the heart of the paper's selective KVC refresh: the
+rust KVC Reuser hands it cached keys already rotated to their new
+positions (eq. 5 applied host-side), the new tokens (fresh frames +
+I-frame anchors + prompt) are computed from scratch, and they attend
+over the concatenation. When the reused states are bit-exact
+(no pruning, same context) `prefill_incr` equals the tail of
+`prefill_full` — a property enforced by tests/test_model.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.attention import attention as pallas_attention
+from . import params as P
+
+NEG_INF = ref.NEG_INF
+
+
+def _attn(q, k, v, bias, scale, use_pallas):
+    if use_pallas:
+        return pallas_attention(q, k, v, bias, scale)
+    return ref.attention(q, k, v, bias, scale)
+
+
+def _named(cfg, names, plist):
+    assert len(names) == len(plist), (len(names), len(plist))
+    return dict(zip(names, plist))
+
+
+def _split_heads(x, heads, hd):
+    # [T, H*hd] -> [H, T, hd]
+    t = x.shape[0]
+    return x.reshape(t, heads, hd).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    # [H, T, hd] -> [T, H*hd]
+    h, t, hd = x.shape
+    return x.transpose(1, 0, 2).reshape(t, h * hd)
+
+
+# ---------------------------------------------------------------------
+# ViT encoder (+ 2x2 spatial-merge projector)
+# ---------------------------------------------------------------------
+
+def vit_encode(cfg: ModelConfig, plist, patches, pos_ids, mask, use_pallas=True):
+    """Encode a pruned patch set of one frame into visual tokens.
+
+    patches: [Np, patch_dim] f32 — Np is a shape bucket; only the
+      retained (dynamic) patches, ordered group-by-group so that each
+      consecutive run of merge**2 patches is one spatial merge group.
+    pos_ids: [Np] i32 — position of each patch in the full frame grid
+      (0..patches_per_frame), indexes the learned pos embedding.
+    mask:    [Np] f32 — 1 for real patches, 0 for bucket padding.
+
+    Returns: [Np / merge**2, llm_dim] merged visual tokens (rows whose
+      group was padding are garbage and dropped by the caller).
+    """
+    p = _named(cfg, P.vit_param_names(cfg), plist)
+    vd, heads = cfg.vit_dim, cfg.vit_heads
+    hd = vd // heads
+    npatch = patches.shape[0]
+
+    h = patches @ p["vit.patch_embed.w"] + p["vit.patch_embed.b"]
+    h = h + jnp.take(p["vit.pos_embed"], pos_ids, axis=0)
+
+    # Bidirectional attention over retained patches; padding blocked.
+    bias = jnp.where(mask[None, :] > 0, 0.0, NEG_INF)
+    bias = jnp.broadcast_to(bias, (npatch, npatch)).astype(jnp.float32)
+    scale = float(hd) ** -0.5
+
+    for i in range(cfg.vit_layers):
+        pre = f"vit.layer{i}."
+        x = ref.layer_norm(h, p[pre + "ln1.g"], p[pre + "ln1.b"])
+        qkv = x @ p[pre + "attn.wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        o = _attn(_split_heads(q, heads, hd), _split_heads(k, heads, hd),
+                  _split_heads(v, heads, hd), bias, scale, use_pallas)
+        h = h + _merge_heads(o) @ p[pre + "attn.wo"]
+        x = ref.layer_norm(h, p[pre + "ln2.g"], p[pre + "ln2.b"])
+        h = h + ref.gelu(x @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"]) @ \
+            p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+
+    h = ref.layer_norm(h, p["vit.ln_f.g"], p["vit.ln_f.b"])
+    # Spatial merge: merge**2 consecutive patches -> one token.
+    g = cfg.merge * cfg.merge
+    merged = h.reshape(npatch // g, g * vd)
+    return merged @ p["proj.w"] + p["proj.b"]
+
+
+# ---------------------------------------------------------------------
+# Text embedding
+# ---------------------------------------------------------------------
+
+def embed_text(cfg: ModelConfig, plist, ids):
+    """ids: [S] i32 -> [S, llm_dim]."""
+    (tok_embed,) = plist
+    return jnp.take(tok_embed, ids, axis=0)
+
+
+# ---------------------------------------------------------------------
+# LLM prefill (full and incremental)
+# ---------------------------------------------------------------------
+
+def _llm_layer(cfg, p, pre, h, pos, bias, old_k=None, old_v=None,
+               use_pallas=True):
+    """One decoder layer over the *new* tokens h.
+
+    If old_k/old_v are given ([H, To, hd], position-corrected, rope
+    already applied), new tokens attend over [old ++ new]; bias must be
+    [Tn, To+Tn]. Returns (h, k_new, v_new) with rope-applied k_new.
+    """
+    heads, hd = cfg.llm_heads, cfg.head_dim
+    scale = float(hd) ** -0.5
+    x = ref.layer_norm(h, p[pre + "ln1.g"], p[pre + "ln1.b"])
+    q = ref.apply_rope(_split_heads(x @ p[pre + "attn.wq"], heads, hd),
+                       pos, cfg.rope_base)
+    k = ref.apply_rope(_split_heads(x @ p[pre + "attn.wk"], heads, hd),
+                       pos, cfg.rope_base)
+    v = _split_heads(x @ p[pre + "attn.wv"], heads, hd)
+    if old_k is not None:
+        k_all = jnp.concatenate([old_k, k], axis=1)
+        v_all = jnp.concatenate([old_v, v], axis=1)
+    else:
+        k_all, v_all = k, v
+    o = _attn(q, k_all, v_all, bias, scale, use_pallas)
+    h = h + _merge_heads(o) @ p[pre + "attn.wo"]
+    x = ref.layer_norm(h, p[pre + "ln2.g"], p[pre + "ln2.b"])
+    h = h + ref.gelu(x @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"]) @ \
+        p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+    return h, k, v
+
+
+def _readout(cfg, p, h, last_idx, mask=None):
+    h = ref.layer_norm(h, p["llm.ln_f.g"], p["llm.ln_f.b"])
+    last = jnp.take(h, last_idx, axis=0, mode="clip")
+    logits = last @ p["llm.unembed"]
+    if mask is None:
+        pooled = jnp.mean(h, axis=0)
+    else:
+        # Masked mean over valid positions: the aggregate readout the
+        # anomaly probe consumes (DESIGN.md §4). For incremental
+        # prefill this pools the recomputed block, whose hidden states
+        # attend over the reused KV — so reuse-induced drift and
+        # pruning-induced token loss both flow through it.
+        pooled = jnp.sum(h * mask[:, None], axis=0) / jnp.maximum(
+            jnp.sum(mask), 1.0)
+    return last, pooled, logits
+
+
+def prefill_full(cfg: ModelConfig, plist, emb, pos, mask, last_idx,
+                 use_pallas=True):
+    """Full-window prefill.
+
+    emb: [T, d] (visual tokens ++ prompt embeddings, bucket-padded)
+    pos: [T] i32 sequence positions; mask: [T] validity;
+    last_idx: scalar i32, index of the last valid token.
+
+    Returns (last_hidden [d], pooled [d], logits [V], K [L,H,T,hd],
+    V [L,H,T,hd]).
+    Cached K carries rope (the position it was computed at) — the rust
+    KVC Reuser corrects it with eq. 5 on window advance.
+    """
+    p = _named(cfg, P.llm_param_names(cfg), plist)
+    t = emb.shape[0]
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    allowed = causal * mask[None, :]
+    bias = jnp.where(allowed > 0, 0.0, NEG_INF).astype(jnp.float32)
+
+    h, ks, vs = emb, [], []
+    for i in range(cfg.llm_layers):
+        h, k, v = _llm_layer(cfg, p, f"llm.layer{i}.", h, pos, bias,
+                             use_pallas=use_pallas)
+        ks.append(k)
+        vs.append(v)
+    last, pooled, logits = _readout(cfg, p, h, last_idx, mask)
+    return last, pooled, logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def prefill_incr(cfg: ModelConfig, plist, new_emb, new_pos, new_mask,
+                 old_k, old_v, old_mask, last_idx, use_pallas=True):
+    """Incremental prefill with reused KV (selective KVC refresh).
+
+    new_emb/new_pos/new_mask: [Tn, ...] the tokens recomputed this
+      window (fresh frames + I-frame anchors + prompt), bucket-padded.
+    old_k/old_v: [L, H, To, hd] reused entries, keys already
+      position-corrected to the current window.
+    old_mask: [To] validity of reused slots.
+    last_idx: index of last valid token *within the new block*.
+
+    Returns (last_hidden, pooled, logits, K_new [L,H,Tn,hd], V_new) —
+    the rust side splices the KV after the reused entries to form the
+    full cache.
+    """
+    p = _named(cfg, P.llm_param_names(cfg), plist)
+    tn = new_emb.shape[0]
+    to = old_k.shape[2]
+    causal = jnp.tril(jnp.ones((tn, tn), jnp.float32)) * new_mask[None, :]
+    bias_old = jnp.where(old_mask[None, :] > 0, 0.0, NEG_INF)
+    bias_old = jnp.broadcast_to(bias_old, (tn, to))
+    bias_new = jnp.where(causal > 0, 0.0, NEG_INF)
+    bias = jnp.concatenate([bias_old, bias_new], axis=1).astype(jnp.float32)
+
+    h, ks, vs = new_emb, [], []
+    for i in range(cfg.llm_layers):
+        h, k, v = _llm_layer(cfg, p, f"llm.layer{i}.", h, new_pos, bias,
+                             old_k=old_k[i], old_v=old_v[i],
+                             use_pallas=use_pallas)
+        ks.append(k)
+        vs.append(v)
+    last, pooled, logits = _readout(cfg, p, h, last_idx, new_mask)
+    return last, pooled, logits, jnp.stack(ks), jnp.stack(vs)
+
+
+# ---------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, plist, tok_id, pos, k_cache, v_cache,
+                cache_mask):
+    """One autoregressive step (answer-token generation).
+
+    tok_id, pos: scalars (i32). k_cache/v_cache: [L, H, S, hd] with S =
+    cfg.decode_slots; cache_mask: [S]. Returns (logits [V],
+    k_new [L,H,hd], v_new [L,H,hd]) — the rust side writes the new entry
+    into its host-resident cache.
+
+    Single-token attention is tiny; uses the jnp path (no Pallas).
+    """
+    p = _named(cfg, P.llm_param_names(cfg, embed=True), plist)
+    heads, hd = cfg.llm_heads, cfg.head_dim
+    scale = float(hd) ** -0.5
+    pos_v = jnp.reshape(pos, (1,))
+
+    h = jnp.take(p["llm.tok_embed"], jnp.reshape(tok_id, (1,)), axis=0)
+    bias = jnp.where(cache_mask[None, :] > 0, 0.0, NEG_INF).astype(jnp.float32)
+    bias_self = jnp.zeros((1, 1), jnp.float32)
+    ks, vs = [], []
+    for i in range(cfg.llm_layers):
+        pre = f"llm.layer{i}."
+        x = ref.layer_norm(h, p[pre + "ln1.g"], p[pre + "ln1.b"])
+        q = ref.apply_rope(_split_heads(x @ p[pre + "attn.wq"], heads, hd),
+                           pos_v, cfg.rope_base)
+        k = ref.apply_rope(_split_heads(x @ p[pre + "attn.wk"], heads, hd),
+                           pos_v, cfg.rope_base)
+        v = _split_heads(x @ p[pre + "attn.wv"], heads, hd)
+        k_all = jnp.concatenate([k_cache[i], k], axis=1)
+        v_all = jnp.concatenate([v_cache[i], v], axis=1)
+        b = jnp.concatenate([bias, bias_self], axis=1)
+        o = ref.attention(q, k_all, v_all, b, scale)
+        h = h + _merge_heads(o) @ p[pre + "attn.wo"]
+        x = ref.layer_norm(h, p[pre + "ln2.g"], p[pre + "ln2.b"])
+        h = h + ref.gelu(x @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"]) @ \
+            p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+        ks.append(k[:, 0, :])
+        vs.append(v[:, 0, :])
+    _, _, logits = _readout(cfg, p, h, jnp.int32(0))
+    return logits, jnp.stack(ks), jnp.stack(vs)

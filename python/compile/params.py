@@ -1,0 +1,145 @@
+"""Deterministic parameter generation and serialization.
+
+Weights are *inputs* to every AOT artifact (not baked constants): HLO
+text with megabytes of inlined f32 constants would be unusably large,
+and the rust runtime can hold them as device-resident PjRtBuffers and
+pass them by reference per call (`execute_b`), so the per-request cost
+is zero after startup.
+
+The flattening order here is a contract with the rust side: the
+manifest records, per artifact, the ordered parameter-name list, and
+`weights_<model>.bin` stores each named tensor once. Format (little
+endian):
+
+    magic   b"CFWB"            4 bytes
+    version u32 = 1
+    count   u32
+    then per tensor:
+      name_len u32, name bytes (utf-8)
+      dtype    u32 (0 = f32, 1 = i32)
+      ndim     u32, dims u32 * ndim
+      data     raw bytes (dtype * prod(dims))
+"""
+
+import struct
+from collections import OrderedDict
+
+import numpy as np
+
+from .configs import ModelConfig
+
+MAGIC = b"CFWB"
+
+
+def _init(rng, shape, fan_in):
+    return (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+
+
+def make_params(cfg: ModelConfig) -> "OrderedDict[str, np.ndarray]":
+    """All model parameters, deterministically from cfg.seed."""
+    rng = np.random.default_rng(cfg.seed)
+    p = OrderedDict()
+
+    vd, ld, hd = cfg.vit_dim, cfg.llm_dim, cfg.head_dim
+    # --- ViT ---------------------------------------------------------
+    p["vit.patch_embed.w"] = _init(rng, (cfg.patch_dim, vd), cfg.patch_dim)
+    p["vit.patch_embed.b"] = np.zeros((vd,), np.float32)
+    p["vit.pos_embed"] = _init(rng, (cfg.patches_per_frame, vd), 4)
+    for i in range(cfg.vit_layers):
+        pre = f"vit.layer{i}."
+        p[pre + "ln1.g"] = np.ones((vd,), np.float32)
+        p[pre + "ln1.b"] = np.zeros((vd,), np.float32)
+        p[pre + "attn.wqkv"] = _init(rng, (vd, 3 * vd), vd)
+        p[pre + "attn.wo"] = _init(rng, (vd, vd), vd)
+        p[pre + "ln2.g"] = np.ones((vd,), np.float32)
+        p[pre + "ln2.b"] = np.zeros((vd,), np.float32)
+        p[pre + "mlp.w1"] = _init(rng, (vd, cfg.vit_mlp * vd), vd)
+        p[pre + "mlp.b1"] = np.zeros((cfg.vit_mlp * vd,), np.float32)
+        p[pre + "mlp.w2"] = _init(rng, (cfg.vit_mlp * vd, vd), cfg.vit_mlp * vd)
+        p[pre + "mlp.b2"] = np.zeros((vd,), np.float32)
+    p["vit.ln_f.g"] = np.ones((vd,), np.float32)
+    p["vit.ln_f.b"] = np.zeros((vd,), np.float32)
+    # 2x2 spatial merge projector: concat(4 * vd) -> llm_dim
+    merge_in = cfg.merge * cfg.merge * vd
+    p["proj.w"] = _init(rng, (merge_in, ld), merge_in)
+    p["proj.b"] = np.zeros((ld,), np.float32)
+
+    # --- LLM ---------------------------------------------------------
+    p["llm.tok_embed"] = _init(rng, (cfg.vocab, ld), 4)
+    qkv_dim = cfg.llm_heads * hd
+    for i in range(cfg.llm_layers):
+        pre = f"llm.layer{i}."
+        p[pre + "ln1.g"] = np.ones((ld,), np.float32)
+        p[pre + "ln1.b"] = np.zeros((ld,), np.float32)
+        p[pre + "attn.wq"] = _init(rng, (ld, qkv_dim), ld)
+        p[pre + "attn.wk"] = _init(rng, (ld, qkv_dim), ld)
+        p[pre + "attn.wv"] = _init(rng, (ld, qkv_dim), ld)
+        p[pre + "attn.wo"] = _init(rng, (qkv_dim, ld), qkv_dim)
+        p[pre + "ln2.g"] = np.ones((ld,), np.float32)
+        p[pre + "ln2.b"] = np.zeros((ld,), np.float32)
+        p[pre + "mlp.w1"] = _init(rng, (ld, cfg.llm_mlp * ld), ld)
+        p[pre + "mlp.b1"] = np.zeros((cfg.llm_mlp * ld,), np.float32)
+        p[pre + "mlp.w2"] = _init(rng, (cfg.llm_mlp * ld, ld), cfg.llm_mlp * ld)
+        p[pre + "mlp.b2"] = np.zeros((ld,), np.float32)
+    p["llm.ln_f.g"] = np.ones((ld,), np.float32)
+    p["llm.ln_f.b"] = np.zeros((ld,), np.float32)
+    p["llm.unembed"] = _init(rng, (ld, cfg.vocab), ld)
+    return p
+
+
+# Parameter subsets per artifact family (order matters — it is the HLO
+# parameter order and the manifest contract with rust).
+def vit_param_names(cfg: ModelConfig):
+    names = ["vit.patch_embed.w", "vit.patch_embed.b", "vit.pos_embed"]
+    for i in range(cfg.vit_layers):
+        pre = f"vit.layer{i}."
+        names += [pre + s for s in (
+            "ln1.g", "ln1.b", "attn.wqkv", "attn.wo",
+            "ln2.g", "ln2.b", "mlp.w1", "mlp.b1", "mlp.w2", "mlp.b2")]
+    names += ["vit.ln_f.g", "vit.ln_f.b", "proj.w", "proj.b"]
+    return names
+
+
+def llm_param_names(cfg: ModelConfig, embed=False):
+    names = ["llm.tok_embed"] if embed else []
+    for i in range(cfg.llm_layers):
+        pre = f"llm.layer{i}."
+        names += [pre + s for s in (
+            "ln1.g", "ln1.b", "attn.wq", "attn.wk", "attn.wv", "attn.wo",
+            "ln2.g", "ln2.b", "mlp.w1", "mlp.b1", "mlp.w2", "mlp.b2")]
+    names += ["llm.ln_f.g", "llm.ln_f.b", "llm.unembed"]
+    return names
+
+
+def save_weights(path, params):
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(params)))
+        for name, arr in params.items():
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            dtype = 0 if arr.dtype == np.float32 else 1
+            f.write(struct.pack("<I", dtype))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load_weights(path):
+    """Inverse of save_weights (used by python tests)."""
+    out = OrderedDict()
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC
+        _ver, count = struct.unpack("<II", f.read(8))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            dtype, ndim = struct.unpack("<II", f.read(8))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            np_dtype = np.float32 if dtype == 0 else np.int32
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype=np_dtype).reshape(dims)
+            out[name] = data
+    return out

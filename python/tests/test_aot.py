@@ -1,0 +1,93 @@
+"""AOT pipeline checks: manifest integrity and HLO text well-formedness.
+
+These tests only run meaningfully after `make artifacts`; they skip if
+the artifacts directory is absent (e.g. a fresh checkout running pytest
+before the build).
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_counts(manifest):
+    assert len(manifest["models"]) == 2
+    names = {m["name"] for m in manifest["models"]}
+    assert names == {"internvl3_sim", "qwen3vl_sim"}
+    # per model: vit buckets + embed + prefill buckets + incr grid + decode
+    from compile.configs import MODELS
+    want = sum(
+        len(c.vit_buckets) + 1 + len(c.prefill_buckets)
+        + len(c.incr_new_buckets) * len(c.incr_old_buckets) + 1
+        for c in MODELS.values()
+    )
+    assert len(manifest["artifacts"]) == want
+
+
+def test_artifact_files_exist_and_parse(manifest):
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        with open(path) as f:
+            head = f.read(4096)
+        # HLO text modules start with "HloModule"
+        assert head.startswith("HloModule"), a["file"]
+        # every artifact has at least one parameter instruction
+        assert "parameter(0)" in head or "parameter" in head
+
+
+def test_manifest_io_specs(manifest):
+    for a in manifest["artifacts"]:
+        assert a["params"], a["name"]
+        assert a["inputs"] and a["outputs"]
+        for spec in a["inputs"] + a["outputs"]:
+            assert spec["dtype"] in ("f32", "i32")
+            assert all(d > 0 for d in spec["shape"])
+
+
+def test_weights_files_match_manifest(manifest):
+    from compile import params as P
+    from compile.configs import MODELS
+    for m in manifest["models"]:
+        path = os.path.join(ART, m["weights"])
+        assert os.path.exists(path)
+        loaded = P.load_weights(path)
+        cfg = MODELS[m["name"]]
+        want = P.make_params(cfg)
+        assert list(loaded) == list(want)
+        # every artifact's param names resolve in the weights file
+        for a in manifest["artifacts"]:
+            if a["model"] == m["name"]:
+                for n in a["params"]:
+                    assert n in loaded, (a["name"], n)
+
+
+def test_golden_fixtures_exist(manifest):
+    for m in manifest["models"]:
+        path = os.path.join(ART, "golden", f"{m['name']}.json")
+        assert os.path.exists(path)
+        with open(path) as f:
+            g = json.load(f)
+        assert {"vit_encode", "prefill_full", "rope_correct"} <= set(g)
+
+
+def test_prompt_ids_in_manifest(manifest):
+    for m in manifest["models"]:
+        ids = m["prompt_ids"]
+        assert len(ids) == m["text_len"]
+        assert all(0 <= i < m["vocab"] for i in ids)
+        assert m["yes_token"] != m["no_token"]

@@ -1,0 +1,36 @@
+"""Sanity checks on the L1 block-geometry estimator (perf pass tool)."""
+
+from compile.kernels.estimate import sweep, BlockChoice
+
+
+def test_sweep_nonempty_and_sorted():
+    rows = sweep()
+    assert rows
+    scores = [r.score() for r in rows]
+    assert scores == sorted(scores, reverse=True)
+
+
+def test_vmem_within_budget_for_production_blocks():
+    c = BlockChoice(block_q=48, block_k=48, heads=6, t_q=336, t_k=336, head_dim=32)
+    assert c.vmem_ok()
+    # double buffering costs more than single
+    assert c.vmem_bytes(True) > c.vmem_bytes(False)
+
+
+def test_mxu_prefers_larger_tiles():
+    small = BlockChoice(8, 8, 6, 336, 336, 32)
+    large = BlockChoice(112, 112, 6, 336, 336, 32)
+    assert large.mxu_utilization() > small.mxu_utilization()
+
+
+def test_intensity_grows_with_block_q():
+    # Larger q tiles amortize the K/V stream over more rows.
+    lo = BlockChoice(8, 48, 6, 336, 336, 32)
+    hi = BlockChoice(112, 48, 6, 336, 336, 32)
+    assert hi.intensity() > lo.intensity()
+
+
+def test_flops_invariant_to_blocking():
+    a = BlockChoice(8, 8, 6, 336, 336, 32)
+    b = BlockChoice(48, 112, 6, 336, 336, 32)
+    assert a.flops() == b.flops()

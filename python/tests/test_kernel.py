@@ -1,0 +1,127 @@
+"""L1 kernel correctness: Pallas fused attention vs the pure-jnp oracle.
+
+The hypothesis sweep is the primary correctness signal for the kernel:
+random shapes (heads, query/key lengths, head dims), random block
+geometries, and adversarial masks (fully-blocked rows, ragged validity)
+must all match ref.attention to f32 tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention, _pick_block
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+def _run_case(h, tq, tk, hd, bq, bk, mask_kind, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (h, tq, hd))
+    k = _rand(rng, (h, tk, hd))
+    v = _rand(rng, (h, tk, hd))
+    if mask_kind == "none":
+        bias = jnp.zeros((tq, tk), jnp.float32)
+    elif mask_kind == "causal":
+        m = np.tril(np.ones((tq, tk), np.float32), k=tk - tq)
+        bias = jnp.where(jnp.asarray(m) > 0, 0.0, ref.NEG_INF)
+    elif mask_kind == "random":
+        m = rng.random((tq, tk)) > 0.4
+        bias = jnp.where(jnp.asarray(m), 0.0, ref.NEG_INF).astype(jnp.float32)
+    else:  # "ragged": trailing keys invalid, like bucket padding
+        valid = rng.integers(1, tk + 1)
+        m = np.zeros((tq, tk), np.float32)
+        m[:, :valid] = 1.0
+        bias = jnp.where(jnp.asarray(m) > 0, 0.0, ref.NEG_INF)
+    scale = float(hd) ** -0.5
+    want = ref.attention(q, k, v, bias, scale)
+    got = attention(q, k, v, bias, scale, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    h=st.integers(1, 6),
+    tq=st.sampled_from([8, 16, 32, 48, 96]),
+    tk=st.sampled_from([8, 16, 32, 48, 96, 144]),
+    hd=st.sampled_from([8, 16, 32]),
+    bq=st.sampled_from([8, 16, 32, 64]),
+    bk=st.sampled_from([8, 16, 32, 64]),
+    mask_kind=st.sampled_from(["none", "causal", "random", "ragged"]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_hypothesis_sweep(h, tq, tk, hd, bq, bk, mask_kind, seed):
+    _run_case(h, tq, tk, hd, bq, bk, mask_kind, seed)
+
+
+@pytest.mark.parametrize("tq,tk", [(48, 96), (96, 336), (16, 64)])
+def test_production_shapes(tq, tk):
+    """The exact shapes the AOT buckets use."""
+    _run_case(6, tq, tk, 32, 64, 64, "causal", 7)
+
+
+def test_fully_masked_rows_are_finite():
+    """Bucket-padding query rows see an all-blocked bias; the online
+    softmax must not emit NaN/Inf (the model discards these rows, but
+    NaN would poison downstream reductions in HLO)."""
+    h, tq, tk, hd = 2, 16, 32, 8
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (h, tq, hd))
+    k = _rand(rng, (h, tk, hd))
+    v = _rand(rng, (h, tk, hd))
+    bias = jnp.full((tq, tk), ref.NEG_INF, jnp.float32)
+    out = attention(q, k, v, bias, hd ** -0.5, block_q=8, block_k=8)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_pick_block_divides():
+    for t in [16, 48, 96, 144, 272, 336, 352]:
+        for pref in [8, 16, 64, 128]:
+            b = _pick_block(t, pref)
+            assert t % b == 0 and 1 <= b <= pref
+
+
+def test_block_shape_invariance():
+    """Output must not depend on block geometry (pure tiling)."""
+    rng = np.random.default_rng(11)
+    h, tq, tk, hd = 3, 48, 96, 16
+    q = _rand(rng, (h, tq, hd))
+    k = _rand(rng, (h, tk, hd))
+    v = _rand(rng, (h, tk, hd))
+    bias = jnp.zeros((tq, tk), jnp.float32)
+    outs = [np.asarray(attention(q, k, v, bias, hd ** -0.5,
+                                 block_q=bq, block_k=bk))
+            for bq, bk in [(8, 8), (16, 32), (48, 96), (64, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=ATOL, rtol=RTOL)
+
+
+def test_rope_compose():
+    """R(a+b) == R(a) applied after R(b) — the identity eq. 5 relies on."""
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (2, 8, 16))
+    pa = jnp.asarray(np.arange(8), jnp.int32)
+    pb = jnp.asarray(np.full(8, 3), jnp.int32)
+    lhs = ref.apply_rope(x, pa + pb, 10000.0)
+    rhs = ref.apply_rope(ref.apply_rope(x, pa, 10000.0), pb, 10000.0)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rope_correct_negative_delta():
+    """Correcting by -p undoes rope entirely."""
+    rng = np.random.default_rng(6)
+    x = _rand(rng, (2, 8, 16))
+    p = jnp.asarray(np.arange(8), jnp.int32)
+    roped = ref.apply_rope(x, p, 10000.0)
+    back = ref.rope_correct(roped, -p, 10000.0)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(back),
+                               atol=1e-5, rtol=1e-5)

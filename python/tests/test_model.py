@@ -1,0 +1,223 @@
+"""L2 model invariants.
+
+The critical one is exact incremental-prefill consistency: when the
+reused KV states are bit-exact (same window, no pruning),
+`prefill_incr` must equal the tail of `prefill_full`. This is the
+correctness foundation the selective-KVC-refresh approximation is
+measured against.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import INTERNVL3_SIM, QWEN3VL_SIM, prompt_ids
+from compile import model as M, params as P
+from compile.kernels import ref
+
+CFGS = [INTERNVL3_SIM, QWEN3VL_SIM]
+
+
+def _llm_params(cfg):
+    params = P.make_params(cfg)
+    return [jnp.asarray(params[n]) for n in P.llm_param_names(cfg)]
+
+
+def _vit_params(cfg):
+    params = P.make_params(cfg)
+    return [jnp.asarray(params[n]) for n in P.vit_param_names(cfg)]
+
+
+@pytest.fixture(scope="module", params=[c.name for c in CFGS])
+def cfg(request):
+    return {c.name: c for c in CFGS}[request.param]
+
+
+def test_vit_shapes(cfg):
+    plist = _vit_params(cfg)
+    rng = np.random.default_rng(0)
+    for n in cfg.vit_buckets:
+        patches = jnp.asarray(rng.standard_normal((n, cfg.patch_dim)),
+                              jnp.float32)
+        pos = jnp.arange(n, dtype=jnp.int32) % cfg.patches_per_frame
+        mask = jnp.ones((n,), jnp.float32)
+        out = M.vit_encode(cfg, plist, patches, pos, mask, use_pallas=False)
+        assert out.shape == (n // 4, cfg.llm_dim)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_vit_padding_does_not_leak(cfg):
+    """Padded patches must not change the tokens of real patches."""
+    plist = _vit_params(cfg)
+    rng = np.random.default_rng(1)
+    n_real = cfg.vit_buckets[0]
+    n_pad = cfg.vit_buckets[1]
+    patches = rng.standard_normal((n_real, cfg.patch_dim)).astype(np.float32)
+    pos = np.arange(n_real, dtype=np.int32)
+
+    small = M.vit_encode(
+        cfg, plist, jnp.asarray(patches), jnp.asarray(pos),
+        jnp.ones((n_real,), jnp.float32), use_pallas=False)
+
+    patches_padded = np.concatenate(
+        [patches, rng.standard_normal((n_pad - n_real, cfg.patch_dim))
+         .astype(np.float32) * 100.0])  # garbage in padding
+    pos_padded = np.concatenate([pos, np.zeros(n_pad - n_real, np.int32)])
+    mask = np.concatenate([np.ones(n_real, np.float32),
+                           np.zeros(n_pad - n_real, np.float32)])
+    padded = M.vit_encode(
+        cfg, plist, jnp.asarray(patches_padded), jnp.asarray(pos_padded),
+        jnp.asarray(mask), use_pallas=False)
+
+    np.testing.assert_allclose(np.asarray(small),
+                               np.asarray(padded)[: n_real // 4],
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_prefill_incr_matches_full_exact_reuse(cfg):
+    plist = _llm_params(cfg)
+    rng = np.random.default_rng(2)
+    t, to = 96, 48
+    tn = t - to
+    emb = jnp.asarray(rng.standard_normal((t, cfg.llm_dim)) * 0.1, jnp.float32)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    mask = jnp.ones((t,), jnp.float32)
+    last, pooled, logits, k, v = M.prefill_full(cfg, plist, emb, pos, mask,
+                                                jnp.int32(t - 1), use_pallas=False)
+    last2, pooled2, logits2, kn, vn = M.prefill_incr(
+        cfg, plist, emb[to:], pos[to:], mask[to:],
+        k[:, :, :to], v[:, :, :to], mask[:to], jnp.int32(tn - 1),
+        use_pallas=False)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(last2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(k[:, :, to:]), np.asarray(kn),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(v[:, :, to:]), np.asarray(vn),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_prefill_padding_does_not_leak(cfg):
+    """Bucket padding (mask=0 tail) must not change valid-token output."""
+    plist = _llm_params(cfg)
+    rng = np.random.default_rng(3)
+    t_real, t_pad = 96, 192
+    emb = rng.standard_normal((t_real, cfg.llm_dim)).astype(np.float32) * 0.1
+    small = M.prefill_full(
+        cfg, plist, jnp.asarray(emb),
+        jnp.arange(t_real, dtype=jnp.int32),
+        jnp.ones((t_real,), jnp.float32), jnp.int32(t_real - 1),
+        use_pallas=False)
+    emb_p = np.concatenate(
+        [emb, np.full((t_pad - t_real, cfg.llm_dim), 7.0, np.float32)])
+    mask = np.concatenate([np.ones(t_real, np.float32),
+                           np.zeros(t_pad - t_real, np.float32)])
+    pos = np.concatenate([np.arange(t_real, dtype=np.int32),
+                          np.zeros(t_pad - t_real, np.int32)])
+    padded = M.prefill_full(cfg, plist, jnp.asarray(emb_p), jnp.asarray(pos),
+                            jnp.asarray(mask), jnp.int32(t_real - 1),
+                            use_pallas=False)
+    np.testing.assert_allclose(np.asarray(small[2]), np.asarray(padded[2]),
+                               atol=1e-4, rtol=1e-4)  # logits
+    np.testing.assert_allclose(np.asarray(small[1]), np.asarray(padded[1]),
+                               atol=1e-4, rtol=1e-4)  # pooled (mask-invariant)
+    np.testing.assert_allclose(np.asarray(small[3]),
+                               np.asarray(padded[3])[:, :, :t_real],
+                               atol=1e-4, rtol=1e-4)  # K
+
+
+def test_rope_correction_layer0_exact(cfg):
+    """Layer-0 K depends only on the token's own embedding + position,
+    so eq. 5 correction reproduces it *exactly* after a window shift.
+    (Deeper layers drift — that is the paper's motivation for anchors.)"""
+    plist = _llm_params(cfg)
+    rng = np.random.default_rng(4)
+    t, shift = 48, 8
+    emb = jnp.asarray(rng.standard_normal((t, cfg.llm_dim)) * 0.1, jnp.float32)
+    mask = jnp.ones((t,), jnp.float32)
+    # window t-1: tokens at positions shift..t+shift
+    pos_old = jnp.arange(shift, t + shift, dtype=jnp.int32)
+    _, _, _, k_old, _ = M.prefill_full(cfg, plist, emb, pos_old, mask,
+                                       jnp.int32(t - 1), use_pallas=False)
+    # window t: same tokens now at positions 0..t
+    pos_new = jnp.arange(t, dtype=jnp.int32)
+    _, _, _, k_new, _ = M.prefill_full(cfg, plist, emb, pos_new, mask,
+                                       jnp.int32(t - 1), use_pallas=False)
+    delta = pos_new - pos_old  # = -shift
+    corrected = ref.rope_correct(k_old[0], delta, cfg.rope_base)
+    np.testing.assert_allclose(np.asarray(k_new[0]), np.asarray(corrected),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_decode_step_matches_prefill_extension(cfg):
+    """decode_step(tok) == prefill_full over [ctx ++ tok] at the last
+    position (same logits), with the cache laid out in decode slots."""
+    plist_e = _llm_params(cfg)
+    params = P.make_params(cfg)
+    plist_d = [jnp.asarray(params[n])
+               for n in P.llm_param_names(cfg, embed=True)]
+    rng = np.random.default_rng(5)
+    t = 48
+    tok = 7
+    tok_emb = jnp.asarray(params["llm.tok_embed"][tok])
+    emb = jnp.asarray(rng.standard_normal((t, cfg.llm_dim)) * 0.1, jnp.float32)
+    full_emb = jnp.concatenate([emb, tok_emb[None, :]])
+    pos = jnp.arange(t + 1, dtype=jnp.int32)
+    mask = jnp.ones((t + 1,), jnp.float32)
+    _, _, logits_full, _, _ = M.prefill_full(
+        cfg, plist_e, full_emb, pos, mask, jnp.int32(t), use_pallas=False)
+
+    _, _, _, k, v = M.prefill_full(
+        cfg, plist_e, emb, pos[:t], mask[:t], jnp.int32(t - 1),
+        use_pallas=False)
+    slots = cfg.decode_slots
+    kc = np.zeros((cfg.llm_layers, cfg.llm_heads, slots, cfg.head_dim),
+                  np.float32)
+    vc = np.zeros_like(kc)
+    kc[:, :, :t] = np.asarray(k)
+    vc[:, :, :t] = np.asarray(v)
+    cm = np.zeros((slots,), np.float32)
+    cm[:t] = 1.0
+    logits_dec, k_new, v_new = M.decode_step(
+        cfg, plist_d, jnp.int32(tok), jnp.int32(t), jnp.asarray(kc),
+        jnp.asarray(vc), jnp.asarray(cm))
+    np.testing.assert_allclose(np.asarray(logits_full),
+                               np.asarray(logits_dec), atol=1e-4, rtol=1e-4)
+    assert k_new.shape == (cfg.llm_layers, cfg.llm_heads, cfg.head_dim)
+
+
+def test_pallas_and_ref_paths_agree(cfg):
+    """Model-level: the whole prefill with the Pallas kernel matches the
+    jnp-oracle path."""
+    plist = _llm_params(cfg)
+    rng = np.random.default_rng(6)
+    t = 96
+    emb = jnp.asarray(rng.standard_normal((t, cfg.llm_dim)) * 0.1, jnp.float32)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    mask = jnp.ones((t,), jnp.float32)
+    a = M.prefill_full(cfg, plist, emb, pos, mask, jnp.int32(t - 1),
+                       use_pallas=False)
+    b = M.prefill_full(cfg, plist, emb, pos, mask, jnp.int32(t - 1),
+                       use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a[2]), np.asarray(b[2]),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(a[3]), np.asarray(b[3]),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_prompt_ids_deterministic(cfg):
+    a, b = prompt_ids(cfg), prompt_ids(cfg)
+    assert a == b
+    assert len(a) == cfg.text_len
+    assert all(0 <= i < cfg.vocab for i in a)
+
+
+def test_weights_roundtrip(tmp_path, cfg):
+    params = P.make_params(cfg)
+    path = tmp_path / "w.bin"
+    P.save_weights(path, params)
+    loaded = P.load_weights(path)
+    assert list(loaded) == list(params)
+    for n in params:
+        np.testing.assert_array_equal(params[n], loaded[n])

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig11_speedup` — regenerates Fig 11.
+fn main() {
+    codecflow::exp::fig11::run();
+}

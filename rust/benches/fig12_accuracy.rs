@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig12_accuracy` — regenerates Fig 12.
+fn main() {
+    codecflow::exp::fig12::run();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig13_resources` — regenerates Fig 13.
+fn main() {
+    codecflow::exp::fig13::run();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig14_motion` — regenerates Fig 14.
+fn main() {
+    codecflow::exp::fig14::run();
+}

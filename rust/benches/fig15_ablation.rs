@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig15_ablation` — regenerates Fig 15.
+fn main() {
+    codecflow::exp::fig15::run();
+}

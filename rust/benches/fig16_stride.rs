@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig16_stride` — regenerates Fig 16.
+fn main() {
+    codecflow::exp::fig16::run();
+}

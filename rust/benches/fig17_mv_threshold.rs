@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig17_mv_threshold` — regenerates Fig 17.
+fn main() {
+    codecflow::exp::fig17::run();
+}

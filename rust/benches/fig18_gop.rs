@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig18_gop` — regenerates Fig 18.
+fn main() {
+    codecflow::exp::fig18::run();
+}

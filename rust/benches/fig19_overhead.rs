@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig19_overhead` — regenerates Fig 19.
+fn main() {
+    codecflow::exp::fig19::run();
+}

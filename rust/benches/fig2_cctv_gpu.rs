@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig2_cctv_gpu` — regenerates Fig 2.
+fn main() {
+    codecflow::exp::fig2::run();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig3_breakdown` — regenerates Fig 3.
+fn main() {
+    codecflow::exp::fig3::run();
+}

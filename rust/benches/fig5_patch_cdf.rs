@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig5_patch_cdf` — regenerates Fig 5.
+fn main() {
+    codecflow::exp::fig5::run();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig6_utilization` — regenerates Fig 6.
+fn main() {
+    codecflow::exp::fig6::run();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench table1_comparison` — regenerates Table 1.
+fn main() {
+    codecflow::exp::table1::run();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench table2_models` — regenerates Table 2.
+fn main() {
+    codecflow::exp::table2::run();
+}

@@ -1,0 +1,148 @@
+//! Bit-level I/O for the codec bitstream (MSB-first).
+
+/// MSB-first bit writer.
+#[derive(Default, Clone, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_bit(&mut self, bit: bool) {
+        self.cur = (self.cur << 1) | bit as u8;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.buf.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write the low `n` bits of `v`, MSB first. n <= 32.
+    pub fn put_bits(&mut self, v: u32, n: u8) {
+        debug_assert!(n <= 32);
+        for i in (0..n).rev() {
+            self.put_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush (zero-pad the final partial byte) and return the bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Resume reading at a saved bit position.
+    pub fn new_at(buf: &'a [u8], bit_pos: usize) -> Self {
+        debug_assert!(bit_pos <= buf.len() * 8);
+        BitReader { buf, pos: bit_pos }
+    }
+
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
+    pub fn get_bit(&mut self) -> Option<bool> {
+        if self.pos >= self.buf.len() * 8 {
+            return None;
+        }
+        let byte = self.buf[self.pos / 8];
+        let bit = (byte >> (7 - self.pos % 8)) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    pub fn get_bits(&mut self, n: u8) -> Option<u32> {
+        let mut v = 0u32;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit()? as u32;
+        }
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick;
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1011, 4);
+        w.put_bits(0xFF, 8);
+        w.put_bit(true);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(4), Some(0b1011));
+        assert_eq!(r.get_bits(8), Some(0xFF));
+        assert_eq!(r.get_bit(), Some(true));
+    }
+
+    #[test]
+    fn bit_len_tracks() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.put_bits(0, 13);
+        assert_eq!(w.bit_len(), 13);
+    }
+
+    #[test]
+    fn reader_exhaustion() {
+        let mut r = BitReader::new(&[0xAB]);
+        assert_eq!(r.get_bits(8), Some(0xAB));
+        assert_eq!(r.get_bit(), None);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_sequences() {
+        quick::check(0xB17, 50, |g| {
+            let n = g.usize_in(1, 200);
+            let vals: Vec<(u32, u8)> = (0..n)
+                .map(|_| {
+                    let bits = g.usize_in(1, 24) as u8;
+                    let v = (g.i64_in(0, (1 << bits) - 1)) as u32;
+                    (v, bits)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for (v, b) in &vals {
+                w.put_bits(*v, *b);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for (v, b) in &vals {
+                assert_eq!(r.get_bits(*b), Some(*v));
+            }
+        });
+    }
+}

@@ -1,0 +1,235 @@
+//! Video decoder: single-pass decode + metadata extraction.
+//!
+//! This is the runtime half of the paper's Codec Processor (§3.2): one
+//! sequential pass over the bitstream reconstructs frames *and* yields
+//! [`FrameMeta`] (MVs, residual SADs, frame types) as a parsing
+//! byproduct — no pixel-domain analysis. Overlapping sliding windows
+//! share these decoded frames via the pipeline's temporal buffer
+//! (`pipeline::frontend`), so each frame is decoded exactly once.
+
+use super::bitstream::BitReader;
+use super::encoder::MAGIC;
+use super::entropy::{get_coeff_block, get_se, get_ue, zigzag8};
+use super::quant::Quant;
+use super::transform::idct8;
+use super::types::{Frame, FrameMeta, FrameType, MotionVector, MB, TB};
+
+#[derive(Debug)]
+pub enum DecodeError {
+    BadMagic,
+    Truncated,
+    Corrupt(&'static str),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::BadMagic => write!(f, "bad stream magic"),
+            DecodeError::Truncated => write!(f, "truncated bitstream"),
+            DecodeError::Corrupt(what) => write!(f, "corrupt bitstream: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+pub struct Decoder {
+    buf: Vec<u8>,
+    /// Bit cursor: reading resumes here on each next_frame call.
+    pos_bits: usize,
+    pub w: usize,
+    pub h: usize,
+    pub gop: usize,
+    pub qp: u8,
+    quant: Quant,
+    zz: [usize; 64],
+    recon: Option<Frame>,
+    frame_idx: usize,
+}
+
+impl Decoder {
+    pub fn new(bitstream: Vec<u8>) -> Result<Self, DecodeError> {
+        let mut reader = BitReader::new(&bitstream);
+        let magic = reader.get_bits(16).ok_or(DecodeError::Truncated)?;
+        if magic != MAGIC {
+            return Err(DecodeError::BadMagic);
+        }
+        let w = get_ue(&mut reader).ok_or(DecodeError::Truncated)? as usize;
+        let h = get_ue(&mut reader).ok_or(DecodeError::Truncated)? as usize;
+        let gop = get_ue(&mut reader).ok_or(DecodeError::Truncated)? as usize;
+        let qp = get_ue(&mut reader).ok_or(DecodeError::Truncated)? as u8;
+        if w == 0 || h == 0 || w % MB != 0 || h % MB != 0 || gop == 0 {
+            return Err(DecodeError::Corrupt("header"));
+        }
+        let pos_bits = reader.bit_pos();
+        Ok(Decoder {
+            buf: bitstream,
+            pos_bits,
+            w,
+            h,
+            gop,
+            qp,
+            quant: Quant::new(qp),
+            zz: zigzag8(),
+            recon: None,
+            frame_idx: 0,
+        })
+    }
+
+    /// Decode the next frame; None at end of stream.
+    pub fn next_frame(&mut self) -> Result<Option<(Frame, FrameMeta)>, DecodeError> {
+        let buf = std::mem::take(&mut self.buf);
+        let mut reader = BitReader::new_at(&buf, self.pos_bits);
+        let result = self.next_frame_with(&mut reader);
+        self.pos_bits = reader.bit_pos();
+        self.buf = buf;
+        result
+    }
+
+    fn next_frame_with(
+        &mut self,
+        reader: &mut BitReader<'_>,
+    ) -> Result<Option<(Frame, FrameMeta)>, DecodeError> {
+        if reader.remaining_bits() < 8 {
+            return Ok(None); // only padding left
+        }
+        let bits_before = reader.bit_pos();
+        let is_i = reader.get_bit().ok_or(DecodeError::Truncated)?;
+        let gop_pos = self.frame_idx % self.gop;
+        let (frame, mut meta) = if is_i {
+            let f = self.decode_intra(reader)?;
+            (
+                f,
+                FrameMeta {
+                    frame_type: FrameType::I,
+                    gop_pos: 0,
+                    mb_w: self.w / MB,
+                    mb_h: self.h / MB,
+                    mvs: Vec::new(),
+                    residual_sad: Vec::new(),
+                    bits: 0,
+                },
+            )
+        } else {
+            let (f, mvs, sads) = self.decode_inter(reader)?;
+            (
+                f,
+                FrameMeta {
+                    frame_type: FrameType::P,
+                    gop_pos,
+                    mb_w: self.w / MB,
+                    mb_h: self.h / MB,
+                    mvs,
+                    residual_sad: sads,
+                    bits: 0,
+                },
+            )
+        };
+        meta.bits = reader.bit_pos() - bits_before;
+        self.recon = Some(frame.clone());
+        self.frame_idx += 1;
+        Ok(Some((frame, meta)))
+    }
+
+    /// Decode every remaining frame.
+    pub fn decode_all(&mut self) -> Result<Vec<(Frame, FrameMeta)>, DecodeError> {
+        let mut out = Vec::new();
+        while let Some(fm) = self.next_frame()? {
+            out.push(fm);
+        }
+        Ok(out)
+    }
+
+    fn decode_intra(&mut self, reader: &mut BitReader<'_>) -> Result<Frame, DecodeError> {
+        let mut frame = Frame::new(self.w, self.h);
+        for by in (0..self.h).step_by(TB) {
+            for bx in (0..self.w).step_by(TB) {
+                let q = get_coeff_block(reader, &self.zz)
+                    .ok_or(DecodeError::Corrupt("intra block"))?;
+                let rec = idct8(&self.quant.dequantize(&q));
+                for y in 0..TB {
+                    for x in 0..TB {
+                        frame.set(bx + x, by + y, (rec[y * TB + x] + 128.0).clamp(0.0, 255.0) as u8);
+                    }
+                }
+            }
+        }
+        Ok(frame)
+    }
+
+    fn decode_inter(
+        &mut self,
+        reader: &mut BitReader<'_>,
+    ) -> Result<(Frame, Vec<MotionVector>, Vec<u32>), DecodeError> {
+        let reference = self
+            .recon
+            .as_ref()
+            .ok_or(DecodeError::Corrupt("P-frame without reference"))?
+            .clone();
+        let mut frame = Frame::new(self.w, self.h);
+        let mb_w = self.w / MB;
+        let mb_h = self.h / MB;
+        let mut mvs = Vec::with_capacity(mb_w * mb_h);
+        let mut sads = Vec::with_capacity(mb_w * mb_h);
+
+        for mby in 0..mb_h {
+            for mbx in 0..mb_w {
+                let bx = mbx * MB;
+                let by = mby * MB;
+                let skip = reader.get_bit().ok_or(DecodeError::Truncated)?;
+                if skip {
+                    for y in 0..MB {
+                        for x in 0..MB {
+                            frame.set(bx + x, by + y, reference.at(bx + x, by + y));
+                        }
+                    }
+                    mvs.push(MotionVector::default());
+                    sads.push(0);
+                    continue;
+                }
+                let qx = get_se(reader).ok_or(DecodeError::Truncated)?;
+                let qy = get_se(reader).ok_or(DecodeError::Truncated)?;
+                let sad = get_ue(reader).ok_or(DecodeError::Truncated)?;
+                let mv = MotionVector { qx: qx as i16, qy: qy as i16 };
+                mvs.push(mv);
+                sads.push(sad);
+
+                let mut pred = [[0.0f32; MB]; MB];
+                for y in 0..MB {
+                    for x in 0..MB {
+                        pred[y][x] = reference
+                            .sample_subpel((bx + x) as f32 + mv.dx(), (by + y) as f32 + mv.dy());
+                    }
+                }
+                let coded = reader.get_bit().ok_or(DecodeError::Truncated)?;
+                if coded {
+                    for ty in 0..MB / TB {
+                        for tx in 0..MB / TB {
+                            let q = get_coeff_block(reader, &self.zz)
+                                .ok_or(DecodeError::Corrupt("residual block"))?;
+                            let res = idct8(&self.quant.dequantize(&q));
+                            for y in 0..TB {
+                                for x in 0..TB {
+                                    let fy = ty * TB + y;
+                                    let fx = tx * TB + x;
+                                    frame.set(
+                                        bx + fx,
+                                        by + fy,
+                                        (pred[fy][fx] + res[y * TB + x]).clamp(0.0, 255.0) as u8,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    for y in 0..MB {
+                        for x in 0..MB {
+                            frame.set(bx + x, by + y, pred[y][x].clamp(0.0, 255.0) as u8);
+                        }
+                    }
+                }
+            }
+        }
+        Ok((frame, mvs, sads))
+    }
+}

@@ -1,0 +1,273 @@
+//! Video encoder: GOP-structured I/P coding.
+//!
+//! Bitstream layout (all entropy-coded, see `entropy`):
+//!
+//! ```text
+//! stream  := header frame*
+//! header  := magic(16b) width(ue) height(ue) gop(ue) qp(ue)
+//! frame   := ftype(1b) body
+//! I body  := coeff_block * (per 8x8 block, raster order, -128 offset)
+//! P body  := mb * (mb grid raster order)
+//! mb      := skip(1b) | [mv_qx(se) mv_qy(se) sad(ue)
+//!            coded(1b) [coeff_block * 4]]
+//! ```
+//!
+//! The per-MB residual SAD is written into the stream explicitly: real
+//! codecs expose it implicitly via coded residuals; carrying it makes
+//! the decoder's metadata extraction exact while costing a few bits —
+//! the same information NVDEC surfaces to CodecFlow (DESIGN.md §3).
+//!
+//! The encoder closes the loop on the *reconstructed* previous frame
+//! (like any hybrid codec), so encoder/decoder reference states never
+//! diverge.
+
+use super::bitstream::BitWriter;
+use super::entropy::{put_coeff_block, put_se, put_ue, zigzag8};
+use super::me::diamond_search;
+use super::quant::Quant;
+use super::transform::fdct8;
+use super::types::{Frame, FrameMeta, FrameType, MotionVector, MB, TB};
+
+pub const MAGIC: u32 = 0xCF0D;
+
+#[derive(Clone, Debug)]
+pub struct EncoderConfig {
+    /// GOP size in frames (1 I-frame per GOP). Paper default: 16.
+    pub gop: usize,
+    /// Quantization quality (1..31). Default 6 ~ surveillance quality.
+    pub qp: u8,
+    /// Motion search range in pixels.
+    pub search_range: i32,
+    /// P-frame macroblock skip threshold: MBs whose zero-MV SAD is
+    /// below this are coded as skip (copy). In SAD units over 16x16.
+    pub skip_sad: u32,
+}
+
+impl Default for EncoderConfig {
+    fn default() -> Self {
+        // skip_sad = 512 (2 SAD/px over a 16x16 MB): a deadzone above
+        // sensor-noise level, like real encoders — static blocks under
+        // camera noise code as skip instead of burning residual bits.
+        EncoderConfig { gop: 16, qp: 6, search_range: 8, skip_sad: 512 }
+    }
+}
+
+pub struct Encoder {
+    pub cfg: EncoderConfig,
+    w: usize,
+    h: usize,
+    quant: Quant,
+    zz: [usize; 64],
+    /// Reconstructed previous frame (prediction reference).
+    recon: Option<Frame>,
+    frame_idx: usize,
+    writer: BitWriter,
+    /// Per-frame metadata mirroring what the decoder will extract.
+    pub metas: Vec<FrameMeta>,
+    header_written: bool,
+}
+
+impl Encoder {
+    pub fn new(w: usize, h: usize, cfg: EncoderConfig) -> Self {
+        assert!(w % MB == 0 && h % MB == 0, "dimensions must be MB-aligned");
+        let quant = Quant::new(cfg.qp);
+        Encoder {
+            cfg,
+            w,
+            h,
+            quant,
+            zz: zigzag8(),
+            recon: None,
+            frame_idx: 0,
+            writer: BitWriter::new(),
+            metas: Vec::new(),
+            header_written: false,
+        }
+    }
+
+    fn write_header(&mut self) {
+        self.writer.put_bits(MAGIC, 16);
+        put_ue(&mut self.writer, self.w as u32);
+        put_ue(&mut self.writer, self.h as u32);
+        put_ue(&mut self.writer, self.cfg.gop as u32);
+        put_ue(&mut self.writer, self.cfg.qp as u32);
+        self.header_written = true;
+    }
+
+    /// Encode the next frame; returns its metadata (also stored).
+    pub fn encode_frame(&mut self, frame: &Frame) -> &FrameMeta {
+        assert_eq!((frame.w, frame.h), (self.w, self.h));
+        if !self.header_written {
+            self.write_header();
+        }
+        let gop_pos = self.frame_idx % self.cfg.gop;
+        let is_i = gop_pos == 0 || self.recon.is_none();
+        let bits_before = self.writer.bit_len();
+        let meta = if is_i {
+            self.writer.put_bit(true);
+            let recon = self.encode_intra(frame);
+            self.recon = Some(recon);
+            FrameMeta {
+                frame_type: FrameType::I,
+                gop_pos: 0,
+                mb_w: self.w / MB,
+                mb_h: self.h / MB,
+                mvs: Vec::new(),
+                residual_sad: Vec::new(),
+                bits: 0,
+            }
+        } else {
+            self.writer.put_bit(false);
+            let (recon, mvs, sads) = self.encode_inter(frame);
+            self.recon = Some(recon);
+            FrameMeta {
+                frame_type: FrameType::P,
+                gop_pos,
+                mb_w: self.w / MB,
+                mb_h: self.h / MB,
+                mvs,
+                residual_sad: sads,
+                bits: 0,
+            }
+        };
+        let mut meta = meta;
+        meta.bits = self.writer.bit_len() - bits_before;
+        self.frame_idx += 1;
+        self.metas.push(meta);
+        self.metas.last().unwrap()
+    }
+
+    /// Intra-code all 8x8 blocks; returns the reconstruction.
+    fn encode_intra(&mut self, frame: &Frame) -> Frame {
+        let mut recon = Frame::new(self.w, self.h);
+        for by in (0..self.h).step_by(TB) {
+            for bx in (0..self.w).step_by(TB) {
+                let mut block = [0.0f32; 64];
+                for y in 0..TB {
+                    for x in 0..TB {
+                        block[y * TB + x] = frame.at(bx + x, by + y) as f32 - 128.0;
+                    }
+                }
+                let q = self.quant.quantize(&fdct8(&block));
+                put_coeff_block(&mut self.writer, &q, &self.zz);
+                let rec = super::transform::idct8(&self.quant.dequantize(&q));
+                for y in 0..TB {
+                    for x in 0..TB {
+                        recon.set(bx + x, by + y, (rec[y * TB + x] + 128.0).clamp(0.0, 255.0) as u8);
+                    }
+                }
+            }
+        }
+        recon
+    }
+
+    /// Inter-code all macroblocks against the previous reconstruction.
+    fn encode_inter(&mut self, frame: &Frame) -> (Frame, Vec<MotionVector>, Vec<u32>) {
+        let reference = self.recon.take().expect("P-frame needs a reference");
+        let mut recon = Frame::new(self.w, self.h);
+        let mb_w = self.w / MB;
+        let mb_h = self.h / MB;
+        let mut mvs = Vec::with_capacity(mb_w * mb_h);
+        let mut sads = Vec::with_capacity(mb_w * mb_h);
+
+        for mby in 0..mb_h {
+            for mbx in 0..mb_w {
+                let bx = mbx * MB;
+                let by = mby * MB;
+                // Skip decision on the zero-MV SAD (static block).
+                let zero_sad = super::me::sad_int(frame, &reference, bx, by, 0, 0);
+                if zero_sad <= self.cfg.skip_sad {
+                    self.writer.put_bit(true); // skip
+                    mvs.push(MotionVector::default());
+                    // A skip *is* the codec asserting "no change": the
+                    // metadata records zero residual (matches decoder).
+                    sads.push(0);
+                    copy_mb(&mut recon, &reference, bx, by);
+                    continue;
+                }
+                self.writer.put_bit(false);
+                let (mv, sad) = diamond_search(frame, &reference, bx, by, self.cfg.search_range);
+                put_se(&mut self.writer, mv.qx as i32);
+                put_se(&mut self.writer, mv.qy as i32);
+                put_ue(&mut self.writer, sad);
+                mvs.push(mv);
+                sads.push(sad);
+
+                // Motion-compensated prediction + residual coding.
+                let mut pred = [[0.0f32; MB]; MB];
+                for y in 0..MB {
+                    for x in 0..MB {
+                        pred[y][x] = reference
+                            .sample_subpel((bx + x) as f32 + mv.dx(), (by + y) as f32 + mv.dy());
+                    }
+                }
+                // Residual worth coding? (cheap rate-distortion proxy)
+                let coded = sad > self.cfg.skip_sad * 2;
+                self.writer.put_bit(coded);
+                let mut rec_mb = [[0.0f32; MB]; MB];
+                if coded {
+                    for ty in 0..MB / TB {
+                        for tx in 0..MB / TB {
+                            let mut block = [0.0f32; 64];
+                            for y in 0..TB {
+                                for x in 0..TB {
+                                    let fy = ty * TB + y;
+                                    let fx = tx * TB + x;
+                                    block[y * TB + x] =
+                                        frame.at(bx + fx, by + fy) as f32 - pred[fy][fx];
+                                }
+                            }
+                            let q = self.quant.quantize(&fdct8(&block));
+                            put_coeff_block(&mut self.writer, &q, &self.zz);
+                            let res = super::transform::idct8(&self.quant.dequantize(&q));
+                            for y in 0..TB {
+                                for x in 0..TB {
+                                    let fy = ty * TB + y;
+                                    let fx = tx * TB + x;
+                                    rec_mb[fy][fx] = pred[fy][fx] + res[y * TB + x];
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    rec_mb = pred;
+                }
+                for y in 0..MB {
+                    for x in 0..MB {
+                        recon.set(bx + x, by + y, rec_mb[y][x].clamp(0.0, 255.0) as u8);
+                    }
+                }
+            }
+        }
+        (recon, mvs, sads)
+    }
+
+    /// Total bits written so far (transmission accounting).
+    pub fn bit_len(&self) -> usize {
+        self.writer.bit_len()
+    }
+
+    /// Finish the stream and return the bitstream bytes.
+    pub fn finish(self) -> Vec<u8> {
+        self.writer.finish()
+    }
+}
+
+fn copy_mb(dst: &mut Frame, src: &Frame, bx: usize, by: usize) {
+    for y in 0..MB {
+        for x in 0..MB {
+            dst.set(bx + x, by + y, src.at(bx + x, by + y));
+        }
+    }
+}
+
+/// Convenience: encode a whole sequence, returning (bitstream, metas).
+pub fn encode_sequence(frames: &[Frame], cfg: EncoderConfig) -> (Vec<u8>, Vec<FrameMeta>) {
+    assert!(!frames.is_empty());
+    let mut enc = Encoder::new(frames[0].w, frames[0].h, cfg);
+    for f in frames {
+        enc.encode_frame(f);
+    }
+    let metas = enc.metas.clone();
+    (enc.finish(), metas)
+}

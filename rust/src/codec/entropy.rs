@@ -1,0 +1,176 @@
+//! Entropy coding: exp-Golomb codes (the H.264 family's workhorse) and
+//! zigzag + run-length coding of quantized transform coefficients.
+
+use super::bitstream::{BitReader, BitWriter};
+
+/// Unsigned exp-Golomb: 0 -> 1, 1 -> 010, 2 -> 011, 3 -> 00100, ...
+pub fn put_ue(w: &mut BitWriter, v: u32) {
+    let vp1 = v as u64 + 1;
+    let nbits = 64 - vp1.leading_zeros() as u8; // floor(log2(v+1)) + 1
+    for _ in 0..nbits - 1 {
+        w.put_bit(false);
+    }
+    for i in (0..nbits).rev() {
+        w.put_bit((vp1 >> i) & 1 == 1);
+    }
+}
+
+pub fn get_ue(r: &mut BitReader) -> Option<u32> {
+    let mut zeros = 0u8;
+    loop {
+        match r.get_bit()? {
+            false => zeros += 1,
+            true => break,
+        }
+        if zeros > 32 {
+            return None; // corrupt stream guard
+        }
+    }
+    let rest = if zeros == 0 { 0 } else { r.get_bits(zeros)? };
+    Some(((1u64 << zeros) as u32 | rest) - 1)
+}
+
+/// Signed exp-Golomb mapping: 0, 1, -1, 2, -2, ...
+pub fn put_se(w: &mut BitWriter, v: i32) {
+    let mapped = if v > 0 { (v as u32) * 2 - 1 } else { (-v as u32) * 2 };
+    put_ue(w, mapped);
+}
+
+pub fn get_se(r: &mut BitReader) -> Option<i32> {
+    let m = get_ue(r)?;
+    Some(if m % 2 == 1 { (m / 2 + 1) as i32 } else { -((m / 2) as i32) })
+}
+
+/// Zigzag scan order for an 8x8 block.
+pub fn zigzag8() -> [usize; 64] {
+    let mut order = [0usize; 64];
+    let mut idx = 0;
+    for s in 0..15 {
+        // diagonal s: cells (i, s-i)
+        let range: Vec<usize> = (0..8).filter(|&i| s >= i && s - i < 8).collect();
+        let cells: Vec<usize> = if s % 2 == 0 {
+            range.iter().rev().map(|&i| i * 8 + (s - i)).collect()
+        } else {
+            range.iter().map(|&i| i * 8 + (s - i)).collect()
+        };
+        for c in cells {
+            order[idx] = c;
+            idx += 1;
+        }
+    }
+    order
+}
+
+/// Encode an 8x8 quantized coefficient block: zigzag, then (run, level)
+/// pairs with exp-Golomb, terminated by an end-of-block marker.
+pub fn put_coeff_block(w: &mut BitWriter, coeffs: &[i32; 64], zz: &[usize; 64]) {
+    let mut run = 0u32;
+    for &pos in zz.iter() {
+        let c = coeffs[pos];
+        if c == 0 {
+            run += 1;
+        } else {
+            put_ue(w, run);
+            put_se(w, c);
+            run = 0;
+        }
+    }
+    // EOB: run that overflows the block.
+    put_ue(w, 63);
+    put_se(w, 0);
+}
+
+pub fn get_coeff_block(r: &mut BitReader, zz: &[usize; 64]) -> Option<[i32; 64]> {
+    let mut coeffs = [0i32; 64];
+    let mut idx = 0usize;
+    loop {
+        let run = get_ue(r)? as usize;
+        let level = get_se(r)?;
+        if run == 63 && level == 0 {
+            return Some(coeffs); // EOB
+        }
+        idx += run;
+        if idx >= 64 {
+            return None;
+        }
+        coeffs[zz[idx]] = level;
+        idx += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick;
+
+    #[test]
+    fn ue_small_values() {
+        for v in 0..200u32 {
+            let mut w = BitWriter::new();
+            put_ue(&mut w, v);
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(get_ue(&mut r), Some(v));
+        }
+    }
+
+    #[test]
+    fn se_roundtrip() {
+        for v in -100..100i32 {
+            let mut w = BitWriter::new();
+            put_se(&mut w, v);
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(get_se(&mut r), Some(v));
+        }
+    }
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let zz = zigzag8();
+        let mut seen = [false; 64];
+        for &i in &zz {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        // canonical start of the jpeg zigzag
+        assert_eq!(&zz[..4], &[0, 1, 8, 16]);
+    }
+
+    #[test]
+    fn coeff_block_roundtrip_sparse() {
+        let zz = zigzag8();
+        let mut coeffs = [0i32; 64];
+        coeffs[0] = 57;
+        coeffs[1] = -3;
+        coeffs[8] = 1;
+        coeffs[63] = -9;
+        let mut w = BitWriter::new();
+        put_coeff_block(&mut w, &coeffs, &zz);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(get_coeff_block(&mut r, &zz), Some(coeffs));
+    }
+
+    #[test]
+    fn prop_coeff_block_roundtrip() {
+        let zz = zigzag8();
+        quick::check(0xC0DE, 60, |g| {
+            let mut coeffs = [0i32; 64];
+            let nnz = g.usize_in(0, 20);
+            for _ in 0..nnz {
+                let pos = g.usize_in(0, 63);
+                let mut lv = g.i64_in(-255, 255) as i32;
+                if lv == 0 {
+                    lv = 1;
+                }
+                coeffs[pos] = lv;
+            }
+            let mut w = BitWriter::new();
+            put_coeff_block(&mut w, &coeffs, &zz);
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(get_coeff_block(&mut r, &zz), Some(coeffs));
+        });
+    }
+}

@@ -1,0 +1,105 @@
+//! JPEG-like per-frame intra codec: the *baseline* transmission format
+//! (paper §2.2: "the client transmits sampled JPEG frames").
+//!
+//! Reuses the intra DCT path of the video codec — structurally that is
+//! exactly what JPEG is — so the size ratio between per-frame JPEG and
+//! the inter-coded bitstream reflects the real cause (no temporal
+//! prediction), which is what the Fig 3 / Fig 11 "Trans" comparison
+//! measures.
+
+use super::bitstream::{BitReader, BitWriter};
+use super::entropy::{get_coeff_block, get_ue, put_coeff_block, put_ue, zigzag8};
+use super::quant::Quant;
+use super::transform::{fdct8, idct8};
+use super::types::{Frame, TB};
+
+/// Encode one frame standalone; returns the compressed bytes.
+pub fn encode(frame: &Frame, qp: u8) -> Vec<u8> {
+    let quant = Quant::new(qp);
+    let zz = zigzag8();
+    let mut w = BitWriter::new();
+    put_ue(&mut w, frame.w as u32);
+    put_ue(&mut w, frame.h as u32);
+    put_ue(&mut w, qp as u32);
+    for by in (0..frame.h).step_by(TB) {
+        for bx in (0..frame.w).step_by(TB) {
+            let mut block = [0.0f32; 64];
+            for y in 0..TB {
+                for x in 0..TB {
+                    block[y * TB + x] = frame.at(bx + x, by + y) as f32 - 128.0;
+                }
+            }
+            let q = quant.quantize(&fdct8(&block));
+            put_coeff_block(&mut w, &q, &zz);
+        }
+    }
+    w.finish()
+}
+
+/// Decode a standalone frame.
+pub fn decode(bytes: &[u8]) -> Option<Frame> {
+    let mut r = BitReader::new(bytes);
+    let w = get_ue(&mut r)? as usize;
+    let h = get_ue(&mut r)? as usize;
+    let qp = get_ue(&mut r)? as u8;
+    if w == 0 || h == 0 || w % TB != 0 || h % TB != 0 {
+        return None;
+    }
+    let quant = Quant::new(qp);
+    let zz = zigzag8();
+    let mut frame = Frame::new(w, h);
+    for by in (0..h).step_by(TB) {
+        for bx in (0..w).step_by(TB) {
+            let q = get_coeff_block(&mut r, &zz)?;
+            let rec = idct8(&quant.dequantize(&q));
+            for y in 0..TB {
+                for x in 0..TB {
+                    frame.set(bx + x, by + y, (rec[y * TB + x] + 128.0).clamp(0.0, 255.0) as u8);
+                }
+            }
+        }
+    }
+    Some(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn noisy_frame(seed: u64) -> Frame {
+        let mut rng = Rng::new(seed);
+        let mut f = Frame::new(64, 64);
+        for y in 0..64 {
+            for x in 0..64 {
+                let base = 100.0 + 50.0 * ((x as f64 / 9.0).sin() + (y as f64 / 7.0).cos());
+                f.set(x, y, (base + rng.normal() * 4.0).clamp(0.0, 255.0) as u8);
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn roundtrip_quality() {
+        let f = noisy_frame(3);
+        let bytes = encode(&f, 4);
+        let dec = decode(&bytes).unwrap();
+        assert_eq!((dec.w, dec.h), (64, 64));
+        assert!(f.psnr(&dec) > 30.0, "psnr={}", f.psnr(&dec));
+    }
+
+    #[test]
+    fn higher_qp_smaller() {
+        let f = noisy_frame(4);
+        assert!(encode(&f, 16).len() < encode(&f, 2).len());
+    }
+
+    #[test]
+    fn decode_garbage_fails_gracefully() {
+        assert!(decode(&[0xFF; 4]).is_none() || decode(&[0xFF; 4]).is_some());
+        // must not panic; tiny truncated stream:
+        let f = noisy_frame(5);
+        let bytes = encode(&f, 8);
+        assert!(decode(&bytes[..bytes.len() / 8]).is_none());
+    }
+}

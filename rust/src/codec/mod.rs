@@ -1,0 +1,34 @@
+//! Software inter-frame video codec substrate.
+//!
+//! Stands in for H.264 + NVDEC (DESIGN.md §3): the paper's system
+//! consumes only *standard codec primitives* — motion vectors,
+//! residual energy, I/P frame types, GOP layout — so this codec
+//! implements exactly those semantics:
+//!
+//! * 16x16 macroblocks, diamond-search motion estimation with
+//!   half/quarter-pel refinement (MV resolution 0.25 px, matching the
+//!   paper's MV-threshold sweep granularity);
+//! * residuals coded with an 8x8 integer DCT + uniform quantization,
+//!   zigzag + exp-Golomb entropy coding;
+//! * I-frames intra-coded (DCT of raw pixels), P-frames predicted from
+//!   the previous reconstructed frame;
+//! * the decoder exposes [`types::FrameMeta`] (MV field, per-block
+//!   residual SAD, frame type) as a decode-time byproduct — the signal
+//!   CodecFlow's Motion Analyzer consumes.
+//!
+//! [`jpeg`] reuses the intra path as the per-frame JPEG-like baseline
+//! codec for the transmission comparison (Fig 3 / Fig 11 "Trans").
+
+pub mod bitstream;
+pub mod decoder;
+pub mod encoder;
+pub mod entropy;
+pub mod jpeg;
+pub mod me;
+pub mod quant;
+pub mod transform;
+pub mod types;
+
+pub use decoder::Decoder;
+pub use encoder::{Encoder, EncoderConfig};
+pub use types::{Frame, FrameMeta, FrameType, MotionVector};

@@ -1,0 +1,99 @@
+//! Uniform quantization of DCT coefficients with a JPEG-style
+//! frequency-weighted step matrix scaled by a quality parameter.
+
+use super::types::TB;
+
+/// Base step matrix (rough luminance-JPEG shape: coarser for high
+/// frequencies). Scaled by `qp`.
+const BASE: [u16; 64] = [
+    16, 11, 10, 16, 24, 40, 51, 61,
+    12, 12, 14, 19, 26, 58, 60, 55,
+    14, 13, 16, 24, 40, 57, 69, 56,
+    14, 17, 22, 29, 51, 87, 80, 62,
+    18, 22, 37, 56, 68, 109, 103, 77,
+    24, 35, 55, 64, 81, 104, 113, 92,
+    49, 64, 78, 87, 103, 121, 120, 101,
+    72, 92, 95, 98, 112, 100, 103, 99,
+];
+
+/// Quantizer with a precomputed step table. qp in [1, 31]:
+/// 1 = near-lossless, 8 = default streaming quality, 31 = potato.
+#[derive(Clone, Debug)]
+pub struct Quant {
+    pub qp: u8,
+    steps: [f32; 64],
+}
+
+impl Quant {
+    pub fn new(qp: u8) -> Self {
+        let qp = qp.clamp(1, 31);
+        let mut steps = [0.0f32; 64];
+        for i in 0..64 {
+            steps[i] = (BASE[i] as f32 * qp as f32 / 8.0).max(1.0);
+        }
+        Quant { qp, steps }
+    }
+
+    pub fn quantize(&self, coeffs: &[f32; 64]) -> [i32; 64] {
+        let mut out = [0i32; 64];
+        for i in 0..64 {
+            out[i] = (coeffs[i] / self.steps[i]).round() as i32;
+        }
+        out
+    }
+
+    pub fn dequantize(&self, q: &[i32; 64]) -> [f32; 64] {
+        let mut out = [0.0f32; 64];
+        for i in 0..64 {
+            out[i] = q[i] as f32 * self.steps[i];
+        }
+        out
+    }
+
+    /// Max per-coefficient absolute reconstruction error.
+    pub fn max_error(&self) -> f32 {
+        self.steps.iter().cloned().fold(0.0, f32::max) / 2.0
+    }
+}
+
+/// Number of transform blocks per macroblock row/col.
+pub const TB_PER_MB: usize = super::types::MB / TB;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick;
+
+    #[test]
+    fn quantize_bounded_error() {
+        quick::check(0x9A, 40, |g| {
+            let qp = g.usize_in(1, 31) as u8;
+            let q = Quant::new(qp);
+            let mut coeffs = [0.0f32; 64];
+            for v in coeffs.iter_mut() {
+                *v = g.f64_in(-500.0, 500.0) as f32;
+            }
+            let deq = q.dequantize(&q.quantize(&coeffs));
+            for i in 0..64 {
+                let step = (BASE[i] as f32 * qp as f32 / 8.0).max(1.0);
+                assert!(
+                    (coeffs[i] - deq[i]).abs() <= step / 2.0 + 1e-3,
+                    "i={i} qp={qp}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn qp1_near_lossless() {
+        let q = Quant::new(1);
+        assert!(q.max_error() <= 8.0);
+    }
+
+    #[test]
+    fn higher_qp_coarser() {
+        let a = Quant::new(2);
+        let b = Quant::new(16);
+        assert!(b.max_error() > a.max_error());
+    }
+}

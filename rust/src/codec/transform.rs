@@ -1,0 +1,131 @@
+//! 8x8 DCT-II / inverse DCT for intra and residual coding.
+//!
+//! Float DCT with orthonormal scaling — matches JPEG/H.264 semantics
+//! (energy compaction for entropy coding) without the integer-approx
+//! bookkeeping; quantization (quant.rs) is where the loss lives.
+
+use super::types::TB;
+
+/// Precomputed cos table: c[u][x] = cos((2x+1) u pi / 16).
+fn cos_table() -> &'static [[f32; TB]; TB] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[[f32; TB]; TB]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [[0.0f32; TB]; TB];
+        for (u, row) in t.iter_mut().enumerate() {
+            for (x, v) in row.iter_mut().enumerate() {
+                *v = ((2 * x + 1) as f32 * u as f32 * std::f32::consts::PI / 16.0).cos();
+            }
+        }
+        t
+    })
+}
+
+#[inline]
+fn alpha(u: usize) -> f32 {
+    if u == 0 {
+        (1.0f32 / TB as f32).sqrt()
+    } else {
+        (2.0f32 / TB as f32).sqrt()
+    }
+}
+
+/// Forward 8x8 DCT-II (row-major input/output).
+pub fn fdct8(block: &[f32; 64]) -> [f32; 64] {
+    let c = cos_table();
+    let mut tmp = [0.0f32; 64];
+    // rows
+    for y in 0..TB {
+        for u in 0..TB {
+            let mut s = 0.0;
+            for x in 0..TB {
+                s += block[y * TB + x] * c[u][x];
+            }
+            tmp[y * TB + u] = s * alpha(u);
+        }
+    }
+    // cols
+    let mut out = [0.0f32; 64];
+    for u in 0..TB {
+        for v in 0..TB {
+            let mut s = 0.0;
+            for y in 0..TB {
+                s += tmp[y * TB + u] * c[v][y];
+            }
+            out[v * TB + u] = s * alpha(v);
+        }
+    }
+    out
+}
+
+/// Inverse 8x8 DCT (exact inverse of `fdct8` up to float error).
+pub fn idct8(coeffs: &[f32; 64]) -> [f32; 64] {
+    let c = cos_table();
+    let mut tmp = [0.0f32; 64];
+    // cols
+    for u in 0..TB {
+        for y in 0..TB {
+            let mut s = 0.0;
+            for v in 0..TB {
+                s += alpha(v) * coeffs[v * TB + u] * c[v][y];
+            }
+            tmp[y * TB + u] = s;
+        }
+    }
+    // rows
+    let mut out = [0.0f32; 64];
+    for y in 0..TB {
+        for x in 0..TB {
+            let mut s = 0.0;
+            for u in 0..TB {
+                s += alpha(u) * tmp[y * TB + u] * c[u][x];
+            }
+            out[y * TB + x] = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Rng, quick};
+
+    #[test]
+    fn dct_roundtrip_identity() {
+        let mut rng = Rng::new(1);
+        let mut block = [0.0f32; 64];
+        for v in block.iter_mut() {
+            *v = rng.range_f64(-128.0, 128.0) as f32;
+        }
+        let back = idct8(&fdct8(&block));
+        for (a, b) in block.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dc_of_constant_block() {
+        let block = [100.0f32; 64];
+        let coeffs = fdct8(&block);
+        // DC = 8 * mean for orthonormal 2-D DCT
+        assert!((coeffs[0] - 800.0).abs() < 1e-2);
+        for (i, c) in coeffs.iter().enumerate().skip(1) {
+            assert!(c.abs() < 1e-3, "AC[{i}]={c}");
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        quick::check(0xD7C, 30, |g| {
+            let mut block = [0.0f32; 64];
+            for v in block.iter_mut() {
+                *v = g.f64_in(-100.0, 100.0) as f32;
+            }
+            let coeffs = fdct8(&block);
+            let e1: f32 = block.iter().map(|x| x * x).sum();
+            let e2: f32 = coeffs.iter().map(|x| x * x).sum();
+            assert!((e1 - e2).abs() / e1.max(1.0) < 1e-3);
+        });
+    }
+}

@@ -1,0 +1,199 @@
+//! Core codec data types: frames, motion vectors, decode-time metadata.
+
+/// Macroblock side length (motion estimation granularity).
+pub const MB: usize = 16;
+/// Transform block side length (DCT granularity).
+pub const TB: usize = 8;
+
+/// A single luma-plane frame. The reproduction operates on the Y plane
+/// only — motion vectors, residuals and the VLM patch pipeline all key
+/// on luma; chroma adds bitrate realism but no new behaviour
+/// (documented substitution, DESIGN.md §3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub w: usize,
+    pub h: usize,
+    pub data: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(w: usize, h: usize) -> Self {
+        Frame { w, h, data: vec![0; w * h] }
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> u8 {
+        self.data[y * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: u8) {
+        self.data[y * self.w + x] = v;
+    }
+
+    /// Clamped sample (edge-extended) at possibly out-of-range coords.
+    #[inline]
+    pub fn at_clamped(&self, x: isize, y: isize) -> u8 {
+        let x = x.clamp(0, self.w as isize - 1) as usize;
+        let y = y.clamp(0, self.h as isize - 1) as usize;
+        self.at(x, y)
+    }
+
+    /// Bilinear sample at fractional coordinates (for sub-pel motion).
+    pub fn sample_subpel(&self, x: f32, y: f32) -> f32 {
+        let x0 = x.floor() as isize;
+        let y0 = y.floor() as isize;
+        let fx = x - x0 as f32;
+        let fy = y - y0 as f32;
+        let p00 = self.at_clamped(x0, y0) as f32;
+        let p10 = self.at_clamped(x0 + 1, y0) as f32;
+        let p01 = self.at_clamped(x0, y0 + 1) as f32;
+        let p11 = self.at_clamped(x0 + 1, y0 + 1) as f32;
+        p00 * (1.0 - fx) * (1.0 - fy)
+            + p10 * fx * (1.0 - fy)
+            + p01 * (1.0 - fx) * fy
+            + p11 * fx * fy
+    }
+
+    /// Mean absolute difference vs another frame (whole plane).
+    pub fn mad(&self, other: &Frame) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        let sum: u64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a as i64 - *b as i64).unsigned_abs())
+            .sum();
+        sum as f64 / self.data.len() as f64
+    }
+
+    /// Peak signal-to-noise ratio vs a reference frame (dB).
+    pub fn psnr(&self, reference: &Frame) -> f64 {
+        let mse: f64 = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(a, b)| {
+                let d = *a as f64 - *b as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64;
+        if mse == 0.0 {
+            f64::INFINITY
+        } else {
+            10.0 * (255.0_f64 * 255.0 / mse).log10()
+        }
+    }
+}
+
+/// Motion vector in pixels (quarter-pel resolution: internally stored
+/// as quarter-pel integers, exposed as f32).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct MotionVector {
+    /// Quarter-pel units.
+    pub qx: i16,
+    pub qy: i16,
+}
+
+impl MotionVector {
+    pub fn from_pixels(dx: f32, dy: f32) -> Self {
+        MotionVector { qx: (dx * 4.0).round() as i16, qy: (dy * 4.0).round() as i16 }
+    }
+
+    pub fn dx(&self) -> f32 {
+        self.qx as f32 / 4.0
+    }
+
+    pub fn dy(&self) -> f32 {
+        self.qy as f32 / 4.0
+    }
+
+    /// Euclidean magnitude in pixels (the paper's `V_t^m`, eq. 1).
+    pub fn magnitude(&self) -> f32 {
+        (self.dx() * self.dx() + self.dy() * self.dy()).sqrt()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameType {
+    /// Intra-coded: full reference content, resets the GOP.
+    I,
+    /// Predicted from the previous reconstructed frame.
+    P,
+}
+
+/// Decode-time metadata for one frame — the codec signal CodecFlow
+/// consumes (paper §3.2). Produced by both encoder (for tests) and
+/// decoder (the runtime path) without extra computation: it is a
+/// byproduct of parsing the bitstream.
+#[derive(Clone, Debug)]
+pub struct FrameMeta {
+    pub frame_type: FrameType,
+    /// Index within the GOP (0 for the I-frame).
+    pub gop_pos: usize,
+    /// Macroblock grid dimensions.
+    pub mb_w: usize,
+    pub mb_h: usize,
+    /// Per-macroblock motion vectors (empty for I-frames).
+    pub mvs: Vec<MotionVector>,
+    /// Per-macroblock residual SAD after motion compensation (the
+    /// paper's `R_t^m`, eq. 2). For I-frames: zeros (no prediction).
+    pub residual_sad: Vec<u32>,
+    /// Compressed size of this frame in bits (for transmission model).
+    pub bits: usize,
+}
+
+impl FrameMeta {
+    pub fn mv_at(&self, mbx: usize, mby: usize) -> MotionVector {
+        if self.mvs.is_empty() {
+            MotionVector::default()
+        } else {
+            self.mvs[mby * self.mb_w + mbx]
+        }
+    }
+
+    pub fn sad_at(&self, mbx: usize, mby: usize) -> u32 {
+        if self.residual_sad.is_empty() {
+            0
+        } else {
+            self.residual_sad[mby * self.mb_w + mbx]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mv_quarter_pel_roundtrip() {
+        let mv = MotionVector::from_pixels(1.25, -0.75);
+        assert_eq!(mv.dx(), 1.25);
+        assert_eq!(mv.dy(), -0.75);
+        assert!((mv.magnitude() - (1.25f32 * 1.25 + 0.75 * 0.75).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn subpel_midpoint() {
+        let mut f = Frame::new(2, 1);
+        f.set(0, 0, 10);
+        f.set(1, 0, 20);
+        assert!((f.sample_subpel(0.5, 0.0) - 15.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn psnr_identical_is_inf() {
+        let f = Frame::new(8, 8);
+        assert!(f.psnr(&f).is_infinite());
+    }
+
+    #[test]
+    fn clamped_edges() {
+        let mut f = Frame::new(2, 2);
+        f.set(0, 0, 5);
+        assert_eq!(f.at_clamped(-3, -3), 5);
+        f.set(1, 1, 9);
+        assert_eq!(f.at_clamped(10, 10), 9);
+    }
+}

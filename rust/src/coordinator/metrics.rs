@@ -1,0 +1,131 @@
+//! Serving metrics: stage latencies, throughput, queue behaviour.
+
+use std::collections::HashMap;
+
+use crate::pipeline::infer::StageTimes;
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Per-window end-to-end latency (stage sum), seconds.
+    pub window_latency: Vec<f64>,
+    /// Queueing delay (arrival -> service start), seconds.
+    pub queue_delay: Vec<f64>,
+    /// Aggregated stage times.
+    pub stages: StageTimes,
+    /// Windows processed per stream.
+    pub per_stream: HashMap<u64, usize>,
+    /// Windows dropped by backpressure.
+    pub dropped: usize,
+    /// KV-cache evictions observed.
+    pub kv_evictions: usize,
+    /// Total useful / padded FLOPs.
+    pub flops: u64,
+    pub flops_padded: u64,
+    /// Total tokens through LLM prefill.
+    pub seq_tokens: usize,
+}
+
+impl Metrics {
+    pub fn record_window(
+        &mut self,
+        stream: u64,
+        times: &StageTimes,
+        queue_delay: f64,
+        flops: u64,
+        flops_padded: u64,
+        seq_tokens: usize,
+    ) {
+        self.window_latency.push(times.total());
+        self.queue_delay.push(queue_delay);
+        self.stages.add(times);
+        *self.per_stream.entry(stream).or_insert(0) += 1;
+        self.flops += flops;
+        self.flops_padded += flops_padded;
+        self.seq_tokens += seq_tokens;
+    }
+
+    pub fn windows(&self) -> usize {
+        self.window_latency.len()
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.window_latency)
+    }
+
+    /// Streams one executor can sustain in real time, given the window
+    /// cadence (seconds between windows per stream).
+    pub fn sustainable_streams(&self, stride_s: f64) -> f64 {
+        let mean = self.latency_summary().mean;
+        if mean <= 0.0 {
+            0.0
+        } else {
+            stride_s / mean
+        }
+    }
+
+    pub fn report(&self, title: &str) -> String {
+        let s = self.latency_summary();
+        let mut out = format!("== metrics: {title} ==\n");
+        out.push_str(&format!(
+            "windows={} dropped={} evictions={}\n",
+            self.windows(),
+            self.dropped,
+            self.kv_evictions
+        ));
+        out.push_str(&format!(
+            "latency mean={:.1}ms p50={:.1}ms p90={:.1}ms p99={:.1}ms\n",
+            s.mean * 1e3,
+            s.p50 * 1e3,
+            s.p90 * 1e3,
+            s.p99 * 1e3
+        ));
+        let st = &self.stages;
+        out.push_str(&format!(
+            "stage totals: trans={:.3}s dec={:.3}s pre={:.3}s vit={:.3}s \
+             prefill={:.3}s decode={:.3}s ovh_prune={:.3}s ovh_kvc={:.3}s\n",
+            st.transmit,
+            st.decode,
+            st.preprocess,
+            st.vit,
+            st.llm_prefill,
+            st.llm_decode,
+            st.overhead_prune,
+            st.overhead_kvc
+        ));
+        out.push_str(&format!(
+            "flops useful={:.2}G padded={:.2}G tokens={}\n",
+            self.flops as f64 / 1e9,
+            self.flops_padded as f64 / 1e9,
+            self.seq_tokens
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut m = Metrics::default();
+        let t = StageTimes { vit: 0.1, llm_prefill: 0.4, ..Default::default() };
+        m.record_window(1, &t, 0.01, 100, 150, 32);
+        m.record_window(2, &t, 0.02, 100, 150, 32);
+        assert_eq!(m.windows(), 2);
+        assert_eq!(m.flops, 200);
+        assert_eq!(m.per_stream[&1], 1);
+        assert!((m.latency_summary().mean - 0.5).abs() < 1e-9);
+        assert!(m.report("t").contains("windows=2"));
+    }
+
+    #[test]
+    fn sustainable_streams_math() {
+        let mut m = Metrics::default();
+        let t = StageTimes { llm_prefill: 0.5, ..Default::default() };
+        m.record_window(1, &t, 0.0, 0, 0, 0);
+        // 2 s stride / 0.5 s per window = 4 streams
+        assert!((m.sustainable_streams(2.0) - 4.0).abs() < 1e-9);
+    }
+}

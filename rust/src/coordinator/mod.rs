@@ -1,0 +1,20 @@
+//! The serving coordinator (L3): stream sessions, admission queue with
+//! backpressure, metrics, and the serving loop.
+//!
+//! Topology (vllm-router-shaped, adapted to one CPU PJRT "device"):
+//! frontend work (decode, pruning, preprocessing) is parallel across
+//! streams on a thread pool; model execution is serialized on the
+//! executor thread that owns the [`crate::runtime::Engine`] — the
+//! same structure as a single-GPU serving queue. The KV pool evicts
+//! the least-recently-served stream's cache under memory pressure,
+//! forcing a full-prefill fallback (measured, not modelled).
+
+pub mod metrics;
+pub mod queue;
+pub mod serve;
+pub mod session;
+
+pub use metrics::Metrics;
+pub use queue::{AdmissionQueue, WindowJob};
+pub use serve::{ServeReport, Server};
+pub use session::StreamSession;

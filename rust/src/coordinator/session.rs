@@ -1,0 +1,140 @@
+//! One stream's serving session: frontend + window engine + cursor.
+
+use crate::baselines::Variant;
+use crate::codec::types::Frame;
+use crate::config::PipelineConfig;
+use crate::net::Link;
+use crate::pipeline::frontend::{Frontend, StreamSource};
+use crate::pipeline::infer::{StageTimes, WindowEngine, WindowResult};
+use crate::runtime::mock::Executor;
+
+pub struct StreamSession<'a> {
+    pub id: u64,
+    pub variant: Variant,
+    pub frontend: Frontend,
+    pub engine: WindowEngine<'a>,
+    pub window_frames: usize,
+    pub stride: usize,
+    next_window: usize,
+    total_frames: usize,
+}
+
+impl<'a> StreamSession<'a> {
+    pub fn new(
+        id: u64,
+        exec: &'a dyn Executor,
+        model: &str,
+        variant: Variant,
+        cfg: &PipelineConfig,
+        frames: &[Frame],
+    ) -> StreamSession<'a> {
+        let source = StreamSource::encode(frames, cfg.gop, cfg.qp);
+        let frontend = Frontend::new(variant.frontend_mode(), Link::mbps(cfg.uplink_mbps), source);
+        let engine = WindowEngine::new(exec, model, variant.opts(cfg));
+        StreamSession {
+            id,
+            variant,
+            frontend,
+            engine,
+            window_frames: cfg.window_frames,
+            stride: cfg.stride_frames(),
+            next_window: 0,
+            total_frames: frames.len(),
+        }
+    }
+
+    /// Number of windows this stream yields.
+    pub fn window_count(&self) -> usize {
+        if self.total_frames < self.window_frames {
+            0
+        } else {
+            (self.total_frames - self.window_frames) / self.stride + 1
+        }
+    }
+
+    /// Frame range of window k.
+    pub fn window_range(&self, k: usize) -> (usize, usize) {
+        let start = k * self.stride;
+        (start, start + self.window_frames)
+    }
+
+    pub fn has_next(&self) -> bool {
+        self.next_window < self.window_count()
+    }
+
+    pub fn next_window_idx(&self) -> usize {
+        self.next_window
+    }
+
+    /// Process the next window end-to-end; returns None when done.
+    pub fn step(&mut self) -> Option<WindowResult> {
+        if !self.has_next() {
+            return None;
+        }
+        let k = self.next_window;
+        self.next_window += 1;
+        let (start, end) = self.window_range(k);
+        let wf = self.frontend.window(start, end);
+        let frontend_times = StageTimes {
+            transmit: wf.transmit_s,
+            decode: wf.decode_s,
+            ..Default::default()
+        };
+        Some(self.engine.process_window(&wf.frames, start, frontend_times))
+    }
+
+    /// KV bytes currently held by this session.
+    pub fn kv_bytes(&self) -> usize {
+        self.engine.prev_state().map(|s| s.bytes()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::MockEngine;
+    use crate::video::{Corpus, CorpusConfig};
+
+    fn clip_frames() -> Vec<Frame> {
+        Corpus::generate(CorpusConfig { videos: 1, frames_per_video: 32, ..Default::default() })
+            .clips
+            .remove(0)
+            .frames
+    }
+
+    #[test]
+    fn window_arithmetic() {
+        let mock = MockEngine::new("m");
+        let cfg = PipelineConfig::default(); // w=20, stride=4
+        let s = StreamSession::new(1, &mock, "m", Variant::FullComp, &cfg, &clip_frames());
+        assert_eq!(s.window_count(), 4); // (32-20)/4+1
+        assert_eq!(s.window_range(0), (0, 20));
+        assert_eq!(s.window_range(3), (12, 32));
+    }
+
+    #[test]
+    fn steps_through_all_windows() {
+        let mock = MockEngine::new("m");
+        let cfg = PipelineConfig::default();
+        let mut s = StreamSession::new(1, &mock, "m", Variant::CodecFlow, &cfg, &clip_frames());
+        let mut count = 0;
+        while let Some(r) = s.step() {
+            assert!(r.seq_tokens > 0);
+            count += 1;
+        }
+        assert_eq!(count, 4);
+        assert!(!s.has_next());
+        assert!(s.kv_bytes() > 0);
+    }
+
+    #[test]
+    fn codecflow_windows_reuse_after_first() {
+        let mock = MockEngine::new("m");
+        let cfg = PipelineConfig::default();
+        let mut s = StreamSession::new(1, &mock, "m", Variant::CodecFlow, &cfg, &clip_frames());
+        let r1 = s.step().unwrap();
+        assert_eq!(r1.reused_tokens, 0);
+        let r2 = s.step().unwrap();
+        assert!(r2.reused_tokens > 0);
+    }
+}

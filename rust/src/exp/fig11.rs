@@ -1,0 +1,67 @@
+//! Fig 11: end-to-end latency speedup of CodecFlow vs the four
+//! baselines, with the per-stage breakdown — the headline result.
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+
+use super::common::{quick_experiment_cfg, write_report, Harness, VariantEval};
+
+pub struct Fig11 {
+    /// model -> (variant, steady latency s, speedup vs Full-Comp)
+    pub rows: Vec<(String, String, f64, f64)>,
+}
+
+pub fn stage_row(name: &str, ev: &VariantEval) -> Vec<String> {
+    let s = ev.stage_means();
+    vec![
+        name.to_string(),
+        format!("{:.1}", s.transmit * 1e3),
+        format!("{:.1}", (s.decode + s.preprocess) * 1e3),
+        format!("{:.1}", s.vit * 1e3),
+        format!("{:.1}", (s.llm_prefill + s.llm_decode) * 1e3),
+        format!("{:.1}", (s.overhead_prune + s.overhead_kvc) * 1e3),
+        format!("{:.1}", s.total() * 1e3),
+    ]
+}
+
+pub fn run() -> Option<Fig11> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let mut rows = Vec::new();
+    let models: Vec<String> = h.engine.model_names().to_vec();
+    for model in &models {
+        let cfg = h.cfg.pipeline.clone();
+        let mut t = Table::new(
+            &format!("Fig 11 — per-window stage latency (ms, steady state), {model}"),
+            &["Variant", "Trans", "Dec+Pre", "ViT", "LLM", "Overhead", "Total"],
+        );
+        let mut speed = Table::new(
+            &format!("Fig 11 — end-to-end speedup vs Full-Comp, {model}"),
+            &["Variant", "latency(ms)", "speedup"],
+        );
+        let full = h.run_variant(model, Variant::FullComp, &cfg);
+        let base = full.steady_latency();
+        for variant in Variant::all() {
+            let ev = if variant == Variant::FullComp {
+                full.clone()
+            } else {
+                h.run_variant(model, variant, &cfg)
+            };
+            t.row(&stage_row(variant.name(), &ev));
+            let lat = ev.steady_latency();
+            let speedup = base / lat;
+            speed.row(&[
+                variant.name().to_string(),
+                format!("{:.1}", lat * 1e3),
+                format!("{:.2}x", speedup),
+            ]);
+            rows.push((model.clone(), variant.name().to_string(), lat, speedup));
+        }
+        t.print();
+        speed.print();
+        write_report(
+            &format!("fig11_speedup_{model}.txt"),
+            &(t.render() + "\n" + &speed.render() + "\n" + &t.to_csv() + "\n" + &speed.to_csv()),
+        );
+    }
+    Some(Fig11 { rows })
+}

@@ -1,0 +1,46 @@
+//! Fig 12: Precision / Recall / F1 for all five variants on both
+//! models (video-level metrics per the paper's §5 aggregation).
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+
+use super::common::{quick_experiment_cfg, write_report, Harness};
+
+pub struct Fig12 {
+    /// (model, variant, precision, recall, f1)
+    pub rows: Vec<(String, String, f64, f64, f64)>,
+}
+
+pub fn run() -> Option<Fig12> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let labels = h.video_labels();
+    let mut rows = Vec::new();
+    let models: Vec<String> = h.engine.model_names().to_vec();
+    for model in &models {
+        let cfg = h.cfg.pipeline.clone();
+        let mut t = Table::new(
+            &format!("Fig 12 — accuracy, {model}"),
+            &["Variant", "Precision", "Recall", "F1"],
+        );
+        for variant in Variant::all() {
+            let ev = h.run_variant(model, variant, &cfg);
+            let m = ev.video_prf1(&labels);
+            t.row(&[
+                variant.name().to_string(),
+                format!("{:.2}", m.precision()),
+                format!("{:.2}", m.recall()),
+                format!("{:.2}", m.f1()),
+            ]);
+            rows.push((
+                model.clone(),
+                variant.name().to_string(),
+                m.precision(),
+                m.recall(),
+                m.f1(),
+            ));
+        }
+        t.print();
+        write_report(&format!("fig12_accuracy_{model}.txt"), &(t.render() + "\n" + &t.to_csv()));
+    }
+    Some(Fig12 { rows })
+}

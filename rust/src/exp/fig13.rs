@@ -1,0 +1,47 @@
+//! Fig 13: memory (tokens) and compute (FLOPs) savings of CodecFlow
+//! relative to the baselines.
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+
+use super::common::{quick_experiment_cfg, write_report, Harness};
+
+pub struct Fig13 {
+    /// (variant, total prefill tokens, total GFLOPs)
+    pub rows: Vec<(String, usize, f64)>,
+}
+
+pub fn run() -> Option<Fig13> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let model = "internvl3_sim";
+    let cfg = h.cfg.pipeline.clone();
+    let mut t = Table::new(
+        "Fig 13 — resource savings (internvl3_sim): tokens through prefill + total FLOPs",
+        &["Variant", "tokens", "tokens vs Full", "GFLOPs", "FLOPs vs Full"],
+    );
+    let full = h.run_variant(model, Variant::FullComp, &cfg);
+    // "tokens" = tokens actually recomputed in prefill per window
+    let tokens_of = |ev: &super::common::VariantEval| -> usize {
+        ev.windows.iter().map(|w| w.fresh_tokens + w.refreshed_tokens + 16).sum()
+    };
+    let base_tokens = tokens_of(&full);
+    let base_flops = full.total_flops() as f64;
+    let mut rows = Vec::new();
+    for variant in Variant::all() {
+        let ev =
+            if variant == Variant::FullComp { full.clone() } else { h.run_variant(model, variant, &cfg) };
+        let tokens = tokens_of(&ev);
+        let gflops = ev.total_flops() as f64 / 1e9;
+        t.row(&[
+            variant.name().to_string(),
+            format!("{tokens}"),
+            format!("{:.0}%", tokens as f64 / base_tokens as f64 * 100.0),
+            format!("{gflops:.1}"),
+            format!("{:.0}%", ev.total_flops() as f64 / base_flops * 100.0),
+        ]);
+        rows.push((variant.name().to_string(), tokens, gflops));
+    }
+    t.print();
+    write_report("fig13_resources.txt", &(t.render() + "\n" + &t.to_csv()));
+    Some(Fig13 { rows })
+}

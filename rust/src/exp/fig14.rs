@@ -1,0 +1,57 @@
+//! Fig 14: performance across video motion-intensity levels —
+//! speedup, pruning ratio, and F1 delta per stratum.
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+use crate::video::MotionLevel;
+
+use super::common::{quick_experiment_cfg, write_report, Harness};
+
+pub struct Fig14 {
+    /// (level, speedup, pruned token ratio, f1_codecflow, f1_fullcomp)
+    pub rows: Vec<(String, f64, f64, f64, f64)>,
+}
+
+pub fn run() -> Option<Fig14> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let model = "internvl3_sim";
+    let cfg = h.cfg.pipeline.clone();
+    let full = h.run_variant(model, Variant::FullComp, &cfg);
+    let cf = h.run_variant(model, Variant::CodecFlow, &cfg);
+    let labels = h.video_labels();
+
+    let mut t = Table::new(
+        "Fig 14 — performance across motion levels (internvl3_sim)",
+        &["Motion", "speedup", "pruned tokens", "F1 CodecFlow", "F1 Full-Comp", "dF1"],
+    );
+    let mut rows = Vec::new();
+    for lvl in MotionLevel::all() {
+        let vids: Vec<usize> = h.corpus.by_motion(lvl).iter().map(|c| c.id).collect();
+        let filter = |ev: &super::common::VariantEval| -> super::common::VariantEval {
+            super::common::VariantEval {
+                windows: ev.windows.iter().filter(|w| vids.contains(&w.video)).cloned().collect(),
+                threshold: ev.threshold,
+            }
+        };
+        let f_full = filter(&full);
+        let f_cf = filter(&cf);
+        let lv_labels: Vec<(usize, bool)> =
+            labels.iter().copied().filter(|(v, _)| vids.contains(v)).collect();
+        let speedup = f_full.steady_latency() / f_cf.steady_latency().max(1e-12);
+        let pruned = f_cf.mean_pruned_ratio();
+        let f1c = f_cf.video_prf1(&lv_labels).f1();
+        let f1f = f_full.video_prf1(&lv_labels).f1();
+        t.row(&[
+            lvl.name().to_string(),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", pruned * 100.0),
+            format!("{f1c:.2}"),
+            format!("{f1f:.2}"),
+            format!("{:.2}", f1f - f1c),
+        ]);
+        rows.push((lvl.name().to_string(), speedup, pruned, f1c, f1f));
+    }
+    t.print();
+    write_report("fig14_motion.txt", &(t.render() + "\n" + &t.to_csv()));
+    Some(Fig14 { rows })
+}

@@ -1,0 +1,129 @@
+//! Fig 15: component ablation — pruning only, KVC refresh only, both.
+
+use crate::baselines::Variant;
+use crate::pipeline::infer::{KvcMode, RefreshSelect, VariantOpts};
+use crate::util::table::Table;
+use crate::vision::pruner::PrunerConfig;
+
+use super::common::{quick_experiment_cfg, write_report, Harness, VariantEval, WindowEval};
+use crate::config::PipelineConfig;
+use crate::coordinator::session::StreamSession;
+use crate::video::anomaly::window_label;
+
+/// Ablation arms.
+#[derive(Clone, Copy, Debug)]
+pub enum Arm {
+    Vanilla,
+    PruneOnly,
+    KvcOnly,
+    Both,
+}
+
+impl Arm {
+    pub fn all() -> [Arm; 4] {
+        [Arm::Vanilla, Arm::PruneOnly, Arm::KvcOnly, Arm::Both]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arm::Vanilla => "Full-Comp",
+            Arm::PruneOnly => "+Pruning",
+            Arm::KvcOnly => "+KVC-refresh",
+            Arm::Both => "CodecFlow (both)",
+        }
+    }
+
+    fn opts(&self, cfg: &PipelineConfig) -> VariantOpts {
+        let mut o = Variant::FullComp.opts(cfg);
+        match self {
+            Arm::Vanilla => {}
+            Arm::PruneOnly => {
+                o.prune = Some(PrunerConfig { tau: cfg.mv_threshold });
+                o.fused_preproc = true;
+            }
+            Arm::KvcOnly => {
+                o.kvc = KvcMode::Reuse(RefreshSelect::Anchors);
+                o.fused_preproc = true;
+            }
+            Arm::Both => {
+                o = Variant::CodecFlow.opts(cfg);
+            }
+        }
+        o
+    }
+}
+
+pub struct Fig15 {
+    /// (arm, speedup vs vanilla, f1)
+    pub rows: Vec<(String, f64, f64)>,
+}
+
+fn run_arm(h: &mut Harness, model: &str, arm: Arm) -> VariantEval {
+    // Ablation arms always use the bitstream frontend (codec signal is
+    // required for pruning/anchors); vanilla too, isolating the
+    // inference-side contributions.
+    let probe = h.probe(model);
+    let cfg = h.cfg.pipeline.clone();
+    let mut eval = VariantEval { windows: Vec::new(), threshold: probe.threshold };
+    let clips: Vec<(usize, Vec<crate::codec::types::Frame>, Option<crate::video::anomaly::AnomalyEvent>)> =
+        h.corpus.clips.iter().map(|c| (c.id, c.frames.clone(), c.event)).collect();
+    for (id, frames, event) in clips {
+        let mut session = StreamSession::new(id as u64, &h.engine, model, Variant::CodecFlow, &cfg, &frames);
+        // Override the engine opts for the arm (frontend stays bitstream).
+        session.engine.opts = arm.opts(&cfg);
+        let mut k = 0;
+        while let Some(r) = session.step() {
+            eval.windows.push(WindowEval {
+                video: id,
+                window_idx: k,
+                label: window_label(event.as_ref(), r.start, r.end),
+                score: probe.score(&r.pooled),
+                seq_tokens: r.seq_tokens,
+                visual_tokens: r.visual_tokens,
+                reused_tokens: r.reused_tokens,
+                refreshed_tokens: r.refreshed_tokens,
+                fresh_tokens: r.fresh_tokens,
+                pruned_ratio: r.pruned_ratio,
+                flops: r.flops,
+                flops_padded: r.flops_padded,
+                times: r.times,
+            });
+            k += 1;
+        }
+    }
+    // Rank-based threshold (same policy as Harness::run_variant).
+    let _ = &probe;
+    super::common::set_rank_threshold(&mut eval);
+    eval
+}
+
+pub fn run() -> Option<Fig15> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let model = "internvl3_sim";
+    let labels = h.video_labels();
+    let mut t = Table::new(
+        "Fig 15 — component ablation (internvl3_sim)",
+        &["Arm", "latency(ms)", "speedup", "F1"],
+    );
+    let mut rows = Vec::new();
+    let mut base = 0.0f64;
+    for arm in Arm::all() {
+        let ev = run_arm(&mut h, model, arm);
+        let lat = ev.steady_latency();
+        if matches!(arm, Arm::Vanilla) {
+            base = lat;
+        }
+        let speedup = base / lat.max(1e-12);
+        let f1 = ev.video_prf1(&labels).f1();
+        t.row(&[
+            arm.name().to_string(),
+            format!("{:.1}", lat * 1e3),
+            format!("{speedup:.2}x"),
+            format!("{f1:.2}"),
+        ]);
+        rows.push((arm.name().to_string(), speedup, f1));
+    }
+    t.print();
+    write_report("fig15_ablation.txt", &(t.render() + "\n" + &t.to_csv()));
+    Some(Fig15 { rows })
+}

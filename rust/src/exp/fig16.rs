@@ -1,0 +1,50 @@
+//! Fig 16: stride-ratio sensitivity (10% .. 100% of the window).
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+
+use super::common::{quick_experiment_cfg, write_report, Harness};
+
+pub const STRIDES: [f64; 6] = [0.1, 0.2, 0.3, 0.5, 0.8, 1.0];
+
+pub struct Fig16 {
+    /// (stride frac, f1, latency rel to stride 0.2)
+    pub rows: Vec<(f64, f64, f64)>,
+}
+
+pub fn run() -> Option<Fig16> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let model = "internvl3_sim";
+    let labels = h.video_labels();
+    let mut t = Table::new(
+        "Fig 16 — stride ratio sensitivity (CodecFlow, internvl3_sim)",
+        &["stride", "F1", "latency(ms)", "vs 20%"],
+    );
+    let mut rows = Vec::new();
+    let mut base = None;
+    let mut results = Vec::new();
+    for &s in &STRIDES {
+        let mut cfg = h.cfg.pipeline.clone();
+        cfg.stride_frac = s;
+        let ev = h.run_variant(model, Variant::CodecFlow, &cfg);
+        let f1 = ev.video_prf1(&labels).f1();
+        let lat = ev.steady_latency();
+        if (s - 0.2).abs() < 1e-9 {
+            base = Some(lat);
+        }
+        results.push((s, f1, lat));
+    }
+    let base = base.unwrap_or(results[1].2);
+    for (s, f1, lat) in results {
+        t.row(&[
+            format!("{:.0}%", s * 100.0),
+            format!("{f1:.2}"),
+            format!("{:.1}", lat * 1e3),
+            format!("{:.2}x", lat / base),
+        ]);
+        rows.push((s, f1, lat / base));
+    }
+    t.print();
+    write_report("fig16_stride.txt", &(t.render() + "\n" + &t.to_csv()));
+    Some(Fig16 { rows })
+}

@@ -1,0 +1,53 @@
+//! Fig 17: MV-threshold sensitivity (0.25 .. 5.0 px) — the pruning
+//! aggressiveness knob's accuracy-latency trade-off, plus the alpha
+//! ablation (residual term of eq. 3) as an extension.
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+
+use super::common::{quick_experiment_cfg, write_report, Harness};
+
+pub const THRESHOLDS: [f32; 5] = [0.25, 0.5, 1.0, 2.5, 5.0];
+
+pub struct Fig17 {
+    /// (tau, f1, normalized latency, pruned ratio)
+    pub rows: Vec<(f32, f64, f64, f64)>,
+}
+
+pub fn run() -> Option<Fig17> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let model = "internvl3_sim";
+    let labels = h.video_labels();
+    let mut t = Table::new(
+        "Fig 17 — MV threshold sensitivity (CodecFlow, internvl3_sim)",
+        &["tau(px)", "F1", "norm latency", "pruned tokens"],
+    );
+    let mut rows = Vec::new();
+    let mut base = None;
+    let mut results = Vec::new();
+    for &tau in &THRESHOLDS {
+        let mut cfg = h.cfg.pipeline.clone();
+        cfg.mv_threshold = tau;
+        let ev = h.run_variant(model, Variant::CodecFlow, &cfg);
+        let f1 = ev.video_prf1(&labels).f1();
+        let lat = ev.steady_latency();
+        let pr = ev.mean_pruned_ratio();
+        if base.is_none() {
+            base = Some(lat);
+        }
+        results.push((tau, f1, lat, pr));
+    }
+    let base = base.unwrap();
+    for (tau, f1, lat, pr) in results {
+        t.row(&[
+            format!("{tau}"),
+            format!("{f1:.2}"),
+            format!("{:.2}x", lat / base),
+            format!("{:.0}%", pr * 100.0),
+        ]);
+        rows.push((tau, f1, lat / base, pr));
+    }
+    t.print();
+    write_report("fig17_mv_threshold.txt", &(t.render() + "\n" + &t.to_csv()));
+    Some(Fig17 { rows })
+}

@@ -1,0 +1,54 @@
+//! Fig 18: GOP-size sensitivity (4 / 8 / 16 frames) — I-frame
+//! frequency vs KV reuse opportunity and refresh overhead.
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+
+use super::common::{quick_experiment_cfg, write_report, Harness};
+
+pub const GOPS: [usize; 3] = [4, 8, 16];
+
+pub struct Fig18 {
+    /// (gop, f1, latency rel to gop16, refreshed tokens per window)
+    pub rows: Vec<(usize, f64, f64, f64)>,
+}
+
+pub fn run() -> Option<Fig18> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let model = "internvl3_sim";
+    let labels = h.video_labels();
+    let mut t = Table::new(
+        "Fig 18 — GOP size sensitivity (CodecFlow, internvl3_sim)",
+        &["GOP", "F1", "latency vs GOP16", "refreshed/window"],
+    );
+    let mut results = Vec::new();
+    for &gop in &GOPS {
+        let mut cfg = h.cfg.pipeline.clone();
+        cfg.gop = gop;
+        let ev = h.run_variant(model, Variant::CodecFlow, &cfg);
+        let f1 = ev.video_prf1(&labels).f1();
+        let lat = ev.steady_latency();
+        let refreshed = ev
+            .windows
+            .iter()
+            .filter(|w| w.window_idx > 0)
+            .map(|w| w.refreshed_tokens as f64)
+            .sum::<f64>()
+            / ev.windows.iter().filter(|w| w.window_idx > 0).count().max(1) as f64;
+        results.push((gop, f1, lat, refreshed));
+    }
+    let base = results.last().unwrap().2; // GOP 16
+    let mut rows = Vec::new();
+    for (gop, f1, lat, refreshed) in results {
+        t.row(&[
+            format!("{gop}"),
+            format!("{f1:.2}"),
+            format!("{:.2}x", lat / base),
+            format!("{refreshed:.0}"),
+        ]);
+        rows.push((gop, f1, lat / base, refreshed));
+    }
+    t.print();
+    write_report("fig18_gop.txt", &(t.render() + "\n" + &t.to_csv()));
+    Some(Fig18 { rows })
+}

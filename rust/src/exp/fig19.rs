@@ -1,0 +1,44 @@
+//! Fig 19: system overheads — token-selection and KVC-refresh
+//! bookkeeping per request, vs the optimized end-to-end latency.
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+
+use super::common::{quick_experiment_cfg, write_report, Harness};
+
+pub struct Fig19 {
+    /// (model, prune avg ms, prune max ms, kvc avg ms, kvc max ms, share of e2e)
+    pub rows: Vec<(String, f64, f64, f64, f64, f64)>,
+}
+
+pub fn run() -> Option<Fig19> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let mut t = Table::new(
+        "Fig 19 — system overheads per window (CodecFlow)",
+        &["Model", "prune avg(ms)", "prune max(ms)", "kvc avg(ms)", "kvc max(ms)", "% of e2e"],
+    );
+    let mut rows = Vec::new();
+    let models: Vec<String> = h.engine.model_names().to_vec();
+    for model in &models {
+        let cfg = h.cfg.pipeline.clone();
+        let ev = h.run_variant(model, Variant::CodecFlow, &cfg);
+        let prune: Vec<f64> = ev.windows.iter().map(|w| w.times.overhead_prune * 1e3).collect();
+        let kvc: Vec<f64> = ev.windows.iter().map(|w| w.times.overhead_kvc * 1e3).collect();
+        let avg = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+        let max = |xs: &[f64]| xs.iter().cloned().fold(0.0f64, f64::max);
+        let e2e = ev.steady_latency() * 1e3;
+        let share = (avg(&prune) + avg(&kvc)) / e2e * 100.0;
+        t.row(&[
+            model.clone(),
+            format!("{:.2}", avg(&prune)),
+            format!("{:.2}", max(&prune)),
+            format!("{:.2}", avg(&kvc)),
+            format!("{:.2}", max(&kvc)),
+            format!("{share:.1}%"),
+        ]);
+        rows.push((model.clone(), avg(&prune), max(&prune), avg(&kvc), max(&kvc), share));
+    }
+    t.print();
+    write_report("fig19_overhead.txt", &(t.render() + "\n" + &t.to_csv()));
+    Some(Fig19 { rows })
+}

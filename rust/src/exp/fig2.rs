@@ -1,0 +1,44 @@
+//! Fig 2: CCTV vs GPU imbalance across regions — the motivating
+//! statistics ([14, 43, 44] in the paper, cited constants).
+
+use crate::util::table::Table;
+
+use super::common::write_report;
+
+/// (region, cameras, gpus) as reported in the paper's §2.2 sources.
+pub const REGIONS: [(&str, u64, u64); 4] = [
+    ("London", 127_373, 14_000),
+    ("Singapore", 500_000, 20_000),
+    ("Delhi", 449_934, 30_000),
+    ("Seoul", 144_000, 12_000),
+];
+
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "Fig 2 — CCTV cameras vs available GPUs by region",
+        &["Region", "CCTVs", "GPUs", "CCTV:GPU"],
+    );
+    for (region, cams, gpus) in REGIONS {
+        t.row(&[
+            region.to_string(),
+            format!("{cams}"),
+            format!("{gpus}"),
+            format!("{:.1}x", cams as f64 / gpus as f64),
+        ]);
+    }
+    t.print();
+    write_report("fig2_cctv_gpu.txt", &(t.render() + "\n" + &t.to_csv()));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ratios_in_paper_band() {
+        // paper: 8~25x imbalance
+        for (_, cams, gpus) in super::REGIONS {
+            let r = cams as f64 / gpus as f64;
+            assert!(r >= 8.0 && r <= 26.0, "ratio {r}");
+        }
+    }
+}

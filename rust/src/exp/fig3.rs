@@ -1,0 +1,45 @@
+//! Fig 3: latency breakdown of the representative baseline pipeline
+//! (JPEG transport + Full-Comp inference) for both models —
+//! Trans / Preproc(+decode) / ViT / LLM shares.
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+
+use super::common::{quick_experiment_cfg, write_report, Harness};
+
+pub struct Fig3 {
+    /// (model, trans, preproc, vit, llm) shares (fractions of total).
+    pub shares: Vec<(String, f64, f64, f64, f64)>,
+}
+
+pub fn run() -> Option<Fig3> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let mut t = Table::new(
+        "Fig 3 — Latency breakdown (Full-Comp over JPEG transport, per window, steady state)",
+        &["Model", "Trans", "Preproc", "ViT", "LLM", "total(ms)"],
+    );
+    let mut shares = Vec::new();
+    let models: Vec<String> = h.engine.model_names().to_vec();
+    for model in &models {
+        let cfg = h.cfg.pipeline.clone();
+        let ev = h.run_variant(model, Variant::FullComp, &cfg);
+        let s = ev.stage_means();
+        let total = s.total();
+        let trans = s.transmit / total;
+        let preproc = (s.decode + s.preprocess) / total;
+        let vit = s.vit / total;
+        let llm = (s.llm_prefill + s.llm_decode) / total;
+        t.row(&[
+            model.clone(),
+            format!("{:.0}%", trans * 100.0),
+            format!("{:.0}%", preproc * 100.0),
+            format!("{:.0}%", vit * 100.0),
+            format!("{:.0}%", llm * 100.0),
+            format!("{:.1}", total * 1e3),
+        ]);
+        shares.push((model.clone(), trans, preproc, vit, llm));
+    }
+    t.print();
+    write_report("fig3_breakdown.txt", &(t.render() + "\n" + &t.to_csv()));
+    Some(Fig3 { shares })
+}

@@ -1,0 +1,95 @@
+//! Fig 5: CDF of the similar-patch ratio per frame across the corpus
+//! at different MV thresholds (mv_diff) — the redundancy statistic
+//! motivating codec-guided pruning (paper §2.4.1).
+
+use crate::codec::encoder::{encode_sequence, EncoderConfig};
+use crate::codec::decoder::Decoder;
+use crate::util::plot::ascii_plot;
+use crate::util::stats::cdf_at;
+use crate::util::table::Table;
+use crate::video::{Corpus, CorpusConfig};
+use crate::vision::analyzer::MotionAnalyzer;
+use crate::vision::layout::PatchLayout;
+
+use super::common::write_report;
+
+pub const THRESHOLDS: [f32; 4] = [0.25, 0.5, 1.0, 2.0];
+
+pub struct Fig5 {
+    /// threshold -> per-frame similar ratios
+    pub ratios: Vec<(f32, Vec<f64>)>,
+}
+
+pub fn run() -> Fig5 {
+    let corpus = Corpus::generate(CorpusConfig {
+        videos: crate::config::env_usize("CF_VIDEOS", 9),
+        frames_per_video: crate::config::env_usize("CF_FRAMES", 72),
+        ..Default::default()
+    });
+    let analyzer = MotionAnalyzer::default();
+    let mut ratios: Vec<(f32, Vec<f64>)> =
+        THRESHOLDS.iter().map(|&t| (t, Vec::new())).collect();
+
+    for clip in &corpus.clips {
+        let (bits, _) = encode_sequence(&clip.frames, EncoderConfig::default());
+        let mut dec = Decoder::new(bits).expect("decode");
+        let layout = PatchLayout::new(64, 64, 8, 2);
+        while let Some((_, meta)) = dec.next_frame().expect("frame") {
+            if meta.frame_type != crate::codec::types::FrameType::P {
+                continue;
+            }
+            let mask = analyzer.analyze(&layout, &meta);
+            for (t, rs) in ratios.iter_mut() {
+                rs.push(MotionAnalyzer::similar_ratio(&mask, *t));
+            }
+        }
+    }
+
+    // Render CDFs.
+    let grid: Vec<f64> = (0..=50).map(|i| i as f64 / 50.0).collect();
+    let mut series_data = Vec::new();
+    for (t, rs) in &ratios {
+        let cdf = cdf_at(rs, &grid);
+        let pts: Vec<(f64, f64)> = grid.iter().copied().zip(cdf).collect();
+        series_data.push((format!("mv_diff={t}"), pts));
+    }
+    let series: Vec<(&str, &[(f64, f64)])> =
+        series_data.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    let plot = ascii_plot("Fig 5 — CDF of similar patch ratio per frame", &series, 64, 16);
+    println!("{plot}");
+
+    let mut t = Table::new(
+        "Fig 5 — similar-patch ratio quantiles per MV threshold",
+        &["mv_diff", "p10", "p50", "p90", "mean"],
+    );
+    for (thr, rs) in &ratios {
+        let mut sorted = rs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t.row(&[
+            format!("{thr}"),
+            format!("{:.2}", crate::util::stats::percentile_sorted(&sorted, 10.0)),
+            format!("{:.2}", crate::util::stats::percentile_sorted(&sorted, 50.0)),
+            format!("{:.2}", crate::util::stats::percentile_sorted(&sorted, 90.0)),
+            format!("{:.2}", crate::util::stats::mean(rs)),
+        ]);
+    }
+    t.print();
+    write_report("fig5_patch_cdf.txt", &(plot + &t.render() + "\n" + &t.to_csv()));
+    Fig5 { ratios }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn higher_threshold_more_similar() {
+        std::env::set_var("CF_VIDEOS", "3");
+        std::env::set_var("CF_FRAMES", "24");
+        let f = super::run();
+        let mean = |rs: &[f64]| rs.iter().sum::<f64>() / rs.len().max(1) as f64;
+        let m0 = mean(&f.ratios[0].1); // tau 0.25
+        let m3 = mean(&f.ratios[3].1); // tau 2.0
+        assert!(m3 >= m0, "{m3} vs {m0}");
+        // substantial redundancy exists (the paper's 77-94% statistic)
+        assert!(m3 > 0.5, "high-threshold similarity {m3}");
+    }
+}

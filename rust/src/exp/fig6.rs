@@ -1,0 +1,73 @@
+//! Fig 6: executor utilization trend over a stream.
+//!
+//! The paper shows SM utilization of 2 A100s; our CPU-PJRT equivalent
+//! (DESIGN.md §3) reports, per window over time: (a) the executor's
+//! busy fraction of the real-time budget and (b) useful/padded FLOP
+//! efficiency — both expose the same redundancy signal (most of the
+//! accelerator's occupancy is recomputation of unchanged content).
+
+use crate::baselines::Variant;
+use crate::util::plot::ascii_plot;
+use crate::util::table::Table;
+
+use super::common::{quick_experiment_cfg, write_report, Harness};
+
+pub struct Fig6 {
+    /// (window index, busy fraction, useful/padded flops) per variant.
+    pub series: Vec<(String, Vec<(usize, f64, f64)>)>,
+}
+
+pub fn run() -> Option<Fig6> {
+    let mut h = Harness::with_cfg(quick_experiment_cfg())?;
+    let model = "internvl3_sim".to_string();
+    let stride_s = h.cfg.pipeline.stride_frames() as f64 / 2.0; // 2 FPS
+    let mut series = Vec::new();
+    for variant in [Variant::FullComp, Variant::CodecFlow] {
+        let cfg = h.cfg.pipeline.clone();
+        let ev = h.run_variant(&model, variant, &cfg);
+        // Busy fraction per window index, averaged across streams.
+        let max_k = ev.windows.iter().map(|w| w.window_idx).max().unwrap_or(0);
+        let mut pts = Vec::new();
+        for k in 0..=max_k {
+            let wins: Vec<_> = ev.windows.iter().filter(|w| w.window_idx == k).collect();
+            if wins.is_empty() {
+                continue;
+            }
+            let busy: f64 =
+                wins.iter().map(|w| w.times.total()).sum::<f64>() / wins.len() as f64 / stride_s;
+            let useful: f64 = wins.iter().map(|w| w.flops as f64).sum();
+            let padded: f64 = wins.iter().map(|w| w.flops_padded as f64).sum();
+            pts.push((k, busy.min(1.5), if padded > 0.0 { useful / padded } else { 0.0 }));
+        }
+        series.push((variant.name().to_string(), pts));
+    }
+
+    let plot_series: Vec<(String, Vec<(f64, f64)>)> = series
+        .iter()
+        .map(|(name, pts)| {
+            (name.clone(), pts.iter().map(|&(k, busy, _)| (k as f64, busy)).collect())
+        })
+        .collect();
+    let refs: Vec<(&str, &[(f64, f64)])> =
+        plot_series.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    let plot = ascii_plot(
+        "Fig 6 — executor busy fraction of real-time budget per window",
+        &refs,
+        64,
+        14,
+    );
+    println!("{plot}");
+
+    let mut t = Table::new(
+        "Fig 6 — utilization summary",
+        &["Variant", "busy frac (mean)", "useful/padded flops"],
+    );
+    for (name, pts) in &series {
+        let busy = pts.iter().map(|p| p.1).sum::<f64>() / pts.len().max(1) as f64;
+        let eff = pts.iter().map(|p| p.2).sum::<f64>() / pts.len().max(1) as f64;
+        t.row(&[name.clone(), format!("{:.2}", busy), format!("{:.2}", eff)]);
+    }
+    t.print();
+    write_report("fig6_utilization.txt", &(plot + &t.render() + "\n" + &t.to_csv()));
+    Some(Fig6 { series })
+}

@@ -1,0 +1,25 @@
+//! Experiment runners: one module per paper table/figure (DESIGN.md §6).
+//!
+//! Each `run()` prints the regenerated table/series and writes a
+//! report file under `reports/`; the matching `benches/<id>.rs` binary
+//! is the `cargo bench` entry point. Figures that need the real engine
+//! return early (with a message) when artifacts are missing.
+
+pub mod common;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod fig17;
+pub mod fig18;
+pub mod fig19;
+pub mod fig2;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;
+
+pub use common::{Harness, VariantEval, WindowEval};

@@ -1,0 +1,33 @@
+//! Table 1: qualitative comparison with existing VLM-optimized systems.
+
+use crate::baselines::Variant;
+use crate::util::table::Table;
+
+use super::common::write_report;
+
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "Table 1 — Comparison with existing VLM optimized systems",
+        &["Method", "ViT", "LLM", "No Train", "Online"],
+    );
+    let mark = |b: bool| if b { "yes" } else { "-" }.to_string();
+    for v in Variant::all() {
+        let (vit, llm, no_train, online) = v.table1_row();
+        t.row(&[v.name().to_string(), mark(vit), mark(llm), mark(no_train), mark(online)]);
+    }
+    t.print();
+    write_report("table1_comparison.txt", &(t.render() + "\n" + &t.to_csv()));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_five_rows() {
+        let t = super::run();
+        assert_eq!(t.rows.len(), 5);
+        // CodecFlow row is all-yes
+        let last = t.rows.iter().find(|r| r[0] == "CodecFlow").unwrap();
+        assert!(last[1..].iter().all(|c| c == "yes"));
+    }
+}

@@ -1,0 +1,35 @@
+//! Table 2: models and configurations used in evaluations.
+
+use crate::config::artifacts_dir;
+use crate::runtime::manifest::Manifest;
+use crate::util::table::Table;
+
+use super::common::write_report;
+
+pub fn run() -> Option<Table> {
+    let manifest = Manifest::load(&artifacts_dir()).ok()?;
+    let mut t = Table::new(
+        "Table 2 — Models and configurations (paper: InternVL3 2xA100 TP2, Qwen3-VL 4xA100 TP4; \
+         here: synthetic-weight stand-ins on one CPU PJRT device — DESIGN.md §3)",
+        &["Model", "ViT (params)", "LLM (params)", "Window", "Seq max", "Executor"],
+    );
+    for m in &manifest.models {
+        let vit_params = m.patch_dim * m.vit_dim
+            + m.vit_layers * (4 * m.vit_dim * m.vit_dim + 2 * m.vit_dim * m.vit_mlp * m.vit_dim)
+            + m.merge * m.merge * m.vit_dim * m.llm_dim;
+        let qkv = m.llm_heads * m.head_dim;
+        let llm_params = m.vocab * m.llm_dim
+            + m.llm_layers * (3 * m.llm_dim * qkv + qkv * m.llm_dim + 2 * m.llm_dim * m.llm_mlp * m.llm_dim);
+        t.row(&[
+            m.name.clone(),
+            format!("{:.1}M", vit_params as f64 / 1e6),
+            format!("{:.1}M", llm_params as f64 / 1e6),
+            format!("{} frames", m.window_frames),
+            format!("{}", m.window_frames * m.tokens_per_frame + m.text_len),
+            "PJRT CPU".to_string(),
+        ]);
+    }
+    t.print();
+    write_report("table2_models.txt", &(t.render() + "\n" + &t.to_csv()));
+    Some(t)
+}

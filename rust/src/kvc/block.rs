@@ -1,0 +1,189 @@
+//! KV tensor block in the artifact layout `[L, H, T, hd]`.
+
+/// A block of K or V states for `t` tokens.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvBlock {
+    pub layers: usize,
+    pub heads: usize,
+    pub t: usize,
+    pub head_dim: usize,
+    /// Row-major `[layers, heads, t, head_dim]`.
+    pub data: Vec<f32>,
+}
+
+impl KvBlock {
+    pub fn zeros(layers: usize, heads: usize, t: usize, head_dim: usize) -> Self {
+        KvBlock { layers, heads, t, head_dim, data: vec![0.0; layers * heads * t * head_dim] }
+    }
+
+    pub fn from_data(
+        layers: usize,
+        heads: usize,
+        t: usize,
+        head_dim: usize,
+        data: Vec<f32>,
+    ) -> Self {
+        assert_eq!(data.len(), layers * heads * t * head_dim);
+        KvBlock { layers, heads, t, head_dim, data }
+    }
+
+    #[inline]
+    pub fn offset(&self, l: usize, h: usize, tok: usize) -> usize {
+        ((l * self.heads + h) * self.t + tok) * self.head_dim
+    }
+
+    pub fn token_slice(&self, l: usize, h: usize, tok: usize) -> &[f32] {
+        let o = self.offset(l, h, tok);
+        &self.data[o..o + self.head_dim]
+    }
+
+    /// Gather a subset of tokens (new block with t = idx.len()).
+    pub fn gather(&self, idx: &[usize]) -> KvBlock {
+        let mut out = KvBlock::zeros(self.layers, self.heads, idx.len(), self.head_dim);
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                for (j, &i) in idx.iter().enumerate() {
+                    debug_assert!(i < self.t);
+                    let src = self.offset(l, h, i);
+                    let dst = out.offset(l, h, j);
+                    out.data[dst..dst + self.head_dim]
+                        .copy_from_slice(&self.data[src..src + self.head_dim]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Concatenate along the token axis.
+    pub fn concat(&self, other: &KvBlock) -> KvBlock {
+        assert_eq!(
+            (self.layers, self.heads, self.head_dim),
+            (other.layers, other.heads, other.head_dim)
+        );
+        let t = self.t + other.t;
+        let mut out = KvBlock::zeros(self.layers, self.heads, t, self.head_dim);
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let dst0 = out.offset(l, h, 0);
+                let src0 = self.offset(l, h, 0);
+                let n1 = self.t * self.head_dim;
+                out.data[dst0..dst0 + n1].copy_from_slice(&self.data[src0..src0 + n1]);
+                let dst1 = out.offset(l, h, self.t);
+                let osrc = other.offset(l, h, 0);
+                let n2 = other.t * self.head_dim;
+                out.data[dst1..dst1 + n2].copy_from_slice(&other.data[osrc..osrc + n2]);
+            }
+        }
+        out
+    }
+
+    /// Zero-pad the token axis up to `t_bucket`; returns the padded
+    /// block and the validity mask.
+    pub fn pad_to(&self, t_bucket: usize) -> (KvBlock, Vec<f32>) {
+        assert!(t_bucket >= self.t, "bucket {t_bucket} < t {}", self.t);
+        let mut out = KvBlock::zeros(self.layers, self.heads, t_bucket, self.head_dim);
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let src = self.offset(l, h, 0);
+                let dst = out.offset(l, h, 0);
+                let n = self.t * self.head_dim;
+                out.data[dst..dst + n].copy_from_slice(&self.data[src..src + n]);
+            }
+        }
+        let mut mask = vec![0.0f32; t_bucket];
+        mask[..self.t].fill(1.0);
+        (out, mask)
+    }
+
+    /// Keep only the first `t` tokens (drop bucket padding).
+    pub fn truncate(&self, t: usize) -> KvBlock {
+        assert!(t <= self.t);
+        self.gather(&(0..t).collect::<Vec<_>>())
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick;
+
+    fn sample(l: usize, h: usize, t: usize, hd: usize) -> KvBlock {
+        let n = l * h * t * hd;
+        KvBlock::from_data(l, h, t, hd, (0..n).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn gather_identity() {
+        let b = sample(2, 3, 5, 4);
+        let idx: Vec<usize> = (0..5).collect();
+        assert_eq!(b.gather(&idx), b);
+    }
+
+    #[test]
+    fn gather_selects_tokens() {
+        let b = sample(2, 2, 4, 2);
+        let g = b.gather(&[3, 1]);
+        assert_eq!(g.t, 2);
+        assert_eq!(g.token_slice(0, 0, 0), b.token_slice(0, 0, 3));
+        assert_eq!(g.token_slice(1, 1, 1), b.token_slice(1, 1, 1));
+    }
+
+    #[test]
+    fn concat_then_split_roundtrip() {
+        let a = sample(2, 2, 3, 4);
+        let b = sample(2, 2, 2, 4);
+        let c = a.concat(&b);
+        assert_eq!(c.t, 5);
+        assert_eq!(c.truncate(3), a);
+        assert_eq!(c.gather(&[3, 4]), b);
+    }
+
+    #[test]
+    fn pad_mask() {
+        let a = sample(1, 1, 3, 2);
+        let (p, mask) = a.pad_to(5);
+        assert_eq!(p.t, 5);
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(p.token_slice(0, 0, 4), &[0.0, 0.0]);
+        assert_eq!(p.truncate(3), a);
+    }
+
+    #[test]
+    fn prop_gather_concat_consistency() {
+        quick::check(0x4B56, 40, |g| {
+            let (l, h, hd) = (g.usize_in(1, 3), g.usize_in(1, 3), 2 * g.usize_in(1, 4));
+            let ta = g.usize_in(1, 6);
+            let tb = g.usize_in(1, 6);
+            let a = KvBlock::from_data(
+                l, h, ta, hd,
+                g.vec_f32(l * h * ta * hd, -2.0, 2.0),
+            );
+            let b = KvBlock::from_data(
+                l, h, tb, hd,
+                g.vec_f32(l * h * tb * hd, -2.0, 2.0),
+            );
+            let c = a.concat(&b);
+            // every token of the concat maps back to its source
+            for tok in 0..ta {
+                assert_eq!(c.token_slice(l - 1, h - 1, tok), a.token_slice(l - 1, h - 1, tok));
+            }
+            for tok in 0..tb {
+                assert_eq!(
+                    c.token_slice(0, 0, ta + tok),
+                    b.token_slice(0, 0, tok)
+                );
+            }
+            // gather of a random permutation preserves slices
+            let mut idx: Vec<usize> = (0..c.t).collect();
+            g.rng.shuffle(&mut idx);
+            let gathered = c.gather(&idx);
+            for (j, &i) in idx.iter().enumerate() {
+                assert_eq!(gathered.token_slice(0, 0, j), c.token_slice(0, 0, i));
+            }
+        });
+    }
+}

@@ -1,0 +1,30 @@
+//! Selective KV-cache refresh across sliding windows (paper §3.4).
+//!
+//! * [`block`] — KV tensor block in artifact layout `[L, H, T, hd]`
+//!   with token-axis gather / concat / pad;
+//! * [`rope`] — eq. 5 position correction: rotate reused keys by
+//!   `new_pos - old_pos` host-side (values reused directly);
+//! * [`records`] — per-token bookkeeping (source frame, group, kind,
+//!   position, cached embedding, I-frame flag);
+//! * [`refresher`] — the policy: overlap tokens from I-frames are
+//!   anchors (recomputed through the prefill path from their cached
+//!   embeddings, without re-running the ViT), P-frame tokens are
+//!   reused with position correction;
+//! * [`pool`] — cross-session KV memory accounting + LRU eviction.
+//!
+//! Known approximation (shared with CacheBlend-style systems): tokens
+//! recomputed in the "new" block attend to *all* reused entries, even
+//! ones whose sequence position is later — the position-corrected keys
+//! keep relative geometry right, but strict causality across the
+//! reused/new boundary is relaxed. The accuracy experiments (Fig 12,
+//! 15) measure exactly the cost of this class of approximation.
+
+pub mod block;
+pub mod pool;
+pub mod records;
+pub mod refresher;
+pub mod rope;
+
+pub use block::KvBlock;
+pub use records::{TokenKind, TokenRecord, WindowState};
+pub use refresher::{plan_window, ReusePlan, RefreshPolicy};

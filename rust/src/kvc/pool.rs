@@ -1,0 +1,108 @@
+//! Cross-session KV memory pool: accounting + LRU eviction.
+//!
+//! The paper keeps each stream's previous-window KV resident in GPU
+//! memory (§3.4.2). With many concurrent streams that residency is a
+//! budgeted resource; the coordinator uses this pool to decide which
+//! stream loses its cache (and must fall back to full prefill) under
+//! memory pressure — the multi-stream behaviour Fig 11's throughput
+//! claim depends on.
+
+use std::collections::HashMap;
+
+/// Tracks bytes held per session, with an LRU clock.
+#[derive(Debug, Default)]
+pub struct KvPool {
+    pub budget_bytes: usize,
+    held: HashMap<u64, (usize, u64)>, // session -> (bytes, last_touch)
+    clock: u64,
+    pub evictions: u64,
+}
+
+impl KvPool {
+    pub fn new(budget_bytes: usize) -> Self {
+        KvPool { budget_bytes, ..Default::default() }
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.held.values().map(|(b, _)| b).sum()
+    }
+
+    pub fn sessions(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Record that `session` now holds `bytes`; returns the sessions
+    /// evicted (their caches must be dropped by the caller).
+    pub fn hold(&mut self, session: u64, bytes: usize) -> Vec<u64> {
+        self.clock += 1;
+        self.held.insert(session, (bytes, self.clock));
+        let mut evicted = Vec::new();
+        while self.used_bytes() > self.budget_bytes && self.held.len() > 1 {
+            // Evict least-recently-touched other session.
+            let victim = self
+                .held
+                .iter()
+                .filter(|(&s, _)| s != session)
+                .min_by_key(|(_, (_, touch))| *touch)
+                .map(|(&s, _)| s);
+            match victim {
+                Some(s) => {
+                    self.held.remove(&s);
+                    self.evictions += 1;
+                    evicted.push(s);
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    pub fn touch(&mut self, session: u64) {
+        self.clock += 1;
+        if let Some(e) = self.held.get_mut(&session) {
+            e.1 = self.clock;
+        }
+    }
+
+    pub fn release(&mut self, session: u64) {
+        self.held.remove(&session);
+    }
+
+    pub fn holds(&self, session: u64) -> bool {
+        self.held.contains_key(&session)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_lru_order() {
+        let mut p = KvPool::new(100);
+        assert!(p.hold(1, 40).is_empty());
+        assert!(p.hold(2, 40).is_empty());
+        p.touch(1); // 2 is now LRU
+        let evicted = p.hold(3, 40);
+        assert_eq!(evicted, vec![2]);
+        assert!(p.holds(1) && p.holds(3) && !p.holds(2));
+        assert_eq!(p.evictions, 1);
+    }
+
+    #[test]
+    fn never_evicts_the_holder() {
+        let mut p = KvPool::new(10);
+        let evicted = p.hold(1, 50); // over budget but alone
+        assert!(evicted.is_empty());
+        assert!(p.holds(1));
+    }
+
+    #[test]
+    fn release_frees() {
+        let mut p = KvPool::new(100);
+        p.hold(1, 60);
+        p.release(1);
+        assert_eq!(p.used_bytes(), 0);
+        assert!(p.hold(2, 80).is_empty());
+    }
+}

@@ -1,0 +1,108 @@
+//! Per-token bookkeeping for sliding-window reuse.
+
+use super::block::KvBlock;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokenKind {
+    Visual,
+    Text,
+}
+
+/// One token of a processed window.
+#[derive(Clone, Debug)]
+pub struct TokenRecord {
+    pub kind: TokenKind,
+    /// Absolute frame index in the stream (Visual only; 0 for Text).
+    pub frame: usize,
+    /// Merge-group index within the frame (Visual only).
+    pub group: usize,
+    /// Sequence position this token's KV was computed at.
+    pub pos: i32,
+    /// Whether the source frame is an I-frame (anchor candidate).
+    pub is_iframe: bool,
+    /// Cached visual embedding (llm_dim) — needed to refresh anchors
+    /// through the prefill path without re-running the ViT. Text
+    /// tokens don't need it (recomputed from ids each window).
+    pub emb: Vec<f32>,
+}
+
+/// Everything retained from a processed window: token metadata + the
+/// KV cache resident "in GPU memory" (paper §3.4.2 keeps it device-
+/// side; our CPU PJRT equivalent keeps it host-side in artifact
+/// layout, spliced per window).
+#[derive(Clone, Debug)]
+pub struct WindowState {
+    /// First frame of the window (absolute index).
+    pub start_frame: usize,
+    /// One past the last frame.
+    pub end_frame: usize,
+    pub tokens: Vec<TokenRecord>,
+    pub k: KvBlock,
+    pub v: KvBlock,
+}
+
+impl WindowState {
+    pub fn seq_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.k.bytes()
+            + self.v.bytes()
+            + self.tokens.iter().map(|t| t.emb.len() * 4).sum::<usize>()
+    }
+
+    /// Indices of visual tokens from frames in [lo, hi).
+    pub fn visual_in_range(&self, lo: usize, hi: usize) -> Vec<usize> {
+        self.tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                t.kind == TokenKind::Visual && t.frame >= lo && t.frame < hi
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(frame: usize, pos: i32, iframe: bool) -> TokenRecord {
+        TokenRecord {
+            kind: TokenKind::Visual,
+            frame,
+            group: 0,
+            pos,
+            is_iframe: iframe,
+            emb: vec![0.0; 4],
+        }
+    }
+
+    #[test]
+    fn visual_range_filter() {
+        let ws = WindowState {
+            start_frame: 0,
+            end_frame: 4,
+            tokens: vec![
+                tok(0, 0, true),
+                tok(1, 1, false),
+                tok(2, 2, false),
+                TokenRecord {
+                    kind: TokenKind::Text,
+                    frame: 0,
+                    group: 0,
+                    pos: 3,
+                    is_iframe: false,
+                    emb: vec![],
+                },
+            ],
+            k: KvBlock::zeros(1, 1, 4, 2),
+            v: KvBlock::zeros(1, 1, 4, 2),
+        };
+        assert_eq!(ws.visual_in_range(1, 3), vec![1, 2]);
+        assert_eq!(ws.visual_in_range(0, 4).len(), 3);
+        assert!(ws.bytes() > 0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Refresh policy: which overlap tokens to reuse vs recompute.
+//!
+//! CodecFlow policy (paper §3.4.1): within the overlap region,
+//! I-frame-derived tokens are *anchors* — most sensitive to context
+//! shift and the reference content of their GOP — and are refreshed
+//! through the prefill path from cached embeddings; P-frame tokens are
+//! reused after RoPE position correction. The same planner also serves
+//! the baselines by letting them override the anchor predicate
+//! ([`RefreshPolicy`]), so every variant shares one code path and the
+//! comparison isolates the *policy*, not the plumbing.
+
+use super::records::{TokenKind, WindowState};
+
+/// Which overlap tokens must be recomputed (beyond reuse+correction).
+#[derive(Clone, Debug)]
+pub enum RefreshPolicy {
+    /// CodecFlow: refresh I-frame (anchor) tokens.
+    Anchors,
+    /// Reuse everything (no refresh) — the "naive full reuse" strawman.
+    None,
+    /// Refresh an explicit set of token indices (baseline emulations:
+    /// CacheBlend top-k, VLCache fixed-ratio).
+    Explicit(Vec<usize>),
+    /// Refresh everything (degenerates to full recompute).
+    All,
+}
+
+/// The plan for building window t from window t-1.
+#[derive(Clone, Debug, Default)]
+pub struct ReusePlan {
+    /// Indices (into the previous WindowState token list) of tokens to
+    /// REUSE, in new-sequence order.
+    pub reuse_idx: Vec<usize>,
+    /// Position deltas for the reused tokens (new_pos - old_pos).
+    pub deltas: Vec<i32>,
+    /// New positions of the reused tokens.
+    pub new_pos: Vec<i32>,
+    /// Indices of overlap tokens to REFRESH (recompute from cached
+    /// embeddings), in new-sequence order.
+    pub refresh_idx: Vec<usize>,
+    /// Frames [lo, hi) whose tokens must be produced fresh (ViT).
+    pub fresh_frames: (usize, usize),
+}
+
+impl ReusePlan {
+    pub fn reused_tokens(&self) -> usize {
+        self.reuse_idx.len()
+    }
+
+    pub fn refreshed_tokens(&self) -> usize {
+        self.refresh_idx.len()
+    }
+}
+
+/// Plan the transition from `prev` (window over [prev.start, prev.end))
+/// to the window [new_start, new_end).
+///
+/// Sequence-position convention: visual tokens are ordered by (frame,
+/// group) and positions are assigned *after* the full new sequence is
+/// known (pipeline does that); here we only order and classify.
+pub fn plan_window(
+    prev: &WindowState,
+    new_start: usize,
+    new_end: usize,
+    policy: &RefreshPolicy,
+) -> ReusePlan {
+    debug_assert!(new_start >= prev.start_frame);
+    let overlap_lo = new_start.max(prev.start_frame);
+    let overlap_hi = new_end.min(prev.end_frame);
+
+    // Overlap tokens in (frame, group) order — prev.tokens are already
+    // stored in sequence order, which is (frame, group) for visual.
+    let overlap: Vec<usize> = prev.visual_in_range(overlap_lo, overlap_hi);
+
+    let refresh_set: Vec<bool> = match policy {
+        RefreshPolicy::Anchors => overlap
+            .iter()
+            .map(|&i| prev.tokens[i].is_iframe)
+            .collect(),
+        RefreshPolicy::None => vec![false; overlap.len()],
+        RefreshPolicy::All => vec![true; overlap.len()],
+        RefreshPolicy::Explicit(set) => {
+            let lookup: std::collections::HashSet<usize> = set.iter().copied().collect();
+            overlap.iter().map(|i| lookup.contains(i)).collect()
+        }
+    };
+
+    let mut plan = ReusePlan {
+        fresh_frames: (prev.end_frame.min(new_end), new_end),
+        ..Default::default()
+    };
+    for (j, &i) in overlap.iter().enumerate() {
+        if refresh_set[j] {
+            plan.refresh_idx.push(i);
+        } else {
+            plan.reuse_idx.push(i);
+        }
+    }
+    // Deltas are filled by the pipeline once new positions are known;
+    // initialize with zeros of matching length.
+    plan.deltas = vec![0; plan.reuse_idx.len()];
+    plan.new_pos = vec![0; plan.reuse_idx.len()];
+    plan
+}
+
+/// Count text tokens in a window state (sanity helper).
+pub fn text_tokens(ws: &WindowState) -> usize {
+    ws.tokens.iter().filter(|t| t.kind == TokenKind::Text).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvc::block::KvBlock;
+    use crate::kvc::records::TokenRecord;
+
+    /// 2 tokens per frame, frames [0, 6), I-frames at 0 and 4.
+    fn prev_state() -> WindowState {
+        let mut tokens = Vec::new();
+        let mut pos = 0;
+        for frame in 0..6 {
+            for group in 0..2 {
+                tokens.push(TokenRecord {
+                    kind: TokenKind::Visual,
+                    frame,
+                    group,
+                    pos,
+                    is_iframe: frame % 4 == 0,
+                    emb: vec![frame as f32, group as f32],
+                });
+                pos += 1;
+            }
+        }
+        for _ in 0..2 {
+            tokens.push(TokenRecord {
+                kind: TokenKind::Text,
+                frame: 0,
+                group: 0,
+                pos,
+                is_iframe: false,
+                emb: vec![],
+            });
+            pos += 1;
+        }
+        let t = tokens.len();
+        WindowState {
+            start_frame: 0,
+            end_frame: 6,
+            tokens,
+            k: KvBlock::zeros(1, 1, t, 2),
+            v: KvBlock::zeros(1, 1, t, 2),
+        }
+    }
+
+    #[test]
+    fn anchors_refresh_iframes_only() {
+        let prev = prev_state();
+        // window slides to [2, 8): overlap frames [2, 6)
+        let plan = plan_window(&prev, 2, 8, &RefreshPolicy::Anchors);
+        // overlap = frames 2..6 -> 8 tokens; I-frame 4 -> 2 anchors
+        assert_eq!(plan.refresh_idx.len(), 2);
+        assert_eq!(plan.reuse_idx.len(), 6);
+        for &i in &plan.refresh_idx {
+            assert!(prev.tokens[i].is_iframe);
+            assert_eq!(prev.tokens[i].frame, 4);
+        }
+        assert_eq!(plan.fresh_frames, (6, 8));
+    }
+
+    #[test]
+    fn none_reuses_everything() {
+        let prev = prev_state();
+        let plan = plan_window(&prev, 2, 8, &RefreshPolicy::None);
+        assert_eq!(plan.refresh_idx.len(), 0);
+        assert_eq!(plan.reuse_idx.len(), 8);
+    }
+
+    #[test]
+    fn all_refreshes_everything() {
+        let prev = prev_state();
+        let plan = plan_window(&prev, 2, 8, &RefreshPolicy::All);
+        assert_eq!(plan.reuse_idx.len(), 0);
+        assert_eq!(plan.refresh_idx.len(), 8);
+    }
+
+    #[test]
+    fn explicit_set_respected() {
+        let prev = prev_state();
+        let overlap = prev.visual_in_range(2, 6);
+        let chosen = vec![overlap[0], overlap[3]];
+        let plan = plan_window(&prev, 2, 8, &RefreshPolicy::Explicit(chosen.clone()));
+        assert_eq!(plan.refresh_idx, chosen);
+        assert_eq!(plan.reuse_idx.len(), overlap.len() - 2);
+    }
+
+    #[test]
+    fn text_tokens_never_in_overlap_plan() {
+        let prev = prev_state();
+        let plan = plan_window(&prev, 2, 8, &RefreshPolicy::Anchors);
+        for &i in plan.reuse_idx.iter().chain(&plan.refresh_idx) {
+            assert_eq!(prev.tokens[i].kind, TokenKind::Visual);
+        }
+        assert_eq!(text_tokens(&prev), 2);
+    }
+
+    #[test]
+    fn ordering_preserved() {
+        let prev = prev_state();
+        let plan = plan_window(&prev, 2, 8, &RefreshPolicy::Anchors);
+        // reuse indices ascending == (frame, group) order
+        for w in plan.reuse_idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

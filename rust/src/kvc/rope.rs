@@ -1,0 +1,146 @@
+//! RoPE position correction for reused keys (paper eq. 5).
+//!
+//! `K̂_t(j) = R(p_new(j) - p_old(j)) K_{t-1}(j)` — rotations compose,
+//! so correcting by the position *delta* re-bases a cached key to its
+//! new sequence position without recomputing it. Values carry no
+//! positional encoding in RoPE attention and are reused as-is.
+//!
+//! Host-side implementation (no PJRT round trip): the correction is
+//! O(L·H·T·hd) multiply-adds — `runtime::flops::rope_correct` shows it
+//! is ~4 orders of magnitude below a prefill, and Fig 19 measures it.
+//!
+//! Convention must match python/compile/kernels/ref.py (half-split):
+//! pairs are (x_i, x_{i+hd/2}), angle_i = delta * base^(-i / (hd/2)).
+
+use std::collections::HashMap;
+
+use super::block::KvBlock;
+
+/// cos/sin table for one delta value: [(cos_i, sin_i); hd/2].
+fn angle_table(delta: i32, half: usize, base: f64) -> Vec<(f32, f32)> {
+    (0..half)
+        .map(|i| {
+            let inv_freq = base.powf(-(i as f64) / half as f64);
+            let ang = delta as f64 * inv_freq;
+            (ang.cos() as f32, ang.sin() as f32)
+        })
+        .collect()
+}
+
+/// Rotate each token's keys by its position delta, in place.
+/// `deltas.len() == k.t`. Tokens with delta 0 are untouched.
+pub fn correct_keys(k: &mut KvBlock, deltas: &[i32], base: f64) {
+    assert_eq!(deltas.len(), k.t);
+    let half = k.head_dim / 2;
+    // Sliding windows shift most tokens by the same delta: cache the
+    // per-delta tables (typically 1-2 entries).
+    let mut tables: HashMap<i32, Vec<(f32, f32)>> = HashMap::new();
+    for (tok, &d) in deltas.iter().enumerate() {
+        if d == 0 {
+            continue;
+        }
+        let table =
+            tables.entry(d).or_insert_with(|| angle_table(d, half, base)).clone();
+        for l in 0..k.layers {
+            for h in 0..k.heads {
+                let o = k.offset(l, h, tok);
+                let (lo, hi) = k.data[o..o + k.head_dim].split_at_mut(half);
+                for i in 0..half {
+                    let (c, s) = table[i];
+                    let x1 = lo[i];
+                    let x2 = hi[i];
+                    lo[i] = x1 * c - x2 * s;
+                    hi[i] = x2 * c + x1 * s;
+                }
+            }
+        }
+    }
+}
+
+/// Out-of-place convenience.
+pub fn corrected(k: &KvBlock, deltas: &[i32], base: f64) -> KvBlock {
+    let mut out = k.clone();
+    correct_keys(&mut out, deltas, base);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Rng, quick};
+
+    fn rand_block(rng: &mut Rng, l: usize, h: usize, t: usize, hd: usize) -> KvBlock {
+        let n = l * h * t * hd;
+        KvBlock::from_data(l, h, t, hd, (0..n).map(|_| rng.normal() as f32).collect())
+    }
+
+    #[test]
+    fn zero_delta_is_identity() {
+        let mut rng = Rng::new(1);
+        let k = rand_block(&mut rng, 2, 2, 4, 8);
+        let out = corrected(&k, &[0; 4], 1e4);
+        assert_eq!(k, out);
+    }
+
+    #[test]
+    fn rotation_composes() {
+        let mut rng = Rng::new(2);
+        let k = rand_block(&mut rng, 1, 2, 3, 8);
+        let a = corrected(&corrected(&k, &[2; 3], 1e4), &[3; 3], 1e4);
+        let b = corrected(&k, &[5; 3], 1e4);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rotation_invertible() {
+        let mut rng = Rng::new(3);
+        let k = rand_block(&mut rng, 2, 1, 5, 16);
+        let back = corrected(&corrected(&k, &[-7; 5], 1e4), &[7; 5], 1e4);
+        for (x, y) in k.data.iter().zip(&back.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn prop_norm_preserved() {
+        // Rotations are orthogonal: per-pair norms are invariant.
+        quick::check(0x205E, 30, |g| {
+            let hd = 2 * g.usize_in(1, 8);
+            let t = g.usize_in(1, 6);
+            let k = KvBlock::from_data(1, 1, t, hd, g.vec_f32(t * hd, -3.0, 3.0));
+            let deltas: Vec<i32> = (0..t).map(|_| g.i64_in(-50, 50) as i32).collect();
+            let out = corrected(&k, &deltas, 1e4);
+            let half = hd / 2;
+            for tok in 0..t {
+                let a = k.token_slice(0, 0, tok);
+                let b = out.token_slice(0, 0, tok);
+                for i in 0..half {
+                    let na = a[i] * a[i] + a[i + half] * a[i + half];
+                    let nb = b[i] * b[i] + b[i + half] * b[i + half];
+                    assert!((na - nb).abs() < 1e-4, "pair {i}: {na} vs {nb}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn matches_python_convention() {
+        // Hand-computed: hd=4 (half=2), delta=1, base=10000.
+        // inv_freq = [1.0, 10000^-0.5 = 0.01]; angles = [1.0, 0.01].
+        let k = KvBlock::from_data(1, 1, 1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let out = corrected(&k, &[1], 1e4);
+        let (c0, s0) = (1.0f32.cos(), 1.0f32.sin());
+        let (c1, s1) = (0.01f32.cos(), 0.01f32.sin());
+        let want = [
+            1.0 * c0 - 3.0 * s0,
+            2.0 * c1 - 4.0 * s1,
+            3.0 * c0 + 1.0 * s0,
+            4.0 * c1 + 2.0 * s1,
+        ];
+        for (x, y) in out.data.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! CodecFlow: codec-guided end-to-end optimization for streaming video
+//! analytics — a full-system reproduction (see DESIGN.md).
+//!
+//! Layer map:
+//! * [`codec`], [`video`], [`net`] — substrates: a software inter-frame
+//!   video codec exposing motion vectors / residuals / GOP structure,
+//!   a synthetic surveillance corpus, and an uplink simulator.
+//! * [`pipeline`], [`vision`], [`kvc`] — the paper's contribution:
+//!   single-pass decode + window forming, codec-guided token pruning,
+//!   selective KV-cache refresh with RoPE position correction.
+//! * [`runtime`], [`model`] — PJRT execution of the AOT-compiled JAX/
+//!   Pallas artifacts, model descriptors, the anomaly probe.
+//! * [`coordinator`], [`baselines`] — the serving layer (sessions,
+//!   router, batcher, metrics) and the four comparison systems.
+//! * [`exp`] — one experiment runner per paper table/figure.
+//! * [`util`], [`json`], [`config`] — support: PRNG, stats, micro-bench
+//!   harness, property-test helper, JSON, typed configs.
+
+pub mod baselines;
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod json;
+pub mod kvc;
+pub mod model;
+pub mod net;
+pub mod pipeline;
+pub mod runtime;
+pub mod util;
+pub mod video;
+pub mod vision;

@@ -1,0 +1,197 @@
+//! CodecFlow leader binary: serve / experiment / inspect commands.
+//!
+//! ```text
+//! codecflow serve   [--model M] [--variant V] [--streams N] [--frames N] [key=value ...]
+//! codecflow exp     <table1|table2|fig2|fig3|fig5|fig6|fig11|fig12|fig13|
+//!                    fig14|fig15|fig16|fig17|fig18|fig19|all>
+//! codecflow models              # list models + artifacts
+//! codecflow help
+//! ```
+//!
+//! Pipeline overrides are accepted as `key=value` pairs anywhere
+//! (e.g. `gop=8 mv_threshold=0.5 stride_frac=0.3`).
+
+use codecflow::baselines::Variant;
+use codecflow::config::{artifacts_dir, env_usize, PipelineConfig, ServingConfig};
+use codecflow::coordinator::serve::Server;
+use codecflow::exp;
+use codecflow::runtime::engine::Engine;
+use codecflow::video::{Corpus, CorpusConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => serve(&args[1..]),
+        "exp" => experiment(&args[1..]),
+        "models" => models(),
+        _ => help(),
+    }
+}
+
+fn parse_overrides(args: &[String], cfg: &mut PipelineConfig) -> Vec<(String, String)> {
+    let mut flags = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some((k, v)) = a.split_once('=') {
+            if !cfg.set(k, v) {
+                flags.push((k.to_string(), v.to_string()));
+            }
+        } else if let Some(name) = a.strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            flags.push((name.to_string(), val));
+            i += 1;
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn serve(args: &[String]) {
+    let mut cfg = ServingConfig::default();
+    let flags = parse_overrides(args, &mut cfg.pipeline);
+    let get = |k: &str, d: &str| -> String {
+        flags
+            .iter()
+            .find(|(n, _)| n == k)
+            .map(|(_, v)| v.clone())
+            .unwrap_or_else(|| d.to_string())
+    };
+    let model = get("model", "internvl3_sim");
+    let variant_name = get("variant", "codecflow").to_lowercase();
+    let variant = Variant::all()
+        .into_iter()
+        .find(|v| v.name().to_lowercase().replace('-', "") == variant_name.replace('-', ""))
+        .unwrap_or(Variant::CodecFlow);
+    let streams: usize = get("streams", "4").parse().unwrap_or(4);
+    let frames: usize = get("frames", &env_usize("CF_FRAMES", 60).to_string())
+        .parse()
+        .unwrap_or(60);
+
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    let corpus = Corpus::generate(CorpusConfig {
+        videos: streams,
+        frames_per_video: frames,
+        ..Default::default()
+    });
+    let clips: Vec<_> = corpus.clips.iter().map(|c| c.frames.clone()).collect();
+    println!(
+        "serving {streams} streams x {frames} frames with {} on {model}",
+        variant.name()
+    );
+    let server = Server::new(&engine, &model, cfg);
+    let report = server.run(&clips, variant, 2.0);
+    println!("{}", report.metrics.report(variant.name()));
+    println!(
+        "sustainable streams per executor: {:.1}",
+        report.sustainable_streams
+    );
+}
+
+fn experiment(args: &[String]) {
+    let which = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let run_one = |name: &str| match name {
+        "table1" => {
+            exp::table1::run();
+        }
+        "table2" => {
+            exp::table2::run();
+        }
+        "fig2" => {
+            exp::fig2::run();
+        }
+        "fig3" => {
+            exp::fig3::run();
+        }
+        "fig5" => {
+            exp::fig5::run();
+        }
+        "fig6" => {
+            exp::fig6::run();
+        }
+        "fig11" => {
+            exp::fig11::run();
+        }
+        "fig12" => {
+            exp::fig12::run();
+        }
+        "fig13" => {
+            exp::fig13::run();
+        }
+        "fig14" => {
+            exp::fig14::run();
+        }
+        "fig15" => {
+            exp::fig15::run();
+        }
+        "fig16" => {
+            exp::fig16::run();
+        }
+        "fig17" => {
+            exp::fig17::run();
+        }
+        "fig18" => {
+            exp::fig18::run();
+        }
+        "fig19" => {
+            exp::fig19::run();
+        }
+        other => eprintln!("unknown experiment {other}"),
+    };
+    if which == "all" {
+        for name in [
+            "table1", "table2", "fig2", "fig3", "fig5", "fig6", "fig11", "fig12",
+            "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19",
+        ] {
+            println!("\n===== {name} =====");
+            run_one(name);
+        }
+    } else {
+        run_one(which);
+    }
+}
+
+fn models() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    for name in engine.model_names() {
+        let spec = engine.model_spec(name).unwrap();
+        println!(
+            "{name}: vit d{}xL{} llm d{}xL{} window {} frames ({} visual tokens + {} text)",
+            spec.vit_dim,
+            spec.vit_layers,
+            spec.llm_dim,
+            spec.llm_layers,
+            spec.window_frames,
+            spec.max_visual_tokens(),
+            spec.text_len
+        );
+        let mut names = engine.artifact_names(name);
+        names.sort();
+        println!("  artifacts: {}", names.join(", "));
+    }
+}
+
+fn help() {
+    println!(
+        "codecflow — codec-guided streaming video analytics (paper reproduction)\n\
+         \n\
+         USAGE:\n\
+         \x20 codecflow serve  [--model M] [--variant V] [--streams N] [--frames N] [key=value...]\n\
+         \x20 codecflow exp    <table1|table2|fig2..fig19|all>\n\
+         \x20 codecflow models\n\
+         \n\
+         pipeline overrides: window_frames= stride_frac= gop= mv_threshold= alpha= qp=\n\
+         env: CF_ARTIFACTS, CF_VIDEOS, CF_FRAMES, CF_NO_CACHE"
+    );
+}

@@ -1,0 +1,9 @@
+//! Model-level helpers above the runtime: prompt handling, the
+//! analytically-calibrated anomaly probe (DESIGN.md §4), and answer
+//! decoding.
+
+pub mod probe;
+pub mod prompt;
+
+pub use probe::{Probe, ProbeBuilder};
+pub use prompt::Prompt;

@@ -1,0 +1,163 @@
+//! Anomaly probe: an analytic linear readout of the VLM's last hidden
+//! state (DESIGN.md §4).
+//!
+//! Why: with deterministic synthetic weights the VLM's *decision
+//! function* is real (a fixed function of the full forward pass) but
+//! its unembedding is not aligned with "yes"/"no" semantics. The probe
+//! restores that alignment without any gradient training: direction =
+//! normalized mean difference between anomalous and normal calibration
+//! windows (run through the Full-Comp path at startup), threshold =
+//! midpoint of the projected class means. Every approximation the
+//! paper studies (pruning, KV reuse) perturbs the hidden state and
+//! therefore degrades this fixed readout — which is exactly the
+//! quantity the accuracy experiments measure.
+
+/// Calibrated probe.
+#[derive(Clone, Debug)]
+pub struct Probe {
+    pub direction: Vec<f32>,
+    pub threshold: f32,
+    /// Margin between class means in score units (diagnostics).
+    pub margin: f32,
+    /// Fraction of calibration windows that are positive — used for
+    /// per-variant quantile thresholding (score distributions shift
+    /// under approximation; rank-based thresholds measure the ranking
+    /// degradation the paper's Yes/No head would see).
+    pub positive_rate: f64,
+}
+
+impl Probe {
+    pub fn score(&self, hidden: &[f32]) -> f32 {
+        debug_assert_eq!(hidden.len(), self.direction.len());
+        hidden.iter().zip(&self.direction).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn classify(&self, hidden: &[f32]) -> bool {
+        self.score(hidden) > self.threshold
+    }
+}
+
+/// Accumulates calibration windows, then fits the probe.
+#[derive(Clone, Debug, Default)]
+pub struct ProbeBuilder {
+    pos: Vec<Vec<f32>>,
+    neg: Vec<Vec<f32>>,
+}
+
+impl ProbeBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, hidden: &[f32], anomalous: bool) {
+        if anomalous {
+            self.pos.push(hidden.to_vec());
+        } else {
+            self.neg.push(hidden.to_vec());
+        }
+    }
+
+    pub fn counts(&self) -> (usize, usize) {
+        (self.pos.len(), self.neg.len())
+    }
+
+    pub fn ready(&self) -> bool {
+        self.pos.len() >= 2 && self.neg.len() >= 2
+    }
+
+    fn mean(xs: &[Vec<f32>]) -> Vec<f32> {
+        let d = xs[0].len();
+        let mut m = vec![0.0f32; d];
+        for x in xs {
+            for (mi, xi) in m.iter_mut().zip(x) {
+                *mi += xi;
+            }
+        }
+        for mi in m.iter_mut() {
+            *mi /= xs.len() as f32;
+        }
+        m
+    }
+
+    /// Fit: direction = (mu+ - mu-)/||.||, threshold = midpoint.
+    pub fn fit(&self) -> Option<Probe> {
+        if self.pos.is_empty() || self.neg.is_empty() {
+            return None;
+        }
+        let mp = Self::mean(&self.pos);
+        let mn = Self::mean(&self.neg);
+        let mut dir: Vec<f32> = mp.iter().zip(&mn).map(|(a, b)| a - b).collect();
+        let norm = dir.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm < 1e-12 {
+            return None;
+        }
+        for d in dir.iter_mut() {
+            *d /= norm;
+        }
+        let sp: f32 = mp.iter().zip(&dir).map(|(a, b)| a * b).sum();
+        let sn: f32 = mn.iter().zip(&dir).map(|(a, b)| a * b).sum();
+        let positive_rate =
+            self.pos.len() as f64 / (self.pos.len() + self.neg.len()) as f64;
+        Some(Probe { direction: dir, threshold: (sp + sn) / 2.0, margin: sp - sn, positive_rate })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn separates_gaussian_classes() {
+        let mut rng = Rng::new(42);
+        let d = 16;
+        let mut b = ProbeBuilder::new();
+        let gen = |rng: &mut Rng, shift: f32| -> Vec<f32> {
+            (0..d)
+                .map(|i| rng.normal() as f32 + if i < 4 { shift } else { 0.0 })
+                .collect()
+        };
+        for _ in 0..30 {
+            let p = gen(&mut rng, 2.0);
+            let n = gen(&mut rng, 0.0);
+            b.add(&p, true);
+            b.add(&n, false);
+        }
+        let probe = b.fit().unwrap();
+        assert!(probe.margin > 0.0);
+        let mut correct = 0;
+        for _ in 0..100 {
+            if probe.classify(&gen(&mut rng, 2.0)) {
+                correct += 1;
+            }
+            if !probe.classify(&gen(&mut rng, 0.0)) {
+                correct += 1;
+            }
+        }
+        assert!(correct > 180, "correct={correct}/200");
+    }
+
+    #[test]
+    fn fit_requires_both_classes() {
+        let mut b = ProbeBuilder::new();
+        b.add(&[1.0, 2.0], true);
+        assert!(b.fit().is_none());
+        assert!(!b.ready());
+    }
+
+    #[test]
+    fn identical_classes_unfittable() {
+        let mut b = ProbeBuilder::new();
+        b.add(&[1.0, 1.0], true);
+        b.add(&[1.0, 1.0], false);
+        assert!(b.fit().is_none());
+    }
+
+    #[test]
+    fn score_is_linear() {
+        let p = Probe { direction: vec![1.0, -1.0], threshold: 0.0, margin: 1.0, positive_rate: 0.5 };
+        assert_eq!(p.score(&[3.0, 1.0]), 2.0);
+        assert!(p.classify(&[3.0, 1.0]));
+        assert!(!p.classify(&[0.0, 5.0]));
+    }
+}

@@ -1,0 +1,62 @@
+//! Prompt handling: the anomaly query template as token ids.
+//!
+//! The prompt is fixed per deployment (paper §2.1's template query);
+//! ids are produced by the AOT pass (configs.prompt_ids) and shipped
+//! in the manifest so rust and python agree exactly.
+
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct Prompt {
+    pub ids: Vec<i32>,
+}
+
+impl Prompt {
+    pub fn from_spec(spec: &ModelSpec) -> Prompt {
+        assert_eq!(spec.prompt_ids.len(), spec.text_len, "prompt length mismatch");
+        Prompt { ids: spec.prompt_ids.clone() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Tensor for the embed_text artifact.
+    pub fn tensor(&self) -> Tensor {
+        Tensor::i32(&[self.ids.len()], self.ids.clone())
+    }
+}
+
+/// Decode the yes/no answer from final logits.
+pub fn answer_is_yes(logits: &[f32], yes_token: i32, no_token: i32) -> bool {
+    logits[yes_token as usize] >= logits[no_token as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::test_spec;
+
+    #[test]
+    fn prompt_from_spec() {
+        let spec = test_spec("m");
+        let p = Prompt::from_spec(&spec);
+        assert_eq!(p.len(), spec.text_len);
+        assert_eq!(p.tensor().shape(), &[16]);
+    }
+
+    #[test]
+    fn answer_compare() {
+        let mut logits = vec![0.0f32; 8];
+        logits[1] = 2.0;
+        logits[2] = 1.0;
+        assert!(answer_is_yes(&logits, 1, 2));
+        logits[2] = 3.0;
+        assert!(!answer_is_yes(&logits, 1, 2));
+    }
+}

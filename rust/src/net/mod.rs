@@ -1,0 +1,80 @@
+//! Uplink simulator: edge camera -> cloud transmission (DESIGN.md §3).
+//!
+//! Transmission latency is a pure function of payload size and the
+//! link model; the paper's 5 Mbps representative edge uplink (§2.2,
+//! [68]) is the default. Models serialization delay + propagation RTT
+//! + simple pacing; enough to reproduce the Fig 3 "Trans" share and
+//! the Fig 11 transmission reduction, which are driven entirely by the
+//! JPEG-vs-bitstream size ratio.
+
+/// Link model.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// Uplink bandwidth, bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way propagation delay, seconds.
+    pub propagation_s: f64,
+    /// Per-message protocol overhead, bytes (headers/framing).
+    pub overhead_bytes: usize,
+}
+
+impl Default for Link {
+    fn default() -> Self {
+        // Paper §2.2: representative 5 Mbps edge uplink; metro-edge
+        // propagation (2 ms) so serialization delay — the thing the
+        // compressed bitstream reduces — dominates, as in the paper's
+        // per-frame-JPEG setting.
+        Link { bandwidth_bps: 5e6, propagation_s: 0.002, overhead_bytes: 64 }
+    }
+}
+
+impl Link {
+    pub fn mbps(bandwidth_mbps: f64) -> Link {
+        Link { bandwidth_bps: bandwidth_mbps * 1e6, ..Default::default() }
+    }
+
+    /// Seconds to deliver one message of `payload_bytes`.
+    pub fn transmit_s(&self, payload_bytes: usize) -> f64 {
+        let bits = ((payload_bytes + self.overhead_bytes) * 8) as f64;
+        bits / self.bandwidth_bps + self.propagation_s
+    }
+
+    /// Seconds to deliver a batch of messages back-to-back (pipelined:
+    /// pay propagation once, serialization for all).
+    pub fn transmit_batch_s(&self, payload_bytes: &[usize]) -> f64 {
+        let bits: f64 = payload_bytes
+            .iter()
+            .map(|&b| ((b + self.overhead_bytes) * 8) as f64)
+            .sum();
+        bits / self.bandwidth_bps + self.propagation_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_scales_with_size() {
+        let l = Link::mbps(5.0);
+        let t1 = l.transmit_s(10_000);
+        let t2 = l.transmit_s(20_000);
+        assert!(t2 > t1);
+        // 10 KB at 5 Mbps ~ 16 ms + prop
+        assert!((t1 - (10_064.0 * 8.0 / 5e6 + 0.002)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_cheaper_than_individual() {
+        let l = Link::default();
+        let sizes = [5000usize; 10];
+        let batch = l.transmit_batch_s(&sizes);
+        let indiv: f64 = sizes.iter().map(|&s| l.transmit_s(s)).sum();
+        assert!(batch < indiv);
+    }
+
+    #[test]
+    fn faster_link_faster() {
+        assert!(Link::mbps(50.0).transmit_s(100_000) < Link::mbps(5.0).transmit_s(100_000));
+    }
+}

@@ -1,0 +1,275 @@
+//! Stream ingestion front-end (paper §3.2).
+//!
+//! Two transport/decode modes:
+//! * [`FrontendMode::Jpeg`] — the baseline: each sampled frame is
+//!   JPEG-coded and transmitted individually; every window decodes all
+//!   of its frames, so overlapping windows re-decode the same frames;
+//! * [`FrontendMode::Bitstream`] — CodecFlow: the inter-coded
+//!   bitstream is transmitted once; a *single sequential decode pass*
+//!   fills a temporal buffer shared by all overlapping windows, and
+//!   codec metadata (MVs, residuals, frame types) falls out of the
+//!   same pass.
+//!
+//! Transmission is modelled by [`crate::net::Link`] on real payload
+//! sizes from the real codecs; decode times are measured wall-clock.
+
+use crate::codec::decoder::Decoder;
+use crate::codec::encoder::{encode_sequence, EncoderConfig};
+use crate::codec::jpeg;
+use crate::codec::types::{Frame, FrameMeta, FrameType};
+use crate::net::Link;
+use crate::util;
+
+/// A camera-side source: the encoded form of one video.
+pub struct StreamSource {
+    /// Inter-coded bitstream of the whole clip.
+    pub bitstream: Vec<u8>,
+    /// Per-frame JPEG payloads (baseline transport).
+    pub jpegs: Vec<Vec<u8>>,
+    pub frames: usize,
+}
+
+impl StreamSource {
+    /// Encode a clip both ways (camera-side work, not serving cost).
+    pub fn encode(frames: &[Frame], gop: usize, qp: u8) -> StreamSource {
+        let (bitstream, _) = encode_sequence(
+            frames,
+            EncoderConfig { gop, qp, ..Default::default() },
+        );
+        let jpegs = frames.iter().map(|f| jpeg::encode(f, qp)).collect();
+        StreamSource { bitstream, jpegs, frames: frames.len() }
+    }
+
+    pub fn bitstream_bytes(&self) -> usize {
+        self.bitstream.len()
+    }
+
+    pub fn jpeg_bytes_total(&self) -> usize {
+        self.jpegs.iter().map(|j| j.len()).sum()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontendMode {
+    Jpeg,
+    Bitstream,
+}
+
+/// Per-window front-end output.
+pub struct WindowFrames {
+    /// (frame, meta) for [start, end). JPEG mode synthesizes metadata
+    /// with `FrameType::I` and no MVs (no codec signal available).
+    pub frames: Vec<(Frame, FrameMeta)>,
+    pub start: usize,
+    pub end: usize,
+    /// Seconds of transmission attributable to this window.
+    pub transmit_s: f64,
+    /// Seconds of decode work done for this window.
+    pub decode_s: f64,
+}
+
+/// Serving-side front-end state for one stream.
+pub struct Frontend {
+    pub mode: FrontendMode,
+    link: Link,
+    source: StreamSource,
+    /// Temporal buffer: decoded (frame, meta), filled sequentially in
+    /// Bitstream mode (each frame decoded exactly once).
+    buffer: Vec<(Frame, FrameMeta)>,
+    /// Persistent sequential decoder (Bitstream mode).
+    decoder: Option<Decoder>,
+    /// Total stream bits already "transmitted" (Bitstream mode).
+    transmitted_frames: usize,
+    /// Cumulative stage seconds (reporting).
+    pub total_transmit_s: f64,
+    pub total_decode_s: f64,
+}
+
+impl Frontend {
+    pub fn new(mode: FrontendMode, link: Link, source: StreamSource) -> Frontend {
+        let decoder = match mode {
+            FrontendMode::Bitstream => {
+                Some(Decoder::new(source.bitstream.clone()).expect("bitstream header"))
+            }
+            FrontendMode::Jpeg => None,
+        };
+        Frontend {
+            mode,
+            link,
+            source,
+            buffer: Vec::new(),
+            decoder,
+            transmitted_frames: 0,
+            total_transmit_s: 0.0,
+            total_decode_s: 0.0,
+        }
+    }
+
+    pub fn total_frames(&self) -> usize {
+        self.source.frames
+    }
+
+    /// Produce the frames for window [start, end).
+    pub fn window(&mut self, start: usize, end: usize) -> WindowFrames {
+        match self.mode {
+            FrontendMode::Jpeg => self.window_jpeg(start, end),
+            FrontendMode::Bitstream => self.window_bitstream(start, end),
+        }
+    }
+
+    /// Baseline: transmit + decode every frame of the window (overlap
+    /// frames transmitted once — cameras don't resend — but decoded
+    /// again for every window they appear in).
+    fn window_jpeg(&mut self, start: usize, end: usize) -> WindowFrames {
+        // Transmission: only newly arrived frames cross the link.
+        let new_lo = self.transmitted_frames.max(start);
+        let sizes: Vec<usize> =
+            (new_lo..end).map(|i| self.source.jpegs[i].len()).collect();
+        let transmit_s = if sizes.is_empty() { 0.0 } else { self.link.transmit_batch_s(&sizes) };
+        self.transmitted_frames = self.transmitted_frames.max(end);
+
+        let t0 = util::now();
+        let mut frames = Vec::with_capacity(end - start);
+        for i in start..end {
+            // Redundant decode: no shared buffer across windows.
+            let f = jpeg::decode(&self.source.jpegs[i]).expect("jpeg decode");
+            let (w, h) = (f.w, f.h);
+            frames.push((
+                f,
+                FrameMeta {
+                    frame_type: FrameType::I,
+                    gop_pos: 0,
+                    mb_w: w / crate::codec::types::MB,
+                    mb_h: h / crate::codec::types::MB,
+                    mvs: Vec::new(),
+                    residual_sad: Vec::new(),
+                    bits: self.source.jpegs[i].len() * 8,
+                },
+            ));
+        }
+        let decode_s = util::now() - t0;
+        self.total_transmit_s += transmit_s;
+        self.total_decode_s += decode_s;
+        WindowFrames { frames, start, end, transmit_s, decode_s }
+    }
+
+    /// CodecFlow: single-pass decode into the shared temporal buffer;
+    /// transmission covers only the bits of newly needed frames.
+    fn window_bitstream(&mut self, start: usize, end: usize) -> WindowFrames {
+        // Decode forward exactly once (sequential single pass); the
+        // persistent decoder continues where it stopped last window.
+        let t0 = util::now();
+        let dec = self.decoder.as_mut().expect("bitstream mode");
+        while self.buffer.len() < end {
+            match dec.next_frame().expect("decode") {
+                Some((f, m)) => self.buffer.push((f, m)),
+                None => break,
+            }
+        }
+        let decode_s = util::now() - t0;
+
+        // Transmission: bits of frames newly required.
+        let new_lo = self.transmitted_frames.max(start);
+        let mut bits = 0usize;
+        for i in new_lo..end {
+            bits += self.buffer[i].1.bits;
+        }
+        let transmit_s = if bits == 0 {
+            0.0
+        } else {
+            self.link.transmit_s(bits / 8)
+        };
+        self.transmitted_frames = self.transmitted_frames.max(end);
+
+        let frames = self.buffer[start..end].to_vec();
+        self.total_transmit_s += transmit_s;
+        self.total_decode_s += decode_s;
+        WindowFrames { frames, start, end, transmit_s, decode_s }
+    }
+
+    /// Transmission comparison payloads (Fig 3 / Fig 11 Trans bars).
+    pub fn source_sizes(&self) -> (usize, usize) {
+        (self.source.jpeg_bytes_total(), self.source.bitstream_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::{Corpus, CorpusConfig};
+
+    fn test_source() -> (StreamSource, usize) {
+        let corpus = Corpus::generate(CorpusConfig {
+            videos: 1,
+            frames_per_video: 24,
+            ..Default::default()
+        });
+        let frames = &corpus.clips[0].frames;
+        (StreamSource::encode(frames, 8, 6), frames.len())
+    }
+
+    #[test]
+    fn bitstream_smaller_than_jpegs() {
+        let (src, _) = test_source();
+        assert!(
+            src.bitstream_bytes() < src.jpeg_bytes_total(),
+            "bitstream {} vs jpeg {}",
+            src.bitstream_bytes(),
+            src.jpeg_bytes_total()
+        );
+    }
+
+    #[test]
+    fn both_modes_yield_same_window_shape() {
+        let (src, n) = test_source();
+        let (src2, _) = test_source();
+        let mut fj = Frontend::new(FrontendMode::Jpeg, Link::default(), src);
+        let mut fb = Frontend::new(FrontendMode::Bitstream, Link::default(), src2);
+        let wj = fj.window(0, 10.min(n));
+        let wb = fb.window(0, 10.min(n));
+        assert_eq!(wj.frames.len(), wb.frames.len());
+        // decoded content should be visually close (different codecs)
+        let psnr = wj.frames[0].0.psnr(&wb.frames[0].0);
+        assert!(psnr > 25.0, "psnr={psnr}");
+    }
+
+    #[test]
+    fn bitstream_mode_has_codec_metadata() {
+        let (src, _) = test_source();
+        let mut fb = Frontend::new(FrontendMode::Bitstream, Link::default(), src);
+        let w = fb.window(0, 12);
+        assert_eq!(w.frames[0].1.frame_type, FrameType::I);
+        assert_eq!(w.frames[1].1.frame_type, FrameType::P);
+        assert!(!w.frames[1].1.mvs.is_empty());
+        // jpeg mode: no MVs
+        let (src2, _) = test_source();
+        let mut fj = Frontend::new(FrontendMode::Jpeg, Link::default(), src2);
+        let wj = fj.window(0, 12);
+        assert!(wj.frames[1].1.mvs.is_empty());
+    }
+
+    #[test]
+    fn single_pass_decode_shares_overlap() {
+        let (src, _) = test_source();
+        let mut fb = Frontend::new(FrontendMode::Bitstream, Link::default(), src);
+        let w1 = fb.window(0, 12);
+        assert!(w1.decode_s >= 0.0);
+        // second overlapping window: only 4 new frames decoded
+        let w2 = fb.window(4, 16);
+        assert_eq!(w2.frames.len(), 12);
+        assert_eq!(w2.frames[0].0, fb.buffer[4].0);
+        // transmission only charged once per frame
+        let w3 = fb.window(4, 16);
+        assert_eq!(w3.transmit_s, 0.0);
+    }
+
+    #[test]
+    fn jpeg_mode_redecodes_overlap() {
+        let (src, _) = test_source();
+        let mut fj = Frontend::new(FrontendMode::Jpeg, Link::default(), src);
+        let _ = fj.window(0, 12);
+        let d1 = fj.total_decode_s;
+        let _ = fj.window(4, 16); // 8 overlap frames re-decoded
+        assert!(fj.total_decode_s > d1);
+    }
+}

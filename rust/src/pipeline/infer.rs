@@ -1,0 +1,1130 @@
+//! The window engine: one sliding-window inference step, composed of
+//! codec-guided pruning, ViT encoding, selective KVC refresh and
+//! answer decoding — parameterized so that CodecFlow and all four
+//! baselines run through the same plumbing (paper §5 "Baselines").
+//!
+//! Per-variant knobs ([`VariantOpts`]):
+//! * `prune` — codec-guided token pruning before the ViT (§3.3);
+//! * `vit_pixel_reuse` — Déjà Vu-style per-patch pixel-diff reuse of
+//!   cached ViT outputs (pixel-domain cost is *measured*, not waived);
+//! * `kvc` — LLM prefill mode: full recompute vs overlap reuse with a
+//!   refresh-selection policy (§3.4);
+//! * `fused_preproc` — fused vs multi-pass preprocessing (§3.2).
+//!
+//! Sequence-order invariant: `WindowState.tokens[i]` corresponds to
+//! token i of `WindowState.{k,v}`, and tokens are stored in ascending
+//! sequence-position order (visual by (frame, group), then text).
+
+use crate::codec::types::{Frame, FrameMeta, FrameType};
+use crate::kvc::block::KvBlock;
+use crate::kvc::records::{TokenKind, TokenRecord, WindowState};
+use crate::kvc::refresher::{plan_window, RefreshPolicy};
+use crate::kvc::rope;
+use crate::model::prompt::Prompt;
+use crate::runtime::flops;
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::mock::Executor;
+use crate::runtime::tensor::Tensor;
+use crate::util;
+use crate::vision::analyzer::MotionAnalyzer;
+use crate::vision::layout::PatchLayout;
+use crate::vision::pruner::{FrameSelection, PrunerConfig, TokenPruner};
+
+use super::preprocess;
+
+/// Refresh-selection policy per window (variant-specific).
+#[derive(Clone, Debug)]
+pub enum RefreshSelect {
+    /// CodecFlow: I-frame anchor tokens.
+    Anchors,
+    /// Naive full reuse.
+    None,
+    /// CacheBlend emulation: top-`frac` of overlap tokens by pixel-
+    /// domain change score (computed online, cost measured).
+    TopKByChange { frac: f64 },
+    /// VLCache emulation: fixed `frac`, uniformly spaced (content-
+    /// blind ratio from offline profiling).
+    FixedRatio { frac: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub enum KvcMode {
+    /// Full prefill every window.
+    Recompute,
+    /// Reuse overlap KV with the given refresh selection.
+    Reuse(RefreshSelect),
+}
+
+#[derive(Clone, Debug)]
+pub struct VariantOpts {
+    pub prune: Option<PrunerConfig>,
+    pub alpha: f32,
+    /// Déjà Vu: reuse ViT outputs for patches whose mean absolute
+    /// pixel diff vs the previous frame is below this threshold.
+    pub vit_pixel_reuse: Option<f32>,
+    pub kvc: KvcMode,
+    pub fused_preproc: bool,
+    pub decode_tokens: usize,
+}
+
+impl VariantOpts {
+    pub fn fullcomp() -> Self {
+        VariantOpts {
+            prune: None,
+            alpha: 0.0,
+            vit_pixel_reuse: None,
+            kvc: KvcMode::Recompute,
+            fused_preproc: false,
+            decode_tokens: 2,
+        }
+    }
+
+    pub fn codecflow(tau: f32, alpha: f32) -> Self {
+        VariantOpts {
+            prune: Some(PrunerConfig { tau }),
+            alpha,
+            vit_pixel_reuse: None,
+            kvc: KvcMode::Reuse(RefreshSelect::Anchors),
+            fused_preproc: true,
+            decode_tokens: 2,
+        }
+    }
+}
+
+/// Per-stage seconds for one window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimes {
+    pub transmit: f64,
+    pub decode: f64,
+    pub preprocess: f64,
+    pub vit: f64,
+    pub llm_prefill: f64,
+    pub llm_decode: f64,
+    /// Token-selection overhead (Fig 19 "Token Pruning").
+    pub overhead_prune: f64,
+    /// KVC planning + position correction overhead (Fig 19 "KVC").
+    pub overhead_kvc: f64,
+}
+
+impl StageTimes {
+    pub fn total(&self) -> f64 {
+        self.transmit
+            + self.decode
+            + self.preprocess
+            + self.vit
+            + self.llm_prefill
+            + self.llm_decode
+            + self.overhead_prune
+            + self.overhead_kvc
+    }
+
+    pub fn add(&mut self, o: &StageTimes) {
+        self.transmit += o.transmit;
+        self.decode += o.decode;
+        self.preprocess += o.preprocess;
+        self.vit += o.vit;
+        self.llm_prefill += o.llm_prefill;
+        self.llm_decode += o.llm_decode;
+        self.overhead_prune += o.overhead_prune;
+        self.overhead_kvc += o.overhead_kvc;
+    }
+}
+
+/// Outcome of one window.
+#[derive(Clone, Debug)]
+pub struct WindowResult {
+    pub start: usize,
+    pub end: usize,
+    pub last_hidden: Vec<f32>,
+    /// Masked mean-pooled final hidden state (the probe readout).
+    pub pooled: Vec<f32>,
+    pub logits: Vec<f32>,
+    pub decoded_ids: Vec<i32>,
+    pub seq_tokens: usize,
+    pub visual_tokens: usize,
+    pub reused_tokens: usize,
+    pub refreshed_tokens: usize,
+    pub fresh_tokens: usize,
+    /// 1 - retained/possible visual tokens over fresh frames.
+    pub pruned_ratio: f64,
+    /// Useful (unpadded) FLOPs.
+    pub flops: u64,
+    /// Padded FLOPs actually executed (bucket slack included).
+    pub flops_padded: u64,
+    pub times: StageTimes,
+}
+
+/// One visual token ready for sequence assembly.
+struct VisualToken {
+    frame: usize,
+    group: usize,
+    is_iframe: bool,
+    emb: Vec<f32>,
+}
+
+/// Per-stream window engine.
+pub struct WindowEngine<'a> {
+    exec: &'a dyn Executor,
+    pub model: String,
+    pub spec: ModelSpec,
+    pub opts: VariantOpts,
+    layout: PatchLayout,
+    analyzer: MotionAnalyzer,
+    pruner: TokenPruner,
+    prompt: Prompt,
+    /// Frames the pruner has consumed (selections are made once, in
+    /// stream order, and remembered).
+    selections: Vec<FrameSelection>,
+    prev: Option<WindowState>,
+    /// Déjà Vu state: previous frame + its per-group ViT outputs.
+    dv_prev_frame: Option<Frame>,
+    dv_prev_tokens: Vec<Option<Vec<f32>>>,
+    /// Cached prompt embeddings (context-free lookup).
+    text_emb: Option<Vec<Vec<f32>>>,
+    /// Change scores per (frame, group) for CacheBlend selection.
+    change_scores: std::collections::HashMap<(usize, usize), f32>,
+}
+
+impl<'a> WindowEngine<'a> {
+    pub fn new(exec: &'a dyn Executor, model: &str, opts: VariantOpts) -> Self {
+        let spec = exec.spec(model).expect("model spec");
+        let layout = PatchLayout::new(spec.frame, spec.frame, spec.patch, spec.merge);
+        let pruner_cfg = opts.prune.unwrap_or(PrunerConfig { tau: -1.0 }); // tau<0 => keep all
+        WindowEngine {
+            exec,
+            model: model.to_string(),
+            prompt: Prompt::from_spec(&spec),
+            layout,
+            analyzer: MotionAnalyzer::new(opts.alpha),
+            pruner: TokenPruner::new(layout, pruner_cfg),
+            opts,
+            spec,
+            selections: Vec::new(),
+            prev: None,
+            dv_prev_frame: None,
+            dv_prev_tokens: Vec::new(),
+            text_emb: None,
+            change_scores: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Reset per-stream state (new stream on the same engine).
+    pub fn reset(&mut self) {
+        self.selections.clear();
+        self.prev = None;
+        self.dv_prev_frame = None;
+        self.dv_prev_tokens.clear();
+        self.change_scores.clear();
+    }
+
+    /// Ensure pruning selections exist for frames [0, upto) given the
+    /// decoded window content; frames must be offered in stream order.
+    fn ensure_selections(&mut self, frames: &[(Frame, FrameMeta)], abs_start: usize) {
+        for (i, (_, meta)) in frames.iter().enumerate() {
+            let abs = abs_start + i;
+            if abs < self.selections.len() {
+                continue;
+            }
+            debug_assert_eq!(abs, self.selections.len(), "frames out of order");
+            let sel = if self.opts.prune.is_some() {
+                let mask = self.analyzer.analyze(&self.layout, meta);
+                self.pruner.select(&mask)
+            } else {
+                // No pruning: everything retained; I-frame flag kept
+                // for anchor policy (falls back to GOP position when
+                // metadata is absent, e.g. JPEG transport).
+                let all_groups: Vec<usize> = (0..self.layout.tokens_per_frame()).collect();
+                FrameSelection {
+                    patches: all_groups
+                        .iter()
+                        .flat_map(|&g| self.layout.group_patches(g))
+                        .collect(),
+                    groups: all_groups,
+                    is_iframe: meta.frame_type == FrameType::I,
+                    total_patches: self.layout.patches_per_frame(),
+                    total_groups: self.layout.tokens_per_frame(),
+                }
+            };
+            self.selections.push(sel);
+        }
+    }
+
+    /// Run the ViT for one frame's retained patches; returns tokens
+    /// per retained group.
+    fn encode_frame(
+        &mut self,
+        frame: &Frame,
+        abs_frame: usize,
+        times: &mut StageTimes,
+        flops: &mut u64,
+        flops_padded: &mut u64,
+    ) -> Vec<VisualToken> {
+        let sel = self.selections[abs_frame].clone();
+        if sel.groups.is_empty() {
+            return Vec::new();
+        }
+
+        // Déjà Vu: split groups into reused (pixel-static) and fresh.
+        let mut groups = sel.groups.clone();
+        let mut reused: Vec<(usize, Vec<f32>)> = Vec::new();
+        if let Some(thresh) = self.opts.vit_pixel_reuse {
+            let t0 = util::now();
+            if let Some(prev_f) = &self.dv_prev_frame {
+                let mut fresh = Vec::new();
+                for &g in &groups {
+                    let diff = group_pixel_mad(&self.layout, frame, prev_f, g);
+                    match (diff < thresh, self.dv_prev_tokens.get(g).and_then(|t| t.clone())) {
+                        (true, Some(tok)) => reused.push((g, tok)),
+                        _ => fresh.push(g),
+                    }
+                }
+                groups = fresh;
+            }
+            times.overhead_prune += util::now() - t0;
+        }
+
+        let mut out: Vec<VisualToken> = reused
+            .into_iter()
+            .map(|(g, emb)| VisualToken {
+                frame: abs_frame,
+                group: g,
+                is_iframe: sel.is_iframe,
+                emb,
+            })
+            .collect();
+
+        if !groups.is_empty() {
+            // Preprocess retained patches.
+            let patch_list: Vec<usize> =
+                groups.iter().flat_map(|&g| self.layout.group_patches(g)).collect();
+            let t0 = util::now();
+            let patches = if self.opts.fused_preproc {
+                preprocess::fused(&self.layout, frame, &patch_list)
+            } else {
+                preprocess::naive(&self.layout, frame, &patch_list)
+            };
+            times.preprocess += util::now() - t0;
+
+            // Bucket + pad.
+            let n = patch_list.len();
+            let bucket = ModelSpec::pick_bucket(&self.spec.vit_buckets, n);
+            let pd = self.spec.patch_dim;
+            let mut padded = vec![0.0f32; bucket * pd];
+            padded[..n * pd].copy_from_slice(&patches);
+            let mut pos_ids = vec![0i32; bucket];
+            for (j, &p) in patch_list.iter().enumerate() {
+                pos_ids[j] = p as i32;
+            }
+            let mut mask = vec![0.0f32; bucket];
+            mask[..n].fill(1.0);
+
+            let (outputs, exec_s) = self
+                .exec
+                .execute(
+                    &self.model,
+                    &format!("vit_encode_n{bucket}"),
+                    &[
+                        Tensor::f32(&[bucket, pd], padded),
+                        Tensor::i32(&[bucket], pos_ids),
+                        Tensor::f32(&[bucket], mask),
+                    ],
+                )
+                .expect("vit_encode");
+            times.vit += exec_s;
+            *flops += flops::vit_encode(&self.spec, n);
+            *flops_padded += flops::vit_encode(&self.spec, bucket);
+
+            let d = self.spec.llm_dim;
+            let toks = outputs[0].as_f32();
+            for (j, &g) in groups.iter().enumerate() {
+                out.push(VisualToken {
+                    frame: abs_frame,
+                    group: g,
+                    is_iframe: sel.is_iframe,
+                    emb: toks[j * d..(j + 1) * d].to_vec(),
+                });
+            }
+        }
+
+        // Update Déjà Vu cache (per-group outputs of this frame).
+        if self.opts.vit_pixel_reuse.is_some() {
+            let mut cache = vec![None; self.layout.tokens_per_frame()];
+            for t in &out {
+                cache[t.group] = Some(t.emb.clone());
+            }
+            self.dv_prev_tokens = cache;
+            self.dv_prev_frame = Some(frame.clone());
+        }
+
+        // Sort by group for deterministic sequence order.
+        out.sort_by_key(|t| t.group);
+        out
+    }
+
+    fn text_embeddings(&mut self, times: &mut StageTimes) -> Vec<Vec<f32>> {
+        if let Some(t) = &self.text_emb {
+            return t.clone();
+        }
+        let (out, exec_s) = self
+            .exec
+            .execute(&self.model, "embed_text", &[self.prompt.tensor()])
+            .expect("embed_text");
+        times.llm_prefill += exec_s;
+        let d = self.spec.llm_dim;
+        let flat = out[0].as_f32();
+        let embs: Vec<Vec<f32>> =
+            (0..self.prompt.len()).map(|i| flat[i * d..(i + 1) * d].to_vec()).collect();
+        self.text_emb = Some(embs.clone());
+        embs
+    }
+
+    /// Process window [start, end) given its decoded frames (+ stage
+    /// times already incurred by the front-end).
+    pub fn process_window(
+        &mut self,
+        frames: &[(Frame, FrameMeta)],
+        start: usize,
+        frontend_times: StageTimes,
+    ) -> WindowResult {
+        let end = start + frames.len();
+        let mut times = frontend_times;
+        let mut flops = 0u64;
+        let mut flops_padded = 0u64;
+
+        self.ensure_selections(frames, start);
+        self.update_change_scores(frames, start);
+
+        // Which frames need fresh ViT tokens?
+        let reuse_possible = matches!(self.opts.kvc, KvcMode::Reuse(_))
+            && self.prev.as_ref().map(|p| p.end_frame > start && p.start_frame <= start)
+                == Some(true);
+        let fresh_lo = if reuse_possible { self.prev.as_ref().unwrap().end_frame } else { start };
+
+        let mut fresh_tokens: Vec<VisualToken> = Vec::new();
+        let mut possible = 0usize;
+        let mut retained = 0usize;
+        for abs in fresh_lo..end {
+            let idx = abs - start;
+            let toks =
+                self.encode_frame(&frames[idx].0.clone(), abs, &mut times, &mut flops, &mut flops_padded);
+            possible += self.layout.tokens_per_frame();
+            retained += toks.len();
+            fresh_tokens.extend(toks);
+        }
+        let pruned_ratio =
+            if possible == 0 { 0.0 } else { 1.0 - retained as f64 / possible as f64 };
+
+        let text_embs = self.text_embeddings(&mut times);
+
+        let result = if reuse_possible {
+            self.window_incremental(start, end, fresh_tokens, &text_embs, times, flops, flops_padded, pruned_ratio)
+        } else {
+            self.window_full(start, end, fresh_tokens, &text_embs, times, flops, flops_padded, pruned_ratio)
+        };
+        result
+    }
+
+    /// Full prefill path (first window, or Recompute mode).
+    #[allow(clippy::too_many_arguments)]
+    fn window_full(
+        &mut self,
+        start: usize,
+        end: usize,
+        visual: Vec<VisualToken>,
+        text_embs: &[Vec<f32>],
+        mut times: StageTimes,
+        mut flops: u64,
+        mut flops_padded: u64,
+        pruned_ratio: f64,
+    ) -> WindowResult {
+        let d = self.spec.llm_dim;
+        let t_real = visual.len() + text_embs.len();
+        let bucket = ModelSpec::pick_bucket(&self.spec.prefill_buckets, t_real);
+        assert!(bucket >= t_real, "sequence {t_real} exceeds prefill buckets");
+
+        let mut emb = vec![0.0f32; bucket * d];
+        let mut pos = vec![0i32; bucket];
+        let mut mask = vec![0.0f32; bucket];
+        for (i, tok) in visual.iter().enumerate() {
+            emb[i * d..(i + 1) * d].copy_from_slice(&tok.emb);
+            pos[i] = i as i32;
+            mask[i] = 1.0;
+        }
+        for (j, te) in text_embs.iter().enumerate() {
+            let i = visual.len() + j;
+            emb[i * d..(i + 1) * d].copy_from_slice(te);
+            pos[i] = i as i32;
+            mask[i] = 1.0;
+        }
+
+        let (outputs, exec_s) = self
+            .exec
+            .execute(
+                &self.model,
+                &format!("prefill_full_t{bucket}"),
+                &[
+                    Tensor::f32(&[bucket, d], emb),
+                    Tensor::i32(&[bucket], pos),
+                    Tensor::f32(&[bucket], mask),
+                    Tensor::scalar_i32(t_real as i32 - 1),
+                ],
+            )
+            .expect("prefill_full");
+        times.llm_prefill += exec_s;
+        flops += flops::prefill_full(&self.spec, t_real);
+        flops_padded += flops::prefill_full(&self.spec, bucket);
+
+        let last_hidden = outputs[0].as_f32().to_vec();
+        let pooled = outputs[1].as_f32().to_vec();
+        let logits = outputs[2].as_f32().to_vec();
+        let (l, h, hd) = (self.spec.llm_layers, self.spec.llm_heads, self.spec.head_dim);
+        let k = KvBlock::from_data(l, h, bucket, hd, outputs[3].as_f32().to_vec()).truncate(t_real);
+        let v = KvBlock::from_data(l, h, bucket, hd, outputs[4].as_f32().to_vec()).truncate(t_real);
+
+        // Assemble records (sequence order).
+        let mut tokens: Vec<TokenRecord> = Vec::with_capacity(t_real);
+        for (i, tok) in visual.iter().enumerate() {
+            tokens.push(TokenRecord {
+                kind: TokenKind::Visual,
+                frame: tok.frame,
+                group: tok.group,
+                pos: i as i32,
+                is_iframe: tok.is_iframe,
+                emb: tok.emb.clone(),
+            });
+        }
+        for j in 0..text_embs.len() {
+            tokens.push(TokenRecord {
+                kind: TokenKind::Text,
+                frame: 0,
+                group: 0,
+                pos: (visual.len() + j) as i32,
+                is_iframe: false,
+                emb: Vec::new(),
+            });
+        }
+
+        let visual_count = visual.len();
+        let state = WindowState { start_frame: start, end_frame: end, tokens, k, v };
+        let decoded_ids = self.decode_answer(&state, &logits, &mut times, &mut flops, &mut flops_padded);
+        self.prev = Some(state);
+
+        WindowResult {
+            start,
+            end,
+            last_hidden,
+            pooled,
+            logits,
+            decoded_ids,
+            seq_tokens: t_real,
+            visual_tokens: visual_count,
+            reused_tokens: 0,
+            refreshed_tokens: 0,
+            fresh_tokens: visual_count,
+            pruned_ratio,
+            flops,
+            flops_padded,
+            times,
+        }
+    }
+
+    /// Incremental path: reuse overlap KV, refresh per policy.
+    #[allow(clippy::too_many_arguments)]
+    fn window_incremental(
+        &mut self,
+        start: usize,
+        end: usize,
+        fresh: Vec<VisualToken>,
+        text_embs: &[Vec<f32>],
+        mut times: StageTimes,
+        mut flops: u64,
+        mut flops_padded: u64,
+        pruned_ratio: f64,
+    ) -> WindowResult {
+        let prev = self.prev.take().expect("incremental needs prev");
+        let t_kvc0 = util::now();
+        let policy = self.build_policy(&prev, start, end);
+        let plan = plan_window(&prev, start, end, &policy);
+
+        // ---- sequence assembly -------------------------------------
+        // Overlap tokens (reused + refreshed) are already (frame,
+        // group)-ascending in prev; fresh follows; text last.
+        struct SeqTok {
+            src: Src,
+            frame: usize,
+            group: usize,
+            is_iframe: bool,
+        }
+        enum Src {
+            Reused { prev_idx: usize },
+            Refresh { prev_idx: usize },
+            Fresh { fresh_idx: usize },
+            Text { text_idx: usize },
+        }
+        let mut seq: Vec<SeqTok> = Vec::new();
+        {
+            let mut ri = 0usize; // cursor into plan.reuse_idx
+            let mut fi = 0usize; // cursor into plan.refresh_idx
+            // merge the two ascending overlap lists
+            while ri < plan.reuse_idx.len() || fi < plan.refresh_idx.len() {
+                let take_reuse = match (plan.reuse_idx.get(ri), plan.refresh_idx.get(fi)) {
+                    (Some(&a), Some(&b)) => a < b,
+                    (Some(_), None) => true,
+                    (None, _) => false,
+                };
+                if take_reuse {
+                    let i = plan.reuse_idx[ri];
+                    let t = &prev.tokens[i];
+                    seq.push(SeqTok {
+                        src: Src::Reused { prev_idx: i },
+                        frame: t.frame,
+                        group: t.group,
+                        is_iframe: t.is_iframe,
+                    });
+                    ri += 1;
+                } else {
+                    let i = plan.refresh_idx[fi];
+                    let t = &prev.tokens[i];
+                    seq.push(SeqTok {
+                        src: Src::Refresh { prev_idx: i },
+                        frame: t.frame,
+                        group: t.group,
+                        is_iframe: t.is_iframe,
+                    });
+                    fi += 1;
+                }
+            }
+        }
+        for (j, t) in fresh.iter().enumerate() {
+            seq.push(SeqTok {
+                src: Src::Fresh { fresh_idx: j },
+                frame: t.frame,
+                group: t.group,
+                is_iframe: t.is_iframe,
+            });
+        }
+        for j in 0..text_embs.len() {
+            seq.push(SeqTok { src: Src::Text { text_idx: j }, frame: 0, group: 0, is_iframe: false });
+        }
+        let t_total = seq.len();
+
+        // Positions = index in sequence. Split into old/new blocks.
+        let mut reuse_prev_idx = Vec::new();
+        let mut reuse_new_pos = Vec::new();
+        let mut new_block: Vec<(usize, i32)> = Vec::new(); // (seq idx, pos)
+        for (i, st) in seq.iter().enumerate() {
+            match st.src {
+                Src::Reused { prev_idx } => {
+                    reuse_prev_idx.push(prev_idx);
+                    reuse_new_pos.push(i as i32);
+                }
+                _ => new_block.push((i, i as i32)),
+            }
+        }
+        let to_real = reuse_prev_idx.len();
+        let tn_real = new_block.len();
+
+        // Fallback: bucket overflow (e.g. huge stride) -> full prefill.
+        let max_tn = *self.spec.incr_new_buckets.iter().max().unwrap();
+        let max_to = *self.spec.incr_old_buckets.iter().max().unwrap();
+        if tn_real > max_tn || to_real > max_to || to_real == 0 {
+            times.overhead_kvc += util::now() - t_kvc0;
+            // Rebuild the full visual token list (reused embeddings +
+            // refreshed embeddings + fresh) and run the full path.
+            let mut visual: Vec<VisualToken> = Vec::new();
+            for st in &seq {
+                match st.src {
+                    Src::Reused { prev_idx } | Src::Refresh { prev_idx } => {
+                        let t = &prev.tokens[prev_idx];
+                        visual.push(VisualToken {
+                            frame: t.frame,
+                            group: t.group,
+                            is_iframe: t.is_iframe,
+                            emb: t.emb.clone(),
+                        });
+                    }
+                    Src::Fresh { fresh_idx } => {
+                        let t = &fresh[fresh_idx];
+                        visual.push(VisualToken {
+                            frame: t.frame,
+                            group: t.group,
+                            is_iframe: t.is_iframe,
+                            emb: t.emb.clone(),
+                        });
+                    }
+                    Src::Text { .. } => {}
+                }
+            }
+            return self.window_full(start, end, visual, text_embs, times, flops, flops_padded, pruned_ratio);
+        }
+
+        // ---- gather + position-correct reused KV -------------------
+        let gathered_k = prev.k.gather(&reuse_prev_idx);
+        let gathered_v = prev.v.gather(&reuse_prev_idx);
+        let deltas: Vec<i32> = reuse_prev_idx
+            .iter()
+            .zip(&reuse_new_pos)
+            .map(|(&pi, &np)| np - prev.tokens[pi].pos)
+            .collect();
+        let mut corrected_k = gathered_k;
+        rope::correct_keys(&mut corrected_k, &deltas, self.spec.rope_base);
+        flops += flops::rope_correct(&self.spec, to_real);
+        times.overhead_kvc += util::now() - t_kvc0;
+
+        // ---- build the new block -----------------------------------
+        let d = self.spec.llm_dim;
+        let tn_bucket = ModelSpec::pick_bucket(&self.spec.incr_new_buckets, tn_real);
+        let to_bucket = ModelSpec::pick_bucket(&self.spec.incr_old_buckets, to_real);
+        let (old_k_pad, old_mask) = corrected_k.pad_to(to_bucket);
+        let (old_v_pad, _) = gathered_v.pad_to(to_bucket);
+        let old_k_pad = old_k_pad; // moved into the execute call below
+        let old_v_pad = old_v_pad;
+
+        let mut new_emb = vec![0.0f32; tn_bucket * d];
+        let mut new_pos = vec![0i32; tn_bucket];
+        let mut new_mask = vec![0.0f32; tn_bucket];
+        for (j, &(seq_idx, p)) in new_block.iter().enumerate() {
+            let emb: &[f32] = match seq[seq_idx].src {
+                Src::Refresh { prev_idx } => &prev.tokens[prev_idx].emb,
+                Src::Fresh { fresh_idx } => &fresh[fresh_idx].emb,
+                Src::Text { text_idx } => &text_embs[text_idx],
+                Src::Reused { .. } => unreachable!(),
+            };
+            new_emb[j * d..(j + 1) * d].copy_from_slice(emb);
+            new_pos[j] = p;
+            new_mask[j] = 1.0;
+        }
+
+        let (l, h, hd) = (self.spec.llm_layers, self.spec.llm_heads, self.spec.head_dim);
+        let (outputs, exec_s) = self
+            .exec
+            .execute(
+                &self.model,
+                &format!("prefill_incr_n{tn_bucket}_o{to_bucket}"),
+                &[
+                    Tensor::f32(&[tn_bucket, d], new_emb),
+                    Tensor::i32(&[tn_bucket], new_pos),
+                    Tensor::f32(&[tn_bucket], new_mask),
+                    // moved, not cloned: saves ~2-4 MB of memcpy per
+                    // window on the reuse hot path (EXPERIMENTS §Perf L3)
+                    Tensor::f32(&[l, h, to_bucket, hd], old_k_pad.data),
+                    Tensor::f32(&[l, h, to_bucket, hd], old_v_pad.data),
+                    Tensor::f32(&[to_bucket], old_mask),
+                    Tensor::scalar_i32(tn_real as i32 - 1),
+                ],
+            )
+            .expect("prefill_incr");
+        times.llm_prefill += exec_s;
+        flops += flops::prefill_incr(&self.spec, tn_real, to_real);
+        flops_padded += flops::prefill_incr(&self.spec, tn_bucket, to_bucket);
+
+        let last_hidden = outputs[0].as_f32().to_vec();
+        let pooled = outputs[1].as_f32().to_vec();
+        let logits = outputs[2].as_f32().to_vec();
+        let k_new = KvBlock::from_data(l, h, tn_bucket, hd, outputs[3].as_f32().to_vec())
+            .truncate(tn_real);
+        let v_new = KvBlock::from_data(l, h, tn_bucket, hd, outputs[4].as_f32().to_vec())
+            .truncate(tn_real);
+
+        // ---- assemble the new WindowState in sequence order --------
+        let t_kvc1 = util::now();
+        // Block-order K/V: [reused corrected ++ new]; build the gather
+        // that reorders block order -> sequence order.
+        let block_k = corrected_k.concat(&k_new);
+        let block_v = gathered_v.concat(&v_new);
+        let mut block_pos_of_seq = vec![0usize; t_total];
+        {
+            let mut reused_cursor = 0usize;
+            let mut new_cursor = 0usize;
+            for (i, st) in seq.iter().enumerate() {
+                match st.src {
+                    Src::Reused { .. } => {
+                        block_pos_of_seq[i] = reused_cursor;
+                        reused_cursor += 1;
+                    }
+                    _ => {
+                        block_pos_of_seq[i] = to_real + new_cursor;
+                        new_cursor += 1;
+                    }
+                }
+            }
+        }
+        let k_seq = block_k.gather(&block_pos_of_seq);
+        let v_seq = block_v.gather(&block_pos_of_seq);
+
+        let mut tokens: Vec<TokenRecord> = Vec::with_capacity(t_total);
+        for (i, st) in seq.iter().enumerate() {
+            let (kind, emb) = match st.src {
+                Src::Text { .. } => (TokenKind::Text, Vec::new()),
+                Src::Reused { prev_idx } | Src::Refresh { prev_idx } => {
+                    (TokenKind::Visual, prev.tokens[prev_idx].emb.clone())
+                }
+                Src::Fresh { fresh_idx } => (TokenKind::Visual, fresh[fresh_idx].emb.clone()),
+            };
+            tokens.push(TokenRecord {
+                kind,
+                frame: st.frame,
+                group: st.group,
+                pos: i as i32,
+                is_iframe: st.is_iframe,
+                emb,
+            });
+        }
+        times.overhead_kvc += util::now() - t_kvc1;
+
+        let visual_count = t_total - text_embs.len();
+        let fresh_count = fresh.len();
+        let refreshed_count = plan.refresh_idx.len();
+        let state = WindowState { start_frame: start, end_frame: end, tokens, k: k_seq, v: v_seq };
+        let decoded_ids = self.decode_answer(&state, &logits, &mut times, &mut flops, &mut flops_padded);
+        self.prev = Some(state);
+
+        WindowResult {
+            start,
+            end,
+            last_hidden,
+            pooled,
+            logits,
+            decoded_ids,
+            seq_tokens: t_total,
+            visual_tokens: visual_count,
+            reused_tokens: to_real,
+            refreshed_tokens: refreshed_count,
+            fresh_tokens: fresh_count,
+            pruned_ratio,
+            flops,
+            flops_padded,
+            times,
+        }
+    }
+
+    /// Turn the variant's RefreshSelect into a concrete policy for
+    /// this window.
+    fn build_policy(&self, prev: &WindowState, start: usize, end: usize) -> RefreshPolicy {
+        let select = match &self.opts.kvc {
+            KvcMode::Recompute => return RefreshPolicy::All,
+            KvcMode::Reuse(s) => s.clone(),
+        };
+        match select {
+            RefreshSelect::Anchors => RefreshPolicy::Anchors,
+            RefreshSelect::None => RefreshPolicy::None,
+            RefreshSelect::TopKByChange { frac } => {
+                let overlap = prev.visual_in_range(start.max(prev.start_frame), end.min(prev.end_frame));
+                let mut scored: Vec<(usize, f32)> = overlap
+                    .iter()
+                    .map(|&i| {
+                        let t = &prev.tokens[i];
+                        let s = self
+                            .change_scores
+                            .get(&(t.frame, t.group))
+                            .copied()
+                            .unwrap_or(0.0);
+                        (i, s)
+                    })
+                    .collect();
+                scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                let k = ((overlap.len() as f64) * frac).ceil() as usize;
+                let mut chosen: Vec<usize> = scored.into_iter().take(k).map(|(i, _)| i).collect();
+                chosen.sort_unstable();
+                RefreshPolicy::Explicit(chosen)
+            }
+            RefreshSelect::FixedRatio { frac } => {
+                let overlap = prev.visual_in_range(start.max(prev.start_frame), end.min(prev.end_frame));
+                let k = ((overlap.len() as f64) * frac).ceil() as usize;
+                let mut chosen = Vec::with_capacity(k);
+                if k > 0 {
+                    let step = (overlap.len().max(1) as f64 / k as f64).max(1.0);
+                    let mut x = 0.0f64;
+                    while chosen.len() < k && (x as usize) < overlap.len() {
+                        chosen.push(overlap[x as usize]);
+                        x += step;
+                    }
+                }
+                RefreshPolicy::Explicit(chosen)
+            }
+        }
+    }
+
+    /// Maintain pixel-change scores per (frame, group) — the online
+    /// signal CacheBlend-style selection uses (cost charged to
+    /// overhead_kvc when that policy is active).
+    fn update_change_scores(&mut self, frames: &[(Frame, FrameMeta)], start: usize) {
+        if !matches!(
+            self.opts.kvc,
+            KvcMode::Reuse(RefreshSelect::TopKByChange { .. })
+        ) {
+            return;
+        }
+        for (i, (frame, _)) in frames.iter().enumerate() {
+            let abs = start + i;
+            if self.change_scores.contains_key(&(abs, 0)) {
+                continue;
+            }
+            let prev_frame: Option<&Frame> = if i > 0 {
+                Some(&frames[i - 1].0)
+            } else {
+                None
+            };
+            for g in 0..self.layout.tokens_per_frame() {
+                let score = match prev_frame {
+                    Some(pf) => group_pixel_mad(&self.layout, frame, pf, g),
+                    None => f32::MAX, // first frame: maximally changed
+                };
+                self.change_scores.insert((abs, g), score);
+            }
+        }
+    }
+
+    /// Greedy answer decoding through decode_step.
+    fn decode_answer(
+        &mut self,
+        state: &WindowState,
+        prefill_logits: &[f32],
+        times: &mut StageTimes,
+        flops: &mut u64,
+        flops_padded: &mut u64,
+    ) -> Vec<i32> {
+        let n = self.opts.decode_tokens;
+        if n == 0 {
+            return Vec::new();
+        }
+        let slots = self.spec.decode_slots;
+        let (l, h, hd) = (self.spec.llm_layers, self.spec.llm_heads, self.spec.head_dim);
+        let t = state.seq_len();
+        assert!(t + n <= slots, "decode slots too small");
+
+        let (mut k_cache, mut cache_mask) = state.k.pad_to(slots);
+        let (mut v_cache, _) = state.v.pad_to(slots);
+
+        let mut ids = Vec::with_capacity(n);
+        let mut next = argmax(prefill_logits) as i32;
+        for step in 0..n {
+            ids.push(next);
+            if step + 1 == n {
+                break; // last token needs no further forward pass
+            }
+            let pos = (t + step) as i32;
+            let (outputs, exec_s) = self
+                .exec
+                .execute(
+                    &self.model,
+                    "decode_step",
+                    &[
+                        Tensor::scalar_i32(next),
+                        Tensor::scalar_i32(pos),
+                        Tensor::f32(&[l, h, slots, hd], k_cache.data.clone()),
+                        Tensor::f32(&[l, h, slots, hd], v_cache.data.clone()),
+                        Tensor::f32(&[slots], cache_mask.clone()),
+                    ],
+                )
+                .expect("decode_step");
+            times.llm_decode += exec_s;
+            *flops += flops::decode_step(&self.spec, t + step);
+            *flops_padded += flops::decode_step(&self.spec, slots);
+            let logits = outputs[0].as_f32();
+            next = argmax(logits) as i32;
+            // Write the new KV entry into the cache slot.
+            let k_new = outputs[1].as_f32();
+            let v_new = outputs[2].as_f32();
+            let slot = t + step;
+            for li in 0..l {
+                for hi in 0..h {
+                    let off = k_cache.offset(li, hi, slot);
+                    let src = (li * h + hi) * hd;
+                    k_cache.data[off..off + hd].copy_from_slice(&k_new[src..src + hd]);
+                    v_cache.data[off..off + hd].copy_from_slice(&v_new[src..src + hd]);
+                }
+            }
+            cache_mask[slot] = 1.0;
+        }
+        ids
+    }
+
+    pub fn prev_state(&self) -> Option<&WindowState> {
+        self.prev.as_ref()
+    }
+
+    /// Drop the cached KV state (pool eviction).
+    pub fn evict_kv(&mut self) {
+        self.prev = None;
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean absolute pixel difference over one merge group's region.
+fn group_pixel_mad(layout: &PatchLayout, a: &Frame, b: &Frame, group: usize) -> f32 {
+    let mut sum = 0u32;
+    let mut count = 0u32;
+    for p in layout.group_patches(group) {
+        let (px, py) = layout.patch_xy(p);
+        for y in 0..layout.patch {
+            for x in 0..layout.patch {
+                let xx = px * layout.patch + x;
+                let yy = py * layout.patch + y;
+                sum += (a.at(xx, yy) as i32 - b.at(xx, yy) as i32).unsigned_abs();
+                count += 1;
+            }
+        }
+    }
+    sum as f32 / count as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::MockEngine;
+    use crate::video::{Corpus, CorpusConfig};
+
+    fn test_frames(n: usize) -> Vec<(Frame, FrameMeta)> {
+        let corpus = Corpus::generate(CorpusConfig {
+            videos: 1,
+            frames_per_video: n,
+            ..Default::default()
+        });
+        let frames = corpus.clips[0].frames.clone();
+        let (bits, _) = crate::codec::encoder::encode_sequence(
+            &frames,
+            crate::codec::encoder::EncoderConfig::default(),
+        );
+        let mut dec = crate::codec::decoder::Decoder::new(bits).unwrap();
+        dec.decode_all().unwrap()
+    }
+
+    #[test]
+    fn fullcomp_first_window() {
+        let mock = MockEngine::new("m");
+        let mut eng = WindowEngine::new(&mock, "m", VariantOpts::fullcomp());
+        let frames = test_frames(20);
+        let r = eng.process_window(&frames, 0, StageTimes::default());
+        assert_eq!(r.seq_tokens, 20 * 16 + 16);
+        assert_eq!(r.reused_tokens, 0);
+        assert_eq!(r.fresh_tokens, 320);
+        assert!(r.flops > 0);
+        assert_eq!(eng.prev_state().unwrap().seq_len(), r.seq_tokens);
+    }
+
+    #[test]
+    fn codecflow_second_window_reuses() {
+        let mock = MockEngine::new("m");
+        let mut eng = WindowEngine::new(&mock, "m", VariantOpts::codecflow(0.25, 0.0));
+        let all = test_frames(28);
+        let r1 = eng.process_window(&all[0..20], 0, StageTimes::default());
+        let r2 = eng.process_window(&all[4..24], 4, StageTimes::default());
+        assert!(r2.reused_tokens > 0, "r2 should reuse overlap KV");
+        assert!(r2.fresh_tokens <= 4 * 16);
+        assert!(r2.flops < r1.flops, "incremental should be cheaper");
+        // window state invariants
+        let st = eng.prev_state().unwrap();
+        assert_eq!(st.start_frame, 4);
+        assert_eq!(st.end_frame, 24);
+        for (i, t) in st.tokens.iter().enumerate() {
+            assert_eq!(t.pos, i as i32, "sequence order invariant");
+        }
+        // visual tokens ascend by (frame, group)
+        let vis: Vec<_> = st
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Visual)
+            .collect();
+        for w in vis.windows(2) {
+            assert!(
+                (w[0].frame, w[0].group) < (w[1].frame, w[1].group),
+                "(frame, group) ordering"
+            );
+        }
+    }
+
+    #[test]
+    fn pruning_reduces_tokens() {
+        let mock = MockEngine::new("m");
+        let mut full = WindowEngine::new(&mock, "m", VariantOpts::fullcomp());
+        let mut pruned = WindowEngine::new(&mock, "m", VariantOpts::codecflow(0.25, 0.0));
+        let frames = test_frames(20);
+        let rf = full.process_window(&frames, 0, StageTimes::default());
+        let rp = pruned.process_window(&frames, 0, StageTimes::default());
+        assert!(rp.visual_tokens < rf.visual_tokens, "{} vs {}", rp.visual_tokens, rf.visual_tokens);
+        assert!(rp.pruned_ratio > 0.0);
+    }
+
+    #[test]
+    fn recompute_mode_never_reuses() {
+        let mock = MockEngine::new("m");
+        let mut eng = WindowEngine::new(&mock, "m", VariantOpts::fullcomp());
+        let all = test_frames(28);
+        let _ = eng.process_window(&all[0..20], 0, StageTimes::default());
+        let r2 = eng.process_window(&all[4..24], 4, StageTimes::default());
+        assert_eq!(r2.reused_tokens, 0);
+        assert_eq!(r2.fresh_tokens, 320);
+    }
+
+    #[test]
+    fn decode_produces_ids() {
+        let mock = MockEngine::new("m");
+        let mut eng = WindowEngine::new(&mock, "m", VariantOpts::fullcomp());
+        let frames = test_frames(20);
+        let r = eng.process_window(&frames, 0, StageTimes::default());
+        assert_eq!(r.decoded_ids.len(), 2);
+    }
+
+    #[test]
+    fn cacheblend_policy_refreshes_topk() {
+        let mock = MockEngine::new("m");
+        let mut opts = VariantOpts::fullcomp();
+        opts.kvc = KvcMode::Reuse(RefreshSelect::TopKByChange { frac: 0.15 });
+        let mut eng = WindowEngine::new(&mock, "m", opts);
+        let all = test_frames(28);
+        let _ = eng.process_window(&all[0..20], 0, StageTimes::default());
+        let r2 = eng.process_window(&all[4..24], 4, StageTimes::default());
+        assert!(r2.refreshed_tokens > 0);
+        let overlap_tokens = 16 * 16; // frames 4..20
+        assert!(r2.refreshed_tokens <= (overlap_tokens as f64 * 0.15).ceil() as usize + 1);
+        assert!(r2.reused_tokens > 0);
+    }
+
+    #[test]
+    fn vlcache_fixed_ratio() {
+        let mock = MockEngine::new("m");
+        let mut opts = VariantOpts::fullcomp();
+        opts.kvc = KvcMode::Reuse(RefreshSelect::FixedRatio { frac: 0.3 });
+        let mut eng = WindowEngine::new(&mock, "m", opts);
+        let all = test_frames(28);
+        let _ = eng.process_window(&all[0..20], 0, StageTimes::default());
+        let r2 = eng.process_window(&all[4..24], 4, StageTimes::default());
+        let overlap = 16 * 16;
+        let expect = (overlap as f64 * 0.3).ceil() as usize;
+        assert_eq!(r2.refreshed_tokens, expect);
+    }
+
+    #[test]
+    fn dejavu_reuses_vit_outputs() {
+        let mock = MockEngine::new("m");
+        let mut opts = VariantOpts::fullcomp();
+        opts.vit_pixel_reuse = Some(3.0);
+        let mut eng = WindowEngine::new(&mock, "m", opts);
+        let frames = test_frames(20);
+        let r = eng.process_window(&frames, 0, StageTimes::default());
+        // all LLM tokens still present (ViT-only optimization)
+        assert_eq!(r.visual_tokens, 320);
+        assert!(r.times.overhead_prune > 0.0);
+    }
+
+    #[test]
+    fn eviction_falls_back_to_full() {
+        let mock = MockEngine::new("m");
+        let mut eng = WindowEngine::new(&mock, "m", VariantOpts::codecflow(0.25, 0.0));
+        let all = test_frames(28);
+        let _ = eng.process_window(&all[0..20], 0, StageTimes::default());
+        eng.evict_kv();
+        let r2 = eng.process_window(&all[4..24], 4, StageTimes::default());
+        assert_eq!(r2.reused_tokens, 0, "evicted cache cannot be reused");
+    }
+}

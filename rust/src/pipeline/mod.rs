@@ -1,0 +1,19 @@
+//! The streaming front-end and per-window inference assembly.
+//!
+//! * [`frontend`] — ingestion: compressed-bitstream vs per-frame JPEG
+//!   transport, single-pass decode with a shared temporal buffer
+//!   (CodecFlow) vs per-window redundant decode (baseline), stage
+//!   timing for the Fig 3 breakdown;
+//! * [`preprocess`] — CPU multi-pass vs fused patch extraction;
+//! * [`infer`] — the window engine: composes pruning, ViT encoding,
+//!   KV reuse/refresh and decoding into one per-window step,
+//!   parameterized by [`infer::VariantOpts`] so CodecFlow and all four
+//!   baselines share one code path (the comparison isolates policies,
+//!   not plumbing).
+
+pub mod frontend;
+pub mod infer;
+pub mod preprocess;
+
+pub use frontend::{Frontend, FrontendMode, StreamSource};
+pub use infer::{KvcMode, RefreshSelect, StageTimes, VariantOpts, WindowEngine, WindowResult};

@@ -1,0 +1,76 @@
+//! Preprocessing: decoded frame -> normalized patch tensors.
+//!
+//! Two implementations with identical outputs (paper §3.2):
+//! * [`naive`]: the baseline CPU path — separate colorspace, resize
+//!   and normalize passes with intermediate buffers, then a per-patch
+//!   gather (the structure of a PIL/torchvision preprocess);
+//! * [`fused`]: CodecFlow's single fused pass straight into the patch
+//!   buffer (the GPU-preproc equivalent: no intermediate traffic).
+
+use crate::codec::types::Frame;
+use crate::vision::layout::PatchLayout;
+
+/// Extract every patch in `patch_list` into a flat [n, patch_dim]
+/// buffer — separate passes with intermediate allocations.
+pub fn naive(layout: &PatchLayout, frame: &Frame, patch_list: &[usize]) -> Vec<f32> {
+    // pass 1: u8 -> f32 "colorspace conversion"
+    let as_f32: Vec<f32> = frame.data.iter().map(|&v| v as f32).collect();
+    // pass 2: "resize" (identity here, but a real pass over the data)
+    let resized: Vec<f32> = as_f32.iter().map(|&v| v).collect();
+    // pass 3: normalize
+    let normalized: Vec<f32> = resized.iter().map(|&v| (v - 128.0) / 64.0).collect();
+    // pass 4: per-patch gather
+    let pd = layout.patch * layout.patch;
+    let mut out = vec![0.0f32; patch_list.len() * pd];
+    for (j, &p) in patch_list.iter().enumerate() {
+        let (px, py) = layout.patch_xy(p);
+        for y in 0..layout.patch {
+            for x in 0..layout.patch {
+                out[j * pd + y * layout.patch + x] =
+                    normalized[(py * layout.patch + y) * frame.w + px * layout.patch + x];
+            }
+        }
+    }
+    out
+}
+
+/// Fused single pass: gather + convert + normalize per element.
+pub fn fused(layout: &PatchLayout, frame: &Frame, patch_list: &[usize]) -> Vec<f32> {
+    let pd = layout.patch * layout.patch;
+    let mut out = vec![0.0f32; patch_list.len() * pd];
+    for (j, &p) in patch_list.iter().enumerate() {
+        layout.extract_patch(frame, p, &mut out[j * pd..(j + 1) * pd]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn naive_and_fused_agree() {
+        let layout = PatchLayout::new(64, 64, 8, 2);
+        let mut rng = Rng::new(9);
+        let mut frame = Frame::new(64, 64);
+        for v in frame.data.iter_mut() {
+            *v = rng.below(256) as u8;
+        }
+        let patches: Vec<usize> = vec![0, 5, 17, 63];
+        let a = naive(&layout, &frame, &patches);
+        let b = fused(&layout, &frame, &patches);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_selection() {
+        let layout = PatchLayout::new(64, 64, 8, 2);
+        let frame = Frame::new(64, 64);
+        assert!(fused(&layout, &frame, &[]).is_empty());
+        assert!(naive(&layout, &frame, &[]).is_empty());
+    }
+}

@@ -1,0 +1,405 @@
+//! The PJRT executor.
+//!
+//! Design (DESIGN.md §5):
+//! * HLO text -> `HloModuleProto::from_text_file` -> `client.compile`,
+//!   lazily per artifact, cached for the process lifetime;
+//! * model weights are uploaded to the device **once** per parameter
+//!   tensor and passed by reference on every call (`execute_b`) — the
+//!   request path only uploads activations;
+//! * per-family wall-clock + FLOP statistics feed Fig 6 / Fig 19.
+//!
+//! The engine is deliberately single-threaded (`RefCell` state): the
+//! coordinator owns it from one executor thread, mirroring a serialized
+//! accelerator queue.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactSpec, Manifest, ModelSpec};
+use super::tensor::Tensor;
+use super::weights;
+
+/// Cumulative execution statistics, per (model, artifact-family).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    /// family -> (calls, total seconds, total padded elements)
+    pub families: HashMap<String, FamilyStats>,
+    /// compile time spent (excluded from execution accounting)
+    pub compile_s: f64,
+    pub compiles: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct FamilyStats {
+    pub calls: usize,
+    pub total_s: f64,
+}
+
+impl ExecStats {
+    fn record(&mut self, family: &str, secs: f64) {
+        let f = self.families.entry(family.to_string()).or_default();
+        f.calls += 1;
+        f.total_s += secs;
+    }
+
+    pub fn total_exec_s(&self) -> f64 {
+        self.families.values().map(|f| f.total_s).sum()
+    }
+}
+
+/// Family name = artifact name minus bucket suffixes ("prefill_incr"
+/// from "prefill_incr_n48_o96").
+pub fn family_of(artifact: &str) -> &str {
+    for prefix in [
+        "vit_encode",
+        "prefill_full",
+        "prefill_incr",
+        "decode_step",
+        "embed_text",
+    ] {
+        if artifact.starts_with(prefix) {
+            return prefix;
+        }
+    }
+    artifact
+}
+
+struct ArtifactState {
+    spec: ArtifactSpec,
+    exe: Option<PjRtLoadedExecutable>,
+}
+
+struct ModelState {
+    spec: ModelSpec,
+    host_weights: HashMap<String, Tensor>,
+    param_buffers: HashMap<String, PjRtBuffer>,
+    artifacts: HashMap<String, ArtifactState>,
+}
+
+/// The PJRT engine: one CPU client, all models + artifacts.
+pub struct Engine {
+    client: PjRtClient,
+    dir: std::path::PathBuf,
+    models: RefCell<HashMap<String, ModelState>>,
+    pub stats: RefCell<ExecStats>,
+    model_names: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct EngineError(pub String);
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine: {}", self.0)
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+fn xe<E: std::fmt::Display>(ctx: &str) -> impl Fn(E) -> EngineError + '_ {
+    move |e| EngineError(format!("{ctx}: {e}"))
+}
+
+impl Engine {
+    /// Load manifest + weights and initialize the PJRT CPU client.
+    /// Artifact HLO modules are compiled lazily on first use.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine, EngineError> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| EngineError(e.to_string()))?;
+        let client = PjRtClient::cpu().map_err(xe("pjrt cpu client"))?;
+        let mut models = HashMap::new();
+        let mut model_names = Vec::new();
+        for m in &manifest.models {
+            let host_weights = weights::load(&artifacts_dir.join(&m.weights_file))
+                .map_err(|e| EngineError(e.to_string()))?;
+            let artifacts = manifest
+                .model_artifacts(&m.name)
+                .into_iter()
+                .map(|a| (a.name.clone(), ArtifactState { spec: a.clone(), exe: None }))
+                .collect();
+            model_names.push(m.name.clone());
+            models.insert(
+                m.name.clone(),
+                ModelState {
+                    spec: m.clone(),
+                    host_weights,
+                    param_buffers: HashMap::new(),
+                    artifacts,
+                },
+            );
+        }
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            models: RefCell::new(models),
+            stats: RefCell::new(ExecStats::default()),
+            model_names,
+        })
+    }
+
+    pub fn model_names(&self) -> &[String] {
+        &self.model_names
+    }
+
+    pub fn model_spec(&self, model: &str) -> Option<ModelSpec> {
+        self.models.borrow().get(model).map(|m| m.spec.clone())
+    }
+
+    pub fn artifact_names(&self, model: &str) -> Vec<String> {
+        self.models
+            .borrow()
+            .get(model)
+            .map(|m| m.artifacts.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Pre-compile the given artifacts (or all) — keeps compile time
+    /// out of the measured request path.
+    pub fn warmup(&self, model: &str, artifacts: Option<&[&str]>) -> Result<(), EngineError> {
+        let names: Vec<String> = match artifacts {
+            Some(list) => list.iter().map(|s| s.to_string()).collect(),
+            None => self.artifact_names(model),
+        };
+        for name in names {
+            self.ensure_compiled(model, &name)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&self, model: &str, artifact: &str) -> Result<(), EngineError> {
+        let need = {
+            let models = self.models.borrow();
+            let m = models.get(model).ok_or_else(|| EngineError(format!("no model {model}")))?;
+            let a = m
+                .artifacts
+                .get(artifact)
+                .ok_or_else(|| EngineError(format!("no artifact {model}/{artifact}")))?;
+            a.exe.is_none()
+        };
+        if !need {
+            return Ok(());
+        }
+        let file = {
+            let models = self.models.borrow();
+            models[model].artifacts[artifact].spec.file.clone()
+        };
+        let t0 = Instant::now();
+        let path = self.dir.join(&file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| EngineError("bad path".into()))?,
+        )
+        .map_err(xe(&format!("parse {file}")))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xe(&format!("compile {file}")))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.compile_s += dt;
+            stats.compiles += 1;
+        }
+        self.models
+            .borrow_mut()
+            .get_mut(model)
+            .unwrap()
+            .artifacts
+            .get_mut(artifact)
+            .unwrap()
+            .exe = Some(exe);
+        Ok(())
+    }
+
+    fn ensure_param_buffers(&self, model: &str, artifact: &str) -> Result<(), EngineError> {
+        let missing: Vec<String> = {
+            let models = self.models.borrow();
+            let m = &models[model];
+            m.artifacts[artifact]
+                .spec
+                .params
+                .iter()
+                .filter(|p| !m.param_buffers.contains_key(*p))
+                .cloned()
+                .collect()
+        };
+        for name in missing {
+            let buf = {
+                let models = self.models.borrow();
+                let m = &models[model];
+                let t = m
+                    .host_weights
+                    .get(&name)
+                    .ok_or_else(|| EngineError(format!("weights missing {name}")))?;
+                self.upload(t)?
+            };
+            self.models
+                .borrow_mut()
+                .get_mut(model)
+                .unwrap()
+                .param_buffers
+                .insert(name, buf);
+        }
+        Ok(())
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<PjRtBuffer, EngineError> {
+        let shape: Vec<usize> = if t.shape().is_empty() { vec![] } else { t.shape().to_vec() };
+        match t {
+            Tensor::F32 { data, .. } => self
+                .client
+                .buffer_from_host_buffer::<f32>(data, &shape, None)
+                .map_err(xe("upload f32")),
+            Tensor::I32 { data, .. } => self
+                .client
+                .buffer_from_host_buffer::<i32>(data, &shape, None)
+                .map_err(xe("upload i32")),
+        }
+    }
+
+    /// Execute an artifact: `inputs` are the activation tensors in
+    /// manifest order (parameters are bound automatically).
+    /// Returns the output tensors and the pure execution seconds
+    /// (compile time, which is lazy and one-off, is tracked separately
+    /// in [`ExecStats::compile_s`] and excluded here).
+    pub fn execute_timed(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64), EngineError> {
+        self.ensure_compiled(model, artifact)?;
+        self.ensure_param_buffers(model, artifact)?;
+
+        // Validate activations against the spec.
+        {
+            let models = self.models.borrow();
+            let spec = &models[model].artifacts[artifact].spec;
+            if spec.inputs.len() != inputs.len() {
+                return Err(EngineError(format!(
+                    "{artifact}: expected {} inputs, got {}",
+                    spec.inputs.len(),
+                    inputs.len()
+                )));
+            }
+            for (io, t) in spec.inputs.iter().zip(inputs) {
+                if io.shape != t.shape() || io.dtype != t.dtype() {
+                    return Err(EngineError(format!(
+                        "{artifact}: input {} expects {:?}/{} got {:?}/{}",
+                        io.name,
+                        io.shape,
+                        io.dtype,
+                        t.shape(),
+                        t.dtype()
+                    )));
+                }
+            }
+        }
+
+        // Upload activations.
+        let act_buffers: Vec<PjRtBuffer> =
+            inputs.iter().map(|t| self.upload(t)).collect::<Result<_, _>>()?;
+
+        let t0 = Instant::now();
+        let result_literal = {
+            let models = self.models.borrow();
+            let m = &models[model];
+            let a = &m.artifacts[artifact];
+            let exe = a.exe.as_ref().unwrap();
+            let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(a.spec.params.len() + inputs.len());
+            for p in &a.spec.params {
+                args.push(&m.param_buffers[p]);
+            }
+            for b in &act_buffers {
+                args.push(b);
+            }
+            let out = exe.execute_b(&args).map_err(xe(&format!("execute {artifact}")))?;
+            out[0][0].to_literal_sync().map_err(xe("fetch result"))?
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.borrow_mut().record(family_of(artifact), dt);
+
+        // Unpack the output tuple per spec.
+        let models = self.models.borrow();
+        let spec = &models[model].artifacts[artifact].spec;
+        let parts = result_literal.to_tuple().map_err(xe("untuple"))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(EngineError(format!(
+                "{artifact}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        let tensors: Result<Vec<Tensor>, EngineError> = spec
+            .outputs
+            .iter()
+            .zip(parts)
+            .map(|(io, lit)| literal_to_tensor(&lit, io))
+            .collect();
+        Ok((tensors?, dt))
+    }
+
+    /// Convenience: execute without the timing channel.
+    pub fn execute(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>, EngineError> {
+        self.execute_timed(model, artifact, inputs).map(|(t, _)| t)
+    }
+
+    /// Wall-clock seconds spent executing a family so far.
+    pub fn family_seconds(&self, family: &str) -> f64 {
+        self.stats
+            .borrow()
+            .families
+            .get(family)
+            .map(|f| f.total_s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = ExecStats::default();
+    }
+}
+
+fn literal_to_tensor(
+    lit: &Literal,
+    io: &super::manifest::IoSpec,
+) -> Result<Tensor, EngineError> {
+    match io.dtype.as_str() {
+        "f32" => {
+            let data = lit.to_vec::<f32>().map_err(xe("literal f32"))?;
+            Ok(Tensor::F32 { shape: io.shape.clone(), data })
+        }
+        "i32" => {
+            let data = lit.to_vec::<i32>().map_err(xe("literal i32"))?;
+            Ok(Tensor::I32 { shape: io.shape.clone(), data })
+        }
+        other => Err(EngineError(format!("unsupported dtype {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_names() {
+        assert_eq!(family_of("prefill_incr_n48_o96"), "prefill_incr");
+        assert_eq!(family_of("vit_encode_n16"), "vit_encode");
+        assert_eq!(family_of("decode_step"), "decode_step");
+        assert_eq!(family_of("custom_thing"), "custom_thing");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = ExecStats::default();
+        s.record("a", 0.5);
+        s.record("a", 0.25);
+        s.record("b", 1.0);
+        assert_eq!(s.families["a"].calls, 2);
+        assert!((s.total_exec_s() - 1.75).abs() < 1e-12);
+    }
+}

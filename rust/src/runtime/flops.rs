@@ -1,0 +1,136 @@
+//! Analytic FLOP accounting (multiply-add = 2 FLOPs), mirroring the
+//! model structure in python/compile/model.py. Used for Fig 13
+//! (compute savings), Fig 6 (utilization) and §Perf roofline numbers.
+
+use super::manifest::ModelSpec;
+
+/// FLOPs of one transformer layer over `t` tokens attending to `ctx`
+/// keys, with model width `d`, qkv width `dq`, mlp factor `m`.
+fn layer_flops(t: usize, ctx: usize, d: usize, dq: usize, m: usize) -> u64 {
+    let t = t as u64;
+    let ctx = ctx as u64;
+    let d = d as u64;
+    let dq = dq as u64;
+    let m = m as u64;
+    // q,k,v projections + output projection
+    let proj = 2 * t * d * dq * 3 + 2 * t * dq * d;
+    // attention scores + weighted values
+    let attn = 2 * t * ctx * dq * 2;
+    // mlp: d -> m*d -> d
+    let mlp = 2 * t * d * (m * d) * 2;
+    proj + attn + mlp
+}
+
+/// ViT encode of `n` patches (bidirectional attention over n).
+pub fn vit_encode(spec: &ModelSpec, n: usize) -> u64 {
+    let d = spec.vit_dim;
+    let embed = 2 * (n as u64) * (spec.patch_dim as u64) * d as u64;
+    let layers = (spec.vit_layers as u64) * layer_flops(n, n, d, d, spec.vit_mlp);
+    // merge projector: concat(merge^2 * d) -> llm_dim per group
+    let groups = (n / (spec.merge * spec.merge)) as u64;
+    let proj = 2 * groups * (spec.merge * spec.merge * d) as u64 * spec.llm_dim as u64;
+    embed + layers + proj
+}
+
+/// Full prefill over `t` tokens (causal; average context t/2).
+pub fn prefill_full(spec: &ModelSpec, t: usize) -> u64 {
+    let dq = spec.llm_heads * spec.head_dim;
+    // causal attention: sum_i i ~ t^2/2 -> use ctx = t/2 average
+    (spec.llm_layers as u64)
+        * layer_flops(t, t / 2 + 1, spec.llm_dim, dq, spec.llm_mlp)
+        + unembed(spec)
+}
+
+/// Incremental prefill: `tn` new tokens attending to `to + tn/2` ctx.
+pub fn prefill_incr(spec: &ModelSpec, tn: usize, to: usize) -> u64 {
+    let dq = spec.llm_heads * spec.head_dim;
+    (spec.llm_layers as u64)
+        * layer_flops(tn, to + tn / 2 + 1, spec.llm_dim, dq, spec.llm_mlp)
+        + unembed(spec)
+}
+
+/// One decode step over a cache of `ctx` entries.
+pub fn decode_step(spec: &ModelSpec, ctx: usize) -> u64 {
+    let dq = spec.llm_heads * spec.head_dim;
+    (spec.llm_layers as u64) * layer_flops(1, ctx, spec.llm_dim, dq, spec.llm_mlp)
+        + unembed(spec)
+}
+
+fn unembed(spec: &ModelSpec) -> u64 {
+    2 * (spec.llm_dim as u64) * (spec.vocab as u64)
+}
+
+/// RoPE position correction of reused keys (host-side, eq. 5):
+/// 4 mul + 2 add per pair of components.
+pub fn rope_correct(spec: &ModelSpec, tokens: usize) -> u64 {
+    (spec.llm_layers * spec.llm_heads * tokens * spec.head_dim * 3) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            weights_file: String::new(),
+            frame: 64,
+            patch: 8,
+            merge: 2,
+            grid: 8,
+            patches_per_frame: 64,
+            patch_dim: 64,
+            tokens_per_frame: 16,
+            window_frames: 20,
+            vit_dim: 128,
+            vit_layers: 4,
+            vit_heads: 4,
+            vit_mlp: 4,
+            llm_dim: 192,
+            llm_layers: 5,
+            llm_heads: 6,
+            head_dim: 32,
+            llm_mlp: 4,
+            vocab: 64,
+            text_len: 16,
+            rope_base: 1e4,
+            vit_buckets: vec![16, 32, 48, 64],
+            prefill_buckets: vec![96, 192, 288, 336],
+            incr_new_buckets: vec![48, 96, 144, 192],
+            incr_old_buckets: vec![96, 192, 288],
+            decode_slots: 352,
+            max_decode_tokens: 4,
+            prompt_ids: vec![0; 16],
+            yes_token: 1,
+            no_token: 2,
+        }
+    }
+
+    #[test]
+    fn monotone_in_tokens() {
+        let s = spec();
+        assert!(vit_encode(&s, 64) > vit_encode(&s, 16));
+        assert!(prefill_full(&s, 336) > prefill_full(&s, 96));
+        assert!(prefill_incr(&s, 96, 192) > prefill_incr(&s, 48, 192));
+    }
+
+    #[test]
+    fn incr_cheaper_than_full() {
+        let s = spec();
+        // refreshing 96 of 336 tokens must beat recomputing all 336
+        assert!(prefill_incr(&s, 96, 240) < prefill_full(&s, 336));
+    }
+
+    #[test]
+    fn rope_correction_is_negligible() {
+        let s = spec();
+        assert!(rope_correct(&s, 336) * 100 < prefill_full(&s, 336));
+    }
+
+    #[test]
+    fn magnitude_sane() {
+        // full prefill of 336 tokens on the small model ~ O(1 GFLOP)
+        let f = prefill_full(&spec(), 336) as f64;
+        assert!(f > 1e8 && f < 1e10, "flops={f}");
+    }
+}

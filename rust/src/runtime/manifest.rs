@@ -1,0 +1,246 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! python AOT pass and this runtime (parameter order, shapes, buckets).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::json::Value;
+
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(std::io::Error),
+    Parse(String),
+    Missing(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "manifest io: {e}"),
+            ManifestError::Parse(e) => write!(f, "manifest parse: {e}"),
+            ManifestError::Missing(k) => write!(f, "manifest missing key: {k}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+/// Model descriptor (mirrors python configs.ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub weights_file: String,
+    pub frame: usize,
+    pub patch: usize,
+    pub merge: usize,
+    pub grid: usize,
+    pub patches_per_frame: usize,
+    pub patch_dim: usize,
+    pub tokens_per_frame: usize,
+    pub window_frames: usize,
+    pub vit_dim: usize,
+    pub vit_layers: usize,
+    pub vit_heads: usize,
+    pub vit_mlp: usize,
+    pub llm_dim: usize,
+    pub llm_layers: usize,
+    pub llm_heads: usize,
+    pub head_dim: usize,
+    pub llm_mlp: usize,
+    pub vocab: usize,
+    pub text_len: usize,
+    pub rope_base: f64,
+    pub vit_buckets: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    pub incr_new_buckets: Vec<usize>,
+    pub incr_old_buckets: Vec<usize>,
+    pub decode_slots: usize,
+    pub max_decode_tokens: usize,
+    pub prompt_ids: Vec<i32>,
+    pub yes_token: i32,
+    pub no_token: i32,
+}
+
+impl ModelSpec {
+    pub fn max_visual_tokens(&self) -> usize {
+        self.window_frames * self.tokens_per_frame
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_visual_tokens() + self.text_len
+    }
+
+    /// Smallest bucket >= n, or the largest bucket if none fits.
+    pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+        buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or_else(|| *buckets.iter().max().expect("non-empty buckets"))
+    }
+}
+
+/// I/O slot of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub model: String,
+    pub name: String,
+    pub file: String,
+    /// Ordered parameter (weight tensor) names — HLO parameter order.
+    pub params: Vec<String>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub bucket: HashMap<String, usize>,
+}
+
+/// The full manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value, ManifestError> {
+    v.get(key).ok_or_else(|| ManifestError::Missing(key.to_string()))
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize, ManifestError> {
+    req(v, key)?.as_usize().ok_or_else(|| ManifestError::Parse(format!("{key} not usize")))
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String, ManifestError> {
+    Ok(req(v, key)?
+        .as_str()
+        .ok_or_else(|| ManifestError::Parse(format!("{key} not str")))?
+        .to_string())
+}
+
+fn req_usize_vec(v: &Value, key: &str) -> Result<Vec<usize>, ManifestError> {
+    req(v, key)?.usize_vec().ok_or_else(|| ManifestError::Parse(format!("{key} not usize[]")))
+}
+
+fn parse_io(v: &Value) -> Result<IoSpec, ManifestError> {
+    Ok(IoSpec {
+        name: req_str(v, "name")?,
+        shape: req_usize_vec(v, "shape").unwrap_or_default(),
+        dtype: req_str(v, "dtype")?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(ManifestError::Io)?;
+        let root = Value::parse(&text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let mut models = Vec::new();
+        for m in req(&root, "models")?.as_arr().unwrap_or_default() {
+            models.push(ModelSpec {
+                name: req_str(m, "name")?,
+                weights_file: req_str(m, "weights")?,
+                frame: req_usize(m, "frame")?,
+                patch: req_usize(m, "patch")?,
+                merge: req_usize(m, "merge")?,
+                grid: req_usize(m, "grid")?,
+                patches_per_frame: req_usize(m, "patches_per_frame")?,
+                patch_dim: req_usize(m, "patch_dim")?,
+                tokens_per_frame: req_usize(m, "tokens_per_frame")?,
+                window_frames: req_usize(m, "window_frames")?,
+                vit_dim: req_usize(m, "vit_dim")?,
+                vit_layers: req_usize(m, "vit_layers")?,
+                vit_heads: req_usize(m, "vit_heads")?,
+                vit_mlp: req_usize(m, "vit_mlp")?,
+                llm_dim: req_usize(m, "llm_dim")?,
+                llm_layers: req_usize(m, "llm_layers")?,
+                llm_heads: req_usize(m, "llm_heads")?,
+                head_dim: req_usize(m, "head_dim")?,
+                llm_mlp: req_usize(m, "llm_mlp")?,
+                vocab: req_usize(m, "vocab")?,
+                text_len: req_usize(m, "text_len")?,
+                rope_base: req(m, "rope_base")?
+                    .as_f64()
+                    .ok_or_else(|| ManifestError::Parse("rope_base".into()))?,
+                vit_buckets: req_usize_vec(m, "vit_buckets")?,
+                prefill_buckets: req_usize_vec(m, "prefill_buckets")?,
+                incr_new_buckets: req_usize_vec(m, "incr_new_buckets")?,
+                incr_old_buckets: req_usize_vec(m, "incr_old_buckets")?,
+                decode_slots: req_usize(m, "decode_slots")?,
+                max_decode_tokens: req_usize(m, "max_decode_tokens")?,
+                prompt_ids: req(m, "prompt_ids")?
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|v| v.as_i64().map(|x| x as i32)).collect())
+                    .unwrap_or_default(),
+                yes_token: req(m, "yes_token")?.as_i64().unwrap_or(1) as i32,
+                no_token: req(m, "no_token")?.as_i64().unwrap_or(2) as i32,
+            });
+        }
+        let mut artifacts = Vec::new();
+        for a in req(&root, "artifacts")?.as_arr().unwrap_or_default() {
+            artifacts.push(ArtifactSpec {
+                model: req_str(a, "model")?,
+                name: req_str(a, "name")?,
+                file: req_str(a, "file")?,
+                params: req(a, "params")?
+                    .as_arr()
+                    .map(|p| p.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                    .unwrap_or_default(),
+                inputs: req(a, "inputs")?
+                    .as_arr()
+                    .unwrap_or_default()
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_, _>>()?,
+                outputs: req(a, "outputs")?
+                    .as_arr()
+                    .unwrap_or_default()
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_, _>>()?,
+                bucket: a
+                    .get("bucket")
+                    .and_then(|b| b.as_obj())
+                    .map(|m| {
+                        m.iter()
+                            .filter_map(|(k, v)| v.as_usize().map(|u| (k.clone(), u)))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelSpec> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn artifact(&self, model: &str, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.model == model && a.name == name)
+    }
+
+    pub fn model_artifacts(&self, model: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.model == model).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_bucket_smallest_fit() {
+        let buckets = [48, 96, 144, 192];
+        assert_eq!(ModelSpec::pick_bucket(&buckets, 1), 48);
+        assert_eq!(ModelSpec::pick_bucket(&buckets, 48), 48);
+        assert_eq!(ModelSpec::pick_bucket(&buckets, 49), 96);
+        assert_eq!(ModelSpec::pick_bucket(&buckets, 200), 192); // clamp
+    }
+}

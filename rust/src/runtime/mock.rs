@@ -1,0 +1,223 @@
+//! Deterministic mock executor: lets the pruning / KVC / coordinator
+//! logic be unit-tested without artifacts or PJRT.
+//!
+//! Outputs are pseudo-random but *deterministic functions of the
+//! inputs* (hash of input bytes seeds the generator), so tests can
+//! assert e.g. "same inputs -> same KV" and "different context ->
+//! different logits" — the properties the cache logic relies on.
+
+use std::collections::HashMap;
+
+use crate::util::prng::Rng;
+
+use super::engine::EngineError;
+use super::manifest::ModelSpec;
+use super::tensor::Tensor;
+
+/// Executor abstraction: the real [`super::Engine`] or [`MockEngine`].
+/// `execute` returns the outputs and the pure execution seconds
+/// (excluding one-off lazy compilation) so stage timing in the
+/// pipeline never charges compile time to a window.
+pub trait Executor {
+    fn execute(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64), EngineError>;
+    fn spec(&self, model: &str) -> Option<ModelSpec>;
+}
+
+impl Executor for super::Engine {
+    fn execute(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64), EngineError> {
+        self.execute_timed(model, artifact, inputs)
+    }
+
+    fn spec(&self, model: &str) -> Option<ModelSpec> {
+        self.model_spec(model)
+    }
+}
+
+/// Mock engine with a fixed model spec.
+pub struct MockEngine {
+    pub specs: HashMap<String, ModelSpec>,
+    /// Artificial per-call latency (seconds) to emulate compute cost in
+    /// scheduler tests; keyed by artifact family.
+    pub delay_s: f64,
+}
+
+pub fn test_spec(name: &str) -> ModelSpec {
+    ModelSpec {
+        name: name.to_string(),
+        weights_file: String::new(),
+        frame: 64,
+        patch: 8,
+        merge: 2,
+        grid: 8,
+        patches_per_frame: 64,
+        patch_dim: 64,
+        tokens_per_frame: 16,
+        window_frames: 20,
+        vit_dim: 128,
+        vit_layers: 4,
+        vit_heads: 4,
+        vit_mlp: 4,
+        llm_dim: 192,
+        llm_layers: 5,
+        llm_heads: 6,
+        head_dim: 32,
+        llm_mlp: 4,
+        vocab: 64,
+        text_len: 16,
+        rope_base: 1e4,
+        vit_buckets: vec![16, 32, 48, 64],
+        prefill_buckets: vec![96, 192, 288, 336],
+        incr_new_buckets: vec![48, 96, 144, 192],
+        incr_old_buckets: vec![96, 192, 288],
+        decode_slots: 352,
+        max_decode_tokens: 4,
+        prompt_ids: (0..16).map(|i| 3 + i as i32).collect(),
+        yes_token: 1,
+        no_token: 2,
+    }
+}
+
+impl MockEngine {
+    pub fn new(model: &str) -> Self {
+        let mut specs = HashMap::new();
+        specs.insert(model.to_string(), test_spec(model));
+        MockEngine { specs, delay_s: 0.0 }
+    }
+
+    fn hash_inputs(inputs: &[Tensor]) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut mix = |b: u64| {
+            h ^= b;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for t in inputs {
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        mix(v.to_bits() as u64);
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        mix(*v as u64);
+                    }
+                }
+            }
+        }
+        h
+    }
+
+    fn fill(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+}
+
+impl Executor for MockEngine {
+    fn execute(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64), EngineError> {
+        let spec = self
+            .specs
+            .get(model)
+            .ok_or_else(|| EngineError(format!("mock: no model {model}")))?;
+        if self.delay_s > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(self.delay_s));
+        }
+        let mut rng = Rng::new(Self::hash_inputs(inputs));
+        let (l, h, hd, d, v) =
+            (spec.llm_layers, spec.llm_heads, spec.head_dim, spec.llm_dim, spec.vocab);
+        let out = if let Some(n) = artifact.strip_prefix("vit_encode_n") {
+            let n: usize = n.parse().map_err(|_| EngineError("bad bucket".into()))?;
+            vec![Self::fill(&mut rng, &[n / (spec.merge * spec.merge), d])]
+        } else if artifact == "embed_text" {
+            vec![Self::fill(&mut rng, &[spec.text_len, d])]
+        } else if let Some(t) = artifact.strip_prefix("prefill_full_t") {
+            let t: usize = t.parse().map_err(|_| EngineError("bad bucket".into()))?;
+            vec![
+                Self::fill(&mut rng, &[d]),
+                Self::fill(&mut rng, &[d]),
+                Self::fill(&mut rng, &[v]),
+                Self::fill(&mut rng, &[l, h, t, hd]),
+                Self::fill(&mut rng, &[l, h, t, hd]),
+            ]
+        } else if let Some(rest) = artifact.strip_prefix("prefill_incr_n") {
+            let (tn, to) = rest
+                .split_once("_o")
+                .and_then(|(a, b)| Some((a.parse().ok()?, b.parse::<usize>().ok()?)))
+                .ok_or_else(|| EngineError("bad incr bucket".into()))?;
+            let _ = to;
+            vec![
+                Self::fill(&mut rng, &[d]),
+                Self::fill(&mut rng, &[d]),
+                Self::fill(&mut rng, &[v]),
+                Self::fill(&mut rng, &[l, h, tn, hd]),
+                Self::fill(&mut rng, &[l, h, tn, hd]),
+            ]
+        } else if artifact == "decode_step" {
+            vec![
+                Self::fill(&mut rng, &[v]),
+                Self::fill(&mut rng, &[l, h, hd]),
+                Self::fill(&mut rng, &[l, h, hd]),
+            ]
+        } else {
+            return Err(EngineError(format!("mock: unknown artifact {artifact}")));
+        };
+        Ok((out, self.delay_s))
+    }
+
+    fn spec(&self, model: &str) -> Option<ModelSpec> {
+        self.specs.get(model).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_outputs() {
+        let m = MockEngine::new("m");
+        let inp = vec![Tensor::f32(&[4], vec![1.0, 2.0, 3.0, 4.0])];
+        let a = m.execute("m", "vit_encode_n16", &inp).unwrap().0;
+        let b = m.execute("m", "vit_encode_n16", &inp).unwrap().0;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_inputs_different_outputs() {
+        let m = MockEngine::new("m");
+        let a = m
+            .execute("m", "vit_encode_n16", &[Tensor::f32(&[1], vec![1.0])])
+            .unwrap()
+            .0;
+        let b = m
+            .execute("m", "vit_encode_n16", &[Tensor::f32(&[1], vec![2.0])])
+            .unwrap()
+            .0;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shapes_match_contract() {
+        let m = MockEngine::new("m");
+        let out = m.execute("m", "prefill_incr_n48_o96", &[]).unwrap().0;
+        assert_eq!(out[3].shape(), &[5, 6, 48, 32]);
+        let out = m.execute("m", "decode_step", &[]).unwrap().0;
+        assert_eq!(out[0].shape(), &[64]);
+    }
+}

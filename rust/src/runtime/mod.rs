@@ -1,0 +1,26 @@
+//! PJRT runtime: load + execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` (python, build-time only) produces HLO text modules
+//! plus `manifest.json` and `weights_<model>.bin`; this module is the
+//! only place that touches PJRT:
+//!
+//! * [`manifest`] — typed view of manifest.json (models, artifacts,
+//!   parameter order contract, shape buckets);
+//! * [`weights`] — CFWB weight file reader;
+//! * [`tensor`] — host tensors crossing the PJRT boundary;
+//! * [`engine`] — the executor: lazy `client.compile` per artifact,
+//!   device-resident parameter buffers uploaded once and passed by
+//!   reference per call (`execute_b`), per-family execution stats;
+//! * [`flops`] — analytic FLOP accounting (Fig 13 / Fig 6);
+//! * [`mock`] — deterministic executor for tests without artifacts.
+
+pub mod engine;
+pub mod flops;
+pub mod manifest;
+pub mod mock;
+pub mod tensor;
+pub mod weights;
+
+pub use engine::{Engine, ExecStats};
+pub use manifest::{ArtifactSpec, Manifest, ModelSpec};
+pub use tensor::Tensor;

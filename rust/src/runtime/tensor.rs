@@ -1,0 +1,100 @@
+//! Host tensors crossing the PJRT boundary.
+
+/// A host-resident tensor (f32 or i32 — the only dtypes the artifacts
+/// use; see aot.py).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "f32",
+            Tensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Tensor::I32 { data, .. } => data,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), "f32");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_checked() {
+        let _ = Tensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn scalar() {
+        let t = Tensor::scalar_i32(7);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.as_i32(), &[7]);
+    }
+}

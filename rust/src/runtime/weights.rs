@@ -1,0 +1,136 @@
+//! CFWB weight file reader (format contract: python/compile/params.py).
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use super::tensor::Tensor;
+
+#[derive(Debug)]
+pub enum WeightsError {
+    Io(std::io::Error),
+    BadMagic,
+    Corrupt(&'static str),
+}
+
+impl std::fmt::Display for WeightsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WeightsError::Io(e) => write!(f, "weights io: {e}"),
+            WeightsError::BadMagic => write!(f, "weights: bad magic"),
+            WeightsError::Corrupt(w) => write!(f, "weights corrupt: {w}"),
+        }
+    }
+}
+
+impl std::error::Error for WeightsError {}
+
+pub fn load(path: &Path) -> Result<HashMap<String, Tensor>, WeightsError> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .map_err(WeightsError::Io)?;
+    parse(&bytes)
+}
+
+pub fn parse(bytes: &[u8]) -> Result<HashMap<String, Tensor>, WeightsError> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8], WeightsError> {
+        if *pos + n > bytes.len() {
+            return Err(WeightsError::Corrupt("truncated"));
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let u32_at = |pos: &mut usize| -> Result<u32, WeightsError> {
+        let b = take(pos, 4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    };
+
+    if take(&mut pos, 4)? != b"CFWB" {
+        return Err(WeightsError::BadMagic);
+    }
+    let _version = u32_at(&mut pos)?;
+    let count = u32_at(&mut pos)? as usize;
+    let mut out = HashMap::with_capacity(count);
+    for _ in 0..count {
+        let name_len = u32_at(&mut pos)? as usize;
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+            .map_err(|_| WeightsError::Corrupt("name utf8"))?;
+        let dtype = u32_at(&mut pos)?;
+        let ndim = u32_at(&mut pos)? as usize;
+        if ndim > 8 {
+            return Err(WeightsError::Corrupt("ndim"));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32_at(&mut pos)? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        let raw = take(&mut pos, 4 * n)?;
+        let tensor = match dtype {
+            0 => {
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::F32 { shape, data }
+            }
+            1 => {
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::I32 { shape, data }
+            }
+            _ => return Err(WeightsError::Corrupt("dtype")),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_file() -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::new();
+        b.extend(b"CFWB");
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u32.to_le_bytes()); // count
+        let name = b"w.x";
+        b.extend((name.len() as u32).to_le_bytes());
+        b.extend(name);
+        b.extend(0u32.to_le_bytes()); // f32
+        b.extend(2u32.to_le_bytes()); // ndim
+        b.extend(2u32.to_le_bytes());
+        b.extend(3u32.to_le_bytes());
+        for i in 0..6 {
+            b.extend((i as f32).to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_sample() {
+        let w = parse(&sample_file()).unwrap();
+        let t = &w["w.x"];
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.as_f32()[5], 5.0);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut b = sample_file();
+        b[0] = b'X';
+        assert!(matches!(parse(&b), Err(WeightsError::BadMagic)));
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let b = sample_file();
+        assert!(parse(&b[..b.len() - 3]).is_err());
+    }
+}

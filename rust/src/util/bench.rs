@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (criterion replacement, DESIGN.md §9).
+//!
+//! Used by every target in `benches/` (each with `harness = false`):
+//! warmup, fixed-iteration measurement, percentile reporting. Latency
+//! samples are wall-clock; throughput helpers derive items/s.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One measured benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration seconds.
+    pub samples: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean
+    }
+
+    pub fn report_line(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}  ({} iters)",
+            self.name,
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p90),
+            fmt_time(s.max),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner: `Bencher::new("suite").run("case", iters, || work)`.
+pub struct Bencher {
+    pub suite: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        println!("== bench suite: {suite} ==");
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}",
+            "case", "mean", "p50", "p90", "max"
+        );
+        Bencher { suite: suite.to_string(), results: Vec::new() }
+    }
+
+    /// Run `f` for `iters` measured iterations after `warmup` runs.
+    pub fn run_with<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        mut f: F,
+    ) -> &BenchResult {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&samples);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            samples,
+            summary,
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Default warmup = 1, good for second-scale end-to-end cases.
+    pub fn run<F: FnMut()>(&mut self, name: &str, iters: usize, f: F) -> &BenchResult {
+        self.run_with(name, 1, iters, f)
+    }
+
+    /// Time a single invocation of `f` returning its value + seconds.
+    pub fn once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+        let t0 = Instant::now();
+        let v = f();
+        (v, t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep() {
+        let mut b = Bencher::new("test");
+        let r = b.run_with("spin", 0, 3, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(r.summary.mean >= 0.002);
+        assert_eq!(r.samples.len(), 3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

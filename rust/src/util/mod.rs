@@ -1,0 +1,23 @@
+//! Support utilities: PRNG, statistics, micro-benchmark harness,
+//! property-testing helper, ascii tables/plots, thread pool.
+//!
+//! `criterion` and `proptest` are not available in the offline crate
+//! set (DESIGN.md §9); [`bench`] and [`quick`] are the purpose-built
+//! replacements used by `benches/` and the test suite.
+
+pub mod bench;
+pub mod plot;
+pub mod prng;
+pub mod quick;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+
+/// Wall-clock seconds since an arbitrary epoch (monotonic).
+pub fn now() -> f64 {
+    use std::time::Instant;
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_secs_f64()
+}

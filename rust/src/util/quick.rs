@@ -1,0 +1,101 @@
+//! Mini property-testing helper (proptest replacement, DESIGN.md §9).
+//!
+//! `quick::check(seed, cases, |g| { ... })` runs a property over many
+//! seeded random inputs; on failure it reports the case seed so the
+//! exact input can be replayed with `quick::replay`.
+
+use super::prng::Rng;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.range_f64(lo as f64, hi as f64) as f32).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Run `prop` over `cases` random inputs; panics with the failing case
+/// seed on the first violation.
+pub fn check<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut prop: F) {
+    let mut meta = Rng::new(seed);
+    for i in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {i}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a property on the exact input of a previously failing case.
+pub fn replay<F: FnMut(&mut Gen)>(case_seed: u64, mut prop: F) {
+    let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 100, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert!(a + b >= a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check(2, 100, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x < 10, "hit the edge");
+        });
+    }
+
+    #[test]
+    fn ranges_respected() {
+        check(3, 200, |g| {
+            let x = g.i64_in(-5, 5);
+            assert!((-5..=5).contains(&x));
+            let f = g.f64_in(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! Descriptive statistics and CDFs for experiment reporting.
+
+/// Summary of a sample: mean/std/min/max/percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Percentile (linear interpolation) of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Empirical CDF evaluated at the given grid points.
+pub fn cdf_at(xs: &[f64], grid: &[f64]) -> Vec<f64> {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    grid.iter()
+        .map(|&g| {
+            let cnt = sorted.partition_point(|&x| x <= g);
+            cnt as f64 / sorted.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Precision / recall / F1 from confusion counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PrF1 {
+    pub tp: usize,
+    pub fp: usize,
+    pub tn: usize,
+    pub fn_: usize,
+}
+
+impl PrF1 {
+    pub fn add(&mut self, predicted: bool, actual: bool) {
+        match (predicted, actual) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, false) => self.tn += 1,
+            (false, true) => self.fn_ += 1,
+        }
+    }
+
+    pub fn precision(&self) -> f64 {
+        let d = self.tp + self.fp;
+        if d == 0 { 0.0 } else { self.tp as f64 / d as f64 }
+    }
+
+    pub fn recall(&self) -> f64 {
+        let d = self.tp + self.fn_;
+        if d == 0 { 0.0 } else { self.tp as f64 / d as f64 }
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs = [1.0, 2.0, 2.0, 3.0, 9.0];
+        let grid = [0.0, 1.0, 2.0, 3.0, 10.0];
+        let c = cdf_at(&xs, &grid);
+        assert_eq!(c[0], 0.0);
+        assert_eq!(*c.last().unwrap(), 1.0);
+        for w in c.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn f1_perfect_and_worst() {
+        let mut m = PrF1::default();
+        m.add(true, true);
+        m.add(false, false);
+        assert_eq!(m.f1(), 1.0);
+        let mut w = PrF1::default();
+        w.add(false, true);
+        w.add(true, false);
+        assert_eq!(w.f1(), 0.0);
+    }
+
+    #[test]
+    fn f1_mixed() {
+        let mut m = PrF1::default();
+        for _ in 0..8 { m.add(true, true); }
+        for _ in 0..2 { m.add(true, false); }
+        for _ in 0..2 { m.add(false, true); }
+        assert!((m.precision() - 0.8).abs() < 1e-12);
+        assert!((m.recall() - 0.8).abs() < 1e-12);
+        assert!((m.f1() - 0.8).abs() < 1e-12);
+    }
+}

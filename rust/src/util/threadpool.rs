@@ -1,0 +1,130 @@
+//! Fixed-size thread pool (tokio replacement for the serving loop,
+//! DESIGN.md §9). The request path only needs fan-out/fan-in over
+//! blocking PJRT executions, which a channel-fed pool models exactly.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Stop,
+}
+
+/// A shared-queue thread pool. Submitted jobs run FIFO across workers.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("cf-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = rx.lock().unwrap().recv();
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Stop) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, handles, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Map `f` over items in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel();
+        let n = items.len();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let r = f(item);
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker result");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<i32>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| {});
+        drop(pool);
+    }
+}

@@ -1,0 +1,104 @@
+//! Anomaly event injection.
+//!
+//! An anomaly is a burst of fast, erratic motion with a distinct
+//! bright actor — the visual statistics (large MVs, high residuals,
+//! changed appearance) that both the codec metadata and the VLM's
+//! feature space can pick up. Mirrors the paper's workload statistics:
+//! events conclude within the analysis window (§2.2: 90% of urban
+//! crime events conclude within 40 s → our events fit in one scaled
+//! window) and ~35% of corpus videos contain one.
+
+use crate::util::prng::Rng;
+
+/// An anomaly event: a frame interval with an injected actor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AnomalyEvent {
+    /// First frame of the event (inclusive).
+    pub start: usize,
+    /// One past the last frame.
+    pub end: usize,
+    /// Motion multiplier applied to the actor (erraticness).
+    pub intensity: f64,
+}
+
+impl AnomalyEvent {
+    pub fn contains(&self, frame: usize) -> bool {
+        frame >= self.start && frame < self.end
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+
+    /// Fraction of the window [w0, w1) covered by the event.
+    pub fn overlap_frac(&self, w0: usize, w1: usize) -> f64 {
+        let lo = self.start.max(w0);
+        let hi = self.end.min(w1);
+        if hi <= lo || w1 <= w0 {
+            0.0
+        } else {
+            (hi - lo) as f64 / (w1 - w0) as f64
+        }
+    }
+}
+
+/// Sample an event for a video of `total_frames`, sized to fit within
+/// one window of `window_frames` (paper §2.2 statistic). Events start
+/// only after one full clean window: streaming anomaly detection
+/// (paper §2.1) assumes a normal preamble that establishes the
+/// stream's baseline context.
+pub fn sample_event(rng: &mut Rng, total_frames: usize, window_frames: usize) -> AnomalyEvent {
+    let len = window_frames * 3 / 4 + rng.below(window_frames / 2 + 1);
+    let len = len.min(total_frames.saturating_sub(2)).max(4);
+    let earliest = (window_frames + 2).min(total_frames.saturating_sub(len + 1)).max(1);
+    let latest = total_frames.saturating_sub(len).max(earliest + 1);
+    let start = earliest + rng.below(latest - earliest);
+    AnomalyEvent { start, end: start + len, intensity: rng.range_f64(2.0, 4.0) }
+}
+
+/// Whether a window [w0, w1) should be labelled anomalous: the event
+/// must cover a meaningful fraction (not a single boundary frame).
+pub fn window_label(event: Option<&AnomalyEvent>, w0: usize, w1: usize) -> bool {
+    match event {
+        Some(e) => e.overlap_frac(w0, w1) >= 0.25,
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_fits_video() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let e = sample_event(&mut rng, 240, 20);
+            assert!(e.start >= 1);
+            assert!(e.end <= 240);
+            assert!(e.len() >= 4);
+        }
+    }
+
+    #[test]
+    fn overlap_fraction() {
+        let e = AnomalyEvent { start: 10, end: 20, intensity: 2.0 };
+        assert_eq!(e.overlap_frac(0, 10), 0.0);
+        assert_eq!(e.overlap_frac(10, 20), 1.0);
+        assert!((e.overlap_frac(15, 25) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn labels_threshold() {
+        let e = AnomalyEvent { start: 100, end: 120, intensity: 3.0 };
+        assert!(window_label(Some(&e), 100, 120));
+        assert!(!window_label(Some(&e), 0, 20));
+        assert!(!window_label(None, 100, 120));
+        // 4/20 frames = 20% < 25% threshold
+        assert!(!window_label(Some(&e), 84, 104));
+    }
+}

@@ -1,0 +1,230 @@
+//! Corpus builder: labelled videos stratified by motion level.
+
+use crate::codec::types::Frame;
+use crate::util::prng::Rng;
+
+use super::anomaly::{sample_event, AnomalyEvent};
+use super::scene::{MotionLevel, Scene, SceneConfig};
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    /// Number of videos (split evenly across motion levels).
+    pub videos: usize,
+    /// Frames per video (at the sampled FPS).
+    pub frames_per_video: usize,
+    /// Fraction of videos containing one anomaly event.
+    pub anomaly_frac: f64,
+    /// Window size in frames (events are sized relative to this).
+    pub window_frames: usize,
+    pub seed: u64,
+    pub frame_w: usize,
+    pub frame_h: usize,
+    /// When false, events are sampled and all RNG draws happen
+    /// identically, but actor objects are not rendered — producing an
+    /// exact pixel-level twin of the actored corpus (probe pairing).
+    pub render_actors: bool,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            videos: 24,
+            frames_per_video: 120,
+            anomaly_frac: 0.4,
+            window_frames: 20,
+            seed: 2026,
+            frame_w: 64,
+            frame_h: 64,
+            render_actors: true,
+        }
+    }
+}
+
+/// One rendered video with ground truth.
+pub struct VideoClip {
+    pub id: usize,
+    pub motion: MotionLevel,
+    pub frames: Vec<Frame>,
+    pub event: Option<AnomalyEvent>,
+    /// Benign "hard negative" visitor event (normal videos only).
+    pub benign: Option<AnomalyEvent>,
+}
+
+impl VideoClip {
+    pub fn is_anomalous(&self) -> bool {
+        self.event.is_some()
+    }
+}
+
+/// The full labelled corpus.
+pub struct Corpus {
+    pub cfg: CorpusConfig,
+    pub clips: Vec<VideoClip>,
+}
+
+impl Corpus {
+    /// Generate deterministically from cfg.seed.
+    pub fn generate(cfg: CorpusConfig) -> Corpus {
+        let mut meta_rng = Rng::new(cfg.seed);
+        let mut clips = Vec::with_capacity(cfg.videos);
+        // Balanced anomaly assignment per stratum (not iid) so small
+        // corpora still have calibration-worthy class balance.
+        for id in 0..cfg.videos {
+            let motion = MotionLevel::all()[id % 3];
+            let mut rng = meta_rng.fork(id as u64);
+            let anomalous = {
+                // stratified: every k-th video in a stratum is anomalous
+                let period = (1.0 / cfg.anomaly_frac).round() as usize;
+                (id / 3) % period.max(1) == 0
+            };
+            let event = if anomalous {
+                Some(sample_event(&mut rng, cfg.frames_per_video, cfg.window_frames))
+            } else {
+                None
+            };
+            let mut scene = Scene::new(SceneConfig {
+                w: cfg.frame_w,
+                h: cfg.frame_h,
+                ..SceneConfig::new(motion, rng.next_u64())
+            });
+            // Hard negatives: most normal videos get a *benign visitor*
+            // event — an extra actor with the same appearance
+            // distribution as anomaly actors but ordinary, smooth
+            // motion. The classifier therefore cannot key on "a new
+            // object appeared"; it must pick up the erratic fast-motion
+            // signature, which is exactly what pruning/KV-reuse
+            // approximation errors can blur (DESIGN.md §4).
+            let benign = if event.is_none() && rng.bool(0.3) {
+                Some(sample_event(&mut rng, cfg.frames_per_video, cfg.window_frames))
+            } else {
+                None
+            };
+            let mut frames = Vec::with_capacity(cfg.frames_per_video);
+            let mut actor_active = false;
+            let (w, h) = (cfg.frame_w as f64, cfg.frame_h as f64);
+            for t in 0..cfg.frames_per_video {
+                let active_event = event.as_ref().or(benign.as_ref());
+                if let Some(e) = active_event {
+                    let anomalous = event.is_some();
+                    if e.contains(t) && !actor_active {
+                        // Actor enters. Anomaly difficulty is *graded*
+                        // (paper §2.4.2: subtle cues — dim, slow-moving
+                        // targets — are exactly what aggressive pruning
+                        // can lose): intensity scales both speed and
+                        // contrast, so the corpus contains easy, medium
+                        // and marginal positives. Benign visitors are
+                        // rare and dim (precision hard-negatives).
+                        // Intensity grades speed, contrast AND texture
+                        // energy: violent motion has high spatiotemporal
+                        // frequency content, which is both what the
+                        // codec's residuals light up on and what the
+                        // VLM's patch embeddings respond to strongly.
+                        let (speed, brightness, size, tex_amp) = if anomalous {
+                            let k = (e.intensity - 2.0) / 2.0; // 0..1
+                            (
+                                1.5 + 3.5 * k,
+                                scene.rng().range_f64(30.0 + 30.0 * k, 45.0 + 35.0 * k),
+                                6.0 + 2.5 * k,
+                                25.0 + 45.0 * k,
+                            )
+                        } else {
+                            (0.7, scene.rng().range_f64(10.0, 24.0), 5.0, 10.0)
+                        };
+                        let angle = scene.rng().range_f64(0.0, std::f64::consts::TAU);
+                        if cfg.render_actors {
+                            scene.add_object_textured(
+                                w / 2.0,
+                                h / 2.0,
+                                speed * angle.cos(),
+                                speed * angle.sin(),
+                                size,
+                                brightness,
+                                tex_amp,
+                                anomalous,
+                            );
+                        }
+                        actor_active = true;
+                    } else if !e.contains(t) && actor_active {
+                        if cfg.render_actors {
+                            scene.remove_last_object();
+                        }
+                        actor_active = false;
+                    } else if actor_active && anomalous && t % 3 == 0 {
+                        // Erratic direction changes: the anomaly signature.
+                        // (RNG drawn unconditionally to keep twins exact.)
+                        let angle = scene.rng().range_f64(0.0, std::f64::consts::TAU);
+                        if cfg.render_actors {
+                            scene.redirect_last(angle);
+                        }
+                    }
+                }
+                frames.push(scene.render(t));
+            }
+            clips.push(VideoClip { id, motion, frames, event, benign });
+        }
+        Corpus { cfg, clips }
+    }
+
+    pub fn by_motion(&self, lvl: MotionLevel) -> Vec<&VideoClip> {
+        self.clips.iter().filter(|c| c.motion == lvl).collect()
+    }
+
+    pub fn anomalous_count(&self) -> usize {
+        self.clips.iter().filter(|c| c.is_anomalous()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CorpusConfig {
+        CorpusConfig { videos: 6, frames_per_video: 40, ..Default::default() }
+    }
+
+    #[test]
+    fn generates_all_strata() {
+        let c = Corpus::generate(small_cfg());
+        assert_eq!(c.clips.len(), 6);
+        for lvl in MotionLevel::all() {
+            assert_eq!(c.by_motion(lvl).len(), 2);
+        }
+    }
+
+    #[test]
+    fn has_both_classes() {
+        let c = Corpus::generate(CorpusConfig { videos: 12, frames_per_video: 60, ..Default::default() });
+        let anom = c.anomalous_count();
+        assert!(anom > 0 && anom < 12, "anomalous={anom}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(small_cfg());
+        let b = Corpus::generate(small_cfg());
+        for (x, y) in a.clips.iter().zip(&b.clips) {
+            assert_eq!(x.event, y.event);
+            assert_eq!(x.frames[10], y.frames[10]);
+        }
+    }
+
+    #[test]
+    fn anomaly_frames_move_more() {
+        let c = Corpus::generate(CorpusConfig {
+            videos: 12,
+            frames_per_video: 80,
+            ..Default::default()
+        });
+        let clip = c.clips.iter().find(|c| c.is_anomalous()).unwrap();
+        let e = clip.event.unwrap();
+        if e.start + 3 < e.end && e.start > 3 {
+            let pre: f64 = (1..4)
+                .map(|i| clip.frames[e.start - i].mad(&clip.frames[e.start - i - 1]))
+                .sum();
+            let during: f64 = (1..4)
+                .map(|i| clip.frames[e.start + i].mad(&clip.frames[e.start + i - 1]))
+                .sum();
+            assert!(during > pre, "during={during} pre={pre}");
+        }
+    }
+}

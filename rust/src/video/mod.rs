@@ -1,0 +1,14 @@
+//! Synthetic surveillance corpus (UCF-Crime substitution, DESIGN.md §3).
+//!
+//! Parametric scenes — textured static background, moving objects with
+//! smooth trajectories, camera jitter, lighting drift — with anomaly
+//! events injected as bursts of fast/erratic motion and distinct
+//! appearance. Videos are stratified into low/medium/high motion so
+//! the Fig 14 motion-level analysis is controlled rather than sampled.
+
+pub mod anomaly;
+pub mod corpus;
+pub mod scene;
+
+pub use corpus::{Corpus, CorpusConfig, VideoClip};
+pub use scene::{MotionLevel, SceneConfig};

@@ -1,0 +1,300 @@
+//! Parametric scene renderer: background + moving objects + noise.
+
+use crate::codec::types::Frame;
+use crate::util::prng::Rng;
+
+/// Motion stratum for the Fig 14 analysis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MotionLevel {
+    Low,
+    Medium,
+    High,
+}
+
+impl MotionLevel {
+    pub fn all() -> [MotionLevel; 3] {
+        [MotionLevel::Low, MotionLevel::Medium, MotionLevel::High]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MotionLevel::Low => "low",
+            MotionLevel::Medium => "medium",
+            MotionLevel::High => "high",
+        }
+    }
+
+    /// (object count, speed px/frame, camera jitter px).
+    fn params(&self) -> (usize, f64, f64) {
+        match self {
+            MotionLevel::Low => (1, 0.3, 0.0),
+            MotionLevel::Medium => (2, 0.9, 0.1),
+            MotionLevel::High => (4, 2.2, 0.35),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SceneConfig {
+    pub w: usize,
+    pub h: usize,
+    pub motion: MotionLevel,
+    pub seed: u64,
+    /// Pixel noise sigma (sensor noise).
+    pub noise: f64,
+    /// Slow illumination drift amplitude.
+    pub light_drift: f64,
+}
+
+impl SceneConfig {
+    pub fn new(motion: MotionLevel, seed: u64) -> Self {
+        SceneConfig { w: 64, h: 64, motion, seed, noise: 1.5, light_drift: 4.0 }
+    }
+}
+
+struct MovingObject {
+    x: f64,
+    y: f64,
+    vx: f64,
+    vy: f64,
+    size: f64,
+    brightness: f64,
+    texture_seed: u64,
+    /// Speckle amplitude (high-frequency texture strength).
+    texture_amp: f64,
+    /// Time-varying texture (violent-motion signature).
+    flicker: bool,
+}
+
+/// Streaming scene generator: call `render(t)` for consecutive frames.
+pub struct Scene {
+    pub cfg: SceneConfig,
+    background: Vec<f64>,
+    objects: Vec<MovingObject>,
+    rng: Rng,
+}
+
+impl Scene {
+    pub fn new(cfg: SceneConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        // Smooth textured background: sum of low-frequency waves.
+        let mut background = vec![0.0f64; cfg.w * cfg.h];
+        let waves: Vec<(f64, f64, f64, f64)> = (0..5)
+            .map(|_| {
+                (
+                    rng.range_f64(0.03, 0.25),
+                    rng.range_f64(0.03, 0.25),
+                    rng.range_f64(0.0, std::f64::consts::TAU),
+                    rng.range_f64(8.0, 26.0),
+                )
+            })
+            .collect();
+        for y in 0..cfg.h {
+            for x in 0..cfg.w {
+                let mut v = 110.0;
+                for &(fx, fy, ph, amp) in &waves {
+                    v += amp * (fx * x as f64 + fy * y as f64 + ph).sin();
+                }
+                background[y * cfg.w + x] = v;
+            }
+        }
+        let (n_obj, speed, _) = cfg.motion.params();
+        let objects = (0..n_obj)
+            .map(|_| {
+                let angle = rng.range_f64(0.0, std::f64::consts::TAU);
+                MovingObject {
+                    x: rng.range_f64(8.0, cfg.w as f64 - 8.0),
+                    y: rng.range_f64(8.0, cfg.h as f64 - 8.0),
+                    vx: speed * angle.cos(),
+                    vy: speed * angle.sin(),
+                    size: rng.range_f64(4.0, 9.0),
+                    brightness: rng.range_f64(-70.0, 70.0),
+                    texture_seed: rng.next_u64(),
+                    texture_amp: 11.0,
+                    flicker: false,
+                }
+            })
+            .collect();
+        Scene { cfg, background, objects, rng }
+    }
+
+    fn sample_background(&self, x: f64, y: f64) -> f64 {
+        let xc = x.clamp(0.0, (self.cfg.w - 1) as f64);
+        let yc = y.clamp(0.0, (self.cfg.h - 1) as f64);
+        let x0 = xc.floor() as usize;
+        let y0 = yc.floor() as usize;
+        let x1 = (x0 + 1).min(self.cfg.w - 1);
+        let y1 = (y0 + 1).min(self.cfg.h - 1);
+        let fx = xc - x0 as f64;
+        let fy = yc - y0 as f64;
+        let b = &self.background;
+        let w = self.cfg.w;
+        b[y0 * w + x0] * (1.0 - fx) * (1.0 - fy)
+            + b[y0 * w + x1] * fx * (1.0 - fy)
+            + b[y1 * w + x0] * (1.0 - fx) * fy
+            + b[y1 * w + x1] * fx * fy
+    }
+
+    /// Advance object positions by one frame (bounce off walls).
+    fn step(&mut self) {
+        let (w, h) = (self.cfg.w as f64, self.cfg.h as f64);
+        for o in &mut self.objects {
+            o.x += o.vx;
+            o.y += o.vy;
+            if o.x < 4.0 || o.x > w - 4.0 {
+                o.vx = -o.vx;
+                o.x = o.x.clamp(4.0, w - 4.0);
+            }
+            if o.y < 4.0 || o.y > h - 4.0 {
+                o.vy = -o.vy;
+                o.y = o.y.clamp(4.0, h - 4.0);
+            }
+        }
+    }
+
+    /// Render frame `t` (must be called with consecutive t from 0).
+    pub fn render(&mut self, t: usize) -> Frame {
+        if t > 0 {
+            self.step();
+        }
+        let (_, _, jitter) = self.cfg.motion.params();
+        let jx = if jitter > 0.0 { self.rng.normal() * jitter } else { 0.0 };
+        let jy = if jitter > 0.0 { self.rng.normal() * jitter } else { 0.0 };
+        let light =
+            self.cfg.light_drift * (t as f64 * 0.02).sin();
+
+        let mut frame = Frame::new(self.cfg.w, self.cfg.h);
+        for y in 0..self.cfg.h {
+            for x in 0..self.cfg.w {
+                // Camera jitter: bilinear sample of the shifted
+                // background so sub-pixel jitter scales smoothly.
+                let mut v = self.sample_background(x as f64 + jx, y as f64 + jy) + light;
+                for o in &self.objects {
+                    let dx = x as f64 - o.x;
+                    let dy = y as f64 - o.y;
+                    let d2 = dx * dx + dy * dy;
+                    let r2 = o.size * o.size;
+                    if d2 < r2 {
+                        // Textured disc: brightness offset + deterministic
+                        // speckle; flickering objects re-seed per frame
+                        // (high spatiotemporal frequency content).
+                        let tmix = if o.flicker { (t as u64).wrapping_mul(0x9E37) } else { 0 };
+                        let h = (x as u64).wrapping_mul(31)
+                            ^ (y as u64).wrapping_mul(17)
+                            ^ o.texture_seed
+                            ^ tmix;
+                        let amp = o.texture_amp.max(1.0);
+                        let speckle = (h % (2 * amp as u64 + 1)) as f64 - amp;
+                        let falloff = 1.0 - d2 / r2;
+                        v += (o.brightness + speckle) * falloff;
+                    }
+                }
+                v += self.rng.normal() * self.cfg.noise;
+                frame.set(x, y, v.clamp(0.0, 255.0) as u8);
+            }
+        }
+        frame
+    }
+
+    /// Inject an event actor (used by corpus.rs during events).
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_object_textured(
+        &mut self,
+        x: f64,
+        y: f64,
+        vx: f64,
+        vy: f64,
+        size: f64,
+        brightness: f64,
+        texture_amp: f64,
+        flicker: bool,
+    ) {
+        let seed = self.rng.next_u64();
+        self.objects.push(MovingObject {
+            x,
+            y,
+            vx,
+            vy,
+            size,
+            brightness,
+            texture_seed: seed,
+            texture_amp,
+            flicker,
+        });
+    }
+
+    /// Inject an actor with default texture.
+    pub fn add_object(&mut self, x: f64, y: f64, vx: f64, vy: f64, size: f64, brightness: f64) {
+        self.add_object_textured(x, y, vx, vy, size, brightness, 11.0, false);
+    }
+
+    pub fn remove_last_object(&mut self) {
+        self.objects.pop();
+    }
+
+    /// Redirect the last object to a new heading, keeping its speed
+    /// (erratic-motion events).
+    pub fn redirect_last(&mut self, angle: f64) {
+        if let Some(o) = self.objects.last_mut() {
+            let speed = (o.vx * o.vx + o.vy * o.vy).sqrt();
+            o.vx = speed * angle.cos();
+            o.vy = speed * angle.sin();
+        }
+    }
+
+    /// Multiply velocities of all current objects (erratic burst).
+    pub fn scale_velocities(&mut self, k: f64) {
+        for o in &mut self.objects {
+            o.vx *= k;
+            o.vy *= k;
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_render() {
+        let mut a = Scene::new(SceneConfig::new(MotionLevel::Medium, 5));
+        let mut b = Scene::new(SceneConfig::new(MotionLevel::Medium, 5));
+        for t in 0..5 {
+            assert_eq!(a.render(t), b.render(t));
+        }
+    }
+
+    #[test]
+    fn motion_levels_order_frame_difference() {
+        let mut diffs = Vec::new();
+        for lvl in MotionLevel::all() {
+            let mut s = Scene::new(SceneConfig { noise: 0.0, ..SceneConfig::new(lvl, 11) });
+            let f0 = s.render(0);
+            let mut total = 0.0;
+            let mut prev = f0;
+            for t in 1..10 {
+                let f = s.render(t);
+                total += f.mad(&prev);
+                prev = f;
+            }
+            diffs.push(total);
+        }
+        assert!(diffs[0] < diffs[1] && diffs[1] < diffs[2], "{diffs:?}");
+    }
+
+    #[test]
+    fn objects_stay_in_bounds() {
+        let mut s = Scene::new(SceneConfig::new(MotionLevel::High, 3));
+        for t in 0..200 {
+            let _ = s.render(t);
+        }
+        for o in &s.objects {
+            assert!(o.x >= 0.0 && o.x <= 64.0);
+            assert!(o.y >= 0.0 && o.y <= 64.0);
+        }
+    }
+}

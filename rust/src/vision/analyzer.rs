@@ -1,0 +1,145 @@
+//! Motion Analyzer: codec metadata -> patch-level motion mask (eq. 3).
+//!
+//! `M_t(i) = V_t(i) + alpha * R_t(i)` where V is the MV magnitude of
+//! the macroblock covering patch i (pixels) and R its residual SAD
+//! normalized per pixel. The default is alpha = 0 (paper §3.3.1:
+//! hardware decoders expose reconstructed frames + MVs, not residuals;
+//! the ablation in Fig 17/exp sweeps alpha for the software decoder
+//! which *does* expose them).
+
+use crate::codec::types::{FrameMeta, FrameType, MB};
+
+use super::layout::PatchLayout;
+
+/// Per-patch motion mask for one frame.
+#[derive(Clone, Debug)]
+pub struct MotionMask {
+    /// M_t per patch (pixels-equivalent units).
+    pub values: Vec<f32>,
+    pub frame_type: FrameType,
+    pub gop_pos: usize,
+}
+
+/// Configurable analyzer (alpha knob).
+#[derive(Clone, Copy, Debug)]
+pub struct MotionAnalyzer {
+    /// Residual weight (eq. 3). 0 = MV-only (hardware-decode default).
+    pub alpha: f32,
+}
+
+impl Default for MotionAnalyzer {
+    fn default() -> Self {
+        MotionAnalyzer { alpha: 0.0 }
+    }
+}
+
+impl MotionAnalyzer {
+    pub fn new(alpha: f32) -> Self {
+        MotionAnalyzer { alpha }
+    }
+
+    /// Build the patch-level mask from one frame's codec metadata.
+    /// O(patches) table lookups — the "negligible decision overhead"
+    /// the paper claims; measured in Fig 19.
+    pub fn analyze(&self, layout: &PatchLayout, meta: &FrameMeta) -> MotionMask {
+        let n = layout.patches_per_frame();
+        let mut values = vec![0.0f32; n];
+        if meta.frame_type == FrameType::P {
+            for (i, v) in values.iter_mut().enumerate() {
+                let (mx, my) = layout.mb_of_patch(i);
+                let mv = meta.mv_at(mx, my).magnitude();
+                let sad = meta.sad_at(mx, my) as f32 / (MB * MB) as f32;
+                *v = mv + self.alpha * sad;
+            }
+        }
+        // I-frames carry no prediction metadata; mask stays zero and
+        // the pruner handles them as "all dynamic" (full refresh).
+        MotionMask { values, frame_type: meta.frame_type, gop_pos: meta.gop_pos }
+    }
+
+    /// Fraction of patches under `threshold` (the Fig 5 "similar patch
+    /// ratio" statistic).
+    pub fn similar_ratio(mask: &MotionMask, threshold: f32) -> f64 {
+        if mask.values.is_empty() {
+            return 0.0;
+        }
+        let n = mask.values.iter().filter(|&&v| v < threshold).count();
+        n as f64 / mask.values.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::types::MotionVector;
+
+    fn layout() -> PatchLayout {
+        PatchLayout::new(64, 64, 8, 2)
+    }
+
+    fn p_meta(mvs: Vec<MotionVector>, sads: Vec<u32>) -> FrameMeta {
+        FrameMeta {
+            frame_type: FrameType::P,
+            gop_pos: 1,
+            mb_w: 4,
+            mb_h: 4,
+            mvs,
+            residual_sad: sads,
+            bits: 0,
+        }
+    }
+
+    #[test]
+    fn i_frame_mask_is_zero() {
+        let meta = FrameMeta {
+            frame_type: FrameType::I,
+            gop_pos: 0,
+            mb_w: 4,
+            mb_h: 4,
+            mvs: vec![],
+            residual_sad: vec![],
+            bits: 0,
+        };
+        let m = MotionAnalyzer::default().analyze(&layout(), &meta);
+        assert!(m.values.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mv_propagates_to_covered_patches() {
+        let mut mvs = vec![MotionVector::default(); 16];
+        mvs[5] = MotionVector::from_pixels(3.0, 4.0); // MB (1,1): |mv| = 5
+        let meta = p_meta(mvs, vec![0; 16]);
+        let l = layout();
+        let m = MotionAnalyzer::default().analyze(&l, &meta);
+        // MB (1,1) covers patches (2..4, 2..4)
+        for py in 0..8 {
+            for px in 0..8 {
+                let want = if (2..4).contains(&px) && (2..4).contains(&py) { 5.0 } else { 0.0 };
+                assert_eq!(m.values[l.patch_idx(px, py)], want, "patch ({px},{py})");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_adds_residual_term() {
+        let mut sads = vec![0u32; 16];
+        sads[0] = 2560; // 10 per pixel over 16x16
+        let meta = p_meta(vec![MotionVector::default(); 16], sads);
+        let l = layout();
+        let m0 = MotionAnalyzer::new(0.0).analyze(&l, &meta);
+        let m1 = MotionAnalyzer::new(0.5).analyze(&l, &meta);
+        assert_eq!(m0.values[0], 0.0);
+        assert!((m1.values[0] - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn similar_ratio_counts() {
+        let mask = MotionMask {
+            values: vec![0.0, 0.1, 0.5, 2.0],
+            frame_type: FrameType::P,
+            gop_pos: 1,
+        };
+        assert_eq!(MotionAnalyzer::similar_ratio(&mask, 0.25), 0.5);
+        assert_eq!(MotionAnalyzer::similar_ratio(&mask, 5.0), 1.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Patch/token geometry and the block->patch resampling map.
+//!
+//! Bridges the codec's units (16x16 macroblocks) and the model's units
+//! (8x8 patches, 2x2 merge groups) — challenge C1 in the paper §2.4.2.
+
+use crate::codec::types::MB;
+
+/// Geometry of one frame in model units.
+#[derive(Clone, Copy, Debug)]
+pub struct PatchLayout {
+    pub frame_w: usize,
+    pub frame_h: usize,
+    /// Patch side length in pixels.
+    pub patch: usize,
+    /// Merge factor (merge x merge patches -> 1 token).
+    pub merge: usize,
+}
+
+impl PatchLayout {
+    pub fn new(frame_w: usize, frame_h: usize, patch: usize, merge: usize) -> Self {
+        assert!(frame_w % patch == 0 && frame_h % patch == 0);
+        let l = PatchLayout { frame_w, frame_h, patch, merge };
+        assert!(l.grid_w() % merge == 0 && l.grid_h() % merge == 0);
+        l
+    }
+
+    /// Patch grid width (patches per row).
+    pub fn grid_w(&self) -> usize {
+        self.frame_w / self.patch
+    }
+
+    pub fn grid_h(&self) -> usize {
+        self.frame_h / self.patch
+    }
+
+    pub fn patches_per_frame(&self) -> usize {
+        self.grid_w() * self.grid_h()
+    }
+
+    /// Token (merge-group) grid width.
+    pub fn tok_w(&self) -> usize {
+        self.grid_w() / self.merge
+    }
+
+    pub fn tok_h(&self) -> usize {
+        self.grid_h() / self.merge
+    }
+
+    pub fn tokens_per_frame(&self) -> usize {
+        self.tok_w() * self.tok_h()
+    }
+
+    pub fn patches_per_group(&self) -> usize {
+        self.merge * self.merge
+    }
+
+    /// Patch index -> (px, py) grid coords.
+    pub fn patch_xy(&self, idx: usize) -> (usize, usize) {
+        (idx % self.grid_w(), idx / self.grid_w())
+    }
+
+    /// (px, py) -> patch index.
+    pub fn patch_idx(&self, px: usize, py: usize) -> usize {
+        py * self.grid_w() + px
+    }
+
+    /// Patch index -> merge-group (token) index.
+    pub fn group_of(&self, patch_idx: usize) -> usize {
+        let (px, py) = self.patch_xy(patch_idx);
+        (py / self.merge) * self.tok_w() + px / self.merge
+    }
+
+    /// Patches of a merge group, raster order within the group — the
+    /// contiguous ordering the AOT `vit_encode` expects.
+    pub fn group_patches(&self, group_idx: usize) -> Vec<usize> {
+        let gx = group_idx % self.tok_w();
+        let gy = group_idx / self.tok_w();
+        let mut out = Vec::with_capacity(self.patches_per_group());
+        for dy in 0..self.merge {
+            for dx in 0..self.merge {
+                out.push(self.patch_idx(gx * self.merge + dx, gy * self.merge + dy));
+            }
+        }
+        out
+    }
+
+    /// Macroblock covering a patch (block->patch resampling: a patch
+    /// maps to the MB containing its top-left pixel; with patch <= MB
+    /// each patch lies in exactly one MB).
+    pub fn mb_of_patch(&self, patch_idx: usize) -> (usize, usize) {
+        let (px, py) = self.patch_xy(patch_idx);
+        ((px * self.patch) / MB, (py * self.patch) / MB)
+    }
+
+    /// Extract a patch's pixels as normalized f32 ([0,1]-ish, centered).
+    pub fn extract_patch(&self, frame: &crate::codec::types::Frame, patch_idx: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.patch * self.patch);
+        let (px, py) = self.patch_xy(patch_idx);
+        let x0 = px * self.patch;
+        let y0 = py * self.patch;
+        for y in 0..self.patch {
+            for x in 0..self.patch {
+                out[y * self.patch + x] =
+                    (frame.at(x0 + x, y0 + y) as f32 - 128.0) / 64.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick;
+
+    fn default_layout() -> PatchLayout {
+        PatchLayout::new(64, 64, 8, 2)
+    }
+
+    #[test]
+    fn counts() {
+        let l = default_layout();
+        assert_eq!(l.patches_per_frame(), 64);
+        assert_eq!(l.tokens_per_frame(), 16);
+        assert_eq!(l.patches_per_group(), 4);
+    }
+
+    #[test]
+    fn group_partitioning_is_exact() {
+        let l = default_layout();
+        let mut seen = vec![false; l.patches_per_frame()];
+        for g in 0..l.tokens_per_frame() {
+            for p in l.group_patches(g) {
+                assert!(!seen[p]);
+                seen[p] = true;
+                assert_eq!(l.group_of(p), g);
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn mb_mapping_covers_grid() {
+        let l = default_layout();
+        for p in 0..l.patches_per_frame() {
+            let (mx, my) = l.mb_of_patch(p);
+            assert!(mx < 4 && my < 4);
+        }
+        // 4 patches per MB (8x8 patch, 16x16 MB)
+        let mut count = std::collections::HashMap::new();
+        for p in 0..l.patches_per_frame() {
+            *count.entry(l.mb_of_patch(p)).or_insert(0) += 1;
+        }
+        assert!(count.values().all(|&c| c == 4));
+    }
+
+    #[test]
+    fn prop_roundtrip_patch_xy(){
+        quick::check(0x1A7, 100, |g| {
+            let l = default_layout();
+            let idx = g.usize_in(0, l.patches_per_frame() - 1);
+            let (x, y) = l.patch_xy(idx);
+            assert_eq!(l.patch_idx(x, y), idx);
+        });
+    }
+
+    #[test]
+    fn extract_patch_normalizes() {
+        let l = default_layout();
+        let mut f = crate::codec::types::Frame::new(64, 64);
+        f.set(0, 0, 192);
+        let mut buf = vec![0.0f32; 64];
+        l.extract_patch(&f, 0, &mut buf);
+        assert!((buf[0] - 1.0).abs() < 1e-6);
+        assert!((buf[1] + 2.0).abs() < 1e-6); // 0 -> -2.0
+    }
+}

@@ -1,0 +1,17 @@
+//! Codec-guided visual processing (paper §3.3).
+//!
+//! [`layout`] owns the geometry: frame -> patch grid -> merge groups ->
+//! tokens, and the macroblock -> patch resampling. [`analyzer`] builds
+//! the patch-level motion mask `M_t(i) = V_t(i) + alpha * R_t(i)`
+//! (eq. 3) from decode-time codec metadata. [`pruner`] turns the mask
+//! into retention decisions (eq. 4) with GOP accumulation and
+//! group-complete expansion, producing the exact patch/token sets the
+//! runtime feeds to the AOT ViT.
+
+pub mod analyzer;
+pub mod layout;
+pub mod pruner;
+
+pub use analyzer::{MotionAnalyzer, MotionMask};
+pub use layout::PatchLayout;
+pub use pruner::{FrameSelection, PrunerConfig, TokenPruner};

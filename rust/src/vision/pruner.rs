@@ -1,0 +1,229 @@
+//! Token Pruner: motion mask -> patch/token retention (paper §3.3.2).
+//!
+//! * eq. 4: `dynamic(i) = M_t(i) >= tau`;
+//! * GOP accumulation: once a patch is dynamic it stays in the active
+//!   set until the next I-frame resets the mask;
+//! * I-frames are always fully encoded (all patches retained) — they
+//!   are the reference visual context;
+//! * group-complete expansion: if any patch of a merge group is
+//!   dynamic, all patches of the group are retained so the native
+//!   downsampling projector still sees complete groups.
+
+use crate::codec::types::FrameType;
+
+use super::analyzer::MotionMask;
+use super::layout::PatchLayout;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PrunerConfig {
+    /// MV threshold tau in pixels (paper default 0.25, Fig 17 sweep).
+    pub tau: f32,
+}
+
+impl Default for PrunerConfig {
+    fn default() -> Self {
+        PrunerConfig { tau: 0.25 }
+    }
+}
+
+/// Retention decision for one frame.
+#[derive(Clone, Debug)]
+pub struct FrameSelection {
+    /// Retained patch indices, ordered group-by-group (contiguous runs
+    /// of merge^2 patches — the order `vit_encode` requires).
+    pub patches: Vec<usize>,
+    /// Retained merge-group (token) indices, ascending.
+    pub groups: Vec<usize>,
+    /// Whether this frame is an I-frame (fully retained).
+    pub is_iframe: bool,
+    /// Total patches in the frame (for ratio reporting).
+    pub total_patches: usize,
+    pub total_groups: usize,
+}
+
+impl FrameSelection {
+    pub fn pruned_patch_ratio(&self) -> f64 {
+        1.0 - self.patches.len() as f64 / self.total_patches as f64
+    }
+
+    pub fn pruned_token_ratio(&self) -> f64 {
+        1.0 - self.groups.len() as f64 / self.total_groups as f64
+    }
+}
+
+/// Stateful per-stream pruner (carries the GOP-accumulated mask).
+pub struct TokenPruner {
+    pub cfg: PrunerConfig,
+    layout: PatchLayout,
+    /// Accumulated dynamic flags since the last I-frame.
+    active: Vec<bool>,
+}
+
+impl TokenPruner {
+    pub fn new(layout: PatchLayout, cfg: PrunerConfig) -> Self {
+        let n = layout.patches_per_frame();
+        TokenPruner { cfg, layout, active: vec![false; n] }
+    }
+
+    /// Decide retention for the next frame of the stream.
+    pub fn select(&mut self, mask: &MotionMask) -> FrameSelection {
+        let n = self.layout.patches_per_frame();
+        debug_assert_eq!(mask.values.len(), n);
+        let is_iframe = mask.frame_type == FrameType::I;
+
+        if is_iframe {
+            // Reset the accumulated mask; retain everything.
+            self.active.iter_mut().for_each(|a| *a = false);
+            let groups: Vec<usize> = (0..self.layout.tokens_per_frame()).collect();
+            let patches = groups
+                .iter()
+                .flat_map(|&g| self.layout.group_patches(g))
+                .collect();
+            return FrameSelection {
+                patches,
+                groups,
+                is_iframe: true,
+                total_patches: n,
+                total_groups: self.layout.tokens_per_frame(),
+            };
+        }
+
+        // eq. 4 + GOP accumulation.
+        for i in 0..n {
+            if mask.values[i] >= self.cfg.tau {
+                self.active[i] = true;
+            }
+        }
+        // Group-complete expansion.
+        let mut group_dyn = vec![false; self.layout.tokens_per_frame()];
+        for i in 0..n {
+            if self.active[i] {
+                group_dyn[self.layout.group_of(i)] = true;
+            }
+        }
+        let groups: Vec<usize> = group_dyn
+            .iter()
+            .enumerate()
+            .filter_map(|(g, &d)| if d { Some(g) } else { None })
+            .collect();
+        let patches: Vec<usize> = groups
+            .iter()
+            .flat_map(|&g| self.layout.group_patches(g))
+            .collect();
+        FrameSelection {
+            patches,
+            groups,
+            is_iframe: false,
+            total_patches: n,
+            total_groups: self.layout.tokens_per_frame(),
+        }
+    }
+
+    pub fn layout(&self) -> &PatchLayout {
+        &self.layout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::types::FrameType;
+    use crate::util::quick;
+
+    fn layout() -> PatchLayout {
+        PatchLayout::new(64, 64, 8, 2)
+    }
+
+    fn mask(values: Vec<f32>, ft: FrameType) -> MotionMask {
+        MotionMask { values, frame_type: ft, gop_pos: if ft == FrameType::I { 0 } else { 1 } }
+    }
+
+    #[test]
+    fn iframe_retains_all() {
+        let l = layout();
+        let mut p = TokenPruner::new(l, PrunerConfig::default());
+        let sel = p.select(&mask(vec![0.0; 64], FrameType::I));
+        assert!(sel.is_iframe);
+        assert_eq!(sel.patches.len(), 64);
+        assert_eq!(sel.groups.len(), 16);
+        assert_eq!(sel.pruned_patch_ratio(), 0.0);
+    }
+
+    #[test]
+    fn static_pframe_prunes_all() {
+        let l = layout();
+        let mut p = TokenPruner::new(l, PrunerConfig::default());
+        let sel = p.select(&mask(vec![0.0; 64], FrameType::P));
+        assert!(sel.patches.is_empty());
+        assert!(sel.groups.is_empty());
+        assert_eq!(sel.pruned_token_ratio(), 1.0);
+    }
+
+    #[test]
+    fn group_complete_expansion() {
+        let l = layout();
+        let mut p = TokenPruner::new(l, PrunerConfig { tau: 0.25 });
+        let mut v = vec![0.0f32; 64];
+        v[l.patch_idx(0, 0)] = 1.0; // one dynamic patch in group 0
+        let sel = p.select(&mask(v, FrameType::P));
+        assert_eq!(sel.groups, vec![0]);
+        assert_eq!(sel.patches.len(), 4); // the whole merge group
+        let mut want = l.group_patches(0);
+        want.sort_unstable();
+        let mut got = sel.patches.clone();
+        got.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gop_accumulation_persists() {
+        let l = layout();
+        let mut p = TokenPruner::new(l, PrunerConfig { tau: 0.25 });
+        let mut v = vec![0.0f32; 64];
+        v[0] = 1.0;
+        let s1 = p.select(&mask(v, FrameType::P));
+        assert_eq!(s1.groups.len(), 1);
+        // Next P-frame: no motion, but patch 0 stays active.
+        let s2 = p.select(&mask(vec![0.0; 64], FrameType::P));
+        assert_eq!(s2.groups.len(), 1);
+        // I-frame resets.
+        let _ = p.select(&mask(vec![0.0; 64], FrameType::I));
+        let s3 = p.select(&mask(vec![0.0; 64], FrameType::P));
+        assert!(s3.groups.is_empty());
+    }
+
+    #[test]
+    fn higher_tau_prunes_more() {
+        let l = layout();
+        let values: Vec<f32> = (0..64).map(|i| i as f32 / 16.0).collect();
+        let mut loose = TokenPruner::new(l, PrunerConfig { tau: 0.25 });
+        let mut tight = TokenPruner::new(l, PrunerConfig { tau: 3.0 });
+        let a = loose.select(&mask(values.clone(), FrameType::P));
+        let b = tight.select(&mask(values, FrameType::P));
+        assert!(b.patches.len() <= a.patches.len());
+    }
+
+    #[test]
+    fn prop_patches_are_group_runs() {
+        quick::check(0x5E1, 60, |g| {
+            let l = layout();
+            let tau = g.f64_in(0.1, 3.0) as f32;
+            let mut p = TokenPruner::new(l, PrunerConfig { tau });
+            for _ in 0..g.usize_in(1, 6) {
+                let ft = if g.bool() { FrameType::P } else { FrameType::I };
+                let values = g.vec_f32(64, 0.0, 4.0);
+                let sel = p.select(&mask(values, ft));
+                // patches come in merge-group-complete runs of 4
+                assert_eq!(sel.patches.len() % 4, 0);
+                for (chunk, &grp) in sel.patches.chunks(4).zip(&sel.groups) {
+                    let want = l.group_patches(grp);
+                    assert_eq!(chunk, &want[..]);
+                }
+                // groups ascending, unique
+                for w in sel.groups.windows(2) {
+                    assert!(w[0] < w[1]);
+                }
+            }
+        });
+    }
+}

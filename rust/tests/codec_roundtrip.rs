@@ -1,0 +1,177 @@
+//! Codec integration: encoder -> bitstream -> decoder roundtrips over
+//! real synthetic video, metadata consistency, and compression
+//! behaviour (the substrate assumptions the paper's mechanism needs).
+
+use codecflow::codec::decoder::Decoder;
+use codecflow::codec::encoder::{encode_sequence, Encoder, EncoderConfig};
+use codecflow::codec::jpeg;
+use codecflow::codec::types::FrameType;
+use codecflow::util::quick;
+use codecflow::video::{Corpus, CorpusConfig, MotionLevel};
+use codecflow::video::scene::{Scene, SceneConfig};
+
+fn corpus_frames(motion: MotionLevel, n: usize, seed: u64) -> Vec<codecflow::codec::types::Frame> {
+    let mut scene = Scene::new(SceneConfig::new(motion, seed));
+    (0..n).map(|t| scene.render(t)).collect()
+}
+
+#[test]
+fn roundtrip_reconstruction_quality() {
+    let frames = corpus_frames(MotionLevel::Medium, 20, 7);
+    let (bits, enc_metas) = encode_sequence(&frames, EncoderConfig::default());
+    let mut dec = Decoder::new(bits).unwrap();
+    let decoded = dec.decode_all().unwrap();
+    assert_eq!(decoded.len(), frames.len());
+    for (i, ((df, dm), orig)) in decoded.iter().zip(&frames).enumerate() {
+        let psnr = orig.psnr(df);
+        assert!(psnr > 28.0, "frame {i}: psnr {psnr}");
+        // decoder metadata must match encoder metadata exactly
+        let em = &enc_metas[i];
+        assert_eq!(dm.frame_type, em.frame_type, "frame {i} type");
+        assert_eq!(dm.mvs, em.mvs, "frame {i} mvs");
+        assert_eq!(dm.residual_sad, em.residual_sad, "frame {i} sads");
+    }
+}
+
+#[test]
+fn gop_structure_respected() {
+    let frames = corpus_frames(MotionLevel::Low, 20, 3);
+    let (bits, _) = encode_sequence(&frames, EncoderConfig { gop: 8, ..Default::default() });
+    let mut dec = Decoder::new(bits).unwrap();
+    let decoded = dec.decode_all().unwrap();
+    for (i, (_, meta)) in decoded.iter().enumerate() {
+        let want = if i % 8 == 0 { FrameType::I } else { FrameType::P };
+        assert_eq!(meta.frame_type, want, "frame {i}");
+        if meta.frame_type == FrameType::P {
+            assert_eq!(meta.gop_pos, i % 8);
+            assert_eq!(meta.mvs.len(), 16); // 4x4 macroblocks at 64x64
+        }
+    }
+}
+
+#[test]
+fn interframe_beats_jpeg_on_static_content() {
+    // The compression advantage that drives the paper's transmission
+    // reduction: temporal prediction removes inter-frame redundancy.
+    let frames = corpus_frames(MotionLevel::Low, 16, 11);
+    let (bits, _) = encode_sequence(&frames, EncoderConfig::default());
+    let jpeg_total: usize = frames.iter().map(|f| jpeg::encode(f, 6).len()).sum();
+    assert!(
+        bits.len() * 2 < jpeg_total,
+        "bitstream {} should be <0.5x jpeg {}",
+        bits.len(),
+        jpeg_total
+    );
+}
+
+#[test]
+fn high_motion_costs_more_bits() {
+    let low = corpus_frames(MotionLevel::Low, 16, 5);
+    let high = corpus_frames(MotionLevel::High, 16, 5);
+    let (lb, _) = encode_sequence(&low, EncoderConfig::default());
+    let (hb, _) = encode_sequence(&high, EncoderConfig::default());
+    assert!(hb.len() > lb.len(), "high {} !> low {}", hb.len(), lb.len());
+}
+
+#[test]
+fn mv_magnitude_tracks_motion_level() {
+    let mut mags = Vec::new();
+    for lvl in MotionLevel::all() {
+        let frames = corpus_frames(lvl, 16, 13);
+        let (bits, _) = encode_sequence(&frames, EncoderConfig::default());
+        let mut dec = Decoder::new(bits).unwrap();
+        let decoded = dec.decode_all().unwrap();
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        for (_, meta) in &decoded {
+            for mv in &meta.mvs {
+                total += mv.magnitude() as f64;
+                count += 1;
+            }
+        }
+        mags.push(if count == 0 { 0.0 } else { total / count as f64 });
+    }
+    assert!(
+        mags[0] < mags[2],
+        "low {:.3} should be < high {:.3}",
+        mags[0],
+        mags[2]
+    );
+}
+
+#[test]
+fn anomalous_clips_have_higher_motion_signal() {
+    let corpus = Corpus::generate(CorpusConfig {
+        videos: 6,
+        frames_per_video: 60,
+        ..Default::default()
+    });
+    // Compare the anomaly window vs a normal window within the same
+    // anomalous clip: codec MV energy must spike during the event.
+    let clip = corpus.clips.iter().find(|c| c.is_anomalous()).unwrap();
+    let e = clip.event.unwrap();
+    let (bits, _) = encode_sequence(&clip.frames, EncoderConfig::default());
+    let mut dec = Decoder::new(bits).unwrap();
+    let decoded = dec.decode_all().unwrap();
+    let energy = |lo: usize, hi: usize| -> f64 {
+        decoded[lo..hi]
+            .iter()
+            .flat_map(|(_, m)| m.mvs.iter())
+            .map(|mv| mv.magnitude() as f64)
+            .sum()
+    };
+    if e.start > 8 && e.end < decoded.len() {
+        let before = energy(1, e.start.min(decoded.len()));
+        let during = energy(e.start, e.end.min(decoded.len()));
+        let before_rate = before / (e.start - 1).max(1) as f64;
+        let during_rate = during / e.len().max(1) as f64;
+        assert!(
+            during_rate > before_rate,
+            "during {during_rate:.3} !> before {before_rate:.3}"
+        );
+    }
+}
+
+#[test]
+fn prop_decoder_rejects_corruption_gracefully() {
+    let frames = corpus_frames(MotionLevel::Medium, 8, 17);
+    let (bits, _) = encode_sequence(&frames, EncoderConfig::default());
+    quick::check(0xC02217, 30, |g| {
+        let mut corrupted = bits.clone();
+        // flip a few random bytes past the header
+        for _ in 0..g.usize_in(1, 8) {
+            let pos = g.usize_in(8, corrupted.len() - 1);
+            corrupted[pos] ^= g.usize_in(1, 255) as u8;
+        }
+        // must not panic: either decodes something or errors out
+        if let Ok(mut dec) = Decoder::new(corrupted) {
+            let mut guard = 0;
+            while let Ok(Some(_)) = dec.next_frame() {
+                guard += 1;
+                if guard > 64 {
+                    break;
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn truncated_stream_errors_not_panics() {
+    let frames = corpus_frames(MotionLevel::Low, 4, 19);
+    let (bits, _) = encode_sequence(&frames, EncoderConfig::default());
+    for cut in [bits.len() / 7, bits.len() / 3, bits.len() - 2] {
+        if let Ok(mut dec) = Decoder::new(bits[..cut].to_vec()) {
+            let mut frames_ok = 0;
+            loop {
+                match dec.next_frame() {
+                    Ok(Some(_)) => frames_ok += 1,
+                    Ok(None) | Err(_) => break,
+                }
+                if frames_ok > 8 {
+                    break;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Cross-language integration: the rust PJRT engine executes the AOT
+//! artifacts and must reproduce the python-side golden outputs
+//! (artifacts/golden/<model>.json, written by compile/aot.py).
+//!
+//! These tests require `make artifacts`; they are skipped (with a
+//! message) when the artifacts directory is absent.
+
+use codecflow::config::artifacts_dir;
+use codecflow::json::Value;
+use codecflow::kvc::block::KvBlock;
+use codecflow::kvc::rope;
+use codecflow::runtime::engine::Engine;
+use codecflow::runtime::tensor::Tensor;
+
+fn engine() -> Option<Engine> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+fn golden(model: &str) -> Option<Value> {
+    let path = artifacts_dir().join("golden").join(format!("{model}.json"));
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Value::parse(&text).expect("golden json"))
+}
+
+fn assert_close(got: &[f32], want: &[f32], atol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(worst <= atol, "{what}: max abs diff {worst} > {atol}");
+}
+
+#[test]
+fn vit_encode_matches_golden() {
+    let Some(eng) = engine() else { return };
+    for model in ["internvl3_sim", "qwen3vl_sim"] {
+        let g = golden(model).unwrap();
+        let spec = eng.model_spec(model).unwrap();
+        let v = g.get("vit_encode").unwrap();
+        let n = v.get("bucket").unwrap().as_usize().unwrap();
+        let patches = v.get("patches").unwrap().f32_vec().unwrap();
+        let pos_ids: Vec<i32> = v
+            .get("pos_ids")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect();
+        let mask = v.get("mask").unwrap().f32_vec().unwrap();
+        let want = v.get("tokens").unwrap().f32_vec().unwrap();
+
+        let out = eng
+            .execute(
+                model,
+                &format!("vit_encode_n{n}"),
+                &[
+                    Tensor::f32(&[n, spec.patch_dim], patches),
+                    Tensor::i32(&[n], pos_ids),
+                    Tensor::f32(&[n], mask),
+                ],
+            )
+            .expect("vit_encode");
+        assert_close(out[0].as_f32(), &want, 2e-4, &format!("{model} vit tokens"));
+    }
+}
+
+#[test]
+fn prefill_full_matches_golden() {
+    let Some(eng) = engine() else { return };
+    for model in ["internvl3_sim", "qwen3vl_sim"] {
+        let g = golden(model).unwrap();
+        let spec = eng.model_spec(model).unwrap();
+        let p = g.get("prefill_full").unwrap();
+        let t = p.get("bucket").unwrap().as_usize().unwrap();
+        let emb = p.get("emb").unwrap().f32_vec().unwrap();
+        let want_hidden = p.get("last_hidden").unwrap().f32_vec().unwrap();
+        let want_logits = p.get("logits").unwrap().f32_vec().unwrap();
+
+        let pos: Vec<i32> = (0..t as i32).collect();
+        let out = eng
+            .execute(
+                model,
+                &format!("prefill_full_t{t}"),
+                &[
+                    Tensor::f32(&[t, spec.llm_dim], emb),
+                    Tensor::i32(&[t], pos),
+                    Tensor::f32(&[t], vec![1.0; t]),
+                    Tensor::scalar_i32(t as i32 - 1),
+                ],
+            )
+            .expect("prefill_full");
+        assert_close(out[0].as_f32(), &want_hidden, 2e-4, &format!("{model} last_hidden"));
+        let want_pooled = p.get("pooled").unwrap().f32_vec().unwrap();
+        assert_close(out[1].as_f32(), &want_pooled, 2e-4, &format!("{model} pooled"));
+        assert_close(out[2].as_f32(), &want_logits, 2e-4, &format!("{model} logits"));
+
+        // K/V checksums
+        for (idx, key) in [(3usize, "k_check"), (4usize, "v_check")] {
+            let chk = p.get(key).unwrap();
+            let want_sum = chk.get("sum").unwrap().as_f64().unwrap();
+            let got_sum: f64 = out[idx].as_f32().iter().map(|&x| x as f64).sum();
+            let tol = 1e-2 * (want_sum.abs() + 1.0);
+            assert!(
+                (got_sum - want_sum).abs() < tol,
+                "{model} {key}: sum {got_sum} vs {want_sum}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rope_correction_matches_golden() {
+    let Some(eng) = engine() else { return };
+    for model in ["internvl3_sim", "qwen3vl_sim"] {
+        let g = golden(model).unwrap();
+        let spec = eng.model_spec(model).unwrap();
+        let r = g.get("rope_correct").unwrap();
+        let shape = r.get("shape").unwrap().usize_vec().unwrap();
+        let (l, h, t, hd) = (shape[0], shape[1], shape[2], shape[3]);
+        let k_in = r.get("k_in").unwrap().f32_vec().unwrap();
+        let want = r.get("k_out").unwrap().f32_vec().unwrap();
+        let delta = r.get("delta").unwrap().as_i64().unwrap() as i32;
+
+        let mut block = KvBlock::from_data(l, h, t, hd, k_in);
+        rope::correct_keys(&mut block, &vec![delta; t], spec.rope_base);
+        assert_close(&block.data, &want, 2e-5, &format!("{model} rope_correct"));
+    }
+}
+
+/// End-to-end invariant on the real engine: incremental prefill with
+/// exactly-reused KV equals the tail of full prefill (the python-side
+/// test_model.py invariant, verified through HLO + PJRT + rust).
+#[test]
+fn incremental_prefill_consistency_via_pjrt() {
+    let Some(eng) = engine() else { return };
+    let model = "internvl3_sim";
+    let spec = eng.model_spec(model).unwrap();
+    let d = spec.llm_dim;
+    let (l, h, hd) = (spec.llm_layers, spec.llm_heads, spec.head_dim);
+
+    // Full prefill over t=96 with deterministic inputs.
+    let t = 96usize;
+    let to = 96usize; // reuse bucket
+    let tn = 48usize;
+    let mut emb = vec![0.0f32; t * d];
+    let mut state = 1234567u64;
+    for v in emb.iter_mut() {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+        *v = ((state >> 33) as f32 / (1u64 << 31) as f32 - 0.5) * 0.2;
+    }
+    let pos: Vec<i32> = (0..t as i32).collect();
+    let full = eng
+        .execute(
+            model,
+            &format!("prefill_full_t{t}"),
+            &[
+                Tensor::f32(&[t, d], emb.clone()),
+                Tensor::i32(&[t], pos.clone()),
+                Tensor::f32(&[t], vec![1.0; t]),
+                Tensor::scalar_i32(t as i32 - 1),
+            ],
+        )
+        .expect("full");
+
+    // Incremental: reuse first 48 tokens' KV (pad old to bucket 96),
+    // recompute last 48.
+    let k_full = KvBlock::from_data(l, h, t, hd, full[3].as_f32().to_vec());
+    let v_full = KvBlock::from_data(l, h, t, hd, full[4].as_f32().to_vec());
+    let old_idx: Vec<usize> = (0..48).collect();
+    let (old_k, old_mask) = k_full.gather(&old_idx).pad_to(to);
+    let (old_v, _) = v_full.gather(&old_idx).pad_to(to);
+
+    let incr = eng
+        .execute(
+            model,
+            &format!("prefill_incr_n{tn}_o{to}"),
+            &[
+                Tensor::f32(&[tn, d], emb[48 * d..].to_vec()),
+                Tensor::i32(&[tn], pos[48..].to_vec()),
+                Tensor::f32(&[tn], vec![1.0; tn]),
+                Tensor::f32(&[l, h, to, hd], old_k.data),
+                Tensor::f32(&[l, h, to, hd], old_v.data),
+                Tensor::f32(&[to], old_mask),
+                Tensor::scalar_i32(tn as i32 - 1),
+            ],
+        )
+        .expect("incr");
+
+    assert_close(incr[2].as_f32(), full[2].as_f32(), 5e-4, "logits full-vs-incr");
+    assert_close(incr[0].as_f32(), full[0].as_f32(), 5e-4, "hidden full-vs-incr");
+}
+
+/// Engine bookkeeping: stats accumulate and warmup precompiles.
+#[test]
+fn engine_stats_and_warmup() {
+    let Some(eng) = engine() else { return };
+    let model = "internvl3_sim";
+    eng.warmup(model, Some(&["embed_text"])).unwrap();
+    let compiles_before = eng.stats.borrow().compiles;
+    assert!(compiles_before >= 1);
+    let spec = eng.model_spec(model).unwrap();
+    let ids: Vec<i32> = spec.prompt_ids.clone();
+    let s = spec.text_len;
+    let _ = eng
+        .execute(model, "embed_text", &[Tensor::i32(&[s], ids)])
+        .unwrap();
+    let stats = eng.stats.borrow();
+    assert_eq!(stats.compiles, compiles_before, "no recompile after warmup");
+    assert_eq!(stats.families["embed_text"].calls, 1);
+}
