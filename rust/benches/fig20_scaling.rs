@@ -1,0 +1,5 @@
+//! `cargo bench --bench fig20_scaling` — regenerates Fig 20 (shard
+//! scaling of aggregate sustainable streams).
+fn main() {
+    codecflow::exp::fig20_scaling::run();
+}

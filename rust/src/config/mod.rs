@@ -118,12 +118,25 @@ pub struct ServingConfig {
     /// Concurrent streams.
     pub streams: usize,
     /// Frontend worker threads (decode/prune are parallel; model
-    /// execution is serialized on the executor thread).
+    /// execution is serialized per executor replica).
     pub frontend_workers: usize,
-    /// KV pool budget in bytes.
+    /// KV pool budget in bytes, split evenly across shards
+    /// ([`ServingConfig::shard_kv_budget`]).
     pub kv_budget_bytes: usize,
     /// Max queued windows before backpressure drops to the newest.
     pub queue_depth: usize,
+    /// Executor replicas (shards). Streams are partitioned across
+    /// shards by consistent hashing of the stream id; each shard owns
+    /// its own admission queue and KV pool.
+    pub num_shards: usize,
+    /// Thread-pool workers driving the shards (usually == num_shards;
+    /// fewer workers time-multiplex shards onto threads).
+    pub workers: usize,
+    /// Streams a shard admits per wave before returning to the shared
+    /// pool; the remainder stays stealable by idle shards.
+    pub admit_wave: usize,
+    /// Cross-shard work stealing when a shard's EDF queue runs dry.
+    pub steal: bool,
 }
 
 impl Default for ServingConfig {
@@ -134,7 +147,43 @@ impl Default for ServingConfig {
             frontend_workers: 4,
             kv_budget_bytes: 256 << 20,
             queue_depth: 16,
+            num_shards: 1,
+            workers: 1,
+            admit_wave: 2,
+            steal: true,
         }
+    }
+}
+
+impl ServingConfig {
+    /// Apply a `key=value` override; serving keys first, then pipeline
+    /// keys. `workers=N` is the one-knob scale-out: it sets both the
+    /// shard count and the thread-pool size.
+    pub fn set(&mut self, key: &str, value: &str) -> bool {
+        match key {
+            "workers" => {
+                if parse_into(value, &mut self.workers) {
+                    self.num_shards = self.workers.max(1);
+                    true
+                } else {
+                    false
+                }
+            }
+            "num_shards" | "shards" => parse_into(value, &mut self.num_shards),
+            "streams" => parse_into(value, &mut self.streams),
+            "frontend_workers" => parse_into(value, &mut self.frontend_workers),
+            "kv_budget_bytes" => parse_into(value, &mut self.kv_budget_bytes),
+            "queue_depth" => parse_into(value, &mut self.queue_depth),
+            "admit_wave" => parse_into(value, &mut self.admit_wave),
+            "steal" => parse_into(value, &mut self.steal),
+            _ => self.pipeline.set(key, value),
+        }
+    }
+
+    /// Per-shard KV budget: the global budget split evenly, so one
+    /// shard's memory pressure cannot evict another shard's caches.
+    pub fn shard_kv_budget(&self) -> usize {
+        (self.kv_budget_bytes / self.num_shards.max(1)).max(1)
     }
 }
 
@@ -191,6 +240,28 @@ mod tests {
         assert_eq!(c.stride_frames(), 10);
         assert!(!c.set("nope", "1"));
         assert!(!c.set("gop", "xyz"));
+    }
+
+    #[test]
+    fn serving_overrides_and_shard_budget() {
+        let mut c = ServingConfig::default();
+        assert!(c.set("workers", "4"));
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.num_shards, 4, "workers= sets the shard count too");
+        assert!(c.set("shards", "2"));
+        assert_eq!(c.num_shards, 2);
+        assert_eq!(c.workers, 4, "shards= leaves the pool size alone");
+        assert!(c.set("steal", "false"));
+        assert!(!c.steal);
+        assert!(c.set("gop", "8"), "pipeline keys pass through");
+        assert_eq!(c.pipeline.gop, 8);
+        assert!(!c.set("nope", "1"));
+
+        c.kv_budget_bytes = 100;
+        c.num_shards = 4;
+        assert_eq!(c.shard_kv_budget(), 25);
+        c.num_shards = 0; // degenerate: treated as one shard
+        assert_eq!(c.shard_kv_budget(), 100);
     }
 
     #[test]

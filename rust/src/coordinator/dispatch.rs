@@ -1,0 +1,253 @@
+//! The sharded serving dispatcher: partition streams across executor
+//! shards, drive every shard concurrently on the [`ThreadPool`], and
+//! fan the per-shard reports back into one merged [`ShardedReport`].
+//!
+//! Scale-out model: `cfg.num_shards` executor replicas (built per
+//! shard, on the shard's own worker thread, via an
+//! [`ExecutorFactory`]), `cfg.workers` pool threads driving them.
+//! Stream placement is the consistent hash in
+//! [`super::shard::assign_shard`]; imbalance is absorbed by work
+//! stealing through the shared [`StealPool`]. A shard worker that
+//! panics is isolated by the pool and reported, not fatal.
+
+use std::sync::Arc;
+
+use crate::baselines::Variant;
+use crate::codec::types::Frame;
+use crate::config::ServingConfig;
+use crate::runtime::replica::ExecutorFactory;
+use crate::util;
+use crate::util::threadpool::ThreadPool;
+
+use super::metrics::Metrics;
+use super::shard::{assign_shard, Shard, ShardReport, StealPool, StreamWork};
+
+/// Merged result of a sharded serving run.
+#[derive(Debug)]
+pub struct ShardedReport {
+    /// Per-shard reports, ordered by shard id. A shard whose worker
+    /// panicked is absent (the panic is logged by the dispatcher).
+    pub shards: Vec<ShardReport>,
+    /// All shards' metrics folded together.
+    pub merged: Metrics,
+    pub streams: usize,
+    pub stride_s: f64,
+    /// Aggregate real-time capacity: the sum over shards of the
+    /// streams each executor replica sustains at this cadence.
+    pub sustainable_streams: f64,
+    /// Streams served away from their home shard.
+    pub stolen_streams: usize,
+    /// Wall-clock seconds for the whole dispatch.
+    pub wall_s: f64,
+    /// Per-window answers: (stream, window_idx, yes).
+    pub answers: Vec<(u64, usize, bool)>,
+}
+
+impl ShardedReport {
+    /// Human-readable summary: the merged metrics report (windows,
+    /// tail latencies, stage totals, FLOPs) plus the per-shard
+    /// utilization breakdown and aggregate capacity.
+    pub fn report(&self, title: &str) -> String {
+        let mut out = self
+            .merged
+            .report(&format!("{title}, {} shard(s)", self.shards.len()));
+        out.push_str(&format!(
+            "streams={} stolen={} wall={:.2}s\n",
+            self.streams, self.stolen_streams, self.wall_s
+        ));
+        for r in &self.shards {
+            out.push_str(&format!(
+                "  shard {}: windows={} streams={} stolen={} busy={:.3}s span={:.3}s \
+                 util={:.0}% sustainable={:.1}\n",
+                r.shard,
+                r.metrics.windows(),
+                r.streams_served,
+                r.stolen_streams,
+                r.busy_s,
+                r.span_s,
+                r.utilization() * 100.0,
+                r.metrics.sustainable_streams(self.stride_s)
+            ));
+        }
+        out.push_str(&format!(
+            "aggregate sustainable streams: {:.1}\n",
+            self.sustainable_streams
+        ));
+        out
+    }
+}
+
+/// Drives a sharded serving run to completion.
+pub struct Dispatcher {
+    pub cfg: ServingConfig,
+    pub model: String,
+}
+
+impl Dispatcher {
+    pub fn new(model: &str, cfg: ServingConfig) -> Dispatcher {
+        Dispatcher { cfg, model: model.to_string() }
+    }
+
+    /// Serve `clips` (one per stream, frames shared via `Arc` so
+    /// repeated sweeps never copy pixel data) with `variant` across
+    /// `cfg.num_shards` executor replicas. `fps` converts the frame
+    /// stride to wall-clock cadence.
+    pub fn run(
+        &self,
+        factory: Arc<dyn ExecutorFactory>,
+        clips: &[Arc<Vec<Frame>>],
+        variant: Variant,
+        fps: f64,
+    ) -> ShardedReport {
+        let num_shards = self.cfg.num_shards.max(1);
+        let stride_s = self.cfg.pipeline.stride_frames() as f64 / fps;
+
+        let streams: Vec<StreamWork> = clips
+            .iter()
+            .enumerate()
+            .map(|(i, frames)| StreamWork {
+                stream: i as u64,
+                home_shard: assign_shard(i as u64, num_shards),
+                frames: Arc::clone(frames),
+            })
+            .collect();
+        let pool = Arc::new(StealPool::new(streams));
+
+        let t0 = util::now();
+        let workers = self.cfg.workers.clamp(1, num_shards);
+        let tp = ThreadPool::new(workers);
+
+        let cfg = self.cfg.clone();
+        let model = self.model.clone();
+        let results = tp.try_map((0..num_shards).collect::<Vec<usize>>(), move |sid| {
+            // Each shard builds its own executor replica on this
+            // worker thread — engines are never shared across threads.
+            let exec = factory.build();
+            let shard = Shard {
+                id: sid,
+                cfg: cfg.clone(),
+                model: model.clone(),
+                variant,
+                fps,
+            };
+            shard.run(exec.as_ref(), &pool)
+        });
+        let wall_s = util::now() - t0;
+
+        let mut shards: Vec<ShardReport> = Vec::with_capacity(num_shards);
+        for (sid, r) in results.into_iter().enumerate() {
+            match r {
+                Ok(rep) => shards.push(rep),
+                Err(msg) => eprintln!("shard {sid} worker panicked: {msg}"),
+            }
+        }
+
+        let mut merged = Metrics::default();
+        let mut answers = Vec::new();
+        let mut sustainable = 0.0;
+        let mut stolen = 0usize;
+        for r in &shards {
+            merged.merge(&r.metrics);
+            sustainable += r.metrics.sustainable_streams(stride_s);
+            stolen += r.stolen_streams;
+            answers.extend_from_slice(&r.answers);
+        }
+
+        ShardedReport {
+            shards,
+            merged,
+            streams: clips.len(),
+            stride_s,
+            sustainable_streams: sustainable,
+            stolen_streams: stolen,
+            wall_s,
+            answers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::replica::MockReplicaFactory;
+    use crate::video::{Corpus, CorpusConfig};
+
+    fn clips(n: usize) -> Vec<Arc<Vec<Frame>>> {
+        Corpus::generate(CorpusConfig { videos: n, frames_per_video: 28, ..Default::default() })
+            .clips
+            .into_iter()
+            .map(|c| Arc::new(c.frames))
+            .collect()
+    }
+
+    fn factory() -> Arc<dyn ExecutorFactory> {
+        Arc::new(MockReplicaFactory::new("m", 0.0))
+    }
+
+    fn cfg(shards: usize) -> ServingConfig {
+        let mut c = ServingConfig::default();
+        c.num_shards = shards;
+        c.workers = shards;
+        c
+    }
+
+    #[test]
+    fn sharded_run_serves_every_window_once() {
+        let report =
+            Dispatcher::new("m", cfg(2)).run(factory(), &clips(6), Variant::CodecFlow, 2.0);
+        // 6 streams x 3 windows each, across both shards, no repeats.
+        assert_eq!(report.merged.windows(), 18);
+        assert_eq!(report.streams, 6);
+        assert_eq!(report.answers.len(), 18);
+        assert_eq!(report.merged.per_stream.len(), 6);
+        for count in report.merged.per_stream.values() {
+            assert_eq!(*count, 3);
+        }
+        let shard_windows: usize = report.shards.iter().map(|r| r.metrics.windows()).sum();
+        assert_eq!(shard_windows, 18);
+    }
+
+    #[test]
+    fn dispatcher_honors_home_assignment_without_stealing() {
+        let mut c = cfg(2);
+        c.steal = false;
+        let report = Dispatcher::new("m", c).run(factory(), &clips(8), Variant::CodecFlow, 2.0);
+        for r in &report.shards {
+            assert_eq!(r.stolen_streams, 0);
+            for stream in r.metrics.per_stream.keys() {
+                assert_eq!(
+                    assign_shard(*stream, 2),
+                    r.shard,
+                    "stream {stream} served off its home shard"
+                );
+            }
+        }
+        assert_eq!(report.merged.windows(), 24, "all windows still served");
+    }
+
+    #[test]
+    fn more_shards_raise_aggregate_sustainable_streams() {
+        let clips = clips(8);
+        let f = factory();
+        let r1 = Dispatcher::new("m", cfg(1)).run(Arc::clone(&f), &clips, Variant::CodecFlow, 2.0);
+        let r4 = Dispatcher::new("m", cfg(4)).run(Arc::clone(&f), &clips, Variant::CodecFlow, 2.0);
+        assert_eq!(r1.merged.windows(), r4.merged.windows());
+        assert!(
+            r4.sustainable_streams > r1.sustainable_streams,
+            "4 shards {:.2} !> 1 shard {:.2}",
+            r4.sustainable_streams,
+            r1.sustainable_streams
+        );
+        assert!(r4.report("scaling").contains("aggregate sustainable"));
+    }
+
+    #[test]
+    fn single_shard_matches_server_semantics() {
+        let report =
+            Dispatcher::new("m", cfg(1)).run(factory(), &clips(3), Variant::CodecFlow, 2.0);
+        assert_eq!(report.shards.len(), 1);
+        assert_eq!(report.merged.windows(), 9);
+        assert_eq!(report.stolen_streams, 0);
+        assert!(report.sustainable_streams > 0.0);
+    }
+}

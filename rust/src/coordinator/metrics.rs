@@ -45,6 +45,22 @@ impl Metrics {
         self.seq_tokens += seq_tokens;
     }
 
+    /// Fold another shard's metrics into this one (order-insensitive:
+    /// totals add, latency samples concatenate).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.window_latency.extend_from_slice(&other.window_latency);
+        self.queue_delay.extend_from_slice(&other.queue_delay);
+        self.stages.add(&other.stages);
+        for (stream, count) in &other.per_stream {
+            *self.per_stream.entry(*stream).or_insert(0) += count;
+        }
+        self.dropped += other.dropped;
+        self.kv_evictions += other.kv_evictions;
+        self.flops += other.flops;
+        self.flops_padded += other.flops_padded;
+        self.seq_tokens += other.seq_tokens;
+    }
+
     pub fn windows(&self) -> usize {
         self.window_latency.len()
     }
@@ -118,6 +134,26 @@ mod tests {
         assert_eq!(m.per_stream[&1], 1);
         assert!((m.latency_summary().mean - 0.5).abs() < 1e-9);
         assert!(m.report("t").contains("windows=2"));
+    }
+
+    #[test]
+    fn merge_adds_totals_and_samples() {
+        let t = StageTimes { vit: 0.1, llm_prefill: 0.4, ..Default::default() };
+        let mut a = Metrics::default();
+        a.record_window(1, &t, 0.01, 100, 150, 32);
+        let mut b = Metrics::default();
+        b.record_window(1, &t, 0.02, 50, 60, 16);
+        b.record_window(2, &t, 0.03, 50, 60, 16);
+        b.dropped = 2;
+        b.kv_evictions = 1;
+        a.merge(&b);
+        assert_eq!(a.windows(), 3);
+        assert_eq!(a.flops, 200);
+        assert_eq!(a.seq_tokens, 64);
+        assert_eq!(a.per_stream[&1], 2);
+        assert_eq!(a.per_stream[&2], 1);
+        assert_eq!(a.dropped, 2);
+        assert_eq!(a.kv_evictions, 1);
     }
 
     #[test]

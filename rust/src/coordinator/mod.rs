@@ -1,20 +1,29 @@
 //! The serving coordinator (L3): stream sessions, admission queue with
-//! backpressure, metrics, and the serving loop.
+//! backpressure, metrics, and the serving loop — single-executor and
+//! sharded.
 //!
-//! Topology (vllm-router-shaped, adapted to one CPU PJRT "device"):
-//! frontend work (decode, pruning, preprocessing) is parallel across
-//! streams on a thread pool; model execution is serialized on the
-//! executor thread that owns the [`crate::runtime::Engine`] — the
-//! same structure as a single-GPU serving queue. The KV pool evicts
-//! the least-recently-served stream's cache under memory pressure,
-//! forcing a full-prefill fallback (measured, not modelled).
+//! Topology (vllm-router-shaped, adapted to CPU PJRT "devices"):
+//! model execution is serialized per executor replica, exactly one
+//! replica per shard. [`serve::Server`] is the single-shard loop (one
+//! executor, one admission queue, one KV pool);
+//! [`dispatch::Dispatcher`] scales out by partitioning streams across
+//! [`shard::Shard`]s with consistent hashing, driving every shard
+//! concurrently on the [`crate::util::threadpool::ThreadPool`], and
+//! stealing pending streams into idle shards. Each shard owns a
+//! private EDF queue and a private `1/num_shards` slice of the KV
+//! budget, so eviction pressure stays shard-local (measured, not
+//! modelled).
 
+pub mod dispatch;
 pub mod metrics;
 pub mod queue;
 pub mod serve;
 pub mod session;
+pub mod shard;
 
+pub use dispatch::{Dispatcher, ShardedReport};
 pub use metrics::Metrics;
 pub use queue::{AdmissionQueue, WindowJob};
 pub use serve::{ServeReport, Server};
 pub use session::StreamSession;
+pub use shard::{assign_shard, Shard, ShardReport, StealPool, StreamWork};

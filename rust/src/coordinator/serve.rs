@@ -1,19 +1,23 @@
-//! The serving loop: multiplex many stream sessions onto one executor.
+//! The single-shard serving loop: multiplex many stream sessions onto
+//! one executor. ([`super::dispatch::Dispatcher`] is the sharded,
+//! multi-worker generalization; both paths run the same
+//! [`super::shard::Shard`] loop — `Server` is one shard owning the
+//! whole KV budget with every stream admitted in the first wave.)
 //!
 //! Windows arrive on each stream's real-time cadence (stride seconds);
 //! the admission queue orders service EDF and applies backpressure;
 //! the KV pool enforces the cache-memory budget across sessions.
 //! Everything reported is measured wall-clock of real work.
 
+use std::sync::Arc;
+
 use crate::baselines::Variant;
 use crate::codec::types::Frame;
 use crate::config::ServingConfig;
-use crate::kvc::pool::KvPool;
 use crate::runtime::mock::Executor;
 
 use super::metrics::Metrics;
-use super::queue::{AdmissionQueue, WindowJob};
-use super::session::StreamSession;
+use super::shard::{Shard, StealPool, StreamWork};
 
 pub struct Server<'a> {
     exec: &'a dyn Executor,
@@ -41,85 +45,39 @@ impl<'a> Server<'a> {
     /// Serve `clips` (one per stream) with `variant`, to completion.
     /// `fps` converts the frame stride to wall-clock cadence.
     pub fn run(&self, clips: &[Vec<Frame>], variant: Variant, fps: f64) -> ServeReport {
-        let mut sessions: Vec<StreamSession<'a>> = clips
+        let stride_s = self.cfg.pipeline.stride_frames() as f64 / fps;
+        let streams: Vec<StreamWork> = clips
             .iter()
             .enumerate()
-            .map(|(i, frames)| {
-                StreamSession::new(
-                    i as u64,
-                    self.exec,
-                    &self.model,
-                    variant,
-                    &self.cfg.pipeline,
-                    frames,
-                )
+            .map(|(i, frames)| StreamWork {
+                stream: i as u64,
+                home_shard: 0,
+                frames: Arc::new(frames.clone()),
             })
             .collect();
+        let pool = StealPool::new(streams);
 
-        let stride_s = self.cfg.pipeline.stride_frames() as f64 / fps;
-        let mut queue = AdmissionQueue::new(self.cfg.queue_depth);
-        let mut pool = KvPool::new(self.cfg.kv_budget_bytes);
-        let mut metrics = Metrics::default();
-        let mut answers = Vec::new();
+        // One shard, whole KV budget, and every stream admitted in the
+        // first wave so EDF interleaves across all streams at once.
+        let mut cfg = self.cfg.clone();
+        cfg.num_shards = 1;
+        cfg.admit_wave = clips.len().max(1);
+        let shard = Shard {
+            id: 0,
+            cfg,
+            model: self.model.clone(),
+            variant,
+            fps,
+        };
+        let report = shard.run(self.exec, &pool);
 
-        // Virtual arrival schedule: stream s window k arrives at
-        // (k+1) * stride_s (the window is complete then).
-        for (sid, s) in sessions.iter().enumerate() {
-            for k in 0..s.window_count() {
-                let (lo, hi) = s.window_range(k);
-                queue.push(WindowJob {
-                    stream: sid as u64,
-                    window_idx: k,
-                    start_frame: lo,
-                    end_frame: hi,
-                    arrival_s: (k as f64 + 1.0) * stride_s,
-                });
-            }
-        }
-
-        // Service clock: executor is busy `latency` per window; queue
-        // delay = max(0, service_start - arrival).
-        let mut clock = 0.0f64;
-        while let Some(job) = queue.pop() {
-            let sid = job.stream as usize;
-            // Sessions advance strictly in window order.
-            debug_assert_eq!(sessions[sid].next_window_idx(), job.window_idx);
-            let r = match sessions[sid].step() {
-                Some(r) => r,
-                None => continue,
-            };
-            let service_start = clock.max(job.arrival_s);
-            let latency = r.times.total();
-            clock = service_start + latency;
-            metrics.record_window(
-                job.stream,
-                &r.times,
-                service_start - job.arrival_s,
-                r.flops,
-                r.flops_padded,
-                r.seq_tokens,
-            );
-            answers.push((job.stream, job.window_idx, false)); // probe applied by caller
-            let _ = &answers;
-
-            // KV pool bookkeeping.
-            let bytes = sessions[sid].kv_bytes();
-            if bytes > 0 {
-                for victim in pool.hold(job.stream, bytes) {
-                    sessions[victim as usize].engine.evict_kv();
-                    metrics.kv_evictions += 1;
-                }
-            }
-        }
-        metrics.dropped = queue.dropped;
-
-        let sustainable = metrics.sustainable_streams(stride_s);
+        let sustainable = report.metrics.sustainable_streams(stride_s);
         ServeReport {
-            metrics,
+            metrics: report.metrics,
             streams: clips.len(),
             stride_s,
             sustainable_streams: sustainable,
-            answers,
+            answers: report.answers,
         }
     }
 }

@@ -66,6 +66,17 @@ impl<'a> StreamSession<'a> {
         self.next_window
     }
 
+    /// Jump the cursor forward to window `k`, skipping (never
+    /// computing) the windows before it. The serving layer uses this
+    /// when backpressure drops stale windows: the dropped work must
+    /// not be executed, and the surviving jobs must map to their own
+    /// windows. Backward seeks are ignored.
+    pub fn seek(&mut self, k: usize) {
+        if k > self.next_window {
+            self.next_window = k.min(self.window_count());
+        }
+    }
+
     /// Process the next window end-to-end; returns None when done.
     pub fn step(&mut self) -> Option<WindowResult> {
         if !self.has_next() {
@@ -125,6 +136,24 @@ mod tests {
         assert_eq!(count, 4);
         assert!(!s.has_next());
         assert!(s.kv_bytes() > 0);
+    }
+
+    #[test]
+    fn seek_skips_forward_only() {
+        let mock = MockEngine::new("m");
+        let cfg = PipelineConfig::default();
+        let mut s = StreamSession::new(1, &mock, "m", Variant::CodecFlow, &cfg, &clip_frames());
+        s.seek(2);
+        assert_eq!(s.next_window_idx(), 2);
+        s.seek(1); // backward: ignored
+        assert_eq!(s.next_window_idx(), 2);
+        let mut served = 0;
+        while s.step().is_some() {
+            served += 1;
+        }
+        assert_eq!(served, 2, "windows 2 and 3 of 4 remain after seek(2)");
+        s.seek(99); // past the end: clamps, step stays exhausted
+        assert!(s.step().is_none());
     }
 
     #[test]

@@ -1,0 +1,410 @@
+//! One serving shard: an executor replica, its admission queue, its
+//! slice of the KV budget, and the streams consistently assigned to it.
+//!
+//! Partitioning model (ViCoStream-style stage-wise scale-out):
+//! * streams map to a **home shard** by a consistent hash of the
+//!   stream id ([`assign_shard`]) — the same stream always lands on
+//!   the same shard, so its KV cache never migrates;
+//! * each shard owns a private EDF [`AdmissionQueue`] and a private
+//!   [`KvPool`] holding `1/num_shards` of the global budget, so one
+//!   shard's memory pressure cannot evict another shard's caches;
+//! * streams are admitted in waves; streams not yet claimed sit in the
+//!   shared [`StealPool`], and a shard whose queue runs dry **steals**
+//!   pending streams from busier shards (a stolen stream runs entirely
+//!   on the thief, preserving in-order windows and KV locality).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::baselines::Variant;
+use crate::codec::types::Frame;
+use crate::config::ServingConfig;
+use crate::kvc::pool::KvPool;
+use crate::runtime::mock::Executor;
+use crate::util;
+
+use super::metrics::Metrics;
+use super::queue::{AdmissionQueue, WindowJob};
+use super::session::StreamSession;
+
+/// Consistent stream -> shard assignment (FNV-1a over the stream id).
+/// Stable across runs and independent of admission order.
+pub fn assign_shard(stream: u64, num_shards: usize) -> usize {
+    let n = num_shards.max(1);
+    let mut h = 0xcbf29ce484222325u64;
+    for byte in stream.to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h % n as u64) as usize
+}
+
+/// One stream waiting to be served: its frames plus the shard the
+/// consistent hash assigned it to. Frames are shared (`Arc`), so
+/// queueing a stream never copies pixel data.
+#[derive(Clone, Debug)]
+pub struct StreamWork {
+    pub stream: u64,
+    pub home_shard: usize,
+    pub frames: Arc<Vec<Frame>>,
+}
+
+/// Shared pool of not-yet-claimed streams. Shards prefer their own
+/// (`take_home`); an idle shard falls back to `steal`.
+pub struct StealPool {
+    pending: Mutex<Vec<StreamWork>>,
+    stolen: AtomicUsize,
+}
+
+impl StealPool {
+    pub fn new(streams: Vec<StreamWork>) -> Self {
+        StealPool { pending: Mutex::new(streams), stolen: AtomicUsize::new(0) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total streams taken by non-home shards so far.
+    pub fn stolen(&self) -> usize {
+        self.stolen.load(Ordering::SeqCst)
+    }
+
+    /// Claim the next pending stream whose home is `shard`.
+    pub fn take_home(&self, shard: usize) -> Option<StreamWork> {
+        let mut pending = self.pending.lock().unwrap();
+        let pos = pending.iter().position(|w| w.home_shard == shard)?;
+        Some(pending.remove(pos))
+    }
+
+    /// Claim any pending stream (work stealing); counts the steal.
+    /// Callers should try [`StealPool::take_home`] first, so anything
+    /// left here belongs to a busier shard.
+    pub fn steal(&self) -> Option<StreamWork> {
+        let mut pending = self.pending.lock().unwrap();
+        if pending.is_empty() {
+            return None;
+        }
+        let work = pending.remove(0);
+        self.stolen.fetch_add(1, Ordering::SeqCst);
+        Some(work)
+    }
+}
+
+/// Result of one shard's serving run.
+#[derive(Debug)]
+pub struct ShardReport {
+    pub shard: usize,
+    pub metrics: Metrics,
+    /// Streams this shard served (home + stolen).
+    pub streams_served: usize,
+    /// Streams this shard took from other shards' backlogs.
+    pub stolen_streams: usize,
+    /// Executor-busy virtual seconds (sum of window service times).
+    pub busy_s: f64,
+    /// Virtual span from t=0 to the last window's completion.
+    pub span_s: f64,
+    /// Wall-clock seconds the shard's worker spent end to end.
+    pub wall_s: f64,
+    /// Per-window answers: (stream, window_idx, yes).
+    pub answers: Vec<(u64, usize, bool)>,
+}
+
+impl ShardReport {
+    /// Fraction of the shard's virtual span its executor was busy.
+    pub fn utilization(&self) -> f64 {
+        if self.span_s > 0.0 {
+            (self.busy_s / self.span_s).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One shard of the serving layer. `run` executes on the dispatcher's
+/// thread pool, against an executor replica built on that same thread.
+pub struct Shard {
+    pub id: usize,
+    pub cfg: ServingConfig,
+    pub model: String,
+    pub variant: Variant,
+    /// Frames per second, converting frame stride to wall cadence.
+    pub fps: f64,
+}
+
+impl Shard {
+    /// Serve streams pulled from `pool` to completion: own streams
+    /// first (in waves of `admit_wave`), then stolen ones. Mirrors the
+    /// single-executor [`super::serve::Server`] loop per shard: EDF
+    /// service order, virtual arrival clock, KV-pool bookkeeping.
+    pub fn run(&self, exec: &dyn Executor, pool: &StealPool) -> ShardReport {
+        let t0 = util::now();
+        let stride_s = self.cfg.pipeline.stride_frames() as f64 / self.fps;
+        let wave = self.cfg.admit_wave.max(1);
+
+        let mut queue = AdmissionQueue::new(self.cfg.queue_depth);
+        let mut kv = KvPool::new(self.cfg.shard_kv_budget());
+        let mut metrics = Metrics::default();
+        let mut answers = Vec::new();
+        let mut sessions: Vec<StreamSession> = Vec::new();
+        let mut index: HashMap<u64, usize> = HashMap::new();
+
+        let mut clock = 0.0f64;
+        let mut busy = 0.0f64;
+        let mut streams_served = 0usize;
+        let mut stolen_streams = 0usize;
+
+        loop {
+            if queue.is_empty() {
+                // Admit the next wave: home streams first, then steal.
+                // Keep pulling waves until something yields a window
+                // (zero-window streams must not stall the shard).
+                while queue.is_empty() {
+                    let mut admitted = 0usize;
+                    while admitted < wave {
+                        let (work, stolen) = match pool.take_home(self.id) {
+                            Some(w) => (w, false),
+                            None if self.cfg.steal => match pool.steal() {
+                                Some(w) => (w, true),
+                                None => break,
+                            },
+                            None => break,
+                        };
+                        let sid = work.stream;
+                        let session = StreamSession::new(
+                            sid,
+                            exec,
+                            &self.model,
+                            self.variant,
+                            &self.cfg.pipeline,
+                            work.frames.as_slice(),
+                        );
+                        for k in 0..session.window_count() {
+                            let (lo, hi) = session.window_range(k);
+                            queue.push(WindowJob {
+                                stream: sid,
+                                window_idx: k,
+                                start_frame: lo,
+                                end_frame: hi,
+                                arrival_s: (k as f64 + 1.0) * stride_s,
+                            });
+                        }
+                        index.insert(sid, sessions.len());
+                        sessions.push(session);
+                        streams_served += 1;
+                        if stolen {
+                            stolen_streams += 1;
+                        }
+                        admitted += 1;
+                    }
+                    if admitted == 0 {
+                        break;
+                    }
+                }
+                if queue.is_empty() {
+                    break; // pool exhausted
+                }
+            }
+
+            let job = match queue.pop() {
+                Some(j) => j,
+                None => break,
+            };
+            let idx = index[&job.stream];
+            // Backpressure may have dropped this stream's older
+            // windows: jump the cursor so dropped windows are never
+            // computed and this job maps to its own window.
+            if job.window_idx < sessions[idx].next_window_idx() {
+                continue; // stale job (already superseded)
+            }
+            sessions[idx].seek(job.window_idx);
+            let r = match sessions[idx].step() {
+                Some(r) => r,
+                None => continue,
+            };
+            let service_start = clock.max(job.arrival_s);
+            let latency = r.times.total();
+            clock = service_start + latency;
+            busy += latency;
+            metrics.record_window(
+                job.stream,
+                &r.times,
+                service_start - job.arrival_s,
+                r.flops,
+                r.flops_padded,
+                r.seq_tokens,
+            );
+            answers.push((job.stream, job.window_idx, false)); // probe applied by caller
+
+            // KV bookkeeping against this shard's budget slice only.
+            let bytes = sessions[idx].kv_bytes();
+            if bytes > 0 {
+                for victim in kv.hold(job.stream, bytes) {
+                    if let Some(&vi) = index.get(&victim) {
+                        sessions[vi].engine.evict_kv();
+                        metrics.kv_evictions += 1;
+                    }
+                }
+            }
+        }
+        metrics.dropped = queue.dropped;
+
+        ShardReport {
+            shard: self.id,
+            metrics,
+            streams_served,
+            stolen_streams,
+            busy_s: busy,
+            span_s: clock,
+            wall_s: util::now() - t0,
+            answers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::MockEngine;
+    use crate::video::{Corpus, CorpusConfig};
+
+    fn works(n: usize, home: usize) -> Vec<StreamWork> {
+        Corpus::generate(CorpusConfig { videos: n, frames_per_video: 28, ..Default::default() })
+            .clips
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| StreamWork {
+                stream: i as u64,
+                home_shard: home,
+                frames: Arc::new(c.frames),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn assignment_is_consistent_and_in_range() {
+        for shards in 1..=8usize {
+            for stream in 0..128u64 {
+                let a = assign_shard(stream, shards);
+                assert!(a < shards);
+                assert_eq!(a, assign_shard(stream, shards), "stable across calls");
+            }
+        }
+        // Degenerate shard count treated as one shard.
+        assert_eq!(assign_shard(42, 0), 0);
+        // The hash actually spreads streams (not all on one shard).
+        let hits: std::collections::HashSet<usize> =
+            (0..64u64).map(|s| assign_shard(s, 4)).collect();
+        assert!(hits.len() > 1, "64 streams over 4 shards must use >1 shard");
+    }
+
+    #[test]
+    fn shard_serves_own_streams_to_completion() {
+        let mock = MockEngine::new("m");
+        let pool = StealPool::new(works(3, 0));
+        let shard = Shard {
+            id: 0,
+            cfg: ServingConfig::default(),
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r = shard.run(&mock, &pool);
+        // 28 frames, w=20, stride 4 -> 3 windows per stream
+        assert_eq!(r.metrics.windows(), 9);
+        assert_eq!(r.streams_served, 3);
+        assert_eq!(r.stolen_streams, 0);
+        assert!(pool.is_empty());
+        assert!(r.busy_s > 0.0 && r.span_s >= r.busy_s);
+    }
+
+    #[test]
+    fn idle_shard_steals_other_shards_backlog() {
+        let mock = MockEngine::new("m");
+        let pool = StealPool::new(works(3, 0)); // all home = shard 0
+        let thief = Shard {
+            id: 1,
+            cfg: ServingConfig::default(),
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r = thief.run(&mock, &pool);
+        assert_eq!(r.streams_served, 3);
+        assert_eq!(r.stolen_streams, 3);
+        assert_eq!(pool.stolen(), 3);
+        assert_eq!(r.metrics.windows(), 9);
+    }
+
+    #[test]
+    fn stealing_disabled_leaves_foreign_streams_pending() {
+        let mock = MockEngine::new("m");
+        let pool = StealPool::new(works(2, 0));
+        let mut cfg = ServingConfig::default();
+        cfg.steal = false;
+        let thief = Shard {
+            id: 1,
+            cfg,
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r = thief.run(&mock, &pool);
+        assert_eq!(r.streams_served, 0);
+        assert_eq!(pool.len(), 2, "foreign streams stay for their home shard");
+    }
+
+    #[test]
+    fn backpressure_drops_stale_windows_and_serves_freshest() {
+        let mock = MockEngine::new("m");
+        let mut cfg = ServingConfig::default();
+        cfg.queue_depth = 2; // 3 windows per stream -> window 0 dropped
+        let pool = StealPool::new(works(1, 0));
+        let shard = Shard {
+            id: 0,
+            cfg,
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r = shard.run(&mock, &pool);
+        assert_eq!(r.metrics.dropped, 1);
+        assert_eq!(r.metrics.windows(), 2, "dropped window is never computed");
+        let served: Vec<usize> = r.answers.iter().map(|(_, k, _)| *k).collect();
+        assert_eq!(served, vec![1, 2], "freshest windows survive, in order");
+    }
+
+    #[test]
+    fn per_shard_kv_budget_is_isolated() {
+        let mock = MockEngine::new("m");
+        // Starved shard: budget far below its sessions' KV.
+        let mut starved_cfg = ServingConfig::default();
+        starved_cfg.kv_budget_bytes = 1 << 20;
+        let starved = Shard {
+            id: 0,
+            cfg: starved_cfg,
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r0 = starved.run(&mock, &StealPool::new(works(3, 0)));
+        assert!(r0.metrics.kv_evictions > 0, "starved shard must evict");
+
+        // Sibling shard with its own ample pool: zero evictions, even
+        // though the starved shard was thrashing.
+        let ample = Shard {
+            id: 1,
+            cfg: ServingConfig::default(),
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r1 = ample.run(&mock, &StealPool::new(works(3, 1)));
+        assert_eq!(r1.metrics.kv_evictions, 0, "ample shard unaffected");
+    }
+}

@@ -5,7 +5,7 @@
 use std::path::PathBuf;
 
 use crate::baselines::Variant;
-use crate::config::{artifacts_dir, env_usize, ExperimentConfig, PipelineConfig};
+use crate::config::{artifacts_dir, env_usize, ExperimentConfig, PipelineConfig, ServingConfig};
 use crate::coordinator::session::StreamSession;
 use crate::json::{self, Value};
 use crate::model::probe::{Probe, ProbeBuilder};
@@ -430,6 +430,17 @@ fn cache_load(key: &str) -> Option<VariantEval> {
         });
     }
     Some(VariantEval { windows, threshold })
+}
+
+/// ServingConfig for shard-scaling sweeps: pipeline knobs from the
+/// experiment config, `num_shards` executor replicas, pool size from
+/// the shard count (env `CF_WORKERS` overrides the thread count).
+pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
+    let mut s = ServingConfig::default();
+    s.pipeline = cfg.pipeline.clone();
+    s.num_shards = num_shards.max(1);
+    s.workers = env_usize("CF_WORKERS", s.num_shards);
+    s
 }
 
 /// Small-corpus override used by the quicker figures.

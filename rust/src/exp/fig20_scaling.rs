@@ -1,0 +1,129 @@
+//! Fig 20 (beyond the paper): serving-throughput scaling across
+//! executor shards — the `sustainable_streams` headline metric swept
+//! over shard count x stream count, CodecFlow vs Full-Comp.
+//!
+//! The claim under test: because CodecFlow's per-window service time
+//! is shorter, *each* shard sustains more streams, so the aggregate
+//! capacity gap widens linearly with the shard count. The sweep also
+//! reports merged p50/p99 latency and how many streams were served via
+//! work stealing (imbalance absorbed by idle shards).
+
+use std::sync::Arc;
+
+use crate::baselines::Variant;
+use crate::codec::types::Frame;
+use crate::config::{artifacts_dir, ExperimentConfig};
+use crate::coordinator::dispatch::{Dispatcher, ShardedReport};
+use crate::runtime::replica::{EngineReplicaFactory, ExecutorFactory};
+use crate::util::table::Table;
+use crate::video::{Corpus, CorpusConfig};
+
+use super::common::{quick_experiment_cfg, serving_cfg, write_report};
+
+pub struct Fig20 {
+    /// (variant, streams, shards, aggregate sustainable streams)
+    pub rows: Vec<(String, usize, usize, f64)>,
+    pub table: Table,
+}
+
+fn row(variant: &str, streams: usize, shards: usize, r: &ShardedReport) -> Vec<String> {
+    let s = r.merged.latency_summary();
+    vec![
+        variant.to_string(),
+        streams.to_string(),
+        shards.to_string(),
+        r.merged.windows().to_string(),
+        format!("{:.1}", s.p50 * 1e3),
+        format!("{:.1}", s.p99 * 1e3),
+        r.stolen_streams.to_string(),
+        format!("{:.1}", r.sustainable_streams),
+    ]
+}
+
+/// Core sweep, executor-agnostic so tests can drive it with mock
+/// replicas and `run()` with real engine replicas.
+pub fn sweep(
+    factory: Arc<dyn ExecutorFactory>,
+    cfg: &ExperimentConfig,
+    shard_counts: &[usize],
+    stream_counts: &[usize],
+    variants: &[Variant],
+    fps: f64,
+) -> Fig20 {
+    let mut table = Table::new(
+        "Fig 20 — shard scaling (aggregate sustainable streams)",
+        &["Variant", "Streams", "Shards", "Windows", "p50(ms)", "p99(ms)", "Stolen", "Sustainable"],
+    );
+    let mut rows = Vec::new();
+    for &variant in variants {
+        for &streams in stream_counts {
+            let corpus = Corpus::generate(CorpusConfig {
+                videos: streams,
+                frames_per_video: cfg.frames_per_video,
+                window_frames: cfg.pipeline.window_frames,
+                seed: cfg.seed,
+                ..Default::default()
+            });
+            // One allocation per stream: every shard-count cell below
+            // shares the same frames through the Arc.
+            let clips: Vec<Arc<Vec<Frame>>> =
+                corpus.clips.into_iter().map(|c| Arc::new(c.frames)).collect();
+            for &shards in shard_counts {
+                let dispatcher = Dispatcher::new(&cfg.model, serving_cfg(cfg, shards));
+                let report = dispatcher.run(Arc::clone(&factory), &clips, variant, fps);
+                table.row(&row(variant.name(), streams, shards, &report));
+                rows.push((
+                    variant.name().to_string(),
+                    streams,
+                    shards,
+                    report.sustainable_streams,
+                ));
+            }
+        }
+    }
+    Fig20 { rows, table }
+}
+
+pub fn run() -> Option<Fig20> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping experiment: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    let factory: Arc<dyn ExecutorFactory> = Arc::new(EngineReplicaFactory::new(dir));
+    let cfg = quick_experiment_cfg();
+    let fig = sweep(
+        factory,
+        &cfg,
+        &[1, 2, 4],
+        &[4, 8],
+        &[Variant::FullComp, Variant::CodecFlow],
+        2.0,
+    );
+    fig.table.print();
+    write_report(
+        "fig20_scaling.txt",
+        &(fig.table.render() + "\n" + &fig.table.to_csv()),
+    );
+    Some(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::replica::MockReplicaFactory;
+
+    #[test]
+    fn sweep_emits_one_row_per_cell_and_scales() {
+        let factory: Arc<dyn ExecutorFactory> = Arc::new(MockReplicaFactory::new("m", 0.0));
+        let mut cfg = ExperimentConfig::default();
+        cfg.frames_per_video = 28;
+        cfg.model = "m".to_string();
+        let fig = sweep(factory, &cfg, &[1, 2], &[4], &[Variant::CodecFlow], 2.0);
+        assert_eq!(fig.rows.len(), 2);
+        let one = fig.rows.iter().find(|r| r.2 == 1).unwrap().3;
+        let two = fig.rows.iter().find(|r| r.2 == 2).unwrap().3;
+        assert!(two > one, "2 shards {two:.2} !> 1 shard {one:.2}");
+        assert!(fig.table.render().contains("Sustainable"));
+    }
+}

@@ -9,12 +9,21 @@
 //!   single-pass decode + window forming, codec-guided token pruning,
 //!   selective KV-cache refresh with RoPE position correction.
 //! * [`runtime`], [`model`] — PJRT execution of the AOT-compiled JAX/
-//!   Pallas artifacts, model descriptors, the anomaly probe.
-//! * [`coordinator`], [`baselines`] — the serving layer (sessions,
-//!   router, batcher, metrics) and the four comparison systems.
-//! * [`exp`] — one experiment runner per paper table/figure.
+//!   Pallas artifacts (feature `pjrt`; manifest-only stub otherwise),
+//!   per-shard executor replica factories ([`runtime::replica`]),
+//!   model descriptors, the anomaly probe.
+//! * [`coordinator`], [`baselines`] — the serving layer, single-shard
+//!   ([`coordinator::serve`]) and sharded: consistent stream->shard
+//!   placement, per-shard EDF admission queues and KV budgets, and
+//!   cross-shard work stealing driven by a thread pool
+//!   ([`coordinator::shard`], [`coordinator::dispatch`]) — plus the
+//!   four comparison systems.
+//! * [`exp`] — one experiment runner per paper table/figure, and
+//!   [`exp::fig20_scaling`] for shard-scaling throughput (beyond the
+//!   paper).
 //! * [`util`], [`json`], [`config`] — support: PRNG, stats, micro-bench
-//!   harness, property-test helper, JSON, typed configs.
+//!   harness, property-test helper, panic-isolating thread pool with
+//!   join/fan-in ([`util::threadpool`]), JSON, typed configs.
 
 pub mod baselines;
 pub mod codec;

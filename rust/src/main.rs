@@ -1,21 +1,27 @@
 //! CodecFlow leader binary: serve / experiment / inspect commands.
 //!
 //! ```text
-//! codecflow serve   [--model M] [--variant V] [--streams N] [--frames N] [key=value ...]
+//! codecflow serve   [--model M] [--variant V] [--frames N]
+//!                   [workers=N] [shards=N] [streams=N] [key=value ...]
 //! codecflow exp     <table1|table2|fig2|fig3|fig5|fig6|fig11|fig12|fig13|
-//!                    fig14|fig15|fig16|fig17|fig18|fig19|all>
+//!                    fig14|fig15|fig16|fig17|fig18|fig19|fig20|all>
 //! codecflow models              # list models + artifacts
 //! codecflow help
 //! ```
 //!
-//! Pipeline overrides are accepted as `key=value` pairs anywhere
-//! (e.g. `gop=8 mv_threshold=0.5 stride_frac=0.3`).
+//! Serving and pipeline overrides are accepted as `key=value` pairs
+//! anywhere (e.g. `workers=4 gop=8 mv_threshold=0.5 stride_frac=0.3`).
+//! `workers=N` scales out to N executor shards on N pool threads;
+//! `shards=N` sets the shard count alone.
+
+use std::sync::Arc;
 
 use codecflow::baselines::Variant;
-use codecflow::config::{artifacts_dir, env_usize, PipelineConfig, ServingConfig};
-use codecflow::coordinator::serve::Server;
+use codecflow::config::{artifacts_dir, env_usize, ServingConfig};
+use codecflow::coordinator::dispatch::Dispatcher;
 use codecflow::exp;
 use codecflow::runtime::engine::Engine;
+use codecflow::runtime::replica::{EngineReplicaFactory, ExecutorFactory};
 use codecflow::video::{Corpus, CorpusConfig};
 
 fn main() {
@@ -29,7 +35,9 @@ fn main() {
     }
 }
 
-fn parse_overrides(args: &[String], cfg: &mut PipelineConfig) -> Vec<(String, String)> {
+/// Split CLI args into ServingConfig overrides (`key=value`, applied
+/// in place) and free-form `--name value` flags.
+fn parse_overrides(args: &[String], cfg: &mut ServingConfig) -> Vec<(String, String)> {
     let mut flags = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -40,7 +48,10 @@ fn parse_overrides(args: &[String], cfg: &mut PipelineConfig) -> Vec<(String, St
             }
         } else if let Some(name) = a.strip_prefix("--") {
             let val = args.get(i + 1).cloned().unwrap_or_default();
-            flags.push((name.to_string(), val));
+            // `--workers 4` works the same as `workers=4`.
+            if !cfg.set(name, &val) {
+                flags.push((name.to_string(), val));
+            }
             i += 1;
         }
         i += 1;
@@ -50,7 +61,7 @@ fn parse_overrides(args: &[String], cfg: &mut PipelineConfig) -> Vec<(String, St
 
 fn serve(args: &[String]) {
     let mut cfg = ServingConfig::default();
-    let flags = parse_overrides(args, &mut cfg.pipeline);
+    let flags = parse_overrides(args, &mut cfg);
     let get = |k: &str, d: &str| -> String {
         flags
             .iter()
@@ -64,7 +75,7 @@ fn serve(args: &[String]) {
         .into_iter()
         .find(|v| v.name().to_lowercase().replace('-', "") == variant_name.replace('-', ""))
         .unwrap_or(Variant::CodecFlow);
-    let streams: usize = get("streams", "4").parse().unwrap_or(4);
+    let streams = cfg.streams.max(1);
     let frames: usize = get("frames", &env_usize("CF_FRAMES", 60).to_string())
         .parse()
         .unwrap_or(60);
@@ -74,24 +85,23 @@ fn serve(args: &[String]) {
         eprintln!("artifacts missing — run `make artifacts` first");
         std::process::exit(1);
     }
-    let engine = Engine::load(&dir).expect("engine");
     let corpus = Corpus::generate(CorpusConfig {
         videos: streams,
         frames_per_video: frames,
         ..Default::default()
     });
-    let clips: Vec<_> = corpus.clips.iter().map(|c| c.frames.clone()).collect();
+    let clips: Vec<_> = corpus.clips.into_iter().map(|c| Arc::new(c.frames)).collect();
     println!(
-        "serving {streams} streams x {frames} frames with {} on {model}",
-        variant.name()
+        "serving {streams} streams x {frames} frames with {} on {model}: \
+         {} shard(s), {} worker(s)",
+        variant.name(),
+        cfg.num_shards.max(1),
+        cfg.workers.clamp(1, cfg.num_shards.max(1))
     );
-    let server = Server::new(&engine, &model, cfg);
-    let report = server.run(&clips, variant, 2.0);
-    println!("{}", report.metrics.report(variant.name()));
-    println!(
-        "sustainable streams per executor: {:.1}",
-        report.sustainable_streams
-    );
+    let factory: Arc<dyn ExecutorFactory> = Arc::new(EngineReplicaFactory::new(dir));
+    let dispatcher = Dispatcher::new(&model, cfg);
+    let report = dispatcher.run(factory, &clips, variant, 2.0);
+    println!("{}", report.report(variant.name()));
 }
 
 fn experiment(args: &[String]) {
@@ -142,12 +152,15 @@ fn experiment(args: &[String]) {
         "fig19" => {
             exp::fig19::run();
         }
+        "fig20" => {
+            exp::fig20_scaling::run();
+        }
         other => eprintln!("unknown experiment {other}"),
     };
     if which == "all" {
         for name in [
             "table1", "table2", "fig2", "fig3", "fig5", "fig6", "fig11", "fig12",
-            "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19",
+            "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
         ] {
             println!("\n===== {name} =====");
             run_one(name);
@@ -187,11 +200,13 @@ fn help() {
         "codecflow — codec-guided streaming video analytics (paper reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 codecflow serve  [--model M] [--variant V] [--streams N] [--frames N] [key=value...]\n\
-         \x20 codecflow exp    <table1|table2|fig2..fig19|all>\n\
+         \x20 codecflow serve  [--model M] [--variant V] [--frames N] [key=value...]\n\
+         \x20 codecflow exp    <table1|table2|fig2..fig20|all>\n\
          \x20 codecflow models\n\
          \n\
+         serving overrides: workers= shards= streams= admit_wave= steal= queue_depth=\n\
+         \x20                kv_budget_bytes=   (workers=N scales to N executor shards)\n\
          pipeline overrides: window_frames= stride_frac= gop= mv_threshold= alpha= qp=\n\
-         env: CF_ARTIFACTS, CF_VIDEOS, CF_FRAMES, CF_NO_CACHE"
+         env: CF_ARTIFACTS, CF_VIDEOS, CF_FRAMES, CF_WORKERS, CF_NO_CACHE"
     );
 }

@@ -10,17 +10,32 @@
 //!
 //! The engine is deliberately single-threaded (`RefCell` state): the
 //! coordinator owns it from one executor thread, mirroring a serialized
-//! accelerator queue.
+//! accelerator queue. The sharded serving layer
+//! ([`crate::coordinator::dispatch`]) scales out by constructing one
+//! engine *replica per shard* ([`super::replica`]) rather than sharing
+//! one engine across threads.
+//!
+//! Compiled in two flavours:
+//! * `--features pjrt` — the real executor (needs the `xla` PJRT
+//!   bindings, not vendored in this tree);
+//! * default — a manifest-only stub: loading and model/artifact
+//!   introspection work, `execute*` returns an error. Tests and the
+//!   serving layer run against [`super::mock::MockEngine`] instead.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
+#[cfg(feature = "pjrt")]
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-use super::manifest::{ArtifactSpec, Manifest, ModelSpec};
+use super::manifest::{Manifest, ModelSpec};
+#[cfg(feature = "pjrt")]
+use super::manifest::ArtifactSpec;
 use super::tensor::Tensor;
+#[cfg(feature = "pjrt")]
 use super::weights;
 
 /// Cumulative execution statistics, per (model, artifact-family).
@@ -40,7 +55,7 @@ pub struct FamilyStats {
 }
 
 impl ExecStats {
-    fn record(&mut self, family: &str, secs: f64) {
+    pub fn record(&mut self, family: &str, secs: f64) {
         let f = self.families.entry(family.to_string()).or_default();
         f.calls += 1;
         f.total_s += secs;
@@ -68,11 +83,13 @@ pub fn family_of(artifact: &str) -> &str {
     artifact
 }
 
+#[cfg(feature = "pjrt")]
 struct ArtifactState {
     spec: ArtifactSpec,
     exe: Option<PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 struct ModelState {
     spec: ModelSpec,
     host_weights: HashMap<String, Tensor>,
@@ -81,6 +98,7 @@ struct ModelState {
 }
 
 /// The PJRT engine: one CPU client, all models + artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: PjRtClient,
     dir: std::path::PathBuf,
@@ -100,10 +118,12 @@ impl std::fmt::Display for EngineError {
 
 impl std::error::Error for EngineError {}
 
+#[cfg(feature = "pjrt")]
 fn xe<E: std::fmt::Display>(ctx: &str) -> impl Fn(E) -> EngineError + '_ {
     move |e| EngineError(format!("{ctx}: {e}"))
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load manifest + weights and initialize the PJRT CPU client.
     /// Artifact HLO modules are compiled lazily on first use.
@@ -364,6 +384,7 @@ impl Engine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_to_tensor(
     lit: &Literal,
     io: &super::manifest::IoSpec,
@@ -378,6 +399,95 @@ fn literal_to_tensor(
             Ok(Tensor::I32 { shape: io.shape.clone(), data })
         }
         other => Err(EngineError(format!("unsupported dtype {other}"))),
+    }
+}
+
+/// Manifest-only stub engine (default build, no PJRT bindings).
+///
+/// Keeps the full introspection surface (`load`, `model_names`,
+/// `model_spec`, `artifact_names`) working from `manifest.json` so the
+/// CLI `models` command and the experiment harness compile and degrade
+/// gracefully; any attempt to *execute* reports that the `pjrt`
+/// feature is required.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    manifest: Manifest,
+    pub stats: RefCell<ExecStats>,
+    model_names: Vec<String>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Load the artifact manifest (weights and HLO modules are left on
+    /// disk; nothing can execute without the `pjrt` feature).
+    pub fn load(artifacts_dir: &Path) -> Result<Engine, EngineError> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| EngineError(e.to_string()))?;
+        let model_names = manifest.models.iter().map(|m| m.name.clone()).collect();
+        Ok(Engine {
+            manifest,
+            stats: RefCell::new(ExecStats::default()),
+            model_names,
+        })
+    }
+
+    pub fn model_names(&self) -> &[String] {
+        &self.model_names
+    }
+
+    pub fn model_spec(&self, model: &str) -> Option<ModelSpec> {
+        self.manifest.models.iter().find(|m| m.name == model).cloned()
+    }
+
+    pub fn artifact_names(&self, model: &str) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .map(|a| a.name.clone())
+            .collect()
+    }
+
+    pub fn warmup(&self, _model: &str, _artifacts: Option<&[&str]>) -> Result<(), EngineError> {
+        Err(Self::unavailable())
+    }
+
+    pub fn execute_timed(
+        &self,
+        _model: &str,
+        _artifact: &str,
+        _inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64), EngineError> {
+        Err(Self::unavailable())
+    }
+
+    pub fn execute(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>, EngineError> {
+        self.execute_timed(model, artifact, inputs).map(|(t, _)| t)
+    }
+
+    pub fn family_seconds(&self, family: &str) -> f64 {
+        self.stats
+            .borrow()
+            .families
+            .get(family)
+            .map(|f| f.total_s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = ExecStats::default();
+    }
+
+    fn unavailable() -> EngineError {
+        EngineError(
+            "PJRT backend not compiled in — rebuild with `--features pjrt` \
+             (requires the `xla` bindings; see rust/README.md)"
+                .to_string(),
+        )
     }
 }
 

@@ -12,15 +12,19 @@
 //!   device-resident parameter buffers uploaded once and passed by
 //!   reference per call (`execute_b`), per-family execution stats;
 //! * [`flops`] — analytic FLOP accounting (Fig 13 / Fig 6);
-//! * [`mock`] — deterministic executor for tests without artifacts.
+//! * [`mock`] — deterministic executor for tests without artifacts;
+//! * [`replica`] — executor replica factories for the sharded serving
+//!   layer (one engine per shard, built on the shard's own thread).
 
 pub mod engine;
 pub mod flops;
 pub mod manifest;
 pub mod mock;
+pub mod replica;
 pub mod tensor;
 pub mod weights;
 
 pub use engine::{Engine, ExecStats};
 pub use manifest::{ArtifactSpec, Manifest, ModelSpec};
+pub use replica::{EngineReplicaFactory, ExecutorFactory, MockReplicaFactory};
 pub use tensor::Tensor;

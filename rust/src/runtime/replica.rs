@@ -1,0 +1,88 @@
+//! Executor replica construction for the sharded serving layer.
+//!
+//! The engine is single-threaded by design (serialized accelerator
+//! queue, see [`super::engine`]); scale-out therefore happens by
+//! *replication*, not sharing: the dispatcher hands each shard a
+//! factory, and the shard builds its own executor **on its own worker
+//! thread**. Only the factory crosses threads, so the engine itself
+//! never needs to be `Send`.
+
+use std::path::PathBuf;
+
+use super::engine::Engine;
+use super::mock::{Executor, MockEngine};
+
+/// Builds one executor replica per shard. Implementations must be
+/// cheap to share (`Send + Sync`); `build` is called from the shard's
+/// worker thread.
+pub trait ExecutorFactory: Send + Sync {
+    fn build(&self) -> Box<dyn Executor>;
+
+    /// Human-readable description for serving reports.
+    fn describe(&self) -> String {
+        "executor".to_string()
+    }
+}
+
+/// Replicates the real PJRT engine: each shard loads the artifacts
+/// into its own [`Engine`] (own client, own compiled executables, own
+/// device-resident weights).
+pub struct EngineReplicaFactory {
+    dir: PathBuf,
+}
+
+impl EngineReplicaFactory {
+    pub fn new(dir: PathBuf) -> Self {
+        EngineReplicaFactory { dir }
+    }
+}
+
+impl ExecutorFactory for EngineReplicaFactory {
+    fn build(&self) -> Box<dyn Executor> {
+        Box::new(Engine::load(&self.dir).expect("load engine replica"))
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt engine replica ({})", self.dir.display())
+    }
+}
+
+/// Mock replicas for scheduler/serving tests without artifacts.
+pub struct MockReplicaFactory {
+    pub model: String,
+    /// Artificial per-call executor latency (seconds).
+    pub delay_s: f64,
+}
+
+impl MockReplicaFactory {
+    pub fn new(model: &str, delay_s: f64) -> Self {
+        MockReplicaFactory { model: model.to_string(), delay_s }
+    }
+}
+
+impl ExecutorFactory for MockReplicaFactory {
+    fn build(&self) -> Box<dyn Executor> {
+        let mut m = MockEngine::new(&self.model);
+        m.delay_s = self.delay_s;
+        Box::new(m)
+    }
+
+    fn describe(&self) -> String {
+        format!("mock replica ({}, {:.1}ms/call)", self.model, self.delay_s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_factory_builds_independent_replicas() {
+        let f = MockReplicaFactory::new("m", 0.0);
+        let a = f.build();
+        let b = f.build();
+        // Each replica resolves the same spec independently.
+        assert_eq!(a.spec("m").unwrap().llm_dim, b.spec("m").unwrap().llm_dim);
+        assert!(f.describe().contains("mock"));
+    }
+}

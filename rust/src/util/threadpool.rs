@@ -1,7 +1,14 @@
 //! Fixed-size thread pool (tokio replacement for the serving loop,
 //! DESIGN.md §9). The request path only needs fan-out/fan-in over
 //! blocking PJRT executions, which a channel-fed pool models exactly.
+//!
+//! This is the execution substrate of the sharded serving layer
+//! ([`crate::coordinator::dispatch`]): each shard runs as one pool job,
+//! so windows from different shards execute concurrently. Jobs are
+//! panic-isolated — a panicking job is caught, reported through its
+//! [`JobHandle`], and never takes a worker thread down with it.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -20,6 +27,38 @@ pub struct ThreadPool {
     size: usize,
 }
 
+/// Fan-in handle for one [`ThreadPool::spawn`]ed job.
+///
+/// `join` blocks until the job finishes; a panic inside the job is
+/// caught and surfaced as `Err(message)` instead of poisoning the pool.
+pub struct JobHandle<R> {
+    rx: mpsc::Receiver<Result<R, String>>,
+}
+
+impl<R> JobHandle<R> {
+    /// Block until the job completes; `Err` carries the panic message.
+    pub fn join(self) -> Result<R, String> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err("worker disconnected before completing the job".to_string()))
+    }
+}
+
+/// Join a batch of handles, preserving submission order.
+pub fn join_all<R>(handles: Vec<JobHandle<R>>) -> Vec<Result<R, String>> {
+    handles.into_iter().map(|h| h.join()).collect()
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker job panicked".to_string()
+    }
+}
+
 impl ThreadPool {
     pub fn new(size: usize) -> Self {
         assert!(size > 0);
@@ -33,7 +72,12 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let msg = rx.lock().unwrap().recv();
                         match msg {
-                            Ok(Msg::Run(job)) => job(),
+                            // Panic isolation: a job that panics must not
+                            // kill the worker — spawn() has already
+                            // captured the payload for its JobHandle.
+                            Ok(Msg::Run(job)) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Ok(Msg::Stop) | Err(_) => break,
                         }
                     })
@@ -51,31 +95,51 @@ impl ThreadPool {
         self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
     }
 
-    /// Map `f` over items in parallel, preserving order.
+    /// Submit a job and get a [`JobHandle`] to fan its result back in.
+    pub fn spawn<F, R>(&self, f: F) -> JobHandle<R>
+    where
+        F: FnOnce() -> R + Send + 'static,
+        R: Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        self.submit(move || {
+            let result = catch_unwind(AssertUnwindSafe(f)).map_err(panic_message);
+            let _ = tx.send(result);
+        });
+        JobHandle { rx }
+    }
+
+    /// Map `f` over items in parallel, preserving order. Panics if any
+    /// job panicked — use [`ThreadPool::try_map`] to recover instead.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        self.try_map(items, f)
+            .into_iter()
+            .map(|r| r.expect("pool job panicked"))
+            .collect()
+    }
+
+    /// Map `f` over items in parallel, preserving order; each result is
+    /// `Err(panic message)` if that item's job panicked.
+    pub fn try_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<Result<R, String>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
         let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel();
-        let n = items.len();
-        for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
-            let rtx = rtx.clone();
-            self.submit(move || {
-                let r = f(item);
-                let _ = rtx.send((i, r));
-            });
-        }
-        drop(rtx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (i, r) = rrx.recv().expect("worker result");
-            out[i] = Some(r);
-        }
-        out.into_iter().map(|o| o.unwrap()).collect()
+        let handles: Vec<JobHandle<R>> = items
+            .into_iter()
+            .map(|item| {
+                let f = Arc::clone(&f);
+                self.spawn(move || f(item))
+            })
+            .collect();
+        join_all(handles)
     }
 }
 
@@ -126,5 +190,51 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.submit(|| {});
         drop(pool);
+    }
+
+    #[test]
+    fn spawn_joins_result() {
+        let pool = ThreadPool::new(2);
+        let h = pool.spawn(|| 6 * 7);
+        assert_eq!(h.join(), Ok(42));
+    }
+
+    #[test]
+    fn panicking_job_reports_error_and_pool_survives() {
+        let pool = ThreadPool::new(1);
+        let bad = pool.spawn(|| -> usize { panic!("boom {}", 1 + 1) });
+        let err = bad.join().unwrap_err();
+        assert!(err.contains("boom"), "got: {err}");
+        // The single worker must still be alive to run the next job.
+        let good = pool.spawn(|| 7usize);
+        assert_eq!(good.join(), Ok(7));
+    }
+
+    #[test]
+    fn try_map_isolates_panics_per_item() {
+        let pool = ThreadPool::new(3);
+        let out = pool.try_map((0..10u32).collect(), |x| {
+            if x % 4 == 0 {
+                panic!("bad item");
+            }
+            x * 10
+        });
+        for (i, r) in out.iter().enumerate() {
+            if i % 4 == 0 {
+                assert!(r.is_err(), "item {i} should have panicked");
+            } else {
+                assert_eq!(r.as_ref().unwrap(), &(i as u32 * 10));
+            }
+        }
+    }
+
+    #[test]
+    fn join_all_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let handles: Vec<_> = (0..20usize).map(|i| pool.spawn(move || i)).collect();
+        let out = join_all(handles);
+        for (i, r) in out.into_iter().enumerate() {
+            assert_eq!(r, Ok(i));
+        }
     }
 }

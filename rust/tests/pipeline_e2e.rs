@@ -2,6 +2,12 @@
 //! frontend -> pruning -> ViT -> prefill (full & incremental) ->
 //! decode, for CodecFlow and Full-Comp. Verifies the system-level
 //! invariants the experiments rely on.
+//!
+//! Requires the real PJRT backend (`--features pjrt`); compiled out of
+//! the default build, and skips at runtime without `make artifacts`.
+//! The mock-executor equivalents live in `tests/shard_serving.rs` and
+//! the coordinator unit tests.
+#![cfg(feature = "pjrt")]
 
 use codecflow::baselines::Variant;
 use codecflow::config::{artifacts_dir, PipelineConfig};

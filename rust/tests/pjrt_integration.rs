@@ -2,8 +2,12 @@
 //! artifacts and must reproduce the python-side golden outputs
 //! (artifacts/golden/<model>.json, written by compile/aot.py).
 //!
-//! These tests require `make artifacts`; they are skipped (with a
-//! message) when the artifacts directory is absent.
+//! These tests require the real PJRT backend (`--features pjrt`) AND
+//! `make artifacts`: the whole file is compiled out of the default
+//! build, and even with the feature on, each test skips (with a
+//! message) when the artifacts directory is absent — so the default
+//! CI suite stays green without artifacts.
+#![cfg(feature = "pjrt")]
 
 use codecflow::config::artifacts_dir;
 use codecflow::json::Value;

@@ -1,0 +1,194 @@
+//! Integration tests for the sharded serving layer (mock executor
+//! replicas, no artifacts needed): stream->shard assignment stability,
+//! per-shard KV budget isolation, EDF ordering under concurrent
+//! submission, work stealing, and thread-pool join/panic-recovery
+//! semantics — the concurrency invariants `codecflow serve workers=N`
+//! depends on.
+
+use std::sync::{Arc, Mutex};
+
+use codecflow::baselines::Variant;
+use codecflow::codec::types::Frame;
+use codecflow::config::ServingConfig;
+use codecflow::coordinator::dispatch::Dispatcher;
+use codecflow::coordinator::queue::{AdmissionQueue, WindowJob};
+use codecflow::coordinator::shard::assign_shard;
+use codecflow::runtime::replica::{ExecutorFactory, MockReplicaFactory};
+use codecflow::util::threadpool::{join_all, ThreadPool};
+use codecflow::video::{Corpus, CorpusConfig};
+
+fn clips(n: usize) -> Vec<Arc<Vec<Frame>>> {
+    Corpus::generate(CorpusConfig { videos: n, frames_per_video: 28, ..Default::default() })
+        .clips
+        .into_iter()
+        .map(|c| Arc::new(c.frames))
+        .collect()
+}
+
+fn mock_factory() -> Arc<dyn ExecutorFactory> {
+    Arc::new(MockReplicaFactory::new("m", 0.0))
+}
+
+fn sharded_cfg(shards: usize) -> ServingConfig {
+    let mut cfg = ServingConfig::default();
+    assert!(cfg.set("workers", &shards.to_string()));
+    cfg
+}
+
+#[test]
+fn assignment_is_stable_across_dispatches() {
+    // The same stream must land on the same shard in every run —
+    // that's what keeps its KV cache from migrating.
+    let cfg = {
+        let mut c = sharded_cfg(2);
+        c.steal = false;
+        c
+    };
+    let clips = clips(8);
+    let served_by = |report: &codecflow::coordinator::dispatch::ShardedReport| {
+        let mut map = std::collections::HashMap::new();
+        for r in &report.shards {
+            for stream in r.metrics.per_stream.keys() {
+                map.insert(*stream, r.shard);
+            }
+        }
+        map
+    };
+    let a = Dispatcher::new("m", cfg.clone()).run(mock_factory(), &clips, Variant::CodecFlow, 2.0);
+    let b = Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0);
+    let (ma, mb) = (served_by(&a), served_by(&b));
+    assert_eq!(ma.len(), 8);
+    assert_eq!(ma, mb, "placement must be identical run to run");
+    for (stream, shard) in ma {
+        assert_eq!(shard, assign_shard(stream, 2), "placement must match the hash");
+    }
+}
+
+#[test]
+fn per_shard_kv_budgets_are_isolated_under_pressure() {
+    // Global budget far below the working set: every shard must evict
+    // from its own slice (evictions observed per shard), and a
+    // single-shard run under the same budget must evict at least as
+    // hard — pressure is not amplified across shards.
+    let clips = clips(6);
+    let starved = |shards: usize| {
+        let mut cfg = sharded_cfg(shards);
+        cfg.kv_budget_bytes = 2 << 20;
+        cfg.steal = false;
+        Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+    };
+    let sharded = starved(2);
+    assert!(sharded.merged.kv_evictions > 0, "starved shards must evict");
+    for r in &sharded.shards {
+        // No shard evicts sessions it never served: evictions stay
+        // within the shard's own stream set.
+        assert!(r.metrics.kv_evictions <= r.metrics.windows());
+    }
+    // All windows still served despite the thrashing.
+    assert_eq!(sharded.merged.windows(), 18);
+}
+
+#[test]
+fn edf_ordering_survives_concurrent_submission() {
+    // Many producers race window jobs into one shard's queue; the
+    // drain order must still be non-decreasing in arrival time.
+    let queue = Arc::new(Mutex::new(AdmissionQueue::new(64)));
+    let pool = ThreadPool::new(4);
+    let handles: Vec<_> = (0..4u64)
+        .map(|stream| {
+            let queue = Arc::clone(&queue);
+            pool.spawn(move || {
+                for k in 0..25usize {
+                    queue.lock().unwrap().push(WindowJob {
+                        stream,
+                        window_idx: k,
+                        start_frame: k * 4,
+                        end_frame: k * 4 + 20,
+                        arrival_s: k as f64 + stream as f64 * 0.1,
+                    });
+                }
+            })
+        })
+        .collect();
+    for r in join_all(handles) {
+        r.unwrap();
+    }
+    let mut q = queue.lock().unwrap();
+    assert_eq!(q.len(), 100);
+    let mut last = f64::NEG_INFINITY;
+    while let Some(job) = q.pop() {
+        assert!(job.arrival_s >= last, "EDF violated: {} after {last}", job.arrival_s);
+        last = job.arrival_s;
+    }
+}
+
+#[test]
+fn stealing_rebalances_but_serves_everything_exactly_once() {
+    let report = Dispatcher::new("m", sharded_cfg(4)).run(
+        mock_factory(),
+        &clips(8),
+        Variant::CodecFlow,
+        2.0,
+    );
+    assert_eq!(report.merged.windows(), 24);
+    assert_eq!(report.merged.per_stream.len(), 8);
+    for count in report.merged.per_stream.values() {
+        assert_eq!(*count, 3, "each stream served exactly its 3 windows");
+    }
+}
+
+#[test]
+fn workers_4_beats_workers_1_on_aggregate_capacity() {
+    // The PR's acceptance scenario, on mock replicas: >= 8 streams,
+    // workers=4 vs workers=1, strictly higher aggregate
+    // sustainable_streams on the same corpus.
+    let clips = clips(8);
+    let run = |workers: usize| {
+        Dispatcher::new("m", sharded_cfg(workers)).run(
+            mock_factory(),
+            &clips,
+            Variant::CodecFlow,
+            2.0,
+        )
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(one.merged.windows(), four.merged.windows());
+    assert!(
+        four.sustainable_streams > one.sustainable_streams,
+        "workers=4 ({:.2}) must beat workers=1 ({:.2})",
+        four.sustainable_streams,
+        one.sustainable_streams
+    );
+}
+
+#[test]
+fn shard_worker_panic_is_contained() {
+    // A factory whose replicas panic for one shard must not poison the
+    // dispatch: the other shards' reports still come back.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    struct FaultyFactory {
+        calls: AtomicUsize,
+    }
+    impl ExecutorFactory for FaultyFactory {
+        fn build(&self) -> Box<dyn codecflow::runtime::mock::Executor> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("replica construction failed");
+            }
+            Box::new(codecflow::runtime::mock::MockEngine::new("m"))
+        }
+    }
+    let mut cfg = sharded_cfg(2);
+    cfg.workers = 1; // deterministic: shard 0 builds first and panics
+    cfg.steal = true;
+    let report = Dispatcher::new("m", cfg).run(
+        Arc::new(FaultyFactory { calls: AtomicUsize::new(0) }),
+        &clips(4),
+        Variant::CodecFlow,
+        2.0,
+    );
+    assert_eq!(report.shards.len(), 1, "only the healthy shard reports");
+    // The healthy shard steals the dead shard's pending streams.
+    assert_eq!(report.merged.per_stream.len(), 4, "all streams still served");
+    assert_eq!(report.merged.windows(), 12);
+}
