@@ -1,0 +1,5 @@
+//! `cargo bench --bench fig21_batching` — regenerates Fig 21
+//! (cross-stream batched prefill: throughput vs batch cap x streams).
+fn main() {
+    codecflow::exp::fig21_batching::run();
+}

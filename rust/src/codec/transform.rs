@@ -6,7 +6,7 @@
 
 use super::types::TB;
 
-/// Precomputed cos table: c[u][x] = cos((2x+1) u pi / 16).
+/// Precomputed cos table: `c[u][x] = cos((2x+1) u pi / 16)`.
 fn cos_table() -> &'static [[f32; TB]; TB] {
     use std::sync::OnceLock;
     static TABLE: OnceLock<[[f32; TB]; TB]> = OnceLock::new();

@@ -137,6 +137,14 @@ pub struct ServingConfig {
     pub admit_wave: usize,
     /// Cross-shard work stealing when a shard's EDF queue runs dry.
     pub steal: bool,
+    /// Max cross-stream jobs fused into one prefill launch per shard
+    /// (`batch=` on the CLI). 1 = job-at-a-time, the unbatched path.
+    pub max_batch: usize,
+    /// Patch-budget quantization, in estimated visual tokens per
+    /// bucket (`batch_bucket=`): jobs co-batch only when their
+    /// codec-estimated token budgets land in the same bucket, bounding
+    /// cross-stream padding waste.
+    pub batch_bucket: usize,
 }
 
 impl Default for ServingConfig {
@@ -151,6 +159,8 @@ impl Default for ServingConfig {
             workers: 1,
             admit_wave: 2,
             steal: true,
+            max_batch: 1,
+            batch_bucket: 48,
         }
     }
 }
@@ -176,6 +186,8 @@ impl ServingConfig {
             "queue_depth" => parse_into(value, &mut self.queue_depth),
             "admit_wave" => parse_into(value, &mut self.admit_wave),
             "steal" => parse_into(value, &mut self.steal),
+            "batch" | "max_batch" => parse_into(value, &mut self.max_batch),
+            "batch_bucket" => parse_into(value, &mut self.batch_bucket),
             _ => self.pipeline.set(key, value),
         }
     }
@@ -253,6 +265,12 @@ mod tests {
         assert_eq!(c.workers, 4, "shards= leaves the pool size alone");
         assert!(c.set("steal", "false"));
         assert!(!c.steal);
+        assert!(c.set("batch", "8"));
+        assert_eq!(c.max_batch, 8);
+        assert!(c.set("max_batch", "4"), "long form accepted too");
+        assert_eq!(c.max_batch, 4);
+        assert!(c.set("batch_bucket", "96"));
+        assert_eq!(c.batch_bucket, 96);
         assert!(c.set("gop", "8"), "pipeline keys pass through");
         assert_eq!(c.pipeline.gop, 8);
         assert!(!c.set("nope", "1"));

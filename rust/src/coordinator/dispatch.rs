@@ -8,13 +8,18 @@
 //! Stream placement is the consistent hash in
 //! [`super::shard::assign_shard`]; imbalance is absorbed by work
 //! stealing through the shared [`StealPool`]. A shard worker that
-//! panics is isolated by the pool and reported, not fatal.
+//! panics is isolated by the pool and reported, not fatal. Inside a
+//! shard, service is batch-at-a-time (`cfg.max_batch` cross-stream
+//! prefills fused per launch); the per-shard
+//! [`BatchStats`] fold into [`ShardedReport::batching`]. The full
+//! request path is narrated in `docs/ARCHITECTURE.md`.
 
 use std::sync::Arc;
 
 use crate::baselines::Variant;
 use crate::codec::types::Frame;
 use crate::config::ServingConfig;
+use crate::runtime::batch::BatchStats;
 use crate::runtime::replica::ExecutorFactory;
 use crate::util;
 use crate::util::threadpool::ThreadPool;
@@ -41,6 +46,9 @@ pub struct ShardedReport {
     pub wall_s: f64,
     /// Per-window answers: (stream, window_idx, yes).
     pub answers: Vec<(u64, usize, bool)>,
+    /// Cross-stream batch formation, folded across shards (batch
+    /// count, mean batch size, padding waste).
+    pub batching: BatchStats,
 }
 
 impl ShardedReport {
@@ -55,10 +63,16 @@ impl ShardedReport {
             "streams={} stolen={} wall={:.2}s\n",
             self.streams, self.stolen_streams, self.wall_s
         ));
+        out.push_str(&format!(
+            "batching: batches={} mean_size={:.2} padding_waste={:.1}%\n",
+            self.batching.batches,
+            self.batching.mean_batch_size(),
+            self.batching.padding_waste() * 100.0
+        ));
         for r in &self.shards {
             out.push_str(&format!(
                 "  shard {}: windows={} streams={} stolen={} busy={:.3}s span={:.3}s \
-                 util={:.0}% sustainable={:.1}\n",
+                 util={:.0}% batch~{:.1} sustainable={:.1}\n",
                 r.shard,
                 r.metrics.windows(),
                 r.streams_served,
@@ -66,6 +80,7 @@ impl ShardedReport {
                 r.busy_s,
                 r.span_s,
                 r.utilization() * 100.0,
+                r.mean_batch_size(),
                 r.metrics.sustainable_streams(self.stride_s)
             ));
         }
@@ -146,11 +161,13 @@ impl Dispatcher {
         let mut answers = Vec::new();
         let mut sustainable = 0.0;
         let mut stolen = 0usize;
+        let mut batching = BatchStats::default();
         for r in &shards {
             merged.merge(&r.metrics);
             sustainable += r.metrics.sustainable_streams(stride_s);
             stolen += r.stolen_streams;
             answers.extend_from_slice(&r.answers);
+            batching.merge(&r.batching);
         }
 
         ShardedReport {
@@ -162,6 +179,7 @@ impl Dispatcher {
             stolen_streams: stolen,
             wall_s,
             answers,
+            batching,
         }
     }
 }

@@ -12,7 +12,11 @@
 //! stealing pending streams into idle shards. Each shard owns a
 //! private EDF queue and a private `1/num_shards` slice of the KV
 //! budget, so eviction pressure stays shard-local (measured, not
-//! modelled).
+//! modelled). Within a shard, service is batch-at-a-time: the queue's
+//! [`queue::AdmissionQueue::pop_batch`] lookahead fuses up to
+//! `max_batch` shape-compatible prefills from distinct streams into
+//! one `execute_batch` launch ([`crate::runtime::batch`]). See
+//! `docs/ARCHITECTURE.md` for the full request path.
 
 pub mod dispatch;
 pub mod metrics;

@@ -1,11 +1,17 @@
 //! One stream's serving session: frontend + window engine + cursor.
+//!
+//! The session exposes the window step both fused
+//! ([`StreamSession::step`]) and split at the prefill launch
+//! ([`StreamSession::prepare`] / [`StreamSession::finish`]) so the
+//! shard loop can batch shape-compatible prefills across sessions.
 
 use crate::baselines::Variant;
 use crate::codec::types::Frame;
 use crate::config::PipelineConfig;
 use crate::net::Link;
-use crate::pipeline::frontend::{Frontend, StreamSource};
-use crate::pipeline::infer::{StageTimes, WindowEngine, WindowResult};
+use crate::pipeline::frontend::{Frontend, StreamSource, WindowFrames};
+use crate::pipeline::infer::{PendingWindow, StageTimes, WindowEngine, WindowResult};
+use crate::runtime::batch::{BatchOutcome, BatchRequest};
 use crate::runtime::mock::Executor;
 
 pub struct StreamSession<'a> {
@@ -77,8 +83,11 @@ impl<'a> StreamSession<'a> {
         }
     }
 
-    /// Process the next window end-to-end; returns None when done.
-    pub fn step(&mut self) -> Option<WindowResult> {
+    /// Advance the cursor and pull the next window through the
+    /// frontend: (start, decoded frames, frontend stage times). The
+    /// single source of the cursor/frontend accounting that both
+    /// [`StreamSession::step`] and [`StreamSession::prepare`] share.
+    fn next_window_input(&mut self) -> Option<(usize, WindowFrames, StageTimes)> {
         if !self.has_next() {
             return None;
         }
@@ -91,7 +100,31 @@ impl<'a> StreamSession<'a> {
             decode: wf.decode_s,
             ..Default::default()
         };
+        Some((start, wf, frontend_times))
+    }
+
+    /// Process the next window end-to-end; returns None when done.
+    /// Equivalent to [`StreamSession::prepare`] + a solo prefill
+    /// launch + [`StreamSession::finish`].
+    pub fn step(&mut self) -> Option<WindowResult> {
+        let (start, wf, frontend_times) = self.next_window_input()?;
         Some(self.engine.process_window(&wf.frames, start, frontend_times))
+    }
+
+    /// Run the next window up to (not including) its prefill launch;
+    /// returns the launch as a [`BatchRequest`] plus the continuation
+    /// for [`StreamSession::finish`]. None when the stream is done.
+    /// The window cursor advances here — a prepared window must be
+    /// finished before this session is stepped again.
+    pub fn prepare(&mut self) -> Option<(BatchRequest, PendingWindow)> {
+        let (start, wf, frontend_times) = self.next_window_input()?;
+        Some(self.engine.prepare_window(&wf.frames, start, frontend_times))
+    }
+
+    /// Consume a (possibly batch-amortized) prefill outcome for a
+    /// window previously returned by [`StreamSession::prepare`].
+    pub fn finish(&mut self, pending: PendingWindow, outcome: BatchOutcome) -> WindowResult {
+        self.engine.finish_window(pending, outcome)
     }
 
     /// KV bytes currently held by this session.

@@ -11,7 +11,15 @@
 //! * streams are admitted in waves; streams not yet claimed sit in the
 //!   shared [`StealPool`], and a shard whose queue runs dry **steals**
 //!   pending streams from busier shards (a stolen stream runs entirely
-//!   on the thief, preserving in-order windows and KV locality).
+//!   on the thief, preserving in-order windows and KV locality);
+//! * service is **batch-at-a-time**: the shard drains up to
+//!   `cfg.max_batch` deadline-adjacent jobs from distinct streams
+//!   whose codec-estimated patch budgets share a bucket
+//!   ([`AdmissionQueue::pop_batch`]), prepares each window up to its
+//!   prefill launch, and fuses the launches through the executor's
+//!   `execute_batch` hook ([`crate::runtime::batch`]). With
+//!   `max_batch = 1` this degenerates to job-at-a-time service,
+//!   bit-for-bit.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -21,6 +29,7 @@ use crate::baselines::Variant;
 use crate::codec::types::Frame;
 use crate::config::ServingConfig;
 use crate::kvc::pool::KvPool;
+use crate::runtime::batch::{BatchRequest, BatchStats};
 use crate::runtime::mock::Executor;
 use crate::util;
 
@@ -113,6 +122,9 @@ pub struct ShardReport {
     pub wall_s: f64,
     /// Per-window answers: (stream, window_idx, yes).
     pub answers: Vec<(u64, usize, bool)>,
+    /// Cross-stream batch formation: batch count, mean size, padding
+    /// waste (see [`BatchStats`]).
+    pub batching: BatchStats,
 }
 
 impl ShardReport {
@@ -124,6 +136,109 @@ impl ShardReport {
             0.0
         }
     }
+
+    /// Fused launch groups executed (a singleton job counts as a
+    /// group of one; a mixed-artifact batch as one group per
+    /// artifact).
+    pub fn batches(&self) -> usize {
+        self.batching.batches
+    }
+
+    /// Mean jobs per fused launch group.
+    pub fn mean_batch_size(&self) -> f64 {
+        self.batching.mean_batch_size()
+    }
+
+    /// Fraction of batched token compute wasted on cross-stream
+    /// padding.
+    pub fn padding_waste(&self) -> f64 {
+        self.batching.padding_waste()
+    }
+}
+
+// Merge-group side in pixels for the admission-time estimator
+// (patch 8 x merge 2 across models).
+const GROUP_PX: usize = 16;
+// Mean-abs-diff threshold for "this group changed".
+const GROUP_TAU: f32 = 2.0;
+
+/// Estimator group grid for a frame (partial edge groups included, so
+/// frames smaller than one group still yield one).
+fn frame_groups(frame: &Frame) -> (usize, usize) {
+    let gw = (frame.w + GROUP_PX - 1) / GROUP_PX;
+    let gh = (frame.h + GROUP_PX - 1) / GROUP_PX;
+    (gw.max(1), gh.max(1))
+}
+
+/// Changed-group counts between consecutive frames of a stream:
+/// `counts[i]` is the number of merge groups whose mean absolute
+/// pixel change between frames `i-1` and `i` clears the threshold
+/// (`counts[0]` is 0). One pass over raw luma per stream — windows
+/// overlap, so the serving layer computes this once at admission and
+/// sums the slice each window covers. Edge groups are clamped to the
+/// frame, never read past it.
+pub fn frame_change_counts(frames: &[Frame]) -> Vec<usize> {
+    let mut counts = vec![0usize; frames.len()];
+    for i in 1..frames.len() {
+        let (cur, prev) = (&frames[i], &frames[i - 1]);
+        let (gw, gh) = frame_groups(cur);
+        let mut changed = 0usize;
+        for gy in 0..gh {
+            for gx in 0..gw {
+                let x_hi = ((gx + 1) * GROUP_PX).min(cur.w);
+                let y_hi = ((gy + 1) * GROUP_PX).min(cur.h);
+                let mut sum = 0u32;
+                let mut n = 0u32;
+                for y in (gy * GROUP_PX)..y_hi {
+                    for x in (gx * GROUP_PX)..x_hi {
+                        sum += (cur.at(x, y) as i32 - prev.at(x, y) as i32).unsigned_abs();
+                        n += 1;
+                    }
+                }
+                if n > 0 && sum as f32 / n as f32 >= GROUP_TAU {
+                    changed += 1;
+                }
+            }
+        }
+        counts[i] = changed;
+    }
+    counts
+}
+
+/// Patch-budget bucket for window `[lo, hi)` from precomputed
+/// per-frame change counts: the window's first frame counts fully
+/// (`first_frame_groups`, the I-frame/anchor context), each later
+/// frame contributes its changed-group count, and the token total is
+/// quantized by `granularity` into the bucket id that gates batch
+/// compatibility. This is the form the admission loop uses (counts
+/// computed once per stream, summed per overlapping window);
+/// [`estimate_patch_bucket`] is the one-shot equivalent.
+pub fn bucket_from_counts(
+    counts: &[usize],
+    first_frame_groups: usize,
+    lo: usize,
+    hi: usize,
+    granularity: usize,
+) -> usize {
+    let hi = hi.min(counts.len());
+    if lo >= hi {
+        return 0;
+    }
+    let tokens = first_frame_groups + counts[lo + 1..hi].iter().sum::<usize>();
+    tokens / granularity.max(1)
+}
+
+/// Codec-guided patch-budget estimate for window `[lo, hi)` of a
+/// stream, in visual tokens — a decode-free proxy for the MV/residual
+/// signal the pruner uses ([`frame_change_counts`] +
+/// [`bucket_from_counts`]).
+pub fn estimate_patch_bucket(frames: &[Frame], lo: usize, hi: usize, granularity: usize) -> usize {
+    let hi = hi.min(frames.len());
+    if lo >= hi {
+        return 0;
+    }
+    let (gw, gh) = frame_groups(&frames[lo]);
+    bucket_from_counts(&frame_change_counts(&frames[lo..hi]), gw * gh, 0, hi - lo, granularity)
 }
 
 /// One shard of the serving layer. `run` executes on the dispatcher's
@@ -141,11 +256,15 @@ impl Shard {
     /// Serve streams pulled from `pool` to completion: own streams
     /// first (in waves of `admit_wave`), then stolen ones. Mirrors the
     /// single-executor [`super::serve::Server`] loop per shard: EDF
-    /// service order, virtual arrival clock, KV-pool bookkeeping.
+    /// service order, virtual arrival clock, KV-pool bookkeeping —
+    /// executed batch-at-a-time (up to `cfg.max_batch` compatible jobs
+    /// per executor launch; 1 = job-at-a-time).
     pub fn run(&self, exec: &dyn Executor, pool: &StealPool) -> ShardReport {
         let t0 = util::now();
         let stride_s = self.cfg.pipeline.stride_frames() as f64 / self.fps;
         let wave = self.cfg.admit_wave.max(1);
+        let max_batch = self.cfg.max_batch.max(1);
+        let bucket_gran = self.cfg.batch_bucket.max(1);
 
         let mut queue = AdmissionQueue::new(self.cfg.queue_depth);
         let mut kv = KvPool::new(self.cfg.shard_kv_budget());
@@ -153,6 +272,7 @@ impl Shard {
         let mut answers = Vec::new();
         let mut sessions: Vec<StreamSession> = Vec::new();
         let mut index: HashMap<u64, usize> = HashMap::new();
+        let mut batching = BatchStats::default();
 
         let mut clock = 0.0f64;
         let mut busy = 0.0f64;
@@ -184,6 +304,18 @@ impl Shard {
                             &self.cfg.pipeline,
                             work.frames.as_slice(),
                         );
+                        // One estimator pass per stream; windows
+                        // overlap, so each sums its slice of the
+                        // per-frame changed-group counts.
+                        let counts = frame_change_counts(work.frames.as_slice());
+                        let groups = work
+                            .frames
+                            .first()
+                            .map(|f| {
+                                let (gw, gh) = frame_groups(f);
+                                gw * gh
+                            })
+                            .unwrap_or(0);
                         for k in 0..session.window_count() {
                             let (lo, hi) = session.window_range(k);
                             queue.push(WindowJob {
@@ -192,6 +324,7 @@ impl Shard {
                                 start_frame: lo,
                                 end_frame: hi,
                                 arrival_s: (k as f64 + 1.0) * stride_s,
+                                bucket: bucket_from_counts(&counts, groups, lo, hi, bucket_gran),
                             });
                         }
                         index.insert(sid, sessions.len());
@@ -211,45 +344,112 @@ impl Shard {
                 }
             }
 
-            let job = match queue.pop() {
-                Some(j) => j,
-                None => break,
+            // Batch formation: deadline-adjacent jobs, one per stream
+            // (windows of one stream are KV-dependent and must run in
+            // order), same patch-budget bucket (bounds padding waste).
+            // A candidate must also be its stream's *next* unserved
+            // window — joining ahead of a still-queued predecessor
+            // would skip that predecessor's compute.
+            let jobs = {
+                let sessions = &sessions;
+                let index = &index;
+                queue.pop_batch(max_batch, |a, b| {
+                    a.bucket == b.bucket
+                        && a.stream != b.stream
+                        && index
+                            .get(&b.stream)
+                            .map(|&i| sessions[i].next_window_idx() == b.window_idx)
+                            .unwrap_or(false)
+                })
             };
-            let idx = index[&job.stream];
-            // Backpressure may have dropped this stream's older
-            // windows: jump the cursor so dropped windows are never
-            // computed and this job maps to its own window.
-            if job.window_idx < sessions[idx].next_window_idx() {
-                continue; // stale job (already superseded)
+            if jobs.is_empty() {
+                continue; // re-check admission
             }
-            sessions[idx].seek(job.window_idx);
-            let r = match sessions[idx].step() {
-                Some(r) => r,
-                None => continue,
-            };
-            let service_start = clock.max(job.arrival_s);
-            let latency = r.times.total();
-            clock = service_start + latency;
-            busy += latency;
-            metrics.record_window(
-                job.stream,
-                &r.times,
-                service_start - job.arrival_s,
-                r.flops,
-                r.flops_padded,
-                r.seq_tokens,
-            );
-            answers.push((job.stream, job.window_idx, false)); // probe applied by caller
 
-            // KV bookkeeping against this shard's budget slice only.
-            let bytes = sessions[idx].kv_bytes();
-            if bytes > 0 {
-                for victim in kv.hold(job.stream, bytes) {
-                    if let Some(&vi) = index.get(&victim) {
-                        sessions[vi].engine.evict_kv();
-                        metrics.kv_evictions += 1;
+            // Phase 1 — per job, everything up to the prefill launch.
+            let mut pending = Vec::with_capacity(jobs.len());
+            let mut requests: Vec<BatchRequest> = Vec::with_capacity(jobs.len());
+            for job in jobs {
+                let idx = index[&job.stream];
+                // Backpressure may have dropped this stream's older
+                // windows: jump the cursor so dropped windows are
+                // never computed and this job maps to its own window.
+                if job.window_idx < sessions[idx].next_window_idx() {
+                    continue; // stale job (already superseded)
+                }
+                sessions[idx].seek(job.window_idx);
+                if let Some((req, pw)) = sessions[idx].prepare() {
+                    requests.push(req);
+                    pending.push((job, idx, pw));
+                }
+            }
+            if pending.is_empty() {
+                continue;
+            }
+
+            // Phase 2 — one fused launch for the whole batch (the
+            // executor loops internally if it cannot fuse).
+            let outcomes = exec.execute_batch(&requests).expect("batched prefill");
+
+            // Phase 3 — per job, consume outputs; amortized timing.
+            // The batch launches once every member has arrived; its
+            // service time is the sum of member latencies (each
+            // already carrying its amortized prefill share).
+            let batch_arrival = pending
+                .iter()
+                .map(|(job, _, _)| job.arrival_s)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let service_start = clock.max(batch_arrival);
+            let mut batch_service = 0.0f64;
+            // Fusion accounting per artifact: only same-artifact
+            // members actually fuse (and pad to their longest member);
+            // a mixed batch counts as one fused group per artifact.
+            let mut fused_groups: Vec<(&str, Vec<usize>)> = Vec::new();
+            // (stream, session idx) of finished members, for the KV
+            // pass below.
+            let mut served: Vec<(u64, usize)> = Vec::new();
+            for ((i, (job, idx, pw)), outcome) in
+                pending.into_iter().enumerate().zip(outcomes)
+            {
+                let r = sessions[idx].finish(pw, outcome);
+                batch_service += r.times.total();
+                let artifact = requests[i].artifact.as_str();
+                match fused_groups.iter_mut().find(|(a, _)| *a == artifact) {
+                    Some((_, toks)) => toks.push(r.seq_tokens),
+                    None => fused_groups.push((artifact, vec![r.seq_tokens])),
+                }
+                metrics.record_window(
+                    job.stream,
+                    &r.times,
+                    service_start - job.arrival_s,
+                    r.flops,
+                    r.flops_padded,
+                    r.seq_tokens,
+                );
+                answers.push((job.stream, job.window_idx, false)); // probe applied by caller
+                served.push((job.stream, idx));
+            }
+
+            // KV bookkeeping against this shard's budget slice only —
+            // settled after the whole batch has materialized its
+            // states: evicting a still-in-flight member would be a
+            // silent no-op (its KV lives in the pending continuation
+            // until finish_window restores it).
+            for (stream, idx) in served {
+                let bytes = sessions[idx].kv_bytes();
+                if bytes > 0 {
+                    for victim in kv.hold(stream, bytes) {
+                        if let Some(&vi) = index.get(&victim) {
+                            sessions[vi].engine.evict_kv();
+                            metrics.kv_evictions += 1;
+                        }
                     }
                 }
+            }
+            clock = service_start + batch_service;
+            busy += batch_service;
+            for (_, tokens) in &fused_groups {
+                batching.record(tokens);
             }
         }
         metrics.dropped = queue.dropped;
@@ -263,6 +463,7 @@ impl Shard {
             span_s: clock,
             wall_s: util::now() - t0,
             answers,
+            batching,
         }
     }
 }
@@ -377,6 +578,147 @@ mod tests {
         assert_eq!(r.metrics.windows(), 2, "dropped window is never computed");
         let served: Vec<usize> = r.answers.iter().map(|(_, k, _)| *k).collect();
         assert_eq!(served, vec![1, 2], "freshest windows survive, in order");
+    }
+
+    #[test]
+    fn batched_run_fuses_batches_and_serves_everything_once() {
+        let mock = MockEngine::new("m");
+        let mut cfg = ServingConfig::default();
+        cfg.max_batch = 4;
+        cfg.admit_wave = 8; // whole cohort visible to the lookahead
+        cfg.batch_bucket = 10_000; // one bucket: isolate batch mechanics
+        let pool = StealPool::new(works(6, 0));
+        let shard = Shard {
+            id: 0,
+            cfg,
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r = shard.run(&mock, &pool);
+        assert_eq!(r.metrics.windows(), 18, "6 streams x 3 windows, each once");
+        for count in r.metrics.per_stream.values() {
+            assert_eq!(*count, 3);
+        }
+        assert!(r.batches() < 18, "some launches must fuse >1 job");
+        assert!(r.mean_batch_size() > 1.0, "mean batch {:.2}", r.mean_batch_size());
+        assert!(r.padding_waste() >= 0.0 && r.padding_waste() < 1.0);
+        // In-order service per stream despite cross-stream batching.
+        let mut last: HashMap<u64, usize> = HashMap::new();
+        for (stream, k, _) in &r.answers {
+            if let Some(prev) = last.get(stream) {
+                assert!(k > prev, "stream {stream} served window {k} after {prev}");
+            }
+            last.insert(*stream, *k);
+        }
+    }
+
+    #[test]
+    fn batch_cap_one_matches_batched_results_bit_for_bit() {
+        // Deterministic outputs (flops, token counts, per-stream
+        // window sets) must be identical whether windows are served
+        // one at a time or fused: batching amortizes cost, never
+        // changes results.
+        let run = |max_batch: usize| {
+            let mock = MockEngine::new("m");
+            let mut cfg = ServingConfig::default();
+            cfg.max_batch = max_batch;
+            cfg.admit_wave = 8;
+            cfg.batch_bucket = 10_000;
+            let pool = StealPool::new(works(5, 0));
+            let shard = Shard {
+                id: 0,
+                cfg,
+                model: "m".to_string(),
+                variant: Variant::CodecFlow,
+                fps: 2.0,
+            };
+            shard.run(&mock, &pool)
+        };
+        let solo = run(1);
+        let fused = run(4);
+        assert_eq!(solo.metrics.windows(), fused.metrics.windows());
+        assert_eq!(solo.metrics.flops, fused.metrics.flops);
+        assert_eq!(solo.metrics.flops_padded, fused.metrics.flops_padded);
+        assert_eq!(solo.metrics.seq_tokens, fused.metrics.seq_tokens);
+        assert_eq!(solo.metrics.per_stream, fused.metrics.per_stream);
+        let sorted = |r: &ShardReport| {
+            let mut a = r.answers.clone();
+            a.sort();
+            a
+        };
+        assert_eq!(sorted(&solo), sorted(&fused));
+        // Cap 1 really is job-at-a-time.
+        assert_eq!(solo.batches(), solo.metrics.windows());
+        assert!((solo.mean_batch_size() - 1.0).abs() < 1e-12);
+        assert_eq!(solo.padding_waste(), 0.0);
+    }
+
+    #[test]
+    fn amortized_batching_beats_job_at_a_time_on_virtual_time() {
+        // With executor work priced in, fused prefills must lower the
+        // shard's busy time — the whole point of batch formation.
+        let run = |max_batch: usize| {
+            let mut mock = MockEngine::new("m");
+            mock.delay_s = 1e-4; // seconds per unit of artifact work
+            let mut cfg = ServingConfig::default();
+            cfg.max_batch = max_batch;
+            cfg.admit_wave = 8;
+            cfg.batch_bucket = 10_000;
+            let pool = StealPool::new(works(6, 0));
+            let shard = Shard {
+                id: 0,
+                cfg,
+                model: "m".to_string(),
+                variant: Variant::CodecFlow,
+                fps: 2.0,
+            };
+            shard.run(&mock, &pool)
+        };
+        let solo = run(1);
+        let fused = run(4);
+        assert_eq!(solo.metrics.windows(), fused.metrics.windows());
+        assert!(
+            fused.busy_s < solo.busy_s,
+            "fused busy {:.4}s !< solo busy {:.4}s",
+            fused.busy_s,
+            solo.busy_s
+        );
+    }
+
+    #[test]
+    fn estimate_tracks_motion_and_quantizes() {
+        use crate::video::{Corpus, CorpusConfig};
+        let frames = Corpus::generate(CorpusConfig {
+            videos: 1,
+            frames_per_video: 24,
+            ..Default::default()
+        })
+        .clips
+        .remove(0)
+        .frames;
+        let est = estimate_patch_bucket(&frames, 0, 20, 1);
+        // At least the fully-counted first frame; at most every group
+        // of every frame.
+        assert!(est >= 16, "est {est}");
+        assert!(est <= 20 * 16, "est {est}");
+        // Identical frames -> only the first frame counts.
+        let static_frames = vec![frames[0].clone(); 8];
+        assert_eq!(estimate_patch_bucket(&static_frames, 0, 8, 1), 16);
+        // Quantization divides.
+        assert_eq!(estimate_patch_bucket(&static_frames, 0, 8, 16), 1);
+        // Degenerate ranges.
+        assert_eq!(estimate_patch_bucket(&frames, 30, 20, 1), 0);
+        // The admission loop's precomputed-counts form agrees with the
+        // one-shot form on every window (shared implementation).
+        let counts = frame_change_counts(&frames);
+        for (lo, hi) in [(0usize, 20usize), (4, 24), (8, 24), (20, 21)] {
+            assert_eq!(
+                bucket_from_counts(&counts, 16, lo, hi, 32),
+                estimate_patch_bucket(&frames, lo, hi, 32),
+                "window [{lo}, {hi})"
+            );
+        }
     }
 
     #[test]

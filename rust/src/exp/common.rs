@@ -434,12 +434,16 @@ fn cache_load(key: &str) -> Option<VariantEval> {
 
 /// ServingConfig for shard-scaling sweeps: pipeline knobs from the
 /// experiment config, `num_shards` executor replicas, pool size from
-/// the shard count (env `CF_WORKERS` overrides the thread count).
+/// the shard count (env `CF_WORKERS` overrides the thread count,
+/// `CF_BATCH` / `CF_BATCH_BUCKET` override the per-shard batching
+/// knobs — see `docs/ARCHITECTURE.md`).
 pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     let mut s = ServingConfig::default();
     s.pipeline = cfg.pipeline.clone();
     s.num_shards = num_shards.max(1);
     s.workers = env_usize("CF_WORKERS", s.num_shards);
+    s.max_batch = env_usize("CF_BATCH", s.max_batch);
+    s.batch_bucket = env_usize("CF_BATCH_BUCKET", s.batch_bucket);
     s
 }
 

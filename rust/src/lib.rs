@@ -1,6 +1,12 @@
 //! CodecFlow: codec-guided end-to-end optimization for streaming video
 //! analytics — a full-system reproduction (see DESIGN.md).
 //!
+//! The full architecture narrative — the layer map below expanded,
+//! plus a request's life from bitstream to `ShardedReport` and where
+//! batching / stealing / backpressure intercept it — lives in
+//! [`docs/ARCHITECTURE.md`](../docs/ARCHITECTURE.md) at the
+//! repository root.
+//!
 //! Layer map:
 //! * [`codec`], [`video`], [`net`] — substrates: a software inter-frame
 //!   video codec exposing motion vectors / residuals / GOP structure,
@@ -11,16 +17,20 @@
 //! * [`runtime`], [`model`] — PJRT execution of the AOT-compiled JAX/
 //!   Pallas artifacts (feature `pjrt`; manifest-only stub otherwise),
 //!   per-shard executor replica factories ([`runtime::replica`]),
-//!   model descriptors, the anomaly probe.
+//!   cross-stream batched execution ([`runtime::batch`]), model
+//!   descriptors, the anomaly probe.
 //! * [`coordinator`], [`baselines`] — the serving layer, single-shard
 //!   ([`coordinator::serve`]) and sharded: consistent stream->shard
-//!   placement, per-shard EDF admission queues and KV budgets, and
+//!   placement, per-shard EDF admission queues and KV budgets,
+//!   within-shard cross-stream batch formation
+//!   ([`coordinator::queue::AdmissionQueue::pop_batch`]), and
 //!   cross-shard work stealing driven by a thread pool
 //!   ([`coordinator::shard`], [`coordinator::dispatch`]) — plus the
 //!   four comparison systems.
-//! * [`exp`] — one experiment runner per paper table/figure, and
-//!   [`exp::fig20_scaling`] for shard-scaling throughput (beyond the
-//!   paper).
+//! * [`exp`] — one experiment runner per paper table/figure, plus
+//!   [`exp::fig20_scaling`] (shard-scaling throughput) and
+//!   [`exp::fig21_batching`] (cross-stream batched prefill), beyond
+//!   the paper.
 //! * [`util`], [`json`], [`config`] — support: PRNG, stats, micro-bench
 //!   harness, property-test helper, panic-isolating thread pool with
 //!   join/fan-in ([`util::threadpool`]), JSON, typed configs.

@@ -4,7 +4,7 @@
 //! codecflow serve   [--model M] [--variant V] [--frames N]
 //!                   [workers=N] [shards=N] [streams=N] [key=value ...]
 //! codecflow exp     <table1|table2|fig2|fig3|fig5|fig6|fig11|fig12|fig13|
-//!                    fig14|fig15|fig16|fig17|fig18|fig19|fig20|all>
+//!                    fig14|fig15|fig16|fig17|fig18|fig19|fig20|fig21|all>
 //! codecflow models              # list models + artifacts
 //! codecflow help
 //! ```
@@ -155,12 +155,16 @@ fn experiment(args: &[String]) {
         "fig20" => {
             exp::fig20_scaling::run();
         }
+        "fig21" => {
+            exp::fig21_batching::run();
+        }
         other => eprintln!("unknown experiment {other}"),
     };
     if which == "all" {
         for name in [
             "table1", "table2", "fig2", "fig3", "fig5", "fig6", "fig11", "fig12",
             "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
+            "fig21",
         ] {
             println!("\n===== {name} =====");
             run_one(name);
@@ -201,12 +205,16 @@ fn help() {
          \n\
          USAGE:\n\
          \x20 codecflow serve  [--model M] [--variant V] [--frames N] [key=value...]\n\
-         \x20 codecflow exp    <table1|table2|fig2..fig20|all>\n\
+         \x20 codecflow exp    <table1|table2|fig2..fig21|all>\n\
          \x20 codecflow models\n\
          \n\
          serving overrides: workers= shards= streams= admit_wave= steal= queue_depth=\n\
-         \x20                kv_budget_bytes=   (workers=N scales to N executor shards)\n\
+         \x20                batch= batch_bucket= kv_budget_bytes=\n\
+         \x20                (workers=N scales to N executor shards; batch=N fuses up\n\
+         \x20                to N compatible cross-stream prefills per launch)\n\
          pipeline overrides: window_frames= stride_frac= gop= mv_threshold= alpha= qp=\n\
-         env: CF_ARTIFACTS, CF_VIDEOS, CF_FRAMES, CF_WORKERS, CF_NO_CACHE"
+         env: CF_ARTIFACTS, CF_VIDEOS, CF_FRAMES, CF_WORKERS, CF_BATCH,\n\
+         \x20    CF_BATCH_BUCKET, CF_NO_CACHE\n\
+         docs: docs/ARCHITECTURE.md (layer map + a request's life)"
     );
 }

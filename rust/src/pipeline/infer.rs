@@ -21,6 +21,7 @@ use crate::kvc::records::{TokenKind, TokenRecord, WindowState};
 use crate::kvc::refresher::{plan_window, RefreshPolicy};
 use crate::kvc::rope;
 use crate::model::prompt::Prompt;
+use crate::runtime::batch::{BatchOutcome, BatchRequest};
 use crate::runtime::flops;
 use crate::runtime::manifest::ModelSpec;
 use crate::runtime::mock::Executor;
@@ -160,6 +161,63 @@ struct VisualToken {
     group: usize,
     is_iframe: bool,
     emb: Vec<f32>,
+}
+
+/// Where a sequence position of an incremental window comes from.
+enum Src {
+    Reused { prev_idx: usize },
+    Refresh { prev_idx: usize },
+    Fresh { fresh_idx: usize },
+    Text { text_idx: usize },
+}
+
+/// One assembled sequence position (incremental-path continuation).
+struct SeqTok {
+    src: Src,
+    frame: usize,
+    group: usize,
+    is_iframe: bool,
+}
+
+/// A window prepared up to (but *not* including) its LLM prefill
+/// launch. [`WindowEngine::prepare_window`] returns the launch itself
+/// as a [`BatchRequest`] so the serving layer can fuse
+/// shape-compatible launches from different streams into one
+/// `execute_batch` call; this struct carries everything needed to
+/// consume the launch outputs in [`WindowEngine::finish_window`].
+pub struct PendingWindow {
+    start: usize,
+    end: usize,
+    times: StageTimes,
+    flops: u64,
+    flops_padded: u64,
+    pruned_ratio: f64,
+    path: PendingPath,
+}
+
+enum PendingPath {
+    /// Full prefill (first window, Recompute mode, or bucket-overflow
+    /// fallback).
+    Full {
+        visual: Vec<VisualToken>,
+        text_len: usize,
+        t_real: usize,
+        bucket: usize,
+    },
+    /// Incremental prefill: reuse overlap KV, refresh per policy.
+    Incr {
+        prev: WindowState,
+        seq: Vec<SeqTok>,
+        fresh: Vec<VisualToken>,
+        corrected_k: KvBlock,
+        gathered_v: KvBlock,
+        text_len: usize,
+        to_real: usize,
+        tn_real: usize,
+        tn_bucket: usize,
+        to_bucket: usize,
+        refreshed: usize,
+    },
 }
 
 /// Per-stream window engine.
@@ -379,13 +437,38 @@ impl<'a> WindowEngine<'a> {
     }
 
     /// Process window [start, end) given its decoded frames (+ stage
-    /// times already incurred by the front-end).
+    /// times already incurred by the front-end). Equivalent to
+    /// [`WindowEngine::prepare_window`] + a solo prefill launch +
+    /// [`WindowEngine::finish_window`] — the batched serving path runs
+    /// the same code, so a batch of one reproduces this bit-for-bit.
     pub fn process_window(
         &mut self,
         frames: &[(Frame, FrameMeta)],
         start: usize,
         frontend_times: StageTimes,
     ) -> WindowResult {
+        let (request, pending) = self.prepare_window(frames, start, frontend_times);
+        let (outputs, exec_s) = self
+            .exec
+            .execute(&request.model, &request.artifact, &request.inputs)
+            .expect("prefill");
+        self.finish_window(pending, BatchOutcome { outputs, exec_s })
+    }
+
+    /// Run everything *before* the window's LLM prefill launch:
+    /// frontend-time accounting, codec-guided selection, ViT encoding
+    /// of fresh frames, sequence assembly and KV gather/position
+    /// correction. Returns the fully-materialized prefill launch as a
+    /// [`BatchRequest`] (so the serving layer may fuse it with
+    /// shape-compatible launches from other streams) plus the
+    /// [`PendingWindow`] continuation for
+    /// [`WindowEngine::finish_window`].
+    pub fn prepare_window(
+        &mut self,
+        frames: &[(Frame, FrameMeta)],
+        start: usize,
+        frontend_times: StageTimes,
+    ) -> (BatchRequest, PendingWindow) {
         let end = start + frames.len();
         let mut times = frontend_times;
         let mut flops = 0u64;
@@ -416,27 +499,197 @@ impl<'a> WindowEngine<'a> {
 
         let text_embs = self.text_embeddings(&mut times);
 
-        let result = if reuse_possible {
-            self.window_incremental(start, end, fresh_tokens, &text_embs, times, flops, flops_padded, pruned_ratio)
+        if reuse_possible {
+            self.incremental_prepare(start, end, fresh_tokens, &text_embs, times, flops, flops_padded, pruned_ratio)
         } else {
-            self.window_full(start, end, fresh_tokens, &text_embs, times, flops, flops_padded, pruned_ratio)
-        };
-        result
+            self.full_prepare(start, end, fresh_tokens, &text_embs, times, flops, flops_padded, pruned_ratio)
+        }
     }
 
-    /// Full prefill path (first window, or Recompute mode).
+    /// Consume a prefill launch's outputs: KV-state assembly, answer
+    /// decoding, stream-state update. `outcome.exec_s` is this
+    /// window's (possibly batch-amortized) share of the launch cost.
+    pub fn finish_window(&mut self, pending: PendingWindow, outcome: BatchOutcome) -> WindowResult {
+        let PendingWindow { start, end, mut times, mut flops, mut flops_padded, pruned_ratio, path } =
+            pending;
+        let BatchOutcome { outputs, exec_s } = outcome;
+        times.llm_prefill += exec_s;
+        let (l, h, hd) = (self.spec.llm_layers, self.spec.llm_heads, self.spec.head_dim);
+
+        match path {
+            PendingPath::Full { visual, text_len, t_real, bucket } => {
+                flops += flops::prefill_full(&self.spec, t_real);
+                flops_padded += flops::prefill_full(&self.spec, bucket);
+
+                let last_hidden = outputs[0].as_f32().to_vec();
+                let pooled = outputs[1].as_f32().to_vec();
+                let logits = outputs[2].as_f32().to_vec();
+                let k =
+                    KvBlock::from_data(l, h, bucket, hd, outputs[3].as_f32().to_vec()).truncate(t_real);
+                let v =
+                    KvBlock::from_data(l, h, bucket, hd, outputs[4].as_f32().to_vec()).truncate(t_real);
+
+                // Assemble records (sequence order).
+                let mut tokens: Vec<TokenRecord> = Vec::with_capacity(t_real);
+                for (i, tok) in visual.iter().enumerate() {
+                    tokens.push(TokenRecord {
+                        kind: TokenKind::Visual,
+                        frame: tok.frame,
+                        group: tok.group,
+                        pos: i as i32,
+                        is_iframe: tok.is_iframe,
+                        emb: tok.emb.clone(),
+                    });
+                }
+                for j in 0..text_len {
+                    tokens.push(TokenRecord {
+                        kind: TokenKind::Text,
+                        frame: 0,
+                        group: 0,
+                        pos: (visual.len() + j) as i32,
+                        is_iframe: false,
+                        emb: Vec::new(),
+                    });
+                }
+
+                let visual_count = visual.len();
+                let state = WindowState { start_frame: start, end_frame: end, tokens, k, v };
+                let decoded_ids =
+                    self.decode_answer(&state, &logits, &mut times, &mut flops, &mut flops_padded);
+                self.prev = Some(state);
+
+                WindowResult {
+                    start,
+                    end,
+                    last_hidden,
+                    pooled,
+                    logits,
+                    decoded_ids,
+                    seq_tokens: t_real,
+                    visual_tokens: visual_count,
+                    reused_tokens: 0,
+                    refreshed_tokens: 0,
+                    fresh_tokens: visual_count,
+                    pruned_ratio,
+                    flops,
+                    flops_padded,
+                    times,
+                }
+            }
+            PendingPath::Incr {
+                prev,
+                seq,
+                fresh,
+                corrected_k,
+                gathered_v,
+                text_len,
+                to_real,
+                tn_real,
+                tn_bucket,
+                to_bucket,
+                refreshed,
+            } => {
+                flops += flops::prefill_incr(&self.spec, tn_real, to_real);
+                flops_padded += flops::prefill_incr(&self.spec, tn_bucket, to_bucket);
+
+                let last_hidden = outputs[0].as_f32().to_vec();
+                let pooled = outputs[1].as_f32().to_vec();
+                let logits = outputs[2].as_f32().to_vec();
+                let k_new = KvBlock::from_data(l, h, tn_bucket, hd, outputs[3].as_f32().to_vec())
+                    .truncate(tn_real);
+                let v_new = KvBlock::from_data(l, h, tn_bucket, hd, outputs[4].as_f32().to_vec())
+                    .truncate(tn_real);
+
+                // ---- assemble the new WindowState in sequence order ----
+                let t_kvc1 = util::now();
+                let t_total = seq.len();
+                // Block-order K/V: [reused corrected ++ new]; build the
+                // gather that reorders block order -> sequence order.
+                let block_k = corrected_k.concat(&k_new);
+                let block_v = gathered_v.concat(&v_new);
+                let mut block_pos_of_seq = vec![0usize; t_total];
+                {
+                    let mut reused_cursor = 0usize;
+                    let mut new_cursor = 0usize;
+                    for (i, st) in seq.iter().enumerate() {
+                        match st.src {
+                            Src::Reused { .. } => {
+                                block_pos_of_seq[i] = reused_cursor;
+                                reused_cursor += 1;
+                            }
+                            _ => {
+                                block_pos_of_seq[i] = to_real + new_cursor;
+                                new_cursor += 1;
+                            }
+                        }
+                    }
+                }
+                let k_seq = block_k.gather(&block_pos_of_seq);
+                let v_seq = block_v.gather(&block_pos_of_seq);
+
+                let mut tokens: Vec<TokenRecord> = Vec::with_capacity(t_total);
+                for (i, st) in seq.iter().enumerate() {
+                    let (kind, emb) = match st.src {
+                        Src::Text { .. } => (TokenKind::Text, Vec::new()),
+                        Src::Reused { prev_idx } | Src::Refresh { prev_idx } => {
+                            (TokenKind::Visual, prev.tokens[prev_idx].emb.clone())
+                        }
+                        Src::Fresh { fresh_idx } => (TokenKind::Visual, fresh[fresh_idx].emb.clone()),
+                    };
+                    tokens.push(TokenRecord {
+                        kind,
+                        frame: st.frame,
+                        group: st.group,
+                        pos: i as i32,
+                        is_iframe: st.is_iframe,
+                        emb,
+                    });
+                }
+                times.overhead_kvc += util::now() - t_kvc1;
+
+                let visual_count = t_total - text_len;
+                let fresh_count = fresh.len();
+                let state =
+                    WindowState { start_frame: start, end_frame: end, tokens, k: k_seq, v: v_seq };
+                let decoded_ids =
+                    self.decode_answer(&state, &logits, &mut times, &mut flops, &mut flops_padded);
+                self.prev = Some(state);
+
+                WindowResult {
+                    start,
+                    end,
+                    last_hidden,
+                    pooled,
+                    logits,
+                    decoded_ids,
+                    seq_tokens: t_total,
+                    visual_tokens: visual_count,
+                    reused_tokens: to_real,
+                    refreshed_tokens: refreshed,
+                    fresh_tokens: fresh_count,
+                    pruned_ratio,
+                    flops,
+                    flops_padded,
+                    times,
+                }
+            }
+        }
+    }
+
+    /// Build the full-prefill launch (first window, Recompute mode, or
+    /// bucket-overflow fallback).
     #[allow(clippy::too_many_arguments)]
-    fn window_full(
+    fn full_prepare(
         &mut self,
         start: usize,
         end: usize,
         visual: Vec<VisualToken>,
         text_embs: &[Vec<f32>],
-        mut times: StageTimes,
-        mut flops: u64,
-        mut flops_padded: u64,
+        times: StageTimes,
+        flops: u64,
+        flops_padded: u64,
         pruned_ratio: f64,
-    ) -> WindowResult {
+    ) -> (BatchRequest, PendingWindow) {
         let d = self.spec.llm_dim;
         let t_real = visual.len() + text_embs.len();
         let bucket = ModelSpec::pick_bucket(&self.spec.prefill_buckets, t_real);
@@ -457,80 +710,33 @@ impl<'a> WindowEngine<'a> {
             mask[i] = 1.0;
         }
 
-        let (outputs, exec_s) = self
-            .exec
-            .execute(
-                &self.model,
-                &format!("prefill_full_t{bucket}"),
-                &[
-                    Tensor::f32(&[bucket, d], emb),
-                    Tensor::i32(&[bucket], pos),
-                    Tensor::f32(&[bucket], mask),
-                    Tensor::scalar_i32(t_real as i32 - 1),
-                ],
-            )
-            .expect("prefill_full");
-        times.llm_prefill += exec_s;
-        flops += flops::prefill_full(&self.spec, t_real);
-        flops_padded += flops::prefill_full(&self.spec, bucket);
-
-        let last_hidden = outputs[0].as_f32().to_vec();
-        let pooled = outputs[1].as_f32().to_vec();
-        let logits = outputs[2].as_f32().to_vec();
-        let (l, h, hd) = (self.spec.llm_layers, self.spec.llm_heads, self.spec.head_dim);
-        let k = KvBlock::from_data(l, h, bucket, hd, outputs[3].as_f32().to_vec()).truncate(t_real);
-        let v = KvBlock::from_data(l, h, bucket, hd, outputs[4].as_f32().to_vec()).truncate(t_real);
-
-        // Assemble records (sequence order).
-        let mut tokens: Vec<TokenRecord> = Vec::with_capacity(t_real);
-        for (i, tok) in visual.iter().enumerate() {
-            tokens.push(TokenRecord {
-                kind: TokenKind::Visual,
-                frame: tok.frame,
-                group: tok.group,
-                pos: i as i32,
-                is_iframe: tok.is_iframe,
-                emb: tok.emb.clone(),
-            });
-        }
-        for j in 0..text_embs.len() {
-            tokens.push(TokenRecord {
-                kind: TokenKind::Text,
-                frame: 0,
-                group: 0,
-                pos: (visual.len() + j) as i32,
-                is_iframe: false,
-                emb: Vec::new(),
-            });
-        }
-
-        let visual_count = visual.len();
-        let state = WindowState { start_frame: start, end_frame: end, tokens, k, v };
-        let decoded_ids = self.decode_answer(&state, &logits, &mut times, &mut flops, &mut flops_padded);
-        self.prev = Some(state);
-
-        WindowResult {
+        let request = BatchRequest {
+            model: self.model.clone(),
+            artifact: format!("prefill_full_t{bucket}"),
+            inputs: vec![
+                Tensor::f32(&[bucket, d], emb),
+                Tensor::i32(&[bucket], pos),
+                Tensor::f32(&[bucket], mask),
+                Tensor::scalar_i32(t_real as i32 - 1),
+            ],
+        };
+        let pending = PendingWindow {
             start,
             end,
-            last_hidden,
-            pooled,
-            logits,
-            decoded_ids,
-            seq_tokens: t_real,
-            visual_tokens: visual_count,
-            reused_tokens: 0,
-            refreshed_tokens: 0,
-            fresh_tokens: visual_count,
-            pruned_ratio,
+            times,
             flops,
             flops_padded,
-            times,
-        }
+            pruned_ratio,
+            path: PendingPath::Full { visual, text_len: text_embs.len(), t_real, bucket },
+        };
+        (request, pending)
     }
 
-    /// Incremental path: reuse overlap KV, refresh per policy.
+    /// Build the incremental-prefill launch: reuse overlap KV, refresh
+    /// per policy. Falls back to [`WindowEngine::full_prepare`] on
+    /// bucket overflow.
     #[allow(clippy::too_many_arguments)]
-    fn window_incremental(
+    fn incremental_prepare(
         &mut self,
         start: usize,
         end: usize,
@@ -538,9 +744,9 @@ impl<'a> WindowEngine<'a> {
         text_embs: &[Vec<f32>],
         mut times: StageTimes,
         mut flops: u64,
-        mut flops_padded: u64,
+        flops_padded: u64,
         pruned_ratio: f64,
-    ) -> WindowResult {
+    ) -> (BatchRequest, PendingWindow) {
         let prev = self.prev.take().expect("incremental needs prev");
         let t_kvc0 = util::now();
         let policy = self.build_policy(&prev, start, end);
@@ -549,18 +755,6 @@ impl<'a> WindowEngine<'a> {
         // ---- sequence assembly -------------------------------------
         // Overlap tokens (reused + refreshed) are already (frame,
         // group)-ascending in prev; fresh follows; text last.
-        struct SeqTok {
-            src: Src,
-            frame: usize,
-            group: usize,
-            is_iframe: bool,
-        }
-        enum Src {
-            Reused { prev_idx: usize },
-            Refresh { prev_idx: usize },
-            Fresh { fresh_idx: usize },
-            Text { text_idx: usize },
-        }
         let mut seq: Vec<SeqTok> = Vec::new();
         {
             let mut ri = 0usize; // cursor into plan.reuse_idx
@@ -606,7 +800,6 @@ impl<'a> WindowEngine<'a> {
         for j in 0..text_embs.len() {
             seq.push(SeqTok { src: Src::Text { text_idx: j }, frame: 0, group: 0, is_iframe: false });
         }
-        let t_total = seq.len();
 
         // Positions = index in sequence. Split into old/new blocks.
         let mut reuse_prev_idx = Vec::new();
@@ -655,7 +848,7 @@ impl<'a> WindowEngine<'a> {
                     Src::Text { .. } => {}
                 }
             }
-            return self.window_full(start, end, visual, text_embs, times, flops, flops_padded, pruned_ratio);
+            return self.full_prepare(start, end, visual, text_embs, times, flops, flops_padded, pruned_ratio);
         }
 
         // ---- gather + position-correct reused KV -------------------
@@ -677,8 +870,6 @@ impl<'a> WindowEngine<'a> {
         let to_bucket = ModelSpec::pick_bucket(&self.spec.incr_old_buckets, to_real);
         let (old_k_pad, old_mask) = corrected_k.pad_to(to_bucket);
         let (old_v_pad, _) = gathered_v.pad_to(to_bucket);
-        let old_k_pad = old_k_pad; // moved into the execute call below
-        let old_v_pad = old_v_pad;
 
         let mut new_emb = vec![0.0f32; tn_bucket * d];
         let mut new_pos = vec![0i32; tn_bucket];
@@ -696,106 +887,44 @@ impl<'a> WindowEngine<'a> {
         }
 
         let (l, h, hd) = (self.spec.llm_layers, self.spec.llm_heads, self.spec.head_dim);
-        let (outputs, exec_s) = self
-            .exec
-            .execute(
-                &self.model,
-                &format!("prefill_incr_n{tn_bucket}_o{to_bucket}"),
-                &[
-                    Tensor::f32(&[tn_bucket, d], new_emb),
-                    Tensor::i32(&[tn_bucket], new_pos),
-                    Tensor::f32(&[tn_bucket], new_mask),
-                    // moved, not cloned: saves ~2-4 MB of memcpy per
-                    // window on the reuse hot path (EXPERIMENTS §Perf L3)
-                    Tensor::f32(&[l, h, to_bucket, hd], old_k_pad.data),
-                    Tensor::f32(&[l, h, to_bucket, hd], old_v_pad.data),
-                    Tensor::f32(&[to_bucket], old_mask),
-                    Tensor::scalar_i32(tn_real as i32 - 1),
-                ],
-            )
-            .expect("prefill_incr");
-        times.llm_prefill += exec_s;
-        flops += flops::prefill_incr(&self.spec, tn_real, to_real);
-        flops_padded += flops::prefill_incr(&self.spec, tn_bucket, to_bucket);
-
-        let last_hidden = outputs[0].as_f32().to_vec();
-        let pooled = outputs[1].as_f32().to_vec();
-        let logits = outputs[2].as_f32().to_vec();
-        let k_new = KvBlock::from_data(l, h, tn_bucket, hd, outputs[3].as_f32().to_vec())
-            .truncate(tn_real);
-        let v_new = KvBlock::from_data(l, h, tn_bucket, hd, outputs[4].as_f32().to_vec())
-            .truncate(tn_real);
-
-        // ---- assemble the new WindowState in sequence order --------
-        let t_kvc1 = util::now();
-        // Block-order K/V: [reused corrected ++ new]; build the gather
-        // that reorders block order -> sequence order.
-        let block_k = corrected_k.concat(&k_new);
-        let block_v = gathered_v.concat(&v_new);
-        let mut block_pos_of_seq = vec![0usize; t_total];
-        {
-            let mut reused_cursor = 0usize;
-            let mut new_cursor = 0usize;
-            for (i, st) in seq.iter().enumerate() {
-                match st.src {
-                    Src::Reused { .. } => {
-                        block_pos_of_seq[i] = reused_cursor;
-                        reused_cursor += 1;
-                    }
-                    _ => {
-                        block_pos_of_seq[i] = to_real + new_cursor;
-                        new_cursor += 1;
-                    }
-                }
-            }
-        }
-        let k_seq = block_k.gather(&block_pos_of_seq);
-        let v_seq = block_v.gather(&block_pos_of_seq);
-
-        let mut tokens: Vec<TokenRecord> = Vec::with_capacity(t_total);
-        for (i, st) in seq.iter().enumerate() {
-            let (kind, emb) = match st.src {
-                Src::Text { .. } => (TokenKind::Text, Vec::new()),
-                Src::Reused { prev_idx } | Src::Refresh { prev_idx } => {
-                    (TokenKind::Visual, prev.tokens[prev_idx].emb.clone())
-                }
-                Src::Fresh { fresh_idx } => (TokenKind::Visual, fresh[fresh_idx].emb.clone()),
-            };
-            tokens.push(TokenRecord {
-                kind,
-                frame: st.frame,
-                group: st.group,
-                pos: i as i32,
-                is_iframe: st.is_iframe,
-                emb,
-            });
-        }
-        times.overhead_kvc += util::now() - t_kvc1;
-
-        let visual_count = t_total - text_embs.len();
-        let fresh_count = fresh.len();
-        let refreshed_count = plan.refresh_idx.len();
-        let state = WindowState { start_frame: start, end_frame: end, tokens, k: k_seq, v: v_seq };
-        let decoded_ids = self.decode_answer(&state, &logits, &mut times, &mut flops, &mut flops_padded);
-        self.prev = Some(state);
-
-        WindowResult {
+        let request = BatchRequest {
+            model: self.model.clone(),
+            artifact: format!("prefill_incr_n{tn_bucket}_o{to_bucket}"),
+            inputs: vec![
+                Tensor::f32(&[tn_bucket, d], new_emb),
+                Tensor::i32(&[tn_bucket], new_pos),
+                Tensor::f32(&[tn_bucket], new_mask),
+                // moved, not cloned: saves ~2-4 MB of memcpy per
+                // window on the reuse hot path (EXPERIMENTS §Perf L3)
+                Tensor::f32(&[l, h, to_bucket, hd], old_k_pad.data),
+                Tensor::f32(&[l, h, to_bucket, hd], old_v_pad.data),
+                Tensor::f32(&[to_bucket], old_mask),
+                Tensor::scalar_i32(tn_real as i32 - 1),
+            ],
+        };
+        let refreshed = plan.refresh_idx.len();
+        let pending = PendingWindow {
             start,
             end,
-            last_hidden,
-            pooled,
-            logits,
-            decoded_ids,
-            seq_tokens: t_total,
-            visual_tokens: visual_count,
-            reused_tokens: to_real,
-            refreshed_tokens: refreshed_count,
-            fresh_tokens: fresh_count,
-            pruned_ratio,
+            times,
             flops,
             flops_padded,
-            times,
-        }
+            pruned_ratio,
+            path: PendingPath::Incr {
+                prev,
+                seq,
+                fresh,
+                corrected_k,
+                gathered_v,
+                text_len: text_embs.len(),
+                to_real,
+                tn_real,
+                tn_bucket,
+                to_bucket,
+                refreshed,
+            },
+        };
+        (request, pending)
     }
 
     /// Turn the variant's RefreshSelect into a concrete policy for
@@ -1115,6 +1244,69 @@ mod tests {
         // all LLM tokens still present (ViT-only optimization)
         assert_eq!(r.visual_tokens, 320);
         assert!(r.times.overhead_prune > 0.0);
+    }
+
+    #[test]
+    fn batched_prefill_bit_for_bit_matches_unbatched() {
+        // Two independent streams, served two ways: job-at-a-time
+        // (process_window) vs prepare -> fused execute_batch ->
+        // finish. Every deterministic output must be identical — the
+        // invariant the batched shard loop relies on.
+        let corpus = Corpus::generate(CorpusConfig {
+            videos: 2,
+            frames_per_video: 28,
+            ..Default::default()
+        });
+        let streams: Vec<Vec<(Frame, FrameMeta)>> = corpus
+            .clips
+            .iter()
+            .map(|c| {
+                let (bits, _) = crate::codec::encoder::encode_sequence(
+                    &c.frames,
+                    crate::codec::encoder::EncoderConfig::default(),
+                );
+                crate::codec::decoder::Decoder::new(bits).unwrap().decode_all().unwrap()
+            })
+            .collect();
+
+        let mock = MockEngine::new("m");
+        let mut solo: Vec<WindowEngine> = (0..2)
+            .map(|_| WindowEngine::new(&mock, "m", VariantOpts::codecflow(0.25, 0.0)))
+            .collect();
+        let mut batched: Vec<WindowEngine> = (0..2)
+            .map(|_| WindowEngine::new(&mock, "m", VariantOpts::codecflow(0.25, 0.0)))
+            .collect();
+
+        // Window 0 exercises the full-prefill path, window 1 the
+        // incremental (KV-reuse) path.
+        for (start, end) in [(0usize, 20usize), (4, 24)] {
+            let solo_results: Vec<WindowResult> = solo
+                .iter_mut()
+                .zip(&streams)
+                .map(|(e, f)| e.process_window(&f[start..end], start, StageTimes::default()))
+                .collect();
+            let mut reqs = Vec::new();
+            let mut pends = Vec::new();
+            for (e, f) in batched.iter_mut().zip(&streams) {
+                let (req, pend) = e.prepare_window(&f[start..end], start, StageTimes::default());
+                reqs.push(req);
+                pends.push(pend);
+            }
+            let outcomes = mock.execute_batch(&reqs).unwrap();
+            for (((e, pend), outcome), want) in
+                batched.iter_mut().zip(pends).zip(outcomes).zip(&solo_results)
+            {
+                let got = e.finish_window(pend, outcome);
+                assert_eq!(got.logits, want.logits);
+                assert_eq!(got.pooled, want.pooled);
+                assert_eq!(got.decoded_ids, want.decoded_ids);
+                assert_eq!(got.seq_tokens, want.seq_tokens);
+                assert_eq!(got.flops, want.flops);
+                assert_eq!(got.flops_padded, want.flops_padded);
+                assert_eq!(got.reused_tokens, want.reused_tokens);
+                assert_eq!(got.fresh_tokens, want.fresh_tokens);
+            }
+        }
     }
 
     #[test]

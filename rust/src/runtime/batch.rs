@@ -1,0 +1,186 @@
+//! Cross-stream batched execution: the `BatchRequest`/`BatchedExecutor`
+//! API used by the serving layer to fuse shape-compatible prefill
+//! launches from *different* streams into one executor call.
+//!
+//! The contract, in three parts:
+//!
+//! * [`BatchRequest`] — one fully-materialized executor call (model,
+//!   artifact, padded input tensors), produced by
+//!   `WindowEngine::prepare_window` without launching anything;
+//! * [`Executor::execute_batch`] — takes a slice of requests and
+//!   returns one [`BatchOutcome`] per request, *in request order*.
+//!   The default implementation is [`execute_looping`]: executors that
+//!   cannot fuse (e.g. the PJRT [`Engine`](super::Engine), whose AOT
+//!   artifacts have no batch dimension) simply launch sequentially and
+//!   report true per-call cost. The mock executor overrides it to fuse
+//!   same-artifact groups and amortize the launch cost across the
+//!   group — the behaviour a batched accelerator kernel would have;
+//! * [`BatchStats`] — per-shard batch-formation accounting (batch
+//!   count, mean batch size, padding waste), merged shard-by-shard
+//!   into the `ShardedReport`.
+//!
+//! Outputs are *never* shared across a batch: fusing only amortizes
+//! launch/compute cost, each request keeps its own output tensors, so
+//! a batch of one is bit-for-bit identical to an unbatched call.
+//!
+//! See `docs/ARCHITECTURE.md` ("Where batching intercepts a request")
+//! for how the coordinator forms batches ahead of this API.
+
+use super::engine::EngineError;
+use super::mock::Executor;
+use super::tensor::Tensor;
+
+/// One prepared executor call, ready to be fused into a batch.
+#[derive(Debug)]
+pub struct BatchRequest {
+    pub model: String,
+    /// Bucketed artifact name (e.g. `prefill_incr_n96_o288`). Requests
+    /// only fuse when the artifact matches exactly — same shapes, same
+    /// compiled kernel.
+    pub artifact: String,
+    /// Padded inputs, exactly as `Executor::execute` expects them.
+    pub inputs: Vec<Tensor>,
+}
+
+/// Result of one request within a batch.
+#[derive(Debug)]
+pub struct BatchOutcome {
+    pub outputs: Vec<Tensor>,
+    /// This request's share of the (possibly amortized) execution
+    /// seconds.
+    pub exec_s: f64,
+}
+
+/// Marker alias for "an executor you can hand batches to". Every
+/// [`Executor`] qualifies via the `execute_batch` default method; the
+/// name exists so call sites can say what they need.
+pub trait BatchedExecutor: Executor {}
+
+impl<E: Executor + ?Sized> BatchedExecutor for E {}
+
+/// Looping fallback: execute each request individually, charging true
+/// per-call cost. Correct for every executor; fuses nothing.
+pub fn execute_looping<E: Executor + ?Sized>(
+    exec: &E,
+    reqs: &[BatchRequest],
+) -> Result<Vec<BatchOutcome>, EngineError> {
+    reqs.iter()
+        .map(|r| {
+            exec.execute(&r.model, &r.artifact, &r.inputs)
+                .map(|(outputs, exec_s)| BatchOutcome { outputs, exec_s })
+        })
+        .collect()
+}
+
+/// Batch-formation accounting for one serving run (or one shard of
+/// it). The unit is a *fused group*: the members of a scheduler batch
+/// that share an artifact and therefore launch as one kernel (a mixed
+/// batch records one group per artifact; a singleton job is a group
+/// of one). `useful_tokens`/`padded_tokens` measure cross-stream
+/// padding: every member of a group is padded to the longest, so
+/// `padded = sum over groups of (jobs x max_seq_tokens)`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Fused launch groups executed.
+    pub batches: usize,
+    /// Jobs executed across all groups.
+    pub jobs: usize,
+    /// Sum of per-job real sequence tokens.
+    pub useful_tokens: usize,
+    /// Sum of per-group `jobs x max(seq_tokens)` — the token mass the
+    /// fused kernel actually processes.
+    pub padded_tokens: usize,
+}
+
+impl BatchStats {
+    /// Record one fused group given its members' real token counts.
+    pub fn record(&mut self, batch_tokens: &[usize]) {
+        let n = batch_tokens.len();
+        if n == 0 {
+            return;
+        }
+        let max = *batch_tokens.iter().max().unwrap();
+        self.batches += 1;
+        self.jobs += n;
+        self.useful_tokens += batch_tokens.iter().sum::<usize>();
+        self.padded_tokens += n * max;
+    }
+
+    /// Mean jobs per executed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.jobs as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of batched token compute wasted on cross-stream
+    /// padding (0 when every batch is homogeneous or singleton).
+    pub fn padding_waste(&self) -> f64 {
+        if self.padded_tokens == 0 {
+            0.0
+        } else {
+            1.0 - self.useful_tokens as f64 / self.padded_tokens as f64
+        }
+    }
+
+    /// Fold another shard's stats into this one.
+    pub fn merge(&mut self, other: &BatchStats) {
+        self.batches += other.batches;
+        self.jobs += other.jobs;
+        self.useful_tokens += other.useful_tokens;
+        self.padded_tokens += other.padded_tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::MockEngine;
+
+    #[test]
+    fn looping_fallback_matches_individual_calls() {
+        let m = MockEngine::new("m");
+        let inp = vec![Tensor::f32(&[2], vec![1.0, 2.0])];
+        let reqs = vec![
+            BatchRequest {
+                model: "m".to_string(),
+                artifact: "vit_encode_n16".to_string(),
+                inputs: inp.clone(),
+            },
+            BatchRequest {
+                model: "m".to_string(),
+                artifact: "decode_step".to_string(),
+                inputs: Vec::new(),
+            },
+        ];
+        let out = execute_looping(&m, &reqs).unwrap();
+        assert_eq!(out.len(), 2);
+        let solo = m.execute("m", "vit_encode_n16", &inp).unwrap();
+        assert_eq!(out[0].outputs, solo.0);
+        assert_eq!(out[0].exec_s, solo.1);
+    }
+
+    #[test]
+    fn stats_math() {
+        let mut s = BatchStats::default();
+        s.record(&[100, 80]); // padded to 2 x 100
+        s.record(&[50]); // singleton: no padding
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.jobs, 3);
+        assert_eq!(s.useful_tokens, 230);
+        assert_eq!(s.padded_tokens, 250);
+        assert!((s.mean_batch_size() - 1.5).abs() < 1e-12);
+        assert!((s.padding_waste() - 0.08).abs() < 1e-12);
+
+        let mut t = BatchStats::default();
+        t.record(&[10, 10]);
+        t.merge(&s);
+        assert_eq!(t.batches, 3);
+        assert_eq!(t.jobs, 5);
+        assert_eq!(t.padding_waste(), 1.0 - 250.0 / 270.0);
+        assert_eq!(BatchStats::default().padding_waste(), 0.0);
+        assert_eq!(BatchStats::default().mean_batch_size(), 0.0);
+    }
+}

@@ -15,6 +15,12 @@
 //! engine *replica per shard* ([`super::replica`]) rather than sharing
 //! one engine across threads.
 //!
+//! Cross-stream batching ([`super::batch`]): the AOT artifacts carry
+//! no batch dimension, so this engine's `execute_batch` is the looping
+//! fallback — batches from the shard loop still run correctly, just
+//! without fused-launch amortization. Batched HLO artifacts are the
+//! natural next step (see ROADMAP).
+//!
 //! Compiled in two flavours:
 //! * `--features pjrt` — the real executor (needs the `xla` PJRT
 //!   bindings, not vendored in this tree);

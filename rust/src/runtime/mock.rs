@@ -5,11 +5,18 @@
 //! inputs* (hash of input bytes seeds the generator), so tests can
 //! assert e.g. "same inputs -> same KV" and "different context ->
 //! different logits" — the properties the cache logic relies on.
+//!
+//! Virtual timing: `delay_s` is the cost of one *unit of artifact
+//! work* (roughly one sequence token through the relevant kernel, see
+//! [`MockEngine::work_units`]), so prefill launches dominate vit/
+//! decode launches the way they do on a real accelerator. With the
+//! default `delay_s = 0` the mock is free, as scheduler tests expect.
 
 use std::collections::HashMap;
 
 use crate::util::prng::Rng;
 
+use super::batch::{self, BatchOutcome, BatchRequest};
 use super::engine::EngineError;
 use super::manifest::ModelSpec;
 use super::tensor::Tensor;
@@ -18,6 +25,11 @@ use super::tensor::Tensor;
 /// `execute` returns the outputs and the pure execution seconds
 /// (excluding one-off lazy compilation) so stage timing in the
 /// pipeline never charges compile time to a window.
+///
+/// `execute_batch` is the cross-stream batching hook
+/// ([`crate::runtime::batch`]): the default implementation loops —
+/// correct everywhere — and executors that can fuse shape-compatible
+/// requests override it to amortize launch cost across the batch.
 pub trait Executor {
     fn execute(
         &self,
@@ -26,6 +38,15 @@ pub trait Executor {
         inputs: &[Tensor],
     ) -> Result<(Vec<Tensor>, f64), EngineError>;
     fn spec(&self, model: &str) -> Option<ModelSpec>;
+
+    /// Execute a batch of prepared requests, returning one outcome per
+    /// request in request order. Outputs must be identical to what
+    /// per-request `execute` calls would produce — fusing may only
+    /// change the reported `exec_s`. Defaults to the
+    /// [`batch::execute_looping`] fallback.
+    fn execute_batch(&self, reqs: &[BatchRequest]) -> Result<Vec<BatchOutcome>, EngineError> {
+        batch::execute_looping(self, reqs)
+    }
 }
 
 impl Executor for super::Engine {
@@ -41,14 +62,27 @@ impl Executor for super::Engine {
     fn spec(&self, model: &str) -> Option<ModelSpec> {
         self.model_spec(model)
     }
+
+    /// Looping fallback: the AOT-compiled HLO artifacts carry no batch
+    /// dimension, so the PJRT engine cannot fuse cross-stream requests
+    /// — it launches them back to back and reports true per-call cost.
+    fn execute_batch(&self, reqs: &[BatchRequest]) -> Result<Vec<BatchOutcome>, EngineError> {
+        batch::execute_looping(self, reqs)
+    }
 }
 
 /// Mock engine with a fixed model spec.
 pub struct MockEngine {
     pub specs: HashMap<String, ModelSpec>,
-    /// Artificial per-call latency (seconds) to emulate compute cost in
-    /// scheduler tests; keyed by artifact family.
+    /// Virtual seconds per unit of artifact work
+    /// ([`MockEngine::work_units`]); emulates compute cost in
+    /// scheduler tests without sleeping.
     pub delay_s: f64,
+    /// Marginal cost of each extra same-artifact request fused into a
+    /// batch, as a fraction of the solo launch cost: a fused batch of
+    /// n costs `1 + (n-1) * batch_marginal` launches in total, so
+    /// per-request cost falls toward `batch_marginal` as n grows.
+    pub batch_marginal: f64,
 }
 
 pub fn test_spec(name: &str) -> ModelSpec {
@@ -91,7 +125,32 @@ impl MockEngine {
     pub fn new(model: &str) -> Self {
         let mut specs = HashMap::new();
         specs.insert(model.to_string(), test_spec(model));
-        MockEngine { specs, delay_s: 0.0 }
+        MockEngine { specs, delay_s: 0.0, batch_marginal: 0.25 }
+    }
+
+    /// Relative work of one launch of `artifact`, in arbitrary "token"
+    /// units: prefill scales with (padded) sequence length, vit with
+    /// the patch bucket, decode is a single-token step. Unknown
+    /// artifacts cost one unit.
+    pub fn work_units(artifact: &str) -> f64 {
+        if let Some(n) = artifact.strip_prefix("vit_encode_n") {
+            n.parse().unwrap_or(1.0)
+        } else if artifact == "embed_text" {
+            16.0
+        } else if let Some(t) = artifact.strip_prefix("prefill_full_t") {
+            2.0 * t.parse().unwrap_or(1.0)
+        } else if let Some(rest) = artifact.strip_prefix("prefill_incr_n") {
+            match rest.split_once("_o") {
+                Some((n, o)) => {
+                    2.0 * n.parse().unwrap_or(1.0) + o.parse().unwrap_or(1.0)
+                }
+                None => 1.0,
+            }
+        } else if artifact == "decode_step" {
+            8.0
+        } else {
+            1.0
+        }
     }
 
     fn hash_inputs(inputs: &[Tensor]) -> u64 {
@@ -122,22 +181,19 @@ impl MockEngine {
         let data = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
         Tensor::F32 { shape: shape.to_vec(), data }
     }
-}
 
-impl Executor for MockEngine {
-    fn execute(
+    /// Pure output computation: deterministic in (artifact, inputs),
+    /// no timing. Shared by `execute` and the fused `execute_batch`.
+    fn eval(
         &self,
         model: &str,
         artifact: &str,
         inputs: &[Tensor],
-    ) -> Result<(Vec<Tensor>, f64), EngineError> {
+    ) -> Result<Vec<Tensor>, EngineError> {
         let spec = self
             .specs
             .get(model)
             .ok_or_else(|| EngineError(format!("mock: no model {model}")))?;
-        if self.delay_s > 0.0 {
-            std::thread::sleep(std::time::Duration::from_secs_f64(self.delay_s));
-        }
         let mut rng = Rng::new(Self::hash_inputs(inputs));
         let (l, h, hd, d, v) =
             (spec.llm_layers, spec.llm_heads, spec.head_dim, spec.llm_dim, spec.vocab);
@@ -177,11 +233,54 @@ impl Executor for MockEngine {
         } else {
             return Err(EngineError(format!("mock: unknown artifact {artifact}")));
         };
-        Ok((out, self.delay_s))
+        Ok(out)
+    }
+}
+
+impl Executor for MockEngine {
+    fn execute(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64), EngineError> {
+        let out = self.eval(model, artifact, inputs)?;
+        Ok((out, self.delay_s * Self::work_units(artifact)))
     }
 
     fn spec(&self, model: &str) -> Option<ModelSpec> {
         self.specs.get(model).cloned()
+    }
+
+    /// Fused batching: requests sharing a (model, artifact) pair would
+    /// run as one stacked kernel launch, so the group's cost is
+    /// `solo_cost * (1 + (n-1) * batch_marginal)`, split evenly.
+    /// Outputs stay per-request (deterministic in each request's own
+    /// inputs), so a batch of one is bit-for-bit an `execute` call.
+    fn execute_batch(&self, reqs: &[BatchRequest]) -> Result<Vec<BatchOutcome>, EngineError> {
+        let mut groups: Vec<(&str, &str, Vec<usize>)> = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            match groups
+                .iter_mut()
+                .find(|(m, a, _)| *m == r.model.as_str() && *a == r.artifact.as_str())
+            {
+                Some((_, _, idxs)) => idxs.push(i),
+                None => groups.push((r.model.as_str(), r.artifact.as_str(), vec![i])),
+            }
+        }
+        let mut outcomes: Vec<Option<BatchOutcome>> = Vec::new();
+        outcomes.resize_with(reqs.len(), || None);
+        for (_, artifact, idxs) in groups {
+            let n = idxs.len() as f64;
+            let fused_s =
+                self.delay_s * Self::work_units(artifact) * (1.0 + (n - 1.0) * self.batch_marginal);
+            let per_req_s = fused_s / n;
+            for i in idxs {
+                let out = self.eval(&reqs[i].model, &reqs[i].artifact, &reqs[i].inputs)?;
+                outcomes[i] = Some(BatchOutcome { outputs: out, exec_s: per_req_s });
+            }
+        }
+        Ok(outcomes.into_iter().map(|o| o.expect("every request priced")).collect())
     }
 }
 
@@ -219,5 +318,80 @@ mod tests {
         assert_eq!(out[3].shape(), &[5, 6, 48, 32]);
         let out = m.execute("m", "decode_step", &[]).unwrap().0;
         assert_eq!(out[0].shape(), &[64]);
+    }
+
+    #[test]
+    fn work_units_rank_prefill_heaviest() {
+        assert_eq!(MockEngine::work_units("vit_encode_n64"), 64.0);
+        assert_eq!(MockEngine::work_units("prefill_full_t336"), 672.0);
+        assert_eq!(MockEngine::work_units("prefill_incr_n96_o288"), 480.0);
+        assert_eq!(MockEngine::work_units("decode_step"), 8.0);
+        assert!(
+            MockEngine::work_units("prefill_full_t336")
+                > MockEngine::work_units("vit_encode_n64")
+        );
+    }
+
+    #[test]
+    fn fused_batch_same_outputs_amortized_cost() {
+        let mut m = MockEngine::new("m");
+        m.delay_s = 1e-3;
+        let req = |x: f32| BatchRequest {
+            model: "m".to_string(),
+            artifact: "prefill_full_t96".to_string(),
+            inputs: vec![Tensor::f32(&[1], vec![x])],
+        };
+        let reqs = vec![req(1.0), req(2.0), req(3.0), req(4.0)];
+        let fused = m.execute_batch(&reqs).unwrap();
+        // Outputs identical to solo execution, per request.
+        for (r, o) in reqs.iter().zip(&fused) {
+            let solo = m.execute(&r.model, &r.artifact, &r.inputs).unwrap();
+            assert_eq!(o.outputs, solo.0);
+            // Amortized: strictly cheaper than a solo launch.
+            assert!(o.exec_s < solo.1, "{} !< {}", o.exec_s, solo.1);
+        }
+        // Total = 1 + 3 * 0.25 = 1.75 solo launches across 4 requests.
+        let total: f64 = fused.iter().map(|o| o.exec_s).sum();
+        let solo = m.execute("m", "prefill_full_t96", &[]).unwrap().1;
+        assert!((total - 1.75 * solo).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singleton_batch_is_bit_for_bit_an_execute_call() {
+        let mut m = MockEngine::new("m");
+        m.delay_s = 2e-3;
+        let reqs = vec![BatchRequest {
+            model: "m".to_string(),
+            artifact: "prefill_incr_n48_o96".to_string(),
+            inputs: vec![Tensor::f32(&[2], vec![0.5, -0.5])],
+        }];
+        let batch = m.execute_batch(&reqs).unwrap();
+        let (out, secs) = m
+            .execute("m", "prefill_incr_n48_o96", &reqs[0].inputs)
+            .unwrap();
+        assert_eq!(batch[0].outputs, out);
+        assert_eq!(batch[0].exec_s, secs);
+    }
+
+    #[test]
+    fn mixed_artifacts_price_independently() {
+        let mut m = MockEngine::new("m");
+        m.delay_s = 1e-3;
+        let reqs = vec![
+            BatchRequest {
+                model: "m".to_string(),
+                artifact: "vit_encode_n16".to_string(),
+                inputs: Vec::new(),
+            },
+            BatchRequest {
+                model: "m".to_string(),
+                artifact: "prefill_full_t96".to_string(),
+                inputs: Vec::new(),
+            },
+        ];
+        let out = m.execute_batch(&reqs).unwrap();
+        // Different artifacts don't fuse: each pays full solo cost.
+        assert_eq!(out[0].exec_s, m.execute("m", "vit_encode_n16", &[]).unwrap().1);
+        assert_eq!(out[1].exec_s, m.execute("m", "prefill_full_t96", &[]).unwrap().1);
     }
 }

@@ -11,11 +11,15 @@
 //! * [`engine`] — the executor: lazy `client.compile` per artifact,
 //!   device-resident parameter buffers uploaded once and passed by
 //!   reference per call (`execute_b`), per-family execution stats;
+//! * [`batch`] — cross-stream batched execution: `BatchRequest` /
+//!   `execute_batch` API with a looping fallback, plus batch-formation
+//!   accounting ([`batch::BatchStats`]);
 //! * [`flops`] — analytic FLOP accounting (Fig 13 / Fig 6);
 //! * [`mock`] — deterministic executor for tests without artifacts;
 //! * [`replica`] — executor replica factories for the sharded serving
 //!   layer (one engine per shard, built on the shard's own thread).
 
+pub mod batch;
 pub mod engine;
 pub mod flops;
 pub mod manifest;
@@ -24,6 +28,7 @@ pub mod replica;
 pub mod tensor;
 pub mod weights;
 
+pub use batch::{BatchOutcome, BatchRequest, BatchStats, BatchedExecutor};
 pub use engine::{Engine, ExecStats};
 pub use manifest::{ArtifactSpec, Manifest, ModelSpec};
 pub use replica::{EngineReplicaFactory, ExecutorFactory, MockReplicaFactory};

@@ -6,6 +6,11 @@
 //! factory, and the shard builds its own executor **on its own worker
 //! thread**. Only the factory crosses threads, so the engine itself
 //! never needs to be `Send`.
+//!
+//! Replicas built here are the executors the shard loop hands batches
+//! to (`Executor::execute_batch`, [`super::batch`]): mock replicas
+//! fuse and amortize, engine replicas fall back to looping. See
+//! `docs/ARCHITECTURE.md` for where replicas sit in the request path.
 
 use std::path::PathBuf;
 
@@ -50,7 +55,8 @@ impl ExecutorFactory for EngineReplicaFactory {
 /// Mock replicas for scheduler/serving tests without artifacts.
 pub struct MockReplicaFactory {
     pub model: String,
-    /// Artificial per-call executor latency (seconds).
+    /// Virtual executor seconds per unit of artifact work (see
+    /// `MockEngine::work_units`); 0 makes the executor free.
     pub delay_s: f64,
 }
 
@@ -68,7 +74,7 @@ impl ExecutorFactory for MockReplicaFactory {
     }
 
     fn describe(&self) -> String {
-        format!("mock replica ({}, {:.1}ms/call)", self.model, self.delay_s * 1e3)
+        format!("mock replica ({}, {:.0}us/work-unit)", self.model, self.delay_s * 1e6)
     }
 }
 

@@ -105,6 +105,7 @@ fn edf_ordering_survives_concurrent_submission() {
                         start_frame: k * 4,
                         end_frame: k * 4 + 20,
                         arrival_s: k as f64 + stream as f64 * 0.1,
+                        bucket: 0,
                     });
                 }
             })
@@ -160,6 +161,116 @@ fn workers_4_beats_workers_1_on_aggregate_capacity() {
         four.sustainable_streams,
         one.sustainable_streams
     );
+}
+
+#[test]
+fn batched_dispatch_matches_unbatched_results_across_shards() {
+    // Cross-stream batching is a scheduling optimization: with the
+    // same corpus, a batched sharded run must produce exactly the
+    // same deterministic outputs as the job-at-a-time run.
+    let clips = clips(8);
+    let run = |max_batch: usize| {
+        let mut cfg = sharded_cfg(2);
+        cfg.max_batch = max_batch;
+        cfg.admit_wave = 8;
+        // Single coarse bucket: this test isolates batch mechanics;
+        // bucket gating is covered by the queue tests and fig21.
+        cfg.batch_bucket = 10_000;
+        Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+    };
+    let solo = run(1);
+    let fused = run(4);
+    assert_eq!(solo.merged.windows(), fused.merged.windows());
+    assert_eq!(solo.merged.flops, fused.merged.flops);
+    assert_eq!(solo.merged.seq_tokens, fused.merged.seq_tokens);
+    assert_eq!(solo.merged.per_stream, fused.merged.per_stream);
+    assert_eq!(solo.merged.dropped, fused.merged.dropped);
+    let sorted = |r: &codecflow::coordinator::dispatch::ShardedReport| {
+        let mut a = r.answers.clone();
+        a.sort();
+        a
+    };
+    assert_eq!(sorted(&solo), sorted(&fused));
+    // The unbatched run never forms multi-job batches...
+    assert!((solo.batching.mean_batch_size() - 1.0).abs() < 1e-12);
+    assert_eq!(solo.batching.padding_waste(), 0.0);
+    // ...while the batched run does, and reports it.
+    assert!(fused.batching.mean_batch_size() > 1.0);
+    assert!(fused.batching.batches < fused.batching.jobs);
+    assert!(fused.report("batched").contains("batching:"));
+}
+
+#[test]
+fn panic_inside_execute_batch_is_contained_to_its_shard() {
+    // An executor whose execute_batch panics must take down only its
+    // own shard; the dispatcher reports the healthy shards and the
+    // steal pool lets them absorb the dead shard's streams.
+    use codecflow::runtime::batch::{BatchOutcome, BatchRequest};
+    use codecflow::runtime::engine::EngineError;
+    use codecflow::runtime::manifest::ModelSpec;
+    use codecflow::runtime::mock::{Executor, MockEngine};
+    use codecflow::runtime::tensor::Tensor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct PanicsOnBatch {
+        inner: MockEngine,
+    }
+    impl Executor for PanicsOnBatch {
+        fn execute(
+            &self,
+            model: &str,
+            artifact: &str,
+            inputs: &[Tensor],
+        ) -> Result<(Vec<Tensor>, f64), EngineError> {
+            self.inner.execute(model, artifact, inputs)
+        }
+        fn spec(&self, model: &str) -> Option<ModelSpec> {
+            self.inner.spec(model)
+        }
+        fn execute_batch(
+            &self,
+            _reqs: &[BatchRequest],
+        ) -> Result<Vec<BatchOutcome>, EngineError> {
+            panic!("fused kernel fault");
+        }
+    }
+    struct FaultyBatchFactory {
+        calls: AtomicUsize,
+    }
+    impl ExecutorFactory for FaultyBatchFactory {
+        fn build(&self) -> Box<dyn Executor> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                Box::new(PanicsOnBatch { inner: MockEngine::new("m") })
+            } else {
+                Box::new(MockEngine::new("m"))
+            }
+        }
+    }
+
+    let mut cfg = sharded_cfg(2);
+    cfg.workers = 1; // deterministic: shard 0 builds first and faults
+    cfg.max_batch = 4;
+    // One stream admitted per wave: the faulty shard takes exactly one
+    // stream down with it (a mid-service crash loses in-flight work,
+    // same as the job-at-a-time path), everything else survives.
+    cfg.admit_wave = 1;
+    cfg.steal = true;
+    let report = Dispatcher::new("m", cfg).run(
+        Arc::new(FaultyBatchFactory { calls: AtomicUsize::new(0) }),
+        &clips(4),
+        Variant::CodecFlow,
+        2.0,
+    );
+    assert_eq!(report.shards.len(), 1, "only the healthy shard reports");
+    assert_eq!(
+        report.merged.per_stream.len(),
+        3,
+        "the healthy shard serves every stream the dead one hadn't claimed"
+    );
+    assert_eq!(report.merged.windows(), 9);
+    for count in report.merged.per_stream.values() {
+        assert_eq!(*count, 3, "surviving streams fully served");
+    }
 }
 
 #[test]
