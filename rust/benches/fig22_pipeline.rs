@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig22_pipeline` — regenerates Fig 22
+//! (pipelined shard execution: sustainable streams vs pipeline depth
+//! x stream count, bit-identical to the serial loop).
+fn main() {
+    codecflow::exp::fig22_pipeline::run();
+}

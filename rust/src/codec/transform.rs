@@ -3,56 +3,120 @@
 //! Float DCT with orthonormal scaling — matches JPEG/H.264 semantics
 //! (energy compaction for entropy coding) without the integer-approx
 //! bookkeeping; quantization (quant.rs) is where the loss lives.
+//!
+//! Implementation: separable row–column passes of a fast 8-point 1-D
+//! transform. Each 1-D pass folds the orthonormal `alpha` scale into
+//! precomputed half-tables and exploits the cosine symmetry
+//! `cos((2(7-x)+1)uπ/16) = (-1)^u cos((2x+1)uπ/16)`: a butterfly
+//! splits the input into 4 sums and 4 differences, so every output
+//! needs 4 MACs instead of 8 (and zero runtime `alpha` multiplies).
+//! Per block that is 2·8·8·4 = 512 MACs per pass direction versus the
+//! 1024 + 128 of the direct separable form — the decode hot path
+//! (every intra/residual block of every frame) does half the work for
+//! bit-compatible results up to float rounding.
 
 use super::types::TB;
 
-/// Precomputed cos table: `c[u][x] = cos((2x+1) u pi / 16)`.
-fn cos_table() -> &'static [[f32; TB]; TB] {
+const HB: usize = TB / 2;
+
+/// Folded half-tables:
+/// `even[u][x] = alpha(2u)   * cos((2x+1)·(2u)·π/16)`
+/// `odd [u][x] = alpha(2u+1) * cos((2x+1)·(2u+1)·π/16)` for `x < 4`.
+fn half_tables() -> &'static ([[f32; HB]; HB], [[f32; HB]; HB]) {
     use std::sync::OnceLock;
-    static TABLE: OnceLock<[[f32; TB]; TB]> = OnceLock::new();
-    TABLE.get_or_init(|| {
-        let mut t = [[0.0f32; TB]; TB];
-        for (u, row) in t.iter_mut().enumerate() {
-            for (x, v) in row.iter_mut().enumerate() {
-                *v = ((2 * x + 1) as f32 * u as f32 * std::f32::consts::PI / 16.0).cos();
+    static TABLES: OnceLock<([[f32; HB]; HB], [[f32; HB]; HB])> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let alpha = |u: usize| -> f32 {
+            if u == 0 {
+                (1.0f32 / TB as f32).sqrt()
+            } else {
+                (2.0f32 / TB as f32).sqrt()
+            }
+        };
+        let cos = |u: usize, x: usize| -> f32 {
+            ((2 * x + 1) as f32 * u as f32 * std::f32::consts::PI / 16.0).cos()
+        };
+        let mut even = [[0.0f32; HB]; HB];
+        let mut odd = [[0.0f32; HB]; HB];
+        for u in 0..HB {
+            for x in 0..HB {
+                even[u][x] = alpha(2 * u) * cos(2 * u, x);
+                odd[u][x] = alpha(2 * u + 1) * cos(2 * u + 1, x);
             }
         }
-        t
+        (even, odd)
     })
 }
 
+/// Fast forward 8-point DCT-II (alpha folded in): butterfly into
+/// sums/differences, then two 4x4 half-transforms.
 #[inline]
-fn alpha(u: usize) -> f32 {
-    if u == 0 {
-        (1.0f32 / TB as f32).sqrt()
-    } else {
-        (2.0f32 / TB as f32).sqrt()
+fn fdct1d(v: [f32; TB]) -> [f32; TB] {
+    let (even, odd) = half_tables();
+    let mut s = [0.0f32; HB];
+    let mut d = [0.0f32; HB];
+    for i in 0..HB {
+        s[i] = v[i] + v[TB - 1 - i];
+        d[i] = v[i] - v[TB - 1 - i];
     }
+    let mut out = [0.0f32; TB];
+    for u in 0..HB {
+        let e = &even[u];
+        let o = &odd[u];
+        out[2 * u] = e[0] * s[0] + e[1] * s[1] + e[2] * s[2] + e[3] * s[3];
+        out[2 * u + 1] = o[0] * d[0] + o[1] * d[1] + o[2] * d[2] + o[3] * d[3];
+    }
+    out
+}
+
+/// Fast inverse 8-point DCT (exact inverse of [`fdct1d`] up to float
+/// error): reconstruct the even/odd halves, then un-butterfly.
+#[inline]
+fn idct1d(x: [f32; TB]) -> [f32; TB] {
+    let (even, odd) = half_tables();
+    let mut out = [0.0f32; TB];
+    for i in 0..HB {
+        let mut e = 0.0f32;
+        let mut o = 0.0f32;
+        for u in 0..HB {
+            e += even[u][i] * x[2 * u];
+            o += odd[u][i] * x[2 * u + 1];
+        }
+        out[i] = e + o;
+        out[TB - 1 - i] = e - o;
+    }
+    out
+}
+
+#[inline]
+fn row(block: &[f32; 64], y: usize) -> [f32; TB] {
+    let mut v = [0.0f32; TB];
+    v.copy_from_slice(&block[y * TB..(y + 1) * TB]);
+    v
+}
+
+#[inline]
+fn col(block: &[f32; 64], x: usize) -> [f32; TB] {
+    let mut v = [0.0f32; TB];
+    for (y, slot) in v.iter_mut().enumerate() {
+        *slot = block[y * TB + x];
+    }
+    v
 }
 
 /// Forward 8x8 DCT-II (row-major input/output).
 pub fn fdct8(block: &[f32; 64]) -> [f32; 64] {
-    let c = cos_table();
-    let mut tmp = [0.0f32; 64];
     // rows
+    let mut tmp = [0.0f32; 64];
     for y in 0..TB {
-        for u in 0..TB {
-            let mut s = 0.0;
-            for x in 0..TB {
-                s += block[y * TB + x] * c[u][x];
-            }
-            tmp[y * TB + u] = s * alpha(u);
-        }
+        tmp[y * TB..(y + 1) * TB].copy_from_slice(&fdct1d(row(block, y)));
     }
     // cols
     let mut out = [0.0f32; 64];
     for u in 0..TB {
+        let t = fdct1d(col(&tmp, u));
         for v in 0..TB {
-            let mut s = 0.0;
-            for y in 0..TB {
-                s += tmp[y * TB + u] * c[v][y];
-            }
-            out[v * TB + u] = s * alpha(v);
+            out[v * TB + u] = t[v];
         }
     }
     out
@@ -60,28 +124,18 @@ pub fn fdct8(block: &[f32; 64]) -> [f32; 64] {
 
 /// Inverse 8x8 DCT (exact inverse of `fdct8` up to float error).
 pub fn idct8(coeffs: &[f32; 64]) -> [f32; 64] {
-    let c = cos_table();
-    let mut tmp = [0.0f32; 64];
     // cols
+    let mut tmp = [0.0f32; 64];
     for u in 0..TB {
+        let t = idct1d(col(coeffs, u));
         for y in 0..TB {
-            let mut s = 0.0;
-            for v in 0..TB {
-                s += alpha(v) * coeffs[v * TB + u] * c[v][y];
-            }
-            tmp[y * TB + u] = s;
+            tmp[y * TB + u] = t[y];
         }
     }
     // rows
     let mut out = [0.0f32; 64];
     for y in 0..TB {
-        for x in 0..TB {
-            let mut s = 0.0;
-            for u in 0..TB {
-                s += alpha(u) * tmp[y * TB + u] * c[u][x];
-            }
-            out[y * TB + x] = s;
-        }
+        out[y * TB..(y + 1) * TB].copy_from_slice(&idct1d(row(&tmp, y)));
     }
     out
 }
@@ -90,6 +144,51 @@ pub fn idct8(coeffs: &[f32; 64]) -> [f32; 64] {
 mod tests {
     use super::*;
     use crate::util::{prng::Rng, quick};
+
+    /// Textbook direct 2-D DCT-II — the reference the fast butterfly
+    /// form must match.
+    fn naive_fdct8(block: &[f32; 64]) -> [f32; 64] {
+        let alpha = |u: usize| -> f32 {
+            if u == 0 {
+                (1.0f32 / TB as f32).sqrt()
+            } else {
+                (2.0f32 / TB as f32).sqrt()
+            }
+        };
+        let mut out = [0.0f32; 64];
+        for v in 0..TB {
+            for u in 0..TB {
+                let mut s = 0.0f64;
+                for y in 0..TB {
+                    for x in 0..TB {
+                        s += block[y * TB + x] as f64
+                            * (((2 * x + 1) as f64 * u as f64 * std::f64::consts::PI) / 16.0)
+                                .cos()
+                            * (((2 * y + 1) as f64 * v as f64 * std::f64::consts::PI) / 16.0)
+                                .cos();
+                    }
+                }
+                out[v * TB + u] = (alpha(u) * alpha(v)) as f32 * s as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fast_dct_matches_naive_reference() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let mut block = [0.0f32; 64];
+            for v in block.iter_mut() {
+                *v = rng.range_f64(-128.0, 128.0) as f32;
+            }
+            let fast = fdct8(&block);
+            let naive = naive_fdct8(&block);
+            for (i, (a, b)) in fast.iter().zip(&naive).enumerate() {
+                assert!((a - b).abs() < 5e-2, "coeff {i}: fast {a} vs naive {b}");
+            }
+        }
+    }
 
     #[test]
     fn dct_roundtrip_identity() {

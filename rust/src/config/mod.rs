@@ -145,6 +145,14 @@ pub struct ServingConfig {
     /// codec-estimated token budgets land in the same bucket, bounding
     /// cross-stream padding waste.
     pub batch_bucket: usize,
+    /// Pipelined shard execution depth (`pipeline=` on the CLI): how
+    /// many prepared batches may be in flight behind the executor.
+    /// `0` is the strictly serial prepare -> execute -> finish loop
+    /// (bit-for-bit the pre-pipelining service); `N >= 1` overlaps
+    /// batch k's prepare phase (frontend decode + pruning + ViT +
+    /// request assembly) with batch k-1's prefill launch, bounded by a
+    /// depth-N ring.
+    pub pipeline_depth: usize,
 }
 
 impl Default for ServingConfig {
@@ -161,6 +169,7 @@ impl Default for ServingConfig {
             steal: true,
             max_batch: 1,
             batch_bucket: 48,
+            pipeline_depth: 0,
         }
     }
 }
@@ -188,6 +197,7 @@ impl ServingConfig {
             "steal" => parse_into(value, &mut self.steal),
             "batch" | "max_batch" => parse_into(value, &mut self.max_batch),
             "batch_bucket" => parse_into(value, &mut self.batch_bucket),
+            "pipeline" | "pipeline_depth" => parse_into(value, &mut self.pipeline_depth),
             _ => self.pipeline.set(key, value),
         }
     }
@@ -271,6 +281,11 @@ mod tests {
         assert_eq!(c.max_batch, 4);
         assert!(c.set("batch_bucket", "96"));
         assert_eq!(c.batch_bucket, 96);
+        assert_eq!(c.pipeline_depth, 0, "serial service by default");
+        assert!(c.set("pipeline", "2"));
+        assert_eq!(c.pipeline_depth, 2);
+        assert!(c.set("pipeline_depth", "1"), "long form accepted too");
+        assert_eq!(c.pipeline_depth, 1);
         assert!(c.set("gop", "8"), "pipeline keys pass through");
         assert_eq!(c.pipeline.gop, 8);
         assert!(!c.set("nope", "1"));

@@ -24,7 +24,7 @@ use crate::runtime::replica::ExecutorFactory;
 use crate::util;
 use crate::util::threadpool::ThreadPool;
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PhaseTimes};
 use super::shard::{assign_shard, Shard, ShardReport, StealPool, StreamWork};
 
 /// Merged result of a sharded serving run.
@@ -49,6 +49,14 @@ pub struct ShardedReport {
     /// Cross-stream batch formation, folded across shards (batch
     /// count, mean batch size, padding waste).
     pub batching: BatchStats,
+    /// Per-phase service seconds folded across shards, with the
+    /// pipelined loop's hidden-prepare accounting
+    /// ([`PhaseTimes::overlap_efficiency`]).
+    pub phases: PhaseTimes,
+    /// XOR of the per-shard result digests: bit-identical runs (same
+    /// streams, same shards, any `pipeline=` depth) produce equal
+    /// digests.
+    pub result_digest: u64,
 }
 
 impl ShardedReport {
@@ -69,10 +77,19 @@ impl ShardedReport {
             self.batching.mean_batch_size(),
             self.batching.padding_waste() * 100.0
         ));
+        out.push_str(&format!(
+            "phases: prepare={:.3}s execute={:.3}s finish={:.3}s \
+             hidden_prepare={:.3}s overlap_eff={:.0}%\n",
+            self.phases.prepare_s,
+            self.phases.execute_s,
+            self.phases.finish_s,
+            self.phases.hidden_prepare_s,
+            self.phases.overlap_efficiency() * 100.0
+        ));
         for r in &self.shards {
             out.push_str(&format!(
                 "  shard {}: windows={} streams={} stolen={} busy={:.3}s span={:.3}s \
-                 util={:.0}% batch~{:.1} sustainable={:.1}\n",
+                 util={:.0}% batch~{:.1} overlap={:.0}% sustainable={:.1}\n",
                 r.shard,
                 r.metrics.windows(),
                 r.streams_served,
@@ -81,6 +98,7 @@ impl ShardedReport {
                 r.span_s,
                 r.utilization() * 100.0,
                 r.mean_batch_size(),
+                r.overlap_efficiency() * 100.0,
                 r.metrics.sustainable_streams(self.stride_s)
             ));
         }
@@ -162,12 +180,16 @@ impl Dispatcher {
         let mut sustainable = 0.0;
         let mut stolen = 0usize;
         let mut batching = BatchStats::default();
+        let mut phases = PhaseTimes::default();
+        let mut result_digest = 0u64;
         for r in &shards {
             merged.merge(&r.metrics);
             sustainable += r.metrics.sustainable_streams(stride_s);
             stolen += r.stolen_streams;
             answers.extend_from_slice(&r.answers);
             batching.merge(&r.batching);
+            phases.merge(&r.phases);
+            result_digest ^= r.result_digest;
         }
 
         ShardedReport {
@@ -180,6 +202,8 @@ impl Dispatcher {
             wall_s,
             answers,
             batching,
+            phases,
+            result_digest,
         }
     }
 }

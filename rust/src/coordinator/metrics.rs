@@ -5,6 +5,43 @@ use std::collections::HashMap;
 use crate::pipeline::infer::StageTimes;
 use crate::util::stats::Summary;
 
+/// Per-phase service seconds of a shard's batch loop, split at the
+/// pipeline boundaries: **prepare** (frontend transmit/decode,
+/// pruning, preprocessing, ViT encode, KV gather — everything before
+/// the prefill launch), **execute** (the fused prefill launch) and
+/// **finish** (KV-state assembly + answer decoding after the launch).
+/// `hidden_prepare_s` is the portion of prepare the pipelined loop hid
+/// behind an earlier batch's launch — zero under serial
+/// (`pipeline=0`) service.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub prepare_s: f64,
+    pub execute_s: f64,
+    pub finish_s: f64,
+    pub hidden_prepare_s: f64,
+}
+
+impl PhaseTimes {
+    /// Fraction of prepare time hidden behind in-flight launches
+    /// (overlap efficiency): 0 for serial service, approaching 1 when
+    /// every prepare fits inside the previous batch's execute window.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.prepare_s > 0.0 {
+            (self.hidden_prepare_s / self.prepare_s).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Fold another shard's phase times into this one.
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        self.prepare_s += other.prepare_s;
+        self.execute_s += other.execute_s;
+        self.finish_s += other.finish_s;
+        self.hidden_prepare_s += other.hidden_prepare_s;
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     /// Per-window end-to-end latency (stage sum), seconds.
@@ -36,7 +73,35 @@ impl Metrics {
         flops_padded: u64,
         seq_tokens: usize,
     ) {
-        self.window_latency.push(times.total());
+        self.record_window_charged(
+            stream,
+            times,
+            times.total(),
+            queue_delay,
+            flops,
+            flops_padded,
+            seq_tokens,
+        );
+    }
+
+    /// [`Metrics::record_window`] with an explicit charged latency:
+    /// the pipelined shard loop charges each window its share of the
+    /// *overlapped* batch service (prepare hidden behind the previous
+    /// launch), while stage totals keep accumulating the true
+    /// per-stage work. Serial service charges `times.total()`, making
+    /// the two entry points identical there.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_window_charged(
+        &mut self,
+        stream: u64,
+        times: &StageTimes,
+        charged_latency: f64,
+        queue_delay: f64,
+        flops: u64,
+        flops_padded: u64,
+        seq_tokens: usize,
+    ) {
+        self.window_latency.push(charged_latency);
         self.queue_delay.push(queue_delay);
         self.stages.add(times);
         *self.per_stream.entry(stream).or_insert(0) += 1;
@@ -154,6 +219,38 @@ mod tests {
         assert_eq!(a.per_stream[&2], 1);
         assert_eq!(a.dropped, 2);
         assert_eq!(a.kv_evictions, 1);
+    }
+
+    #[test]
+    fn charged_latency_decouples_from_stage_totals() {
+        let mut m = Metrics::default();
+        let t = StageTimes { vit: 0.1, llm_prefill: 0.4, ..Default::default() };
+        // Charged half of the true stage time (prepare hidden).
+        m.record_window_charged(1, &t, 0.25, 0.0, 10, 10, 8);
+        assert!((m.latency_summary().mean - 0.25).abs() < 1e-12);
+        // Stage totals still carry the true work.
+        assert!((m.stages.vit - 0.1).abs() < 1e-12);
+        assert!((m.stages.llm_prefill - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_times_overlap_efficiency() {
+        let mut p = PhaseTimes {
+            prepare_s: 2.0,
+            execute_s: 5.0,
+            finish_s: 1.0,
+            hidden_prepare_s: 1.5,
+        };
+        assert!((p.overlap_efficiency() - 0.75).abs() < 1e-12);
+        p.merge(&PhaseTimes {
+            prepare_s: 2.0,
+            execute_s: 1.0,
+            finish_s: 0.0,
+            hidden_prepare_s: 0.5,
+        });
+        assert!((p.prepare_s - 4.0).abs() < 1e-12);
+        assert!((p.overlap_efficiency() - 0.5).abs() < 1e-12);
+        assert_eq!(PhaseTimes::default().overlap_efficiency(), 0.0);
     }
 
     #[test]

@@ -15,8 +15,14 @@
 //! modelled). Within a shard, service is batch-at-a-time: the queue's
 //! [`queue::AdmissionQueue::pop_batch`] lookahead fuses up to
 //! `max_batch` shape-compatible prefills from distinct streams into
-//! one `execute_batch` launch ([`crate::runtime::batch`]). See
-//! `docs/ARCHITECTURE.md` for the full request path.
+//! one `execute_batch` launch ([`crate::runtime::batch`]), and with
+//! `pipeline=N` up to N prepared batches ride a FIFO ring so each
+//! batch's prepare phase (frontend decode fanned out on a
+//! `frontend_workers` pool, pruning, ViT, request assembly) overlaps
+//! the previous batch's launch — bit-identical results, per-phase
+//! times and overlap efficiency in the reports
+//! ([`metrics::PhaseTimes`]). See `docs/ARCHITECTURE.md` for the full
+//! request path.
 
 pub mod dispatch;
 pub mod metrics;
@@ -26,7 +32,7 @@ pub mod session;
 pub mod shard;
 
 pub use dispatch::{Dispatcher, ShardedReport};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, PhaseTimes};
 pub use queue::{AdmissionQueue, WindowJob};
 pub use serve::{ServeReport, Server};
 pub use session::StreamSession;

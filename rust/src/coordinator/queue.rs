@@ -140,6 +140,23 @@ impl AdmissionQueue {
         max_batch: usize,
         compat: impl Fn(&WindowJob, &WindowJob) -> bool,
     ) -> Vec<WindowJob> {
+        self.pop_batch_eligible(max_batch, |_| true, compat)
+    }
+
+    /// [`AdmissionQueue::pop_batch`] with an eligibility filter applied
+    /// *before* seeding: jobs rejected by `eligible` are left queued
+    /// and never considered, including for the seed slot. The
+    /// pipelined shard loop uses this to keep a stream's next window
+    /// out of batch formation while an earlier window of the same
+    /// stream is still in flight (windows of one stream are
+    /// KV-dependent and must finish in order). With `eligible = |_|
+    /// true` this is exactly `pop_batch`.
+    pub fn pop_batch_eligible(
+        &mut self,
+        max_batch: usize,
+        eligible: impl Fn(&WindowJob) -> bool,
+        compat: impl Fn(&WindowJob, &WindowJob) -> bool,
+    ) -> Vec<WindowJob> {
         let max_batch = max_batch.max(1);
         if self.jobs.is_empty() {
             return Vec::new();
@@ -150,6 +167,10 @@ impl AdmissionQueue {
         // batch cap of 1 reproduces job-at-a-time service even on the
         // common all-streams-same-window arrival ties.
         let mut order: Vec<usize> = (0..self.jobs.len()).collect();
+        order.retain(|&i| eligible(&self.jobs[i]));
+        if order.is_empty() {
+            return Vec::new();
+        }
         order.sort_by(|&a, &b| {
             self.jobs[a].arrival_s.partial_cmp(&self.jobs[b].arrival_s).unwrap()
         });
@@ -346,6 +367,29 @@ mod tests {
         assert_eq!(rest[0].stream, 2);
         // Stream 4 (deadline 5.0) remains.
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn pop_batch_eligible_filters_the_seed_too() {
+        let mut q = AdmissionQueue::new(8);
+        q.push(bjob(1, 0, 1.0, 0)); // earliest deadline, but ineligible
+        q.push(bjob(2, 0, 2.0, 0));
+        q.push(bjob(3, 0, 3.0, 0));
+        let batch = q.pop_batch_eligible(4, |j| j.stream != 1, |a, b| {
+            a.bucket == b.bucket && a.stream != b.stream
+        });
+        // Stream 1 is neither seed nor joiner; it stays queued.
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|j| j.stream != 1));
+        assert_eq!(q.pending_for(1), 1);
+        // Nothing eligible -> nothing popped, queue untouched.
+        let empty = q.pop_batch_eligible(4, |_| false, |_, _| true);
+        assert!(empty.is_empty());
+        assert_eq!(q.len(), 1);
+        // `|_| true` is exactly pop_batch.
+        let rest = q.pop_batch_eligible(4, |_| true, |_, _| true);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].stream, 1);
     }
 
     #[test]

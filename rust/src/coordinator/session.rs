@@ -17,7 +17,15 @@ use crate::runtime::mock::Executor;
 pub struct StreamSession<'a> {
     pub id: u64,
     pub variant: Variant,
-    pub frontend: Frontend,
+    /// Prepare-owned half: the frontend (decode buffer + link state)
+    /// can be checked out with [`StreamSession::take_frontend`] so the
+    /// pipelined shard loop may run the window decode on a worker
+    /// thread while this session's previous window is still in flight.
+    /// `None` only while checked out.
+    frontend: Option<Frontend>,
+    /// Finish-owned half: the window engine holds the KV state the
+    /// in-flight prefill will extend; it is only touched from
+    /// `prepare`/`finish` on the shard's own thread.
     pub engine: WindowEngine<'a>,
     pub window_frames: usize,
     pub stride: usize,
@@ -40,7 +48,7 @@ impl<'a> StreamSession<'a> {
         StreamSession {
             id,
             variant,
-            frontend,
+            frontend: Some(frontend),
             engine,
             window_frames: cfg.window_frames,
             stride: cfg.stride_frames(),
@@ -83,23 +91,60 @@ impl<'a> StreamSession<'a> {
         }
     }
 
-    /// Advance the cursor and pull the next window through the
-    /// frontend: (start, decoded frames, frontend stage times). The
-    /// single source of the cursor/frontend accounting that both
-    /// [`StreamSession::step`] and [`StreamSession::prepare`] share.
-    fn next_window_input(&mut self) -> Option<(usize, WindowFrames, StageTimes)> {
+    /// Advance the cursor past the next window, returning its frame
+    /// range — the serial half of window intake. The caller must
+    /// follow up by decoding `[start, end)` through this session's
+    /// frontend (inline via [`StreamSession::decode_window`], or
+    /// overlapped on another thread after
+    /// [`StreamSession::take_frontend`]) and feeding the result to
+    /// [`StreamSession::prepare_decoded`].
+    pub fn begin_window(&mut self) -> Option<(usize, usize)> {
         if !self.has_next() {
             return None;
         }
         let k = self.next_window;
         self.next_window += 1;
-        let (start, end) = self.window_range(k);
-        let wf = self.frontend.window(start, end);
-        let frontend_times = StageTimes {
+        Some(self.window_range(k))
+    }
+
+    /// Check the frontend out for overlapped decode on a worker
+    /// thread (the frontend owns only plain decode/link state, so it
+    /// is `Send`). Must be restored with
+    /// [`StreamSession::put_frontend`] before the next window intake.
+    pub fn take_frontend(&mut self) -> Frontend {
+        self.frontend.take().expect("frontend already checked out")
+    }
+
+    /// Restore a frontend checked out by
+    /// [`StreamSession::take_frontend`].
+    pub fn put_frontend(&mut self, frontend: Frontend) {
+        debug_assert!(self.frontend.is_none(), "frontend restored twice");
+        self.frontend = Some(frontend);
+    }
+
+    /// Decode window `[start, end)` through the frontend, inline.
+    pub fn decode_window(&mut self, start: usize, end: usize) -> WindowFrames {
+        self.frontend.as_mut().expect("frontend checked out").window(start, end)
+    }
+
+    /// Frontend stage seconds of one decoded window, as the engine
+    /// charges them.
+    fn frontend_times(wf: &WindowFrames) -> StageTimes {
+        StageTimes {
             transmit: wf.transmit_s,
             decode: wf.decode_s,
             ..Default::default()
-        };
+        }
+    }
+
+    /// Advance the cursor and pull the next window through the
+    /// frontend: (start, decoded frames, frontend stage times). The
+    /// single source of the cursor/frontend accounting that both
+    /// [`StreamSession::step`] and [`StreamSession::prepare`] share.
+    fn next_window_input(&mut self) -> Option<(usize, WindowFrames, StageTimes)> {
+        let (start, end) = self.begin_window()?;
+        let wf = self.decode_window(start, end);
+        let frontend_times = Self::frontend_times(&wf);
         Some((start, wf, frontend_times))
     }
 
@@ -119,6 +164,17 @@ impl<'a> StreamSession<'a> {
     pub fn prepare(&mut self) -> Option<(BatchRequest, PendingWindow)> {
         let (start, wf, frontend_times) = self.next_window_input()?;
         Some(self.engine.prepare_window(&wf.frames, start, frontend_times))
+    }
+
+    /// [`StreamSession::prepare`] for a window whose decode already
+    /// happened (possibly overlapped on another thread): runs the
+    /// engine half — selection, ViT encode, KV gather, request
+    /// assembly — on the decoded frames. The cursor must already have
+    /// been advanced past this window by
+    /// [`StreamSession::begin_window`].
+    pub fn prepare_decoded(&mut self, wf: WindowFrames) -> (BatchRequest, PendingWindow) {
+        let frontend_times = Self::frontend_times(&wf);
+        self.engine.prepare_window(&wf.frames, wf.start, frontend_times)
     }
 
     /// Consume a (possibly batch-amortized) prefill outcome for a
@@ -187,6 +243,47 @@ mod tests {
         assert_eq!(served, 2, "windows 2 and 3 of 4 remain after seek(2)");
         s.seek(99); // past the end: clamps, step stays exhausted
         assert!(s.step().is_none());
+    }
+
+    #[test]
+    fn overlapped_decode_path_matches_inline_prepare() {
+        // begin_window + take_frontend + decode + put_frontend +
+        // prepare_decoded must be exactly prepare(): same request,
+        // same continuation — the invariant the pipelined shard loop's
+        // decode fan-out relies on.
+        let mock = MockEngine::new("m");
+        let cfg = PipelineConfig::default();
+        let frames = clip_frames();
+        let mut inline = StreamSession::new(1, &mock, "m", Variant::CodecFlow, &cfg, &frames);
+        let mut split = StreamSession::new(1, &mock, "m", Variant::CodecFlow, &cfg, &frames);
+        for _ in 0..split.window_count() {
+            let (req_a, pend_a) = inline.prepare().unwrap();
+            let (start, end) = split.begin_window().unwrap();
+            let mut fe = split.take_frontend();
+            let wf = fe.window(start, end);
+            split.put_frontend(fe);
+            let (req_b, pend_b) = split.prepare_decoded(wf);
+            assert_eq!(req_a.artifact, req_b.artifact);
+            assert_eq!(req_a.inputs, req_b.inputs);
+            let out_a = mock.execute(&req_a.model, &req_a.artifact, &req_a.inputs).unwrap();
+            let out_b = mock.execute(&req_b.model, &req_b.artifact, &req_b.inputs).unwrap();
+            let ra = inline.finish(
+                pend_a,
+                codecflow_outcome(out_a),
+            );
+            let rb = split.finish(pend_b, codecflow_outcome(out_b));
+            assert_eq!(ra.logits, rb.logits);
+            assert_eq!(ra.decoded_ids, rb.decoded_ids);
+            assert_eq!(ra.seq_tokens, rb.seq_tokens);
+            assert_eq!(ra.flops, rb.flops);
+        }
+        assert!(!split.has_next());
+    }
+
+    fn codecflow_outcome(
+        (outputs, exec_s): (Vec<crate::runtime::tensor::Tensor>, f64),
+    ) -> BatchOutcome {
+        BatchOutcome { outputs, exec_s }
     }
 
     #[test]

@@ -19,9 +19,19 @@
 //!   prefill launch, and fuses the launches through the executor's
 //!   `execute_batch` hook ([`crate::runtime::batch`]). With
 //!   `max_batch = 1` this degenerates to job-at-a-time service,
-//!   bit-for-bit.
+//!   bit-for-bit;
+//! * with `pipeline = N >= 1`, service is **pipelined**: up to N
+//!   prepared batches ride a FIFO ring behind the executor, so batch
+//!   k's prepare phase (frontend decode — fanned out on a per-shard
+//!   `frontend_workers` pool — pruning, ViT encode, request assembly)
+//!   overlaps batch k-1's prefill launch
+//!   ([`crate::runtime::batch::PipelineClock`]). Streams with an
+//!   in-flight window sit out batch formation, finish/KV settlement
+//!   retire strictly in batch order, and results are bit-identical at
+//!   any depth ([`ShardReport::result_digest`]); `pipeline = 0` runs
+//!   the untouched serial loop.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -29,11 +39,15 @@ use crate::baselines::Variant;
 use crate::codec::types::Frame;
 use crate::config::ServingConfig;
 use crate::kvc::pool::KvPool;
-use crate::runtime::batch::{BatchRequest, BatchStats};
+use crate::kvc::records::WindowState;
+use crate::pipeline::frontend::WindowFrames;
+use crate::pipeline::infer::{PendingWindow, WindowResult};
+use crate::runtime::batch::{BatchOutcome, BatchRequest, BatchStats, PipelineClock};
 use crate::runtime::mock::Executor;
 use crate::util;
+use crate::util::threadpool::{join_all, ThreadPool};
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PhaseTimes};
 use super::queue::{AdmissionQueue, WindowJob};
 use super::session::StreamSession;
 
@@ -41,12 +55,11 @@ use super::session::StreamSession;
 /// Stable across runs and independent of admission order.
 pub fn assign_shard(stream: u64, num_shards: usize) -> usize {
     let n = num_shards.max(1);
-    let mut h = 0xcbf29ce484222325u64;
+    let mut h = util::Fnv64::new();
     for byte in stream.to_le_bytes() {
-        h ^= byte as u64;
-        h = h.wrapping_mul(0x100000001b3);
+        h.mix(byte as u64);
     }
-    (h % n as u64) as usize
+    (h.value() % n as u64) as usize
 }
 
 /// One stream waiting to be served: its frames plus the shard the
@@ -114,7 +127,10 @@ pub struct ShardReport {
     pub streams_served: usize,
     /// Streams this shard took from other shards' backlogs.
     pub stolen_streams: usize,
-    /// Executor-busy virtual seconds (sum of window service times).
+    /// Critical-path virtual seconds of real work: under serial
+    /// service the sum of window service times; under pipelined
+    /// service the launch + finish stages plus whatever prepare time
+    /// was *not* hidden behind an in-flight launch.
     pub busy_s: f64,
     /// Virtual span from t=0 to the last window's completion.
     pub span_s: f64,
@@ -125,6 +141,14 @@ pub struct ShardReport {
     /// Cross-stream batch formation: batch count, mean size, padding
     /// waste (see [`BatchStats`]).
     pub batching: BatchStats,
+    /// Per-phase service seconds (prepare / execute / finish) and how
+    /// much prepare the pipelined loop hid behind in-flight launches.
+    pub phases: PhaseTimes,
+    /// Order-insensitive FNV fingerprint of every served window's
+    /// deterministic outputs (logits, decoded ids, post-window KV):
+    /// equal digests mean bit-identical results, whatever the service
+    /// interleaving. Pipelining must not change it.
+    pub result_digest: u64,
 }
 
 impl ShardReport {
@@ -154,6 +178,47 @@ impl ShardReport {
     pub fn padding_waste(&self) -> f64 {
         self.batching.padding_waste()
     }
+
+    /// Fraction of prepare time hidden behind in-flight launches
+    /// (0 under serial `pipeline=0` service).
+    pub fn overlap_efficiency(&self) -> f64 {
+        self.phases.overlap_efficiency()
+    }
+}
+
+/// FNV fingerprint of one served window's deterministic outputs —
+/// logits, decoded ids, and the post-window KV contents — keyed by
+/// (stream, window). XORed into [`ShardReport::result_digest`], so the
+/// digest is insensitive to service order but sensitive to any change
+/// in any window's results. The bulky KV tensors (hundreds of
+/// kilofloats per window, computed on the serving hot path) are folded
+/// with a rotate-xor lane reduction — position- and value-sensitive at
+/// one xor+rotate per element — and only the fold enters the FNV mix.
+fn window_digest(
+    stream: u64,
+    window_idx: usize,
+    r: &WindowResult,
+    kv: Option<&WindowState>,
+) -> u64 {
+    let mut h = util::Fnv64::new();
+    h.mix(stream);
+    h.mix(window_idx as u64);
+    h.mix(r.seq_tokens as u64);
+    for &x in &r.logits {
+        h.mix(x.to_bits() as u64);
+    }
+    for &id in &r.decoded_ids {
+        h.mix(id as u64);
+    }
+    if let Some(s) = kv {
+        let mut acc = 0u64;
+        for &x in s.k.data.iter().chain(&s.v.data) {
+            acc = acc.rotate_left(1) ^ x.to_bits() as u64;
+        }
+        h.mix(acc);
+        h.mix((s.k.data.len() + s.v.data.len()) as u64);
+    }
+    h.value()
 }
 
 // Merge-group side in pixels for the admission-time estimator
@@ -252,6 +317,495 @@ pub struct Shard {
     pub fps: f64,
 }
 
+/// One prepared-and-launched batch riding the pipeline ring until its
+/// finish turn. Outputs are already materialized (deterministic in the
+/// prepared requests); what is deferred is the finish phase —
+/// KV-state assembly, answer decoding, metrics and KV-pool settlement
+/// — which retires strictly in batch order.
+struct InFlight {
+    pending: Vec<(WindowJob, usize, PendingWindow)>,
+    outcomes: Vec<BatchOutcome>,
+    /// Artifact name per member (fusion-group accounting at retire).
+    artifacts: Vec<String>,
+    batch_arrival: f64,
+    /// Summed prepare-phase seconds of the members.
+    prepare_s: f64,
+    /// Virtual time the prepare phase started / completed.
+    prep_start: f64,
+    prep_done: f64,
+    /// Summed (amortized) prefill launch seconds.
+    exec_s: f64,
+}
+
+/// The mutable state of one shard's serving run, factored out so the
+/// serial (`pipeline=0`) and pipelined (`pipeline>=1`) loops share
+/// admission, batch formation, finish accounting and KV settlement.
+struct ShardState<'e> {
+    exec: &'e dyn Executor,
+    queue: AdmissionQueue,
+    kv: KvPool,
+    metrics: Metrics,
+    answers: Vec<(u64, usize, bool)>,
+    sessions: Vec<StreamSession<'e>>,
+    index: HashMap<u64, usize>,
+    batching: BatchStats,
+    phases: PhaseTimes,
+    result_digest: u64,
+    /// Streams with a prepared-but-unfinished window in the ring.
+    /// Batch formation excludes them: a stream's next window must not
+    /// prepare before its predecessor's KV lands (`finish`), or the
+    /// overlap reuse would silently miss.
+    in_flight: HashSet<u64>,
+    clock: f64,
+    busy: f64,
+    /// The two chained virtual clocks of the pipelined loop (CPU-side
+    /// prepares, executor-side stages); retiring a batch advances the
+    /// executor clock, which is also the ring's backpressure gate
+    /// (batch k's prepare cannot start before batch k-depth-1 fully
+    /// retired — [`PipelineClock`]).
+    pipe: PipelineClock,
+    streams_served: usize,
+    stolen_streams: usize,
+}
+
+impl<'e> ShardState<'e> {
+    fn new(exec: &'e dyn Executor, cfg: &ServingConfig) -> ShardState<'e> {
+        ShardState {
+            exec,
+            queue: AdmissionQueue::new(cfg.queue_depth),
+            kv: KvPool::new(cfg.shard_kv_budget()),
+            metrics: Metrics::default(),
+            answers: Vec::new(),
+            sessions: Vec::new(),
+            index: HashMap::new(),
+            batching: BatchStats::default(),
+            phases: PhaseTimes::default(),
+            result_digest: 0,
+            in_flight: HashSet::new(),
+            clock: 0.0,
+            busy: 0.0,
+            pipe: PipelineClock::default(),
+            streams_served: 0,
+            stolen_streams: 0,
+        }
+    }
+
+    /// Admit the next wave(s): home streams first, then steal. Keeps
+    /// pulling waves until something yields a window (zero-window
+    /// streams must not stall the shard).
+    fn admit(
+        &mut self,
+        shard: &Shard,
+        pool: &StealPool,
+        wave: usize,
+        stride_s: f64,
+        bucket_gran: usize,
+    ) {
+        while self.queue.is_empty() {
+            let mut admitted = 0usize;
+            while admitted < wave {
+                let (work, stolen) = match pool.take_home(shard.id) {
+                    Some(w) => (w, false),
+                    None if shard.cfg.steal => match pool.steal() {
+                        Some(w) => (w, true),
+                        None => break,
+                    },
+                    None => break,
+                };
+                let sid = work.stream;
+                let session = StreamSession::new(
+                    sid,
+                    self.exec,
+                    &shard.model,
+                    shard.variant,
+                    &shard.cfg.pipeline,
+                    work.frames.as_slice(),
+                );
+                // One estimator pass per stream; windows overlap, so
+                // each sums its slice of the per-frame changed-group
+                // counts.
+                let counts = frame_change_counts(work.frames.as_slice());
+                let groups = work
+                    .frames
+                    .first()
+                    .map(|f| {
+                        let (gw, gh) = frame_groups(f);
+                        gw * gh
+                    })
+                    .unwrap_or(0);
+                for k in 0..session.window_count() {
+                    let (lo, hi) = session.window_range(k);
+                    self.queue.push(WindowJob {
+                        stream: sid,
+                        window_idx: k,
+                        start_frame: lo,
+                        end_frame: hi,
+                        arrival_s: (k as f64 + 1.0) * stride_s,
+                        bucket: bucket_from_counts(&counts, groups, lo, hi, bucket_gran),
+                    });
+                }
+                self.index.insert(sid, self.sessions.len());
+                self.sessions.push(session);
+                self.streams_served += 1;
+                if stolen {
+                    self.stolen_streams += 1;
+                }
+                admitted += 1;
+            }
+            if admitted == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Batch formation: deadline-adjacent jobs, one per stream
+    /// (windows of one stream are KV-dependent and must run in
+    /// order), same patch-budget bucket (bounds padding waste). A
+    /// candidate must also be its stream's *next* unserved window —
+    /// joining ahead of a still-queued predecessor would skip that
+    /// predecessor's compute. The pipelined loop additionally keeps
+    /// any stream with an in-flight window out of formation entirely
+    /// (seed included): its next window depends on KV that has not
+    /// landed yet.
+    fn form_batch(&mut self, max_batch: usize, pipelined: bool) -> Vec<WindowJob> {
+        let ShardState { queue, sessions, index, in_flight, .. } = self;
+        let compat = |a: &WindowJob, b: &WindowJob| {
+            a.bucket == b.bucket
+                && a.stream != b.stream
+                && index
+                    .get(&b.stream)
+                    .map(|&i| sessions[i].next_window_idx() == b.window_idx)
+                    .unwrap_or(false)
+        };
+        if pipelined {
+            queue.pop_batch_eligible(max_batch, |j| !in_flight.contains(&j.stream), compat)
+        } else {
+            queue.pop_batch(max_batch, compat)
+        }
+    }
+
+    /// Finish one batch member — the accounting shared verbatim by the
+    /// serial and pipelined paths (so the two cannot drift): consume
+    /// the outcome, fold fused-group stats by artifact, mix the result
+    /// digest, and record the member for KV settlement. Returns the
+    /// window result plus its (prepare, execute) second shares for the
+    /// caller's phase split.
+    fn finish_member<'x>(
+        &mut self,
+        job: &WindowJob,
+        idx: usize,
+        pw: PendingWindow,
+        outcome: BatchOutcome,
+        artifact: &'x str,
+        fused_groups: &mut Vec<(&'x str, Vec<usize>)>,
+        served: &mut Vec<(u64, usize)>,
+    ) -> (WindowResult, f64, f64) {
+        let prep_share = pw.prepare_s();
+        let exec_share = outcome.exec_s;
+        let r = self.sessions[idx].finish(pw, outcome);
+        match fused_groups.iter_mut().find(|(a, _)| *a == artifact) {
+            Some((_, toks)) => toks.push(r.seq_tokens),
+            None => fused_groups.push((artifact, vec![r.seq_tokens])),
+        }
+        self.result_digest ^= window_digest(
+            job.stream,
+            job.window_idx,
+            &r,
+            self.sessions[idx].engine.prev_state(),
+        );
+        served.push((job.stream, idx));
+        (r, prep_share, exec_share)
+    }
+
+    /// The PR-2 serial service step, bit-for-bit: prepare every job,
+    /// one fused launch, finish + amortized timing + KV settlement.
+    fn serve_serial_batch(&mut self, jobs: Vec<WindowJob>) {
+        // Phase 1 — per job, everything up to the prefill launch.
+        let mut pending = Vec::with_capacity(jobs.len());
+        let mut requests: Vec<BatchRequest> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let idx = self.index[&job.stream];
+            // Backpressure may have dropped this stream's older
+            // windows: jump the cursor so dropped windows are never
+            // computed and this job maps to its own window.
+            if job.window_idx < self.sessions[idx].next_window_idx() {
+                continue; // stale job (already superseded)
+            }
+            self.sessions[idx].seek(job.window_idx);
+            if let Some((req, pw)) = self.sessions[idx].prepare() {
+                requests.push(req);
+                pending.push((job, idx, pw));
+            }
+        }
+        if pending.is_empty() {
+            return;
+        }
+
+        // Phase 2 — one fused launch for the whole batch (the
+        // executor loops internally if it cannot fuse).
+        let outcomes = self.exec.execute_batch(&requests).expect("batched prefill");
+
+        // Phase 3 — per job, consume outputs; amortized timing. The
+        // batch launches once every member has arrived; its service
+        // time is the sum of member latencies (each already carrying
+        // its amortized prefill share).
+        let batch_arrival = pending
+            .iter()
+            .map(|(job, _, _)| job.arrival_s)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let service_start = self.clock.max(batch_arrival);
+        let mut batch_service = 0.0f64;
+        // Fusion accounting per artifact: only same-artifact members
+        // actually fuse (and pad to their longest member); a mixed
+        // batch counts as one fused group per artifact.
+        let mut fused_groups: Vec<(&str, Vec<usize>)> = Vec::new();
+        // (stream, session idx) of finished members, for the KV pass
+        // below.
+        let mut served: Vec<(u64, usize)> = Vec::new();
+        for ((i, (job, idx, pw)), outcome) in pending.into_iter().enumerate().zip(outcomes) {
+            let artifact = requests[i].artifact.as_str();
+            let (r, prep_share, exec_share) =
+                self.finish_member(&job, idx, pw, outcome, artifact, &mut fused_groups, &mut served);
+            batch_service += r.times.total();
+            self.metrics.record_window(
+                job.stream,
+                &r.times,
+                service_start - job.arrival_s,
+                r.flops,
+                r.flops_padded,
+                r.seq_tokens,
+            );
+            self.answers.push((job.stream, job.window_idx, false)); // probe applied by caller
+            // Phase split: pure accounting on top of the serial
+            // service (nothing is hidden at depth 0).
+            self.phases.prepare_s += prep_share;
+            self.phases.execute_s += exec_share;
+            self.phases.finish_s += (r.times.total() - prep_share - exec_share).max(0.0);
+        }
+
+        self.settle_kv(&served, false);
+        self.clock = service_start + batch_service;
+        self.busy += batch_service;
+        for (_, tokens) in &fused_groups {
+            self.batching.record(tokens);
+        }
+    }
+
+    /// Pipelined prepare: cursor bookkeeping, window decode (fanned
+    /// out across `fe_pool` when available), the engine half of
+    /// prepare, and the fused launch itself. Returns the in-flight
+    /// batch for the ring, with its virtual prepare timing assigned —
+    /// the launch is *called* here (outputs are deterministic in the
+    /// already-materialized requests), but every effect on session
+    /// state, metrics and the KV pool waits for
+    /// [`ShardState::retire`].
+    fn prepare_pipelined_batch(
+        &mut self,
+        jobs: Vec<WindowJob>,
+        fe_pool: Option<&ThreadPool>,
+    ) -> Option<InFlight> {
+        // Serial half: advance each session's cursor (stale jobs from
+        // backpressure drops are skipped, exactly as in serial mode).
+        let mut slots: Vec<(WindowJob, usize, usize, usize)> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let idx = self.index[&job.stream];
+            if job.window_idx < self.sessions[idx].next_window_idx() {
+                continue; // stale job (already superseded)
+            }
+            self.sessions[idx].seek(job.window_idx);
+            if let Some((start, end)) = self.sessions[idx].begin_window() {
+                slots.push((job, idx, start, end));
+            }
+        }
+        if slots.is_empty() {
+            return None;
+        }
+
+        // Window decode: each member's frontend is checked out and
+        // decoded on a pool worker (frontends are plain owned state,
+        // one per stream, so the fan-out shares nothing). Decode
+        // output is deterministic; only wall time changes. A worker
+        // panic is re-raised here — the shard dies and the dispatcher
+        // isolates it, the same containment as an inline fault.
+        let decoded: Vec<WindowFrames> = match fe_pool {
+            Some(tp) if slots.len() > 1 => {
+                let mut handles = Vec::with_capacity(slots.len());
+                for &(_, idx, start, end) in &slots {
+                    let mut fe = self.sessions[idx].take_frontend();
+                    handles.push(tp.spawn(move || {
+                        let wf = fe.window(start, end);
+                        (fe, wf)
+                    }));
+                }
+                let mut out: Vec<Option<WindowFrames>> = Vec::with_capacity(slots.len());
+                let mut fault: Option<String> = None;
+                for (result, &(_, idx, _, _)) in join_all(handles).into_iter().zip(&slots) {
+                    match result {
+                        Ok((fe, wf)) => {
+                            self.sessions[idx].put_frontend(fe);
+                            out.push(Some(wf));
+                        }
+                        Err(msg) => {
+                            fault.get_or_insert(msg);
+                            out.push(None);
+                        }
+                    }
+                }
+                if let Some(msg) = fault {
+                    panic!("overlapped window decode failed: {msg}");
+                }
+                out.into_iter().map(|wf| wf.expect("fault checked")).collect()
+            }
+            _ => slots
+                .iter()
+                .map(|&(_, idx, start, end)| self.sessions[idx].decode_window(start, end))
+                .collect(),
+        };
+
+        // Engine half of prepare: selection, ViT encode, KV gather,
+        // request assembly — on the shard thread, in batch order.
+        let mut pending = Vec::with_capacity(slots.len());
+        let mut requests: Vec<BatchRequest> = Vec::with_capacity(slots.len());
+        let mut prepare_s = 0.0f64;
+        let mut batch_arrival = f64::NEG_INFINITY;
+        for ((job, idx, _, _), wf) in slots.into_iter().zip(decoded) {
+            let (req, pw) = self.sessions[idx].prepare_decoded(wf);
+            prepare_s += pw.prepare_s();
+            batch_arrival = batch_arrival.max(job.arrival_s);
+            requests.push(req);
+            pending.push((job, idx, pw));
+        }
+
+        // The fused launch. Outputs ride the ring until retire.
+        let outcomes = self.exec.execute_batch(&requests).expect("batched prefill");
+        let exec_s: f64 = outcomes.iter().map(|o| o.exec_s).sum();
+        let artifacts: Vec<String> = requests.into_iter().map(|r| r.artifact).collect();
+
+        // Virtual prepare timing ([`PipelineClock::prepare`]):
+        // prepares serialize on the shard's CPU side, cannot start
+        // before the batch's jobs have arrived, and are gated by the
+        // ring — the most recently retired batch's completion bounds
+        // how far ahead of the executor the CPU may run.
+        let (prep_start, prep_done) = self.pipe.prepare(batch_arrival, prepare_s);
+        for (job, _, _) in &pending {
+            self.in_flight.insert(job.stream);
+        }
+        Some(InFlight {
+            pending,
+            outcomes,
+            artifacts,
+            batch_arrival,
+            prepare_s,
+            prep_start,
+            prep_done,
+            exec_s,
+        })
+    }
+
+    /// Retire the oldest in-flight batch: run its finish phase,
+    /// record overlapped timing (the executor stage starts at
+    /// `max(prep_done, previous exec_done)` — prepare time under the
+    /// previous launch is hidden), and settle the KV pool. Retirement
+    /// is strictly FIFO, so evictions and cross-batch KV reuse order
+    /// exactly as service order.
+    fn retire(&mut self, fl: InFlight) {
+        let InFlight {
+            pending,
+            outcomes,
+            artifacts,
+            batch_arrival,
+            prepare_s,
+            prep_start,
+            prep_done,
+            exec_s,
+        } = fl;
+
+        let mut batch_total = 0.0f64;
+        let mut finish_s = 0.0f64;
+        let mut fused_groups: Vec<(&str, Vec<usize>)> = Vec::new();
+        let mut served: Vec<(u64, usize)> = Vec::new();
+        let mut results: Vec<(WindowJob, WindowResult)> = Vec::with_capacity(pending.len());
+        for ((i, (job, idx, pw)), outcome) in pending.into_iter().enumerate().zip(outcomes) {
+            self.in_flight.remove(&job.stream);
+            let artifact = artifacts[i].as_str();
+            let (r, prep_share, exec_share) =
+                self.finish_member(&job, idx, pw, outcome, artifact, &mut fused_groups, &mut served);
+            batch_total += r.times.total();
+            finish_s += (r.times.total() - prep_share - exec_share).max(0.0);
+            results.push((job, r));
+        }
+
+        // Overlapped timing ([`PipelineClock::retire`]): the executor
+        // stage (launch + finish) starts at `max(prep_done, previous
+        // exec_done)` — whatever part of this batch's prepare did NOT
+        // fit under the previous batch's stage is exposed on the
+        // critical path. The batch's span advance (net of arrival-idle
+        // time) is split across members by their true stage-time
+        // share, so per-window charged latency reflects the overlap
+        // (prepare hidden => cheaper windows).
+        let t = self.pipe.retire(prep_done, prepare_s, exec_s + finish_s, batch_arrival);
+        let n = results.len().max(1) as f64;
+        for (job, r) in results {
+            let share =
+                if batch_total > 0.0 { r.times.total() / batch_total } else { 1.0 / n };
+            self.metrics.record_window_charged(
+                job.stream,
+                &r.times,
+                t.charged * share,
+                (prep_start - job.arrival_s).max(0.0),
+                r.flops,
+                r.flops_padded,
+                r.seq_tokens,
+            );
+            self.answers.push((job.stream, job.window_idx, false)); // probe applied by caller
+        }
+
+        self.settle_kv(&served, true);
+        self.phases.prepare_s += prepare_s;
+        self.phases.execute_s += exec_s;
+        self.phases.finish_s += finish_s;
+        self.phases.hidden_prepare_s += prepare_s - t.exposed_prepare;
+        self.clock = self.clock.max(t.done);
+        self.busy += exec_s + finish_s + t.exposed_prepare;
+        for (_, tokens) in &fused_groups {
+            self.batching.record(tokens);
+        }
+    }
+
+    /// KV bookkeeping against this shard's budget slice only — settled
+    /// after a batch's finish phase, in batch order. Under pipelined
+    /// service (`protect_in_flight`), streams whose next window is
+    /// already riding the ring are never chosen as eviction victims:
+    /// their in-flight finish has already launched and would restore
+    /// the state right after, silently undoing the eviction and
+    /// desynchronizing the pool's accounting. Protected victims defer
+    /// to the next settlement (the pool may transiently exceed its
+    /// budget by the in-flight working set). Note this means that
+    /// under eviction *pressure* the pipelined loop may pick different
+    /// victims than the serial loop — the bit-identity guarantee holds
+    /// whenever the budget does not force evictions into the ring
+    /// window.
+    fn settle_kv(&mut self, served: &[(u64, usize)], protect_in_flight: bool) {
+        for &(stream, idx) in served {
+            let bytes = self.sessions[idx].kv_bytes();
+            if bytes > 0 {
+                let victims = if protect_in_flight {
+                    let in_flight = &self.in_flight;
+                    self.kv.hold_protected(stream, bytes, |s| in_flight.contains(&s))
+                } else {
+                    self.kv.hold(stream, bytes)
+                };
+                for victim in victims {
+                    if let Some(&vi) = self.index.get(&victim) {
+                        self.sessions[vi].engine.evict_kv();
+                        self.metrics.kv_evictions += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
 impl Shard {
     /// Serve streams pulled from `pool` to completion: own streams
     /// first (in waves of `admit_wave`), then stolen ones. Mirrors the
@@ -259,211 +813,95 @@ impl Shard {
     /// service order, virtual arrival clock, KV-pool bookkeeping —
     /// executed batch-at-a-time (up to `cfg.max_batch` compatible jobs
     /// per executor launch; 1 = job-at-a-time).
+    ///
+    /// With `cfg.pipeline_depth == 0` (the default) service is the
+    /// strictly serial prepare → execute → finish loop. With
+    /// `pipeline_depth = N >= 1`, up to N prepared batches ride a FIFO
+    /// ring behind the executor: batch k's prepare phase (frontend
+    /// decode — fanned out on a `frontend_workers` thread pool —
+    /// pruning, ViT encode, request assembly) overlaps batch k-1's
+    /// prefill launch, and the shard clock advances by
+    /// `max(prepare, execute)` per stage instead of the sum. Results
+    /// are bit-identical at any depth ([`ShardReport::result_digest`]):
+    /// pipelining changes when work is *charged*, never what is
+    /// computed.
     pub fn run(&self, exec: &dyn Executor, pool: &StealPool) -> ShardReport {
         let t0 = util::now();
         let stride_s = self.cfg.pipeline.stride_frames() as f64 / self.fps;
         let wave = self.cfg.admit_wave.max(1);
         let max_batch = self.cfg.max_batch.max(1);
         let bucket_gran = self.cfg.batch_bucket.max(1);
+        let depth = self.cfg.pipeline_depth;
 
-        let mut queue = AdmissionQueue::new(self.cfg.queue_depth);
-        let mut kv = KvPool::new(self.cfg.shard_kv_budget());
-        let mut metrics = Metrics::default();
-        let mut answers = Vec::new();
-        let mut sessions: Vec<StreamSession> = Vec::new();
-        let mut index: HashMap<u64, usize> = HashMap::new();
-        let mut batching = BatchStats::default();
+        // Overlapped-decode pool (pipelined mode only): per-shard, so
+        // a fan-out fault is contained to this shard. Only spawned
+        // when multi-member batches are possible — the fan-out needs
+        // at least two windows to co-schedule.
+        let fe_pool = if depth > 0 && max_batch > 1 && self.cfg.frontend_workers > 1 {
+            Some(ThreadPool::new(self.cfg.frontend_workers))
+        } else {
+            None
+        };
 
-        let mut clock = 0.0f64;
-        let mut busy = 0.0f64;
-        let mut streams_served = 0usize;
-        let mut stolen_streams = 0usize;
+        let mut st = ShardState::new(exec, &self.cfg);
+        let mut ring: VecDeque<InFlight> = VecDeque::new();
 
         loop {
-            if queue.is_empty() {
-                // Admit the next wave: home streams first, then steal.
-                // Keep pulling waves until something yields a window
-                // (zero-window streams must not stall the shard).
-                while queue.is_empty() {
-                    let mut admitted = 0usize;
-                    while admitted < wave {
-                        let (work, stolen) = match pool.take_home(self.id) {
-                            Some(w) => (w, false),
-                            None if self.cfg.steal => match pool.steal() {
-                                Some(w) => (w, true),
-                                None => break,
-                            },
-                            None => break,
-                        };
-                        let sid = work.stream;
-                        let session = StreamSession::new(
-                            sid,
-                            exec,
-                            &self.model,
-                            self.variant,
-                            &self.cfg.pipeline,
-                            work.frames.as_slice(),
-                        );
-                        // One estimator pass per stream; windows
-                        // overlap, so each sums its slice of the
-                        // per-frame changed-group counts.
-                        let counts = frame_change_counts(work.frames.as_slice());
-                        let groups = work
-                            .frames
-                            .first()
-                            .map(|f| {
-                                let (gw, gh) = frame_groups(f);
-                                gw * gh
-                            })
-                            .unwrap_or(0);
-                        for k in 0..session.window_count() {
-                            let (lo, hi) = session.window_range(k);
-                            queue.push(WindowJob {
-                                stream: sid,
-                                window_idx: k,
-                                start_frame: lo,
-                                end_frame: hi,
-                                arrival_s: (k as f64 + 1.0) * stride_s,
-                                bucket: bucket_from_counts(&counts, groups, lo, hi, bucket_gran),
-                            });
+            if st.queue.is_empty() {
+                st.admit(self, pool, wave, stride_s, bucket_gran);
+                if st.queue.is_empty() {
+                    match ring.pop_front() {
+                        // Pool exhausted: drain the pipeline, then stop.
+                        Some(fl) => {
+                            st.retire(fl);
+                            continue;
                         }
-                        index.insert(sid, sessions.len());
-                        sessions.push(session);
-                        streams_served += 1;
-                        if stolen {
-                            stolen_streams += 1;
-                        }
-                        admitted += 1;
+                        None => break,
                     }
-                    if admitted == 0 {
-                        break;
-                    }
-                }
-                if queue.is_empty() {
-                    break; // pool exhausted
                 }
             }
 
-            // Batch formation: deadline-adjacent jobs, one per stream
-            // (windows of one stream are KV-dependent and must run in
-            // order), same patch-budget bucket (bounds padding waste).
-            // A candidate must also be its stream's *next* unserved
-            // window — joining ahead of a still-queued predecessor
-            // would skip that predecessor's compute.
-            let jobs = {
-                let sessions = &sessions;
-                let index = &index;
-                queue.pop_batch(max_batch, |a, b| {
-                    a.bucket == b.bucket
-                        && a.stream != b.stream
-                        && index
-                            .get(&b.stream)
-                            .map(|&i| sessions[i].next_window_idx() == b.window_idx)
-                            .unwrap_or(false)
-                })
-            };
-            if jobs.is_empty() {
-                continue; // re-check admission
-            }
-
-            // Phase 1 — per job, everything up to the prefill launch.
-            let mut pending = Vec::with_capacity(jobs.len());
-            let mut requests: Vec<BatchRequest> = Vec::with_capacity(jobs.len());
-            for job in jobs {
-                let idx = index[&job.stream];
-                // Backpressure may have dropped this stream's older
-                // windows: jump the cursor so dropped windows are
-                // never computed and this job maps to its own window.
-                if job.window_idx < sessions[idx].next_window_idx() {
-                    continue; // stale job (already superseded)
+            if depth == 0 {
+                let jobs = st.form_batch(max_batch, false);
+                if jobs.is_empty() {
+                    continue; // re-check admission
                 }
-                sessions[idx].seek(job.window_idx);
-                if let Some((req, pw)) = sessions[idx].prepare() {
-                    requests.push(req);
-                    pending.push((job, idx, pw));
-                }
-            }
-            if pending.is_empty() {
+                st.serve_serial_batch(jobs);
                 continue;
             }
 
-            // Phase 2 — one fused launch for the whole batch (the
-            // executor loops internally if it cannot fuse).
-            let outcomes = exec.execute_batch(&requests).expect("batched prefill");
-
-            // Phase 3 — per job, consume outputs; amortized timing.
-            // The batch launches once every member has arrived; its
-            // service time is the sum of member latencies (each
-            // already carrying its amortized prefill share).
-            let batch_arrival = pending
-                .iter()
-                .map(|(job, _, _)| job.arrival_s)
-                .fold(f64::NEG_INFINITY, f64::max);
-            let service_start = clock.max(batch_arrival);
-            let mut batch_service = 0.0f64;
-            // Fusion accounting per artifact: only same-artifact
-            // members actually fuse (and pad to their longest member);
-            // a mixed batch counts as one fused group per artifact.
-            let mut fused_groups: Vec<(&str, Vec<usize>)> = Vec::new();
-            // (stream, session idx) of finished members, for the KV
-            // pass below.
-            let mut served: Vec<(u64, usize)> = Vec::new();
-            for ((i, (job, idx, pw)), outcome) in
-                pending.into_iter().enumerate().zip(outcomes)
-            {
-                let r = sessions[idx].finish(pw, outcome);
-                batch_service += r.times.total();
-                let artifact = requests[i].artifact.as_str();
-                match fused_groups.iter_mut().find(|(a, _)| *a == artifact) {
-                    Some((_, toks)) => toks.push(r.seq_tokens),
-                    None => fused_groups.push((artifact, vec![r.seq_tokens])),
+            let jobs = st.form_batch(max_batch, true);
+            if jobs.is_empty() {
+                // Every poppable job waits on an in-flight window:
+                // retire the oldest batch to unblock its streams.
+                if let Some(fl) = ring.pop_front() {
+                    st.retire(fl);
                 }
-                metrics.record_window(
-                    job.stream,
-                    &r.times,
-                    service_start - job.arrival_s,
-                    r.flops,
-                    r.flops_padded,
-                    r.seq_tokens,
-                );
-                answers.push((job.stream, job.window_idx, false)); // probe applied by caller
-                served.push((job.stream, idx));
+                continue;
             }
-
-            // KV bookkeeping against this shard's budget slice only —
-            // settled after the whole batch has materialized its
-            // states: evicting a still-in-flight member would be a
-            // silent no-op (its KV lives in the pending continuation
-            // until finish_window restores it).
-            for (stream, idx) in served {
-                let bytes = sessions[idx].kv_bytes();
-                if bytes > 0 {
-                    for victim in kv.hold(stream, bytes) {
-                        if let Some(&vi) = index.get(&victim) {
-                            sessions[vi].engine.evict_kv();
-                            metrics.kv_evictions += 1;
-                        }
-                    }
-                }
+            if let Some(fl) = st.prepare_pipelined_batch(jobs, fe_pool.as_ref()) {
+                ring.push_back(fl);
             }
-            clock = service_start + batch_service;
-            busy += batch_service;
-            for (_, tokens) in &fused_groups {
-                batching.record(tokens);
+            while ring.len() > depth {
+                let fl = ring.pop_front().expect("ring non-empty");
+                st.retire(fl);
             }
         }
-        metrics.dropped = queue.dropped;
+        debug_assert!(ring.is_empty(), "pipeline drained before reporting");
+        st.metrics.dropped = st.queue.dropped;
 
         ShardReport {
             shard: self.id,
-            metrics,
-            streams_served,
-            stolen_streams,
-            busy_s: busy,
-            span_s: clock,
+            metrics: st.metrics,
+            streams_served: st.streams_served,
+            stolen_streams: st.stolen_streams,
+            busy_s: st.busy,
+            span_s: st.clock,
             wall_s: util::now() - t0,
-            answers,
-            batching,
+            answers: st.answers,
+            batching: st.batching,
+            phases: st.phases,
+            result_digest: st.result_digest,
         }
     }
 }
@@ -684,6 +1122,147 @@ mod tests {
             fused.busy_s,
             solo.busy_s
         );
+    }
+
+    fn pipelined_shard(depth: usize, delay_s: f64) -> (MockEngine, Shard) {
+        let mut mock = MockEngine::new("m");
+        mock.delay_s = delay_s;
+        let mut cfg = ServingConfig::default();
+        cfg.max_batch = 4;
+        cfg.admit_wave = 8; // whole cohort visible to the lookahead
+        cfg.batch_bucket = 10_000; // one bucket: isolate pipeline mechanics
+        cfg.pipeline_depth = depth;
+        let shard = Shard {
+            id: 0,
+            cfg,
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        (mock, shard)
+    }
+
+    #[test]
+    fn pipelined_depths_match_serial_results_bit_for_bit() {
+        // The tentpole invariant: pipelining re-times service, it must
+        // never change what is computed. Logits + KV contents (the
+        // result digest), FLOPs, token counts and the served window
+        // sets are identical at every depth.
+        let run = |depth: usize| {
+            let (mock, shard) = pipelined_shard(depth, 0.0);
+            shard.run(&mock, &StealPool::new(works(6, 0)))
+        };
+        let serial = run(0);
+        assert!(serial.result_digest != 0, "digest must cover real outputs");
+        assert_eq!(serial.phases.hidden_prepare_s, 0.0, "serial hides nothing");
+        assert!(serial.phases.prepare_s > 0.0, "real decode/ViT work was done");
+        for depth in [1usize, 2, 3] {
+            let piped = run(depth);
+            assert_eq!(piped.result_digest, serial.result_digest, "depth {depth}");
+            assert_eq!(piped.metrics.windows(), serial.metrics.windows());
+            assert_eq!(piped.metrics.flops, serial.metrics.flops);
+            assert_eq!(piped.metrics.flops_padded, serial.metrics.flops_padded);
+            assert_eq!(piped.metrics.seq_tokens, serial.metrics.seq_tokens);
+            assert_eq!(piped.metrics.per_stream, serial.metrics.per_stream);
+            let sorted = |r: &ShardReport| {
+                let mut a = r.answers.clone();
+                a.sort();
+                a
+            };
+            assert_eq!(sorted(&piped), sorted(&serial));
+            // Windows of one stream still finish in order despite the
+            // in-flight ring.
+            let mut last: HashMap<u64, usize> = HashMap::new();
+            for (stream, k, _) in &piped.answers {
+                if let Some(prev) = last.get(stream) {
+                    assert!(k > prev, "stream {stream} window {k} after {prev}");
+                }
+                last.insert(*stream, *k);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelining_hides_prepare_behind_the_launch() {
+        // With executor work priced in, the overlapped schedule must
+        // hide a real fraction of prepare time and must not be longer
+        // than the serial schedule.
+        let run = |depth: usize| {
+            let (mock, shard) = pipelined_shard(depth, 1e-4);
+            shard.run(&mock, &StealPool::new(works(6, 0)))
+        };
+        let serial = run(0);
+        let piped = run(2);
+        assert_eq!(piped.result_digest, serial.result_digest);
+        assert!(
+            piped.phases.hidden_prepare_s > 0.0,
+            "some prepare must be hidden (prepare {:.4}s)",
+            piped.phases.prepare_s
+        );
+        let eff = piped.overlap_efficiency();
+        assert!(eff > 0.0 && eff <= 1.0, "overlap efficiency {eff:.3}");
+        // Both spans embed wall-measured stage times from separate
+        // runs (decode/ViT measured under whatever load the test host
+        // has), so the comparison needs a generous margin — the
+        // deterministic scheduling claims are the hidden-prepare and
+        // digest assertions above; the throughput claim is fig22's.
+        assert!(
+            piped.span_s <= serial.span_s * 1.25,
+            "pipelined span {:.4}s vs serial {:.4}s",
+            piped.span_s,
+            serial.span_s
+        );
+        assert!(piped.span_s >= piped.busy_s, "span bounds busy");
+    }
+
+    #[test]
+    fn pipelined_starved_kv_budget_still_serves_everything() {
+        // Eviction pressure with windows in flight: victims with a
+        // window riding the ring are protected (an eviction there
+        // would be silently undone by the in-flight finish), pressure
+        // defers to later settlements, and every window is still
+        // served exactly once.
+        let mock = MockEngine::new("m");
+        let mut cfg = ServingConfig::default();
+        cfg.kv_budget_bytes = 1 << 20; // far below the working set
+        cfg.max_batch = 4;
+        cfg.admit_wave = 8;
+        cfg.batch_bucket = 10_000;
+        cfg.pipeline_depth = 2;
+        let shard = Shard {
+            id: 0,
+            cfg,
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r = shard.run(&mock, &StealPool::new(works(4, 0)));
+        assert_eq!(r.metrics.windows(), 12, "4 streams x 3 windows, each once");
+        for count in r.metrics.per_stream.values() {
+            assert_eq!(*count, 3);
+        }
+        assert!(r.metrics.kv_evictions > 0, "starved budget must evict");
+    }
+
+    #[test]
+    fn pipelined_backpressure_still_drops_stale_windows() {
+        let mock = MockEngine::new("m");
+        let mut cfg = ServingConfig::default();
+        cfg.queue_depth = 2; // 3 windows per stream -> window 0 dropped
+        cfg.pipeline_depth = 2;
+        let pool = StealPool::new(works(1, 0));
+        let shard = Shard {
+            id: 0,
+            cfg,
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r = shard.run(&mock, &pool);
+        assert_eq!(r.metrics.dropped, 1);
+        assert_eq!(r.metrics.windows(), 2, "dropped window is never computed");
+        let served: Vec<usize> = r.answers.iter().map(|(_, k, _)| *k).collect();
+        assert_eq!(served, vec![1, 2], "freshest windows survive, in order");
     }
 
     #[test]

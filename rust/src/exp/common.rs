@@ -436,7 +436,8 @@ fn cache_load(key: &str) -> Option<VariantEval> {
 /// experiment config, `num_shards` executor replicas, pool size from
 /// the shard count (env `CF_WORKERS` overrides the thread count,
 /// `CF_BATCH` / `CF_BATCH_BUCKET` override the per-shard batching
-/// knobs — see `docs/ARCHITECTURE.md`).
+/// knobs, `CF_PIPELINE` the pipelined-execution depth — see
+/// `docs/ARCHITECTURE.md`).
 pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     let mut s = ServingConfig::default();
     s.pipeline = cfg.pipeline.clone();
@@ -444,6 +445,7 @@ pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     s.workers = env_usize("CF_WORKERS", s.num_shards);
     s.max_batch = env_usize("CF_BATCH", s.max_batch);
     s.batch_bucket = env_usize("CF_BATCH_BUCKET", s.batch_bucket);
+    s.pipeline_depth = env_usize("CF_PIPELINE", s.pipeline_depth);
     s
 }
 

@@ -18,6 +18,7 @@ pub mod fig19;
 pub mod fig2;
 pub mod fig20_scaling;
 pub mod fig21_batching;
+pub mod fig22_pipeline;
 pub mod fig3;
 pub mod fig5;
 pub mod fig6;

@@ -34,15 +34,33 @@ impl KvPool {
     /// Record that `session` now holds `bytes`; returns the sessions
     /// evicted (their caches must be dropped by the caller).
     pub fn hold(&mut self, session: u64, bytes: usize) -> Vec<u64> {
+        self.hold_protected(session, bytes, |_| false)
+    }
+
+    /// [`KvPool::hold`] with a victim filter: sessions for which
+    /// `protected` returns true are never chosen for eviction. The
+    /// pipelined shard loop protects streams with an in-flight window
+    /// — their cache is about to be rewritten by a finish that has
+    /// already launched, so evicting them would be silently undone
+    /// (the session restores its state, the pool thinks it is gone).
+    /// With every candidate protected the pool may transiently exceed
+    /// its budget by the in-flight working set; pressure is re-applied
+    /// at the next settlement.
+    pub fn hold_protected(
+        &mut self,
+        session: u64,
+        bytes: usize,
+        protected: impl Fn(u64) -> bool,
+    ) -> Vec<u64> {
         self.clock += 1;
         self.held.insert(session, (bytes, self.clock));
         let mut evicted = Vec::new();
         while self.used_bytes() > self.budget_bytes && self.held.len() > 1 {
-            // Evict least-recently-touched other session.
+            // Evict least-recently-touched other, unprotected session.
             let victim = self
                 .held
                 .iter()
-                .filter(|(&s, _)| s != session)
+                .filter(|(&s, _)| s != session && !protected(s))
                 .min_by_key(|(_, (_, touch))| *touch)
                 .map(|(&s, _)| s);
             match victim {
@@ -95,6 +113,22 @@ mod tests {
         let evicted = p.hold(1, 50); // over budget but alone
         assert!(evicted.is_empty());
         assert!(p.holds(1));
+    }
+
+    #[test]
+    fn protected_sessions_are_never_victims() {
+        let mut p = KvPool::new(100);
+        assert!(p.hold(1, 40).is_empty());
+        assert!(p.hold(2, 40).is_empty());
+        // Session 1 is LRU but protected: 2 is evicted instead.
+        let evicted = p.hold_protected(3, 40, |s| s == 1);
+        assert_eq!(evicted, vec![2]);
+        assert!(p.holds(1) && p.holds(3));
+        // Everything protected: over budget, nothing evicted.
+        let evicted = p.hold_protected(4, 40, |_| true);
+        assert!(evicted.is_empty());
+        assert!(p.used_bytes() > p.budget_bytes, "transiently over budget");
+        assert_eq!(p.evictions, 1);
     }
 
     #[test]

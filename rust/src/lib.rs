@@ -23,14 +23,17 @@
 //!   ([`coordinator::serve`]) and sharded: consistent stream->shard
 //!   placement, per-shard EDF admission queues and KV budgets,
 //!   within-shard cross-stream batch formation
-//!   ([`coordinator::queue::AdmissionQueue::pop_batch`]), and
+//!   ([`coordinator::queue::AdmissionQueue::pop_batch`]), pipelined
+//!   batch execution (`pipeline=N` overlaps a batch's prepare with
+//!   the previous batch's prefill launch inside every shard), and
 //!   cross-shard work stealing driven by a thread pool
 //!   ([`coordinator::shard`], [`coordinator::dispatch`]) — plus the
 //!   four comparison systems.
 //! * [`exp`] — one experiment runner per paper table/figure, plus
-//!   [`exp::fig20_scaling`] (shard-scaling throughput) and
-//!   [`exp::fig21_batching`] (cross-stream batched prefill), beyond
-//!   the paper.
+//!   [`exp::fig20_scaling`] (shard-scaling throughput),
+//!   [`exp::fig21_batching`] (cross-stream batched prefill) and
+//!   [`exp::fig22_pipeline`] (pipelined shard execution), beyond the
+//!   paper.
 //! * [`util`], [`json`], [`config`] — support: PRNG, stats, micro-bench
 //!   harness, property-test helper, panic-isolating thread pool with
 //!   join/fan-in ([`util::threadpool`]), JSON, typed configs.

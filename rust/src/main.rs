@@ -4,7 +4,8 @@
 //! codecflow serve   [--model M] [--variant V] [--frames N]
 //!                   [workers=N] [shards=N] [streams=N] [key=value ...]
 //! codecflow exp     <table1|table2|fig2|fig3|fig5|fig6|fig11|fig12|fig13|
-//!                    fig14|fig15|fig16|fig17|fig18|fig19|fig20|fig21|all>
+//!                    fig14|fig15|fig16|fig17|fig18|fig19|fig20|fig21|
+//!                    fig22|all>
 //! codecflow models              # list models + artifacts
 //! codecflow help
 //! ```
@@ -12,7 +13,9 @@
 //! Serving and pipeline overrides are accepted as `key=value` pairs
 //! anywhere (e.g. `workers=4 gop=8 mv_threshold=0.5 stride_frac=0.3`).
 //! `workers=N` scales out to N executor shards on N pool threads;
-//! `shards=N` sets the shard count alone.
+//! `shards=N` sets the shard count alone; `pipeline=N` overlaps each
+//! batch's prepare with the previous batch's prefill launch inside
+//! every shard (0 = serial).
 
 use std::sync::Arc;
 
@@ -158,13 +161,16 @@ fn experiment(args: &[String]) {
         "fig21" => {
             exp::fig21_batching::run();
         }
+        "fig22" => {
+            exp::fig22_pipeline::run();
+        }
         other => eprintln!("unknown experiment {other}"),
     };
     if which == "all" {
         for name in [
             "table1", "table2", "fig2", "fig3", "fig5", "fig6", "fig11", "fig12",
             "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-            "fig21",
+            "fig21", "fig22",
         ] {
             println!("\n===== {name} =====");
             run_one(name);
@@ -205,16 +211,18 @@ fn help() {
          \n\
          USAGE:\n\
          \x20 codecflow serve  [--model M] [--variant V] [--frames N] [key=value...]\n\
-         \x20 codecflow exp    <table1|table2|fig2..fig21|all>\n\
+         \x20 codecflow exp    <table1|table2|fig2..fig22|all>\n\
          \x20 codecflow models\n\
          \n\
          serving overrides: workers= shards= streams= admit_wave= steal= queue_depth=\n\
-         \x20                batch= batch_bucket= kv_budget_bytes=\n\
+         \x20                batch= batch_bucket= pipeline= kv_budget_bytes=\n\
          \x20                (workers=N scales to N executor shards; batch=N fuses up\n\
-         \x20                to N compatible cross-stream prefills per launch)\n\
+         \x20                to N compatible cross-stream prefills per launch;\n\
+         \x20                pipeline=N overlaps batch prepare with the previous\n\
+         \x20                batch's prefill launch, 0 = serial)\n\
          pipeline overrides: window_frames= stride_frac= gop= mv_threshold= alpha= qp=\n\
          env: CF_ARTIFACTS, CF_VIDEOS, CF_FRAMES, CF_WORKERS, CF_BATCH,\n\
-         \x20    CF_BATCH_BUCKET, CF_NO_CACHE\n\
+         \x20    CF_BATCH_BUCKET, CF_PIPELINE, CF_NO_CACHE\n\
          docs: docs/ARCHITECTURE.md (layer map + a request's life)"
     );
 }

@@ -13,12 +13,20 @@
 //! Transmission is modelled by [`crate::net::Link`] on real payload
 //! sizes from the real codecs; decode times are measured wall-clock.
 
+use std::sync::Arc;
+
 use crate::codec::decoder::Decoder;
 use crate::codec::encoder::{encode_sequence, EncoderConfig};
 use crate::codec::jpeg;
 use crate::codec::types::{Frame, FrameMeta, FrameType};
 use crate::net::Link;
 use crate::util;
+
+/// One decoded frame + its codec metadata, shared by reference.
+/// Overlapping windows (and the pipelined shard loop's in-flight
+/// batches) all point at the same decoded pixels — producing a window
+/// never deep-copies a frame.
+pub type DecodedFrame = Arc<(Frame, FrameMeta)>;
 
 /// A camera-side source: the encoded form of one video.
 pub struct StreamSource {
@@ -57,9 +65,11 @@ pub enum FrontendMode {
 
 /// Per-window front-end output.
 pub struct WindowFrames {
-    /// (frame, meta) for [start, end). JPEG mode synthesizes metadata
-    /// with `FrameType::I` and no MVs (no codec signal available).
-    pub frames: Vec<(Frame, FrameMeta)>,
+    /// (frame, meta) for [start, end), shared with the frontend's
+    /// temporal buffer (`Arc` per frame — no pixel copies). JPEG mode
+    /// synthesizes metadata with `FrameType::I` and no MVs (no codec
+    /// signal available).
+    pub frames: Vec<DecodedFrame>,
     pub start: usize,
     pub end: usize,
     /// Seconds of transmission attributable to this window.
@@ -74,8 +84,9 @@ pub struct Frontend {
     link: Link,
     source: StreamSource,
     /// Temporal buffer: decoded (frame, meta), filled sequentially in
-    /// Bitstream mode (each frame decoded exactly once).
-    buffer: Vec<(Frame, FrameMeta)>,
+    /// Bitstream mode (each frame decoded exactly once) and handed to
+    /// windows by `Arc` so overlap never copies pixels.
+    buffer: Vec<DecodedFrame>,
     /// Persistent sequential decoder (Bitstream mode).
     decoder: Option<Decoder>,
     /// Total stream bits already "transmitted" (Bitstream mode).
@@ -134,7 +145,7 @@ impl Frontend {
             // Redundant decode: no shared buffer across windows.
             let f = jpeg::decode(&self.source.jpegs[i]).expect("jpeg decode");
             let (w, h) = (f.w, f.h);
-            frames.push((
+            frames.push(Arc::new((
                 f,
                 FrameMeta {
                     frame_type: FrameType::I,
@@ -145,7 +156,7 @@ impl Frontend {
                     residual_sad: Vec::new(),
                     bits: self.source.jpegs[i].len() * 8,
                 },
-            ));
+            )));
         }
         let decode_s = util::now() - t0;
         self.total_transmit_s += transmit_s;
@@ -162,7 +173,7 @@ impl Frontend {
         let dec = self.decoder.as_mut().expect("bitstream mode");
         while self.buffer.len() < end {
             match dec.next_frame().expect("decode") {
-                Some((f, m)) => self.buffer.push((f, m)),
+                Some((f, m)) => self.buffer.push(Arc::new((f, m))),
                 None => break,
             }
         }
@@ -181,6 +192,8 @@ impl Frontend {
         };
         self.transmitted_frames = self.transmitted_frames.max(end);
 
+        // `to_vec` on an `Arc` buffer clones refcounts, not pixels:
+        // every overlapping window shares the single decoded copy.
         let frames = self.buffer[start..end].to_vec();
         self.total_transmit_s += transmit_s;
         self.total_decode_s += decode_s;
@@ -258,6 +271,16 @@ mod tests {
         let w2 = fb.window(4, 16);
         assert_eq!(w2.frames.len(), 12);
         assert_eq!(w2.frames[0].0, fb.buffer[4].0);
+        // zero-copy: the window points at the buffer's decoded frame,
+        // it does not hold a deep copy of the pixels.
+        for (i, f) in w2.frames.iter().enumerate() {
+            assert!(
+                std::sync::Arc::ptr_eq(f, &fb.buffer[4 + i]),
+                "window frame {i} must share the buffer allocation"
+            );
+        }
+        // overlapping windows share frames with each other too
+        assert!(std::sync::Arc::ptr_eq(&w1.frames[4], &w2.frames[0]));
         // transmission only charged once per frame
         let w3 = fb.window(4, 16);
         assert_eq!(w3.transmit_s, 0.0);

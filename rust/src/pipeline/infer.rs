@@ -15,7 +15,7 @@
 //! token i of `WindowState.{k,v}`, and tokens are stored in ascending
 //! sequence-position order (visual by (frame, group), then text).
 
-use crate::codec::types::{Frame, FrameMeta, FrameType};
+use crate::codec::types::{Frame, FrameType};
 use crate::kvc::block::KvBlock;
 use crate::kvc::records::{TokenKind, TokenRecord, WindowState};
 use crate::kvc::refresher::{plan_window, RefreshPolicy};
@@ -31,6 +31,7 @@ use crate::vision::analyzer::MotionAnalyzer;
 use crate::vision::layout::PatchLayout;
 use crate::vision::pruner::{FrameSelection, PrunerConfig, TokenPruner};
 
+use super::frontend::DecodedFrame;
 use super::preprocess;
 
 /// Refresh-selection policy per window (variant-specific).
@@ -195,6 +196,18 @@ pub struct PendingWindow {
     path: PendingPath,
 }
 
+impl PendingWindow {
+    /// Stage seconds already incurred by the prepare phase (frontend
+    /// transmit + decode, preprocessing, ViT encode, selection/KVC
+    /// overheads up to the launch). This is the portion of a window's
+    /// service the pipelined shard loop can hide behind the previous
+    /// batch's prefill launch; the remainder of the final
+    /// `StageTimes::total` is the launch itself plus the finish phase.
+    pub fn prepare_s(&self) -> f64 {
+        self.times.total()
+    }
+}
+
 enum PendingPath {
     /// Full prefill (first window, Recompute mode, or bucket-overflow
     /// fallback).
@@ -277,8 +290,9 @@ impl<'a> WindowEngine<'a> {
 
     /// Ensure pruning selections exist for frames [0, upto) given the
     /// decoded window content; frames must be offered in stream order.
-    fn ensure_selections(&mut self, frames: &[(Frame, FrameMeta)], abs_start: usize) {
-        for (i, (_, meta)) in frames.iter().enumerate() {
+    fn ensure_selections(&mut self, frames: &[DecodedFrame], abs_start: usize) {
+        for (i, df) in frames.iter().enumerate() {
+            let meta = &df.1;
             let abs = abs_start + i;
             if abs < self.selections.len() {
                 continue;
@@ -443,7 +457,7 @@ impl<'a> WindowEngine<'a> {
     /// the same code, so a batch of one reproduces this bit-for-bit.
     pub fn process_window(
         &mut self,
-        frames: &[(Frame, FrameMeta)],
+        frames: &[DecodedFrame],
         start: usize,
         frontend_times: StageTimes,
     ) -> WindowResult {
@@ -465,7 +479,7 @@ impl<'a> WindowEngine<'a> {
     /// [`WindowEngine::finish_window`].
     pub fn prepare_window(
         &mut self,
-        frames: &[(Frame, FrameMeta)],
+        frames: &[DecodedFrame],
         start: usize,
         frontend_times: StageTimes,
     ) -> (BatchRequest, PendingWindow) {
@@ -488,8 +502,10 @@ impl<'a> WindowEngine<'a> {
         let mut retained = 0usize;
         for abs in fresh_lo..end {
             let idx = abs - start;
+            // Shared (`Arc`) frame: encoded straight out of the
+            // frontend's temporal buffer, no per-window pixel copy.
             let toks =
-                self.encode_frame(&frames[idx].0.clone(), abs, &mut times, &mut flops, &mut flops_padded);
+                self.encode_frame(&frames[idx].0, abs, &mut times, &mut flops, &mut flops_padded);
             possible += self.layout.tokens_per_frame();
             retained += toks.len();
             fresh_tokens.extend(toks);
@@ -977,14 +993,15 @@ impl<'a> WindowEngine<'a> {
     /// Maintain pixel-change scores per (frame, group) — the online
     /// signal CacheBlend-style selection uses (cost charged to
     /// overhead_kvc when that policy is active).
-    fn update_change_scores(&mut self, frames: &[(Frame, FrameMeta)], start: usize) {
+    fn update_change_scores(&mut self, frames: &[DecodedFrame], start: usize) {
         if !matches!(
             self.opts.kvc,
             KvcMode::Reuse(RefreshSelect::TopKByChange { .. })
         ) {
             return;
         }
-        for (i, (frame, _)) in frames.iter().enumerate() {
+        for (i, df) in frames.iter().enumerate() {
+            let frame = &df.0;
             let abs = start + i;
             if self.change_scores.contains_key(&(abs, 0)) {
                 continue;
@@ -1113,7 +1130,7 @@ mod tests {
     use crate::runtime::mock::MockEngine;
     use crate::video::{Corpus, CorpusConfig};
 
-    fn test_frames(n: usize) -> Vec<(Frame, FrameMeta)> {
+    fn test_frames(n: usize) -> Vec<DecodedFrame> {
         let corpus = Corpus::generate(CorpusConfig {
             videos: 1,
             frames_per_video: n,
@@ -1125,7 +1142,7 @@ mod tests {
             crate::codec::encoder::EncoderConfig::default(),
         );
         let mut dec = crate::codec::decoder::Decoder::new(bits).unwrap();
-        dec.decode_all().unwrap()
+        dec.decode_all().unwrap().into_iter().map(std::sync::Arc::new).collect()
     }
 
     #[test]
@@ -1257,7 +1274,7 @@ mod tests {
             frames_per_video: 28,
             ..Default::default()
         });
-        let streams: Vec<Vec<(Frame, FrameMeta)>> = corpus
+        let streams: Vec<Vec<DecodedFrame>> = corpus
             .clips
             .iter()
             .map(|c| {
@@ -1265,7 +1282,13 @@ mod tests {
                     &c.frames,
                     crate::codec::encoder::EncoderConfig::default(),
                 );
-                crate::codec::decoder::Decoder::new(bits).unwrap().decode_all().unwrap()
+                crate::codec::decoder::Decoder::new(bits)
+                    .unwrap()
+                    .decode_all()
+                    .unwrap()
+                    .into_iter()
+                    .map(std::sync::Arc::new)
+                    .collect()
             })
             .collect();
 

@@ -15,5 +15,5 @@ pub mod frontend;
 pub mod infer;
 pub mod preprocess;
 
-pub use frontend::{Frontend, FrontendMode, StreamSource};
+pub use frontend::{DecodedFrame, Frontend, FrontendMode, StreamSource};
 pub use infer::{KvcMode, RefreshSelect, StageTimes, VariantOpts, WindowEngine, WindowResult};

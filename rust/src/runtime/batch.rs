@@ -72,6 +72,73 @@ pub fn execute_looping<E: Executor + ?Sized>(
         .collect()
 }
 
+/// Timing of one retired batch under the pipelined virtual-time model
+/// ([`PipelineClock::retire`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RetiredTiming {
+    /// When the batch's executor stage (launch + finish) started.
+    pub exec_start: f64,
+    /// When the batch fully completed.
+    pub done: f64,
+    /// Prepare seconds the executor actually waited on (the rest of
+    /// the batch's prepare was hidden behind the previous launch).
+    pub exposed_prepare: f64,
+    /// This batch's span advance net of arrival-idle time — the cost
+    /// the batch added to the shard's schedule. Under serial service
+    /// this equals prepare + stage; under overlap it approaches the
+    /// stage time alone.
+    pub charged: f64,
+}
+
+/// Virtual-time model of pipelined (double-buffered) batch execution:
+/// two resources, two chained clocks. **Prepares** serialize on the
+/// CPU side (`prep_done`); **launch + finish stages** serialize on the
+/// executor side (`exec_done`); a batch's stage starts at
+/// `max(prep_done, previous exec_done)` — so the schedule advances by
+/// `max(prepare, stage)` per batch instead of the sum, and prepare
+/// time that fits under the previous stage is *hidden*. The caller
+/// provides ring backpressure by only calling [`PipelineClock::prepare`]
+/// after the batch `depth` slots ago has retired (retiring updates
+/// `exec_done`, which gates the next prepare).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineClock {
+    /// Completion of the most recent prepare (CPU side).
+    pub prep_done: f64,
+    /// Completion of the most recently retired batch (executor side).
+    pub exec_done: f64,
+}
+
+impl PipelineClock {
+    /// Begin a batch's prepare phase: gated by the CPU chain, the
+    /// batch's arrival, and the ring gate (the most recently retired
+    /// batch's completion). Returns `(prep_start, prep_done)`.
+    pub fn prepare(&mut self, arrival_s: f64, prepare_s: f64) -> (f64, f64) {
+        let start = self.prep_done.max(arrival_s).max(self.exec_done);
+        self.prep_done = start + prepare_s;
+        (start, self.prep_done)
+    }
+
+    /// Retire a batch whose prepare completed at `prep_done` (as
+    /// returned by [`PipelineClock::prepare`]) after `prepare_s` of
+    /// prepare work, running `stage_s` of launch + finish work, with
+    /// its jobs arrived by `arrival_s`. Retirement must be FIFO.
+    pub fn retire(
+        &mut self,
+        prep_done: f64,
+        prepare_s: f64,
+        stage_s: f64,
+        arrival_s: f64,
+    ) -> RetiredTiming {
+        let prev = self.exec_done;
+        let exec_start = prep_done.max(prev);
+        let done = exec_start + stage_s;
+        let exposed_prepare = prepare_s.min((prep_done - prev).max(0.0));
+        let charged = done - prev.max(arrival_s);
+        self.exec_done = done;
+        RetiredTiming { exec_start, done, exposed_prepare, charged }
+    }
+}
+
 /// Batch-formation accounting for one serving run (or one shard of
 /// it). The unit is a *fused group*: the members of a scheduler batch
 /// that share an artifact and therefore launch as one kernel (a mixed
@@ -160,6 +227,53 @@ mod tests {
         let solo = m.execute("m", "vit_encode_n16", &inp).unwrap();
         assert_eq!(out[0].outputs, solo.0);
         assert_eq!(out[0].exec_s, solo.1);
+    }
+
+    #[test]
+    fn pipeline_clock_hides_prepare_behind_the_stage() {
+        // Saturated regime, ring order (batch 1 prepares while batch
+        // 0 is still in flight): stage time dominates, prepares hide.
+        let mut c = PipelineClock::default();
+        let (s0, d0) = c.prepare(0.0, 2.0);
+        assert_eq!((s0, d0), (0.0, 2.0));
+        // Batch 1 prepared at virtual time 2..4, before batch 0
+        // retires — under batch 0's stage (2..12).
+        let (s1, d1) = c.prepare(0.0, 2.0);
+        assert_eq!((s1, d1), (2.0, 4.0));
+        // Batch 0: nothing to hide behind — fully exposed.
+        let t0 = c.retire(d0, 2.0, 10.0, 0.0);
+        assert_eq!(t0.exec_start, 2.0);
+        assert_eq!(t0.done, 12.0);
+        assert_eq!(t0.exposed_prepare, 2.0);
+        assert_eq!(t0.charged, 12.0); // prepare + stage
+        // Batch 1: fully hidden, charged only its stage.
+        let t1 = c.retire(d1, 2.0, 10.0, 0.0);
+        assert_eq!(t1.exec_start, 12.0);
+        assert_eq!(t1.done, 22.0);
+        assert_eq!(t1.exposed_prepare, 0.0);
+        assert_eq!(t1.charged, 10.0); // stage only: prepare hidden
+    }
+
+    #[test]
+    fn pipeline_clock_exposes_slow_prepare_and_idle_arrivals() {
+        let mut c = PipelineClock::default();
+        let (_, d0) = c.prepare(0.0, 1.0);
+        c.retire(d0, 1.0, 2.0, 0.0); // done at 3.0
+        // Batch 0 already retired when this prepare starts (ring
+        // drained): nothing in flight to hide behind, fully exposed.
+        let (s1, d1) = c.prepare(0.0, 5.0);
+        assert_eq!((s1, d1), (3.0, 8.0)); // ring gate: starts at prev done
+        let t1 = c.retire(d1, 5.0, 2.0, 0.0);
+        assert_eq!(t1.exec_start, 8.0);
+        assert_eq!(t1.exposed_prepare, 5.0);
+        assert_eq!(t1.charged, 7.0); // 5 exposed prepare + 2 stage
+        // Arrival-gated batch: idle time is not charged.
+        let (s2, d2) = c.prepare(100.0, 1.0);
+        assert_eq!((s2, d2), (100.0, 101.0));
+        let t2 = c.retire(d2, 1.0, 2.0, 100.0);
+        assert_eq!(t2.exposed_prepare, 1.0, "nothing in flight to hide behind");
+        assert_eq!(t2.charged, 3.0, "prepare + stage, idle wait excluded");
+        assert_eq!(t2.done, 103.0);
     }
 
     #[test]

@@ -154,26 +154,22 @@ impl MockEngine {
     }
 
     fn hash_inputs(inputs: &[Tensor]) -> u64 {
-        let mut h = 0xcbf29ce484222325u64;
-        let mut mix = |b: u64| {
-            h ^= b;
-            h = h.wrapping_mul(0x100000001b3);
-        };
+        let mut h = crate::util::Fnv64::new();
         for t in inputs {
             match t {
                 Tensor::F32 { data, .. } => {
                     for v in data {
-                        mix(v.to_bits() as u64);
+                        h.mix(v.to_bits() as u64);
                     }
                 }
                 Tensor::I32 { data, .. } => {
                     for v in data {
-                        mix(*v as u64);
+                        h.mix(*v as u64);
                     }
                 }
             }
         }
-        h
+        h.value()
     }
 
     fn fill(rng: &mut Rng, shape: &[usize]) -> Tensor {

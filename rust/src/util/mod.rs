@@ -21,3 +21,52 @@ pub fn now() -> f64 {
     let epoch = EPOCH.get_or_init(Instant::now);
     epoch.elapsed().as_secs_f64()
 }
+
+/// Incremental FNV-1a over 64-bit lanes — the crate's one cheap
+/// fingerprint primitive, shared by stream→shard placement
+/// (`coordinator::shard::assign_shard`), the mock executor's
+/// deterministic output seeding, and the serving result digest.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    pub fn mix(&mut self, b: u64) {
+        self.0 ^= b;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Fnv64;
+
+    #[test]
+    fn fnv64_is_order_and_value_sensitive() {
+        let digest = |xs: &[u64]| {
+            let mut h = Fnv64::new();
+            for &x in xs {
+                h.mix(x);
+            }
+            h.value()
+        };
+        assert_eq!(digest(&[1, 2, 3]), digest(&[1, 2, 3]));
+        assert_ne!(digest(&[1, 2, 3]), digest(&[3, 2, 1]));
+        assert_ne!(digest(&[1, 2, 3]), digest(&[1, 2, 4]));
+        assert_ne!(digest(&[]), digest(&[0]));
+    }
+}

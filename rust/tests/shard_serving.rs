@@ -201,6 +201,123 @@ fn batched_dispatch_matches_unbatched_results_across_shards() {
 }
 
 #[test]
+fn pipelined_dispatch_is_bit_identical_to_serial_across_shards() {
+    // The pipelining tentpole's contract, end to end: for the same
+    // corpus on the same shard layout, pipeline depths 0 (the serial
+    // PR-2 loop), 1 and 2 must produce bit-identical logits and KV
+    // contents (equal result digests), identical FLOPs/tokens, and
+    // the same served window sets — pipelining re-times service, it
+    // never changes results.
+    let clips = clips(8);
+    let run = |depth: usize| {
+        let mut cfg = sharded_cfg(2);
+        cfg.max_batch = 4;
+        cfg.admit_wave = 8;
+        cfg.batch_bucket = 10_000;
+        cfg.pipeline_depth = depth;
+        Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+    };
+    let serial = run(0);
+    assert!(serial.result_digest != 0);
+    assert_eq!(serial.phases.hidden_prepare_s, 0.0, "serial hides nothing");
+    let sorted = |r: &codecflow::coordinator::dispatch::ShardedReport| {
+        let mut a = r.answers.clone();
+        a.sort();
+        a
+    };
+    for depth in [1usize, 2] {
+        let piped = run(depth);
+        assert_eq!(piped.result_digest, serial.result_digest, "depth {depth}");
+        assert_eq!(piped.merged.windows(), serial.merged.windows());
+        assert_eq!(piped.merged.flops, serial.merged.flops);
+        assert_eq!(piped.merged.flops_padded, serial.merged.flops_padded);
+        assert_eq!(piped.merged.seq_tokens, serial.merged.seq_tokens);
+        assert_eq!(piped.merged.per_stream, serial.merged.per_stream);
+        assert_eq!(piped.merged.dropped, serial.merged.dropped);
+        assert_eq!(sorted(&piped), sorted(&serial));
+        // In-order service per stream despite the in-flight ring.
+        let mut last: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+        for (stream, k, _) in &piped.answers {
+            if let Some(prev) = last.get(stream) {
+                assert!(k > prev, "stream {stream} window {k} after {prev}");
+            }
+            last.insert(*stream, *k);
+        }
+        assert!(piped.report("pipelined").contains("overlap_eff"));
+    }
+}
+
+#[test]
+fn panic_inside_overlapped_prepare_is_contained_to_its_shard() {
+    // An executor that faults during the *prepare* phase (the ViT
+    // encode runs inside prepare, overlapped behind the previous
+    // batch's launch) must take down only its own shard; the healthy
+    // shard absorbs the dead shard's unclaimed streams.
+    use codecflow::runtime::engine::EngineError;
+    use codecflow::runtime::manifest::ModelSpec;
+    use codecflow::runtime::mock::{Executor, MockEngine};
+    use codecflow::runtime::tensor::Tensor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct PanicsOnVit {
+        inner: MockEngine,
+    }
+    impl Executor for PanicsOnVit {
+        fn execute(
+            &self,
+            model: &str,
+            artifact: &str,
+            inputs: &[Tensor],
+        ) -> Result<(Vec<Tensor>, f64), EngineError> {
+            if artifact.starts_with("vit_encode") {
+                panic!("vision tower fault during overlapped prepare");
+            }
+            self.inner.execute(model, artifact, inputs)
+        }
+        fn spec(&self, model: &str) -> Option<ModelSpec> {
+            self.inner.spec(model)
+        }
+    }
+    struct FaultyPrepareFactory {
+        calls: AtomicUsize,
+    }
+    impl ExecutorFactory for FaultyPrepareFactory {
+        fn build(&self) -> Box<dyn Executor> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                Box::new(PanicsOnVit { inner: MockEngine::new("m") })
+            } else {
+                Box::new(MockEngine::new("m"))
+            }
+        }
+    }
+
+    let mut cfg = sharded_cfg(2);
+    cfg.workers = 1; // deterministic: shard 0 builds first and faults
+    cfg.max_batch = 4;
+    cfg.pipeline_depth = 2;
+    // One stream admitted per wave: the faulty shard takes exactly one
+    // stream down with it, everything else survives.
+    cfg.admit_wave = 1;
+    cfg.steal = true;
+    let report = Dispatcher::new("m", cfg).run(
+        Arc::new(FaultyPrepareFactory { calls: AtomicUsize::new(0) }),
+        &clips(4),
+        Variant::CodecFlow,
+        2.0,
+    );
+    assert_eq!(report.shards.len(), 1, "only the healthy shard reports");
+    assert_eq!(
+        report.merged.per_stream.len(),
+        3,
+        "the healthy shard serves every stream the dead one hadn't claimed"
+    );
+    assert_eq!(report.merged.windows(), 9);
+    for count in report.merged.per_stream.values() {
+        assert_eq!(*count, 3, "surviving streams fully served");
+    }
+}
+
+#[test]
 fn panic_inside_execute_batch_is_contained_to_its_shard() {
     // An executor whose execute_batch panics must take down only its
     // own shard; the dispatcher reports the healthy shards and the
