@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig23_wallclock` — regenerates Fig 23
+//! (wall-clock prefill/prepare overlap via per-shard launch threads:
+//! measured elapsed serving time vs pipeline depth x launch mode,
+//! bit-identical to the serial loop).
+fn main() {
+    codecflow::exp::fig23_wallclock::run();
+}

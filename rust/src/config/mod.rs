@@ -153,6 +153,16 @@ pub struct ServingConfig {
     /// request assembly) with batch k-1's prefill launch, bounded by a
     /// depth-N ring.
     pub pipeline_depth: usize,
+    /// Per-shard launch threads (`launch=` on the CLI): with `true`
+    /// (the default) and `pipeline >= 1`, each shard moves its
+    /// executor onto a dedicated launch thread
+    /// (`runtime::replica::LaunchedExecutor`) so the prefill launch
+    /// physically runs while the shard thread prepares the next batch
+    /// — wall-clock overlap, not just the virtual model. `false` keeps
+    /// the executor inline on the shard thread (the overlap is then
+    /// modelled in virtual time only). Results are bit-identical
+    /// either way.
+    pub launch: bool,
 }
 
 impl Default for ServingConfig {
@@ -170,6 +180,7 @@ impl Default for ServingConfig {
             max_batch: 1,
             batch_bucket: 48,
             pipeline_depth: 0,
+            launch: true,
         }
     }
 }
@@ -179,7 +190,7 @@ impl ServingConfig {
     /// keys. `workers=N` is the one-knob scale-out: it sets both the
     /// shard count and the thread-pool size.
     pub fn set(&mut self, key: &str, value: &str) -> bool {
-        match key {
+        let accepted = match key {
             "workers" => {
                 if parse_into(value, &mut self.workers) {
                     self.num_shards = self.workers.max(1);
@@ -194,12 +205,56 @@ impl ServingConfig {
             "kv_budget_bytes" => parse_into(value, &mut self.kv_budget_bytes),
             "queue_depth" => parse_into(value, &mut self.queue_depth),
             "admit_wave" => parse_into(value, &mut self.admit_wave),
-            "steal" => parse_into(value, &mut self.steal),
+            "steal" => parse_flag(value, &mut self.steal),
             "batch" | "max_batch" => parse_into(value, &mut self.max_batch),
             "batch_bucket" => parse_into(value, &mut self.batch_bucket),
             "pipeline" | "pipeline_depth" => parse_into(value, &mut self.pipeline_depth),
+            "launch" => parse_flag(value, &mut self.launch),
             _ => self.pipeline.set(key, value),
-        }
+        };
+        // The docs contract, both directions: knob_keys ⊆ set is unit-
+        // tested; set ⊆ knob_keys is enforced here (pipeline
+        // pass-through keys included), so a new match arm added
+        // without a knob_keys entry — and therefore without a
+        // docs/OPERATIONS.md row — trips the first debug-build use.
+        debug_assert!(
+            !accepted || Self::knob_keys().contains(&key),
+            "knob `{key}` accepted by set() but missing from knob_keys()"
+        );
+        accepted
+    }
+
+    /// Every key [`ServingConfig::set`] accepts (aliases included,
+    /// pipeline pass-through keys last). This is the single source of
+    /// truth the operator's guide is checked against: a test asserts
+    /// each key both parses here and appears in the knob table of
+    /// `docs/OPERATIONS.md`, so the doc cannot drift from the parser.
+    pub fn knob_keys() -> &'static [&'static str] {
+        &[
+            "workers",
+            "shards",
+            "num_shards",
+            "streams",
+            "frontend_workers",
+            "kv_budget_bytes",
+            "queue_depth",
+            "admit_wave",
+            "steal",
+            "batch",
+            "max_batch",
+            "batch_bucket",
+            "pipeline",
+            "pipeline_depth",
+            "launch",
+            "window_frames",
+            "stride_frac",
+            "gop",
+            "mv_threshold",
+            "alpha",
+            "qp",
+            "decode_tokens",
+            "uplink_mbps",
+        ]
     }
 
     /// Per-shard KV budget: the global budget split evenly, so one
@@ -219,8 +274,39 @@ fn parse_into<T: std::str::FromStr>(value: &str, slot: &mut T) -> bool {
     }
 }
 
+/// Boolean knob syntax, shared by the CLI (`steal=`, `launch=`) and
+/// the env overrides ([`env_bool`]): `1`/`0`, `true`/`false`,
+/// `yes`/`no`, `on`/`off`, case-insensitive. Returns false (value
+/// rejected, slot untouched) on anything else.
+fn parse_flag(value: &str, slot: &mut bool) -> bool {
+    match value.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "yes" | "on" => {
+            *slot = true;
+            true
+        }
+        "0" | "false" | "no" | "off" => {
+            *slot = false;
+            true
+        }
+        _ => false,
+    }
+}
+
 pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Boolean env knob: accepts `1`/`0`, `true`/`false`, `yes`/`no`,
+/// `on`/`off` (case-insensitive), so `CF_LAUNCH=false` means what the
+/// matching CLI syntax (`launch=false`) means instead of silently
+/// falling back to the default. Unset or unrecognized values yield
+/// `default`.
+pub fn env_bool(key: &str, default: bool) -> bool {
+    let mut value = default;
+    if let Ok(v) = std::env::var(key) {
+        parse_flag(&v, &mut value);
+    }
+    value
 }
 
 /// Locate the artifacts directory (repo-root relative, env override).
@@ -286,6 +372,23 @@ mod tests {
         assert_eq!(c.pipeline_depth, 2);
         assert!(c.set("pipeline_depth", "1"), "long form accepted too");
         assert_eq!(c.pipeline_depth, 1);
+        assert!(c.launch, "launch threads on by default");
+        assert!(c.set("launch", "false"));
+        assert!(!c.launch);
+        assert!(c.set("launch", "true"));
+        assert!(c.launch);
+        // Boolean knobs take the full flag syntax, same as the env
+        // overrides — `launch=0` must not be silently ignored.
+        assert!(c.set("launch", "0"));
+        assert!(!c.launch);
+        assert!(c.set("launch", "on"));
+        assert!(c.launch);
+        assert!(c.set("steal", "YES"));
+        assert!(c.steal);
+        assert!(c.set("steal", "0"));
+        assert!(!c.steal);
+        assert!(!c.set("launch", "maybe"), "unrecognized flag value rejected");
+        assert!(c.launch, "rejected value leaves the knob untouched");
         assert!(c.set("gop", "8"), "pipeline keys pass through");
         assert_eq!(c.pipeline.gop, 8);
         assert!(!c.set("nope", "1"));
@@ -295,6 +398,46 @@ mod tests {
         assert_eq!(c.shard_kv_budget(), 25);
         c.num_shards = 0; // degenerate: treated as one shard
         assert_eq!(c.shard_kv_budget(), 100);
+    }
+
+    #[test]
+    fn knob_keys_all_parse_and_list_is_exhaustive_for_rejects() {
+        // Every advertised knob must be accepted by the parser (the
+        // operator's-guide test layers the doc check on top of this).
+        for key in ServingConfig::knob_keys() {
+            let mut c = ServingConfig::default();
+            let value = match *key {
+                "steal" | "launch" => "true",
+                "stride_frac" => "0.5",
+                "mv_threshold" | "alpha" => "0.25",
+                _ => "2",
+            };
+            assert!(c.set(key, value), "knob_keys lists `{key}` but set() rejects it");
+        }
+        // And a key outside the list is rejected.
+        assert!(!ServingConfig::default().set("not_a_knob", "1"));
+    }
+
+    #[test]
+    fn env_bool_understands_cli_style_values() {
+        let key = "CF_TEST_ENV_BOOL_KNOB"; // unique: no other test reads it
+        assert!(env_bool(key, true), "unset -> default");
+        assert!(!env_bool(key, false));
+        for (value, expect) in [
+            ("0", false),
+            ("false", false),
+            ("FALSE", false),
+            ("off", false),
+            ("1", true),
+            ("true", true),
+            ("YES", true),
+        ] {
+            std::env::set_var(key, value);
+            assert_eq!(env_bool(key, !expect), expect, "value {value:?}");
+        }
+        std::env::set_var(key, "maybe");
+        assert!(env_bool(key, true), "unrecognized -> default");
+        std::env::remove_var(key);
     }
 
     #[test]

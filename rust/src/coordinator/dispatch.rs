@@ -11,8 +11,15 @@
 //! panics is isolated by the pool and reported, not fatal. Inside a
 //! shard, service is batch-at-a-time (`cfg.max_batch` cross-stream
 //! prefills fused per launch); the per-shard
-//! [`BatchStats`] fold into [`ShardedReport::batching`]. The full
-//! request path is narrated in `docs/ARCHITECTURE.md`.
+//! [`BatchStats`] fold into [`ShardedReport::batching`]. With
+//! `cfg.launch` and `cfg.pipeline_depth >= 1` each shard additionally
+//! runs **two** threads — its worker (sessions, queue, KV) and a
+//! dedicated launch thread owning the executor
+//! ([`crate::runtime::replica::LaunchedExecutor`]) — so prefill
+//! launches physically overlap the next batch's prepare; a fault on
+//! either thread is contained to that shard. The full request path is
+//! narrated in `docs/ARCHITECTURE.md`; every knob is documented in
+//! `docs/OPERATIONS.md`.
 
 use std::sync::Arc;
 
@@ -86,10 +93,17 @@ impl ShardedReport {
             self.phases.hidden_prepare_s,
             self.phases.overlap_efficiency() * 100.0
         ));
+        out.push_str(&format!(
+            "wall:   prepare={:.3}s execute={:.3}s overlap={:.3}s wall_overlap_eff={:.0}%\n",
+            self.phases.wall_prepare_s,
+            self.phases.wall_execute_s,
+            self.phases.wall_overlap_s,
+            self.phases.wall_overlap_efficiency() * 100.0
+        ));
         for r in &self.shards {
             out.push_str(&format!(
                 "  shard {}: windows={} streams={} stolen={} busy={:.3}s span={:.3}s \
-                 util={:.0}% batch~{:.1} overlap={:.0}% sustainable={:.1}\n",
+                 util={:.0}% batch~{:.1} overlap={:.0}% wall_overlap={:.0}% sustainable={:.1}\n",
                 r.shard,
                 r.metrics.windows(),
                 r.streams_served,
@@ -99,6 +113,7 @@ impl ShardedReport {
                 r.utilization() * 100.0,
                 r.mean_batch_size(),
                 r.overlap_efficiency() * 100.0,
+                r.wall_overlap_efficiency() * 100.0,
                 r.metrics.sustainable_streams(self.stride_s)
             ));
         }
@@ -154,7 +169,11 @@ impl Dispatcher {
         let model = self.model.clone();
         let results = tp.try_map((0..num_shards).collect::<Vec<usize>>(), move |sid| {
             // Each shard builds its own executor replica on this
-            // worker thread — engines are never shared across threads.
+            // worker thread; under `launch=1` + `pipeline>=1` the
+            // replica is then *moved* onto the shard's dedicated
+            // launch thread (`Shard::run_launched`) so fused prefills
+            // physically overlap the next batch's prepare. Either way
+            // the engine is owned by exactly one thread at a time.
             let exec = factory.build();
             let shard = Shard {
                 id: sid,
@@ -163,7 +182,11 @@ impl Dispatcher {
                 variant,
                 fps,
             };
-            shard.run(exec.as_ref(), &pool)
+            if cfg.launch && cfg.pipeline_depth > 0 {
+                shard.run_launched(exec, &pool)
+            } else {
+                shard.run(exec.as_ref(), &pool)
+            }
         });
         let wall_s = util::now() - t0;
 

@@ -13,12 +13,39 @@ use crate::util::stats::Summary;
 /// `hidden_prepare_s` is the portion of prepare the pipelined loop hid
 /// behind an earlier batch's launch — zero under serial
 /// (`pipeline=0`) service.
+///
+/// The `wall_*` fields are the **measured** counterparts of the
+/// virtual model: `wall_prepare_s` / `wall_execute_s` are real elapsed
+/// seconds of the shard thread's prepare phases and the executor's
+/// launch occupancy (measured on the launch thread under `launch=1`),
+/// and `wall_overlap_s` is the intersection of the two interval sets
+/// ([`overlap_seconds`]) — seconds a prepare phase was in progress
+/// while the executor was busy. This is *phase* concurrency, not CPU
+/// concurrency: a prepare phase includes any time the shard thread
+/// spends blocked on the shared device queue (a synchronous ViT/embed
+/// call waiting behind an in-flight launch still counts as prepare),
+/// so full efficiency means "prepare was entirely shadowed by
+/// executor activity", not "two cores were pinned". Under inline
+/// service the intervals are disjoint by construction (one thread),
+/// so `wall_overlap_s` stays ~0; with a launch thread it approaches
+/// `min(wall_prepare_s, wall_execute_s)`. Comparing
+/// `overlap_efficiency()` (virtual) with `wall_overlap_efficiency()`
+/// (measured) reconciles the
+/// [`PipelineClock`](crate::runtime::batch::PipelineClock) model
+/// against what the host actually did — the end-to-end ground truth
+/// remains the run's elapsed `wall_s` (fig23's headline column).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PhaseTimes {
     pub prepare_s: f64,
     pub execute_s: f64,
     pub finish_s: f64,
     pub hidden_prepare_s: f64,
+    /// Measured wall seconds the shard thread spent in prepare phases.
+    pub wall_prepare_s: f64,
+    /// Measured wall seconds the executor spent running batches.
+    pub wall_execute_s: f64,
+    /// Measured wall seconds prepare and execute ran simultaneously.
+    pub wall_overlap_s: f64,
 }
 
 impl PhaseTimes {
@@ -33,13 +60,56 @@ impl PhaseTimes {
         }
     }
 
+    /// Measured analogue of [`PhaseTimes::overlap_efficiency`]: the
+    /// fraction of wall prepare time that physically ran while the
+    /// executor was busy. 0 under inline service; bounded by the
+    /// smaller of the two sides under a launch thread.
+    pub fn wall_overlap_efficiency(&self) -> f64 {
+        if self.wall_prepare_s > 0.0 {
+            (self.wall_overlap_s / self.wall_prepare_s).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+
     /// Fold another shard's phase times into this one.
     pub fn merge(&mut self, other: &PhaseTimes) {
         self.prepare_s += other.prepare_s;
         self.execute_s += other.execute_s;
         self.finish_s += other.finish_s;
         self.hidden_prepare_s += other.hidden_prepare_s;
+        self.wall_prepare_s += other.wall_prepare_s;
+        self.wall_execute_s += other.wall_execute_s;
+        self.wall_overlap_s += other.wall_overlap_s;
     }
+}
+
+/// Total intersection seconds between two sets of `(start, end)` wall
+/// intervals. Each set comes from one thread's sequential phases, so
+/// within a set intervals are non-overlapping; the inputs need not be
+/// sorted (they are sorted here defensively). Used to measure how long
+/// a shard's prepare phases physically ran while its launch thread was
+/// executing ([`PhaseTimes::wall_overlap_s`]).
+pub fn overlap_seconds(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let mut a: Vec<(f64, f64)> = a.to_vec();
+    let mut b: Vec<(f64, f64)> = b.to_vec();
+    a.sort_by(|x, y| x.0.total_cmp(&y.0));
+    b.sort_by(|x, y| x.0.total_cmp(&y.0));
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut total = 0.0f64;
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            total += hi - lo;
+        }
+        if a[i].1 < b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    total
 }
 
 #[derive(Clone, Debug, Default)]
@@ -240,6 +310,7 @@ mod tests {
             execute_s: 5.0,
             finish_s: 1.0,
             hidden_prepare_s: 1.5,
+            ..Default::default()
         };
         assert!((p.overlap_efficiency() - 0.75).abs() < 1e-12);
         p.merge(&PhaseTimes {
@@ -247,10 +318,41 @@ mod tests {
             execute_s: 1.0,
             finish_s: 0.0,
             hidden_prepare_s: 0.5,
+            ..Default::default()
         });
         assert!((p.prepare_s - 4.0).abs() < 1e-12);
         assert!((p.overlap_efficiency() - 0.5).abs() < 1e-12);
         assert_eq!(PhaseTimes::default().overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn wall_overlap_efficiency_and_merge() {
+        let mut p = PhaseTimes {
+            wall_prepare_s: 4.0,
+            wall_execute_s: 3.0,
+            wall_overlap_s: 2.0,
+            ..Default::default()
+        };
+        assert!((p.wall_overlap_efficiency() - 0.5).abs() < 1e-12);
+        p.merge(&PhaseTimes { wall_prepare_s: 4.0, ..Default::default() });
+        assert!((p.wall_prepare_s - 8.0).abs() < 1e-12);
+        assert!((p.wall_overlap_efficiency() - 0.25).abs() < 1e-12);
+        assert_eq!(PhaseTimes::default().wall_overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn overlap_seconds_intersects_interval_sets() {
+        // Disjoint sets (serial service): zero overlap.
+        assert_eq!(overlap_seconds(&[(0.0, 1.0), (2.0, 3.0)], &[(1.0, 2.0), (3.0, 4.0)]), 0.0);
+        // Plain intersection.
+        assert!((overlap_seconds(&[(0.0, 2.0)], &[(1.0, 3.0)]) - 1.0).abs() < 1e-12);
+        // One exec interval spanning two prepares.
+        let prep = [(0.0, 1.0), (2.0, 4.0)];
+        let exec = [(0.5, 3.0)];
+        assert!((overlap_seconds(&prep, &exec) - 1.5).abs() < 1e-12);
+        // Unsorted input tolerated; empty sets are zero.
+        assert!((overlap_seconds(&[(2.0, 4.0), (0.0, 1.0)], &[(0.5, 3.0)]) - 1.5).abs() < 1e-12);
+        assert_eq!(overlap_seconds(&[], &[(0.0, 1.0)]), 0.0);
     }
 
     #[test]

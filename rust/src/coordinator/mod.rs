@@ -19,10 +19,13 @@
 //! `pipeline=N` up to N prepared batches ride a FIFO ring so each
 //! batch's prepare phase (frontend decode fanned out on a
 //! `frontend_workers` pool, pruning, ViT, request assembly) overlaps
-//! the previous batch's launch — bit-identical results, per-phase
-//! times and overlap efficiency in the reports
+//! the previous batch's launch — physically, under `launch=1`, on a
+//! per-shard launch thread owning the executor
+//! ([`crate::runtime::replica::LaunchedExecutor`]). Bit-identical
+//! results, per-phase times, and both the virtual and the measured
+//! wall-clock overlap efficiency land in the reports
 //! ([`metrics::PhaseTimes`]). See `docs/ARCHITECTURE.md` for the full
-//! request path.
+//! request path and `docs/OPERATIONS.md` for every knob.
 
 pub mod dispatch;
 pub mod metrics;

@@ -4,6 +4,13 @@
 //! ([`StreamSession::step`]) and split at the prefill launch
 //! ([`StreamSession::prepare`] / [`StreamSession::finish`]) so the
 //! shard loop can batch shape-compatible prefills across sessions.
+//!
+//! The `exec` handed in is any [`Executor`] — a replica owned by the
+//! shard thread, or (under wall-clock pipelining, `launch=1`) the
+//! shard's [`crate::runtime::replica::LaunchedExecutor`] handle, whose
+//! calls are proxied to the launch thread that owns the real engine.
+//! Sessions never care which: the handle preserves single-device-queue
+//! semantics, so results are identical either way.
 
 use crate::baselines::Variant;
 use crate::codec::types::Frame;

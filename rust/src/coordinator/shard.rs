@@ -29,7 +29,19 @@
 //!   in-flight window sit out batch formation, finish/KV settlement
 //!   retire strictly in batch order, and results are bit-identical at
 //!   any depth ([`ShardReport::result_digest`]); `pipeline = 0` runs
-//!   the untouched serial loop.
+//!   the untouched serial loop;
+//! * with `launch = 1` (the default) the overlap is **wall-clock
+//!   real**, not just modelled: [`Shard::run_launched`] moves the
+//!   shard's executor (every [`Executor`] is `Send`) onto a dedicated
+//!   *launch thread* ([`LaunchedExecutor`]) that consumes prepared
+//!   batches from a bounded channel, so `execute_batch` physically
+//!   runs while the shard thread prepares the next batch. Launch
+//!   ownership: the shard thread keeps the sessions, queue and KV
+//!   pool; the launch thread owns the executor; the only traffic
+//!   between them is prepared [`BatchRequest`]s one way and outcomes
+//!   (with measured wall intervals) the other. The report carries
+//!   both the virtual overlap model and the measured one
+//!   ([`PhaseTimes::wall_overlap_s`]).
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -44,10 +56,11 @@ use crate::pipeline::frontend::WindowFrames;
 use crate::pipeline::infer::{PendingWindow, WindowResult};
 use crate::runtime::batch::{BatchOutcome, BatchRequest, BatchStats, PipelineClock};
 use crate::runtime::mock::Executor;
+use crate::runtime::replica::{LaunchedBatch, LaunchedExecutor};
 use crate::util;
-use crate::util::threadpool::{join_all, ThreadPool};
+use crate::util::threadpool::{join_all, JobHandle, ThreadPool};
 
-use super::metrics::{Metrics, PhaseTimes};
+use super::metrics::{overlap_seconds, Metrics, PhaseTimes};
 use super::queue::{AdmissionQueue, WindowJob};
 use super::session::StreamSession;
 
@@ -184,6 +197,12 @@ impl ShardReport {
     pub fn overlap_efficiency(&self) -> f64 {
         self.phases.overlap_efficiency()
     }
+
+    /// *Measured* fraction of wall prepare time that physically ran
+    /// while the executor was busy (0 without a launch thread).
+    pub fn wall_overlap_efficiency(&self) -> f64 {
+        self.phases.wall_overlap_efficiency()
+    }
 }
 
 /// FNV fingerprint of one served window's deterministic outputs —
@@ -317,14 +336,29 @@ pub struct Shard {
     pub fps: f64,
 }
 
+/// Where a ring batch's prefill launch stands while it rides toward
+/// its finish turn.
+enum LaunchState {
+    /// Executed inline on the shard thread (`launch=0`): the outputs
+    /// are already materialized, only the finish phase is deferred.
+    Done { outcomes: Vec<BatchOutcome> },
+    /// Physically in flight on the shard's launch thread
+    /// ([`LaunchedExecutor::submit_batch`]): the ticket is cashed at
+    /// retire, which is where a launch-thread fault (panic or engine
+    /// error) surfaces and kills this shard — the same containment as
+    /// an inline fault.
+    Flying(JobHandle<LaunchedBatch>),
+}
+
 /// One prepared-and-launched batch riding the pipeline ring until its
-/// finish turn. Outputs are already materialized (deterministic in the
-/// prepared requests); what is deferred is the finish phase —
-/// KV-state assembly, answer decoding, metrics and KV-pool settlement
-/// — which retires strictly in batch order.
+/// finish turn. The launch has been issued (inline and already done,
+/// or physically running on the launch thread — [`LaunchState`]);
+/// what is deferred is the finish phase — KV-state assembly, answer
+/// decoding, metrics and KV-pool settlement — which retires strictly
+/// in batch order.
 struct InFlight {
     pending: Vec<(WindowJob, usize, PendingWindow)>,
-    outcomes: Vec<BatchOutcome>,
+    launch: LaunchState,
     /// Artifact name per member (fusion-group accounting at retire).
     artifacts: Vec<String>,
     batch_arrival: f64,
@@ -333,8 +367,6 @@ struct InFlight {
     /// Virtual time the prepare phase started / completed.
     prep_start: f64,
     prep_done: f64,
-    /// Summed (amortized) prefill launch seconds.
-    exec_s: f64,
 }
 
 /// The mutable state of one shard's serving run, factored out so the
@@ -364,6 +396,13 @@ struct ShardState<'e> {
     /// (batch k's prepare cannot start before batch k-depth-1 fully
     /// retired — [`PipelineClock`]).
     pipe: PipelineClock,
+    /// Measured wall intervals of the shard thread's prepare phases /
+    /// the executor's batch launches ([`util::now`] epoch). Their
+    /// intersection ([`overlap_seconds`]) is the *measured* overlap
+    /// reported next to the virtual model in
+    /// [`PhaseTimes::wall_overlap_s`].
+    prep_intervals: Vec<(f64, f64)>,
+    exec_intervals: Vec<(f64, f64)>,
     streams_served: usize,
     stolen_streams: usize,
 }
@@ -385,6 +424,8 @@ impl<'e> ShardState<'e> {
             clock: 0.0,
             busy: 0.0,
             pipe: PipelineClock::default(),
+            prep_intervals: Vec::new(),
+            exec_intervals: Vec::new(),
             streams_served: 0,
             stolen_streams: 0,
         }
@@ -521,6 +562,7 @@ impl<'e> ShardState<'e> {
     /// one fused launch, finish + amortized timing + KV settlement.
     fn serve_serial_batch(&mut self, jobs: Vec<WindowJob>) {
         // Phase 1 — per job, everything up to the prefill launch.
+        let wall_prep_start = util::now();
         let mut pending = Vec::with_capacity(jobs.len());
         let mut requests: Vec<BatchRequest> = Vec::with_capacity(jobs.len());
         for job in jobs {
@@ -537,13 +579,18 @@ impl<'e> ShardState<'e> {
                 pending.push((job, idx, pw));
             }
         }
+        self.prep_intervals.push((wall_prep_start, util::now()));
         if pending.is_empty() {
             return;
         }
 
         // Phase 2 — one fused launch for the whole batch (the
-        // executor loops internally if it cannot fuse).
+        // executor loops internally if it cannot fuse). Serial service
+        // runs it on the shard thread: its wall interval is disjoint
+        // from every prepare interval, so measured overlap stays 0.
+        let wall_exec_start = util::now();
         let outcomes = self.exec.execute_batch(&requests).expect("batched prefill");
+        self.exec_intervals.push((wall_exec_start, util::now()));
 
         // Phase 3 — per job, consume outputs; amortized timing. The
         // batch launches once every member has arrived; its service
@@ -595,15 +642,18 @@ impl<'e> ShardState<'e> {
     /// out across `fe_pool` when available), the engine half of
     /// prepare, and the fused launch itself. Returns the in-flight
     /// batch for the ring, with its virtual prepare timing assigned —
-    /// the launch is *called* here (outputs are deterministic in the
-    /// already-materialized requests), but every effect on session
-    /// state, metrics and the KV pool waits for
-    /// [`ShardState::retire`].
+    /// the launch is *issued* here (inline on the shard thread, or
+    /// handed to the shard's launch thread when `launcher` is set, in
+    /// which case it physically runs while this method's caller
+    /// prepares the next batch), but every effect on session state,
+    /// metrics and the KV pool waits for [`ShardState::retire`].
     fn prepare_pipelined_batch(
         &mut self,
         jobs: Vec<WindowJob>,
         fe_pool: Option<&ThreadPool>,
+        launcher: Option<&LaunchedExecutor>,
     ) -> Option<InFlight> {
+        let wall_prep_start = util::now();
         // Serial half: advance each session's cursor (stale jobs from
         // backpressure drops are skipped, exactly as in serial mode).
         let mut slots: Vec<(WindowJob, usize, usize, usize)> = Vec::with_capacity(jobs.len());
@@ -676,10 +726,23 @@ impl<'e> ShardState<'e> {
             pending.push((job, idx, pw));
         }
 
-        // The fused launch. Outputs ride the ring until retire.
-        let outcomes = self.exec.execute_batch(&requests).expect("batched prefill");
-        let exec_s: f64 = outcomes.iter().map(|o| o.exec_s).sum();
-        let artifacts: Vec<String> = requests.into_iter().map(|r| r.artifact).collect();
+        self.prep_intervals.push((wall_prep_start, util::now()));
+
+        // The fused launch. With a launch thread the requests cross to
+        // it through the bounded channel and execute *while the shard
+        // thread prepares the next batch* — wall-clock overlap; inline
+        // (`launch=0`) the call runs here and only the virtual model
+        // overlaps. Either way the outputs ride the ring until retire.
+        let artifacts: Vec<String> = requests.iter().map(|r| r.artifact.clone()).collect();
+        let launch = match launcher {
+            Some(launched) => LaunchState::Flying(launched.submit_batch(requests)),
+            None => {
+                let wall_exec_start = util::now();
+                let outcomes = self.exec.execute_batch(&requests).expect("batched prefill");
+                self.exec_intervals.push((wall_exec_start, util::now()));
+                LaunchState::Done { outcomes }
+            }
+        };
 
         // Virtual prepare timing ([`PipelineClock::prepare`]):
         // prepares serialize on the shard's CPU side, cannot start
@@ -692,33 +755,46 @@ impl<'e> ShardState<'e> {
         }
         Some(InFlight {
             pending,
-            outcomes,
+            launch,
             artifacts,
             batch_arrival,
             prepare_s,
             prep_start,
             prep_done,
-            exec_s,
         })
     }
 
-    /// Retire the oldest in-flight batch: run its finish phase,
-    /// record overlapped timing (the executor stage starts at
-    /// `max(prep_done, previous exec_done)` — prepare time under the
-    /// previous launch is hidden), and settle the KV pool. Retirement
-    /// is strictly FIFO, so evictions and cross-batch KV reuse order
-    /// exactly as service order.
+    /// Retire the oldest in-flight batch: wait out its launch if it is
+    /// still flying, run its finish phase, record overlapped timing
+    /// (the executor stage starts at `max(prep_done, previous
+    /// exec_done)` — prepare time under the previous launch is
+    /// hidden), and settle the KV pool. Retirement is strictly FIFO,
+    /// so evictions and cross-batch KV reuse order exactly as service
+    /// order. A launch-thread fault surfaces here and panics the shard
+    /// thread — the dispatcher's per-shard isolation then contains it
+    /// exactly like an inline fault, with every prior batch's KV
+    /// already settled (FIFO retirement again).
     fn retire(&mut self, fl: InFlight) {
         let InFlight {
             pending,
-            outcomes,
+            launch,
             artifacts,
             batch_arrival,
             prepare_s,
             prep_start,
             prep_done,
-            exec_s,
         } = fl;
+        let outcomes = match launch {
+            LaunchState::Done { outcomes } => outcomes,
+            LaunchState::Flying(ticket) => match ticket.join() {
+                Ok(run) => {
+                    self.exec_intervals.push((run.wall_start, run.wall_end));
+                    run.outcomes.expect("batched prefill")
+                }
+                Err(msg) => panic!("launch thread panicked during batched prefill: {msg}"),
+            },
+        };
+        let exec_s: f64 = outcomes.iter().map(|o| o.exec_s).sum();
 
         let mut batch_total = 0.0f64;
         let mut finish_s = 0.0f64;
@@ -825,7 +901,42 @@ impl Shard {
     /// are bit-identical at any depth ([`ShardReport::result_digest`]):
     /// pipelining changes when work is *charged*, never what is
     /// computed.
+    ///
+    /// This entry point keeps the executor **inline** on the shard
+    /// thread (the overlap exists in virtual time only); use
+    /// [`Shard::run_launched`] for physical wall-clock overlap.
     pub fn run(&self, exec: &dyn Executor, pool: &StealPool) -> ShardReport {
+        self.run_with(exec, None, pool)
+    }
+
+    /// [`Shard::run`] with wall-clock overlap: takes **ownership** of
+    /// the executor (the `Send` bound on
+    /// [`Executor`] is what allows the move), hands it to a dedicated
+    /// launch thread ([`LaunchedExecutor`]), and serves through the
+    /// returned handle — so with `pipeline >= 1` each batch's fused
+    /// prefill physically runs on the launch thread while this shard
+    /// thread prepares the next batch, consuming prepared
+    /// [`BatchRequest`] groups from a bounded channel (prepare stalls
+    /// when the executor falls `depth + 1` batches behind). Results
+    /// are bit-identical to [`Shard::run`] at every depth; what
+    /// changes is measured wall time ([`PhaseTimes::wall_overlap_s`]).
+    ///
+    /// With `pipeline_depth == 0` there is nothing to overlap: the
+    /// executor stays inline and this is exactly [`Shard::run`].
+    pub fn run_launched(&self, exec: Box<dyn Executor>, pool: &StealPool) -> ShardReport {
+        if self.cfg.pipeline_depth == 0 {
+            return self.run(exec.as_ref(), pool);
+        }
+        let launched = LaunchedExecutor::new(exec, self.cfg.pipeline_depth);
+        self.run_with(&launched, Some(&launched), pool)
+    }
+
+    fn run_with(
+        &self,
+        exec: &dyn Executor,
+        launcher: Option<&LaunchedExecutor>,
+        pool: &StealPool,
+    ) -> ShardReport {
         let t0 = util::now();
         let stride_s = self.cfg.pipeline.stride_frames() as f64 / self.fps;
         let wave = self.cfg.admit_wave.max(1);
@@ -879,7 +990,7 @@ impl Shard {
                 }
                 continue;
             }
-            if let Some(fl) = st.prepare_pipelined_batch(jobs, fe_pool.as_ref()) {
+            if let Some(fl) = st.prepare_pipelined_batch(jobs, fe_pool.as_ref(), launcher) {
                 ring.push_back(fl);
             }
             while ring.len() > depth {
@@ -889,6 +1000,15 @@ impl Shard {
         }
         debug_assert!(ring.is_empty(), "pipeline drained before reporting");
         st.metrics.dropped = st.queue.dropped;
+
+        // Measured wall-clock phase accounting, next to the virtual
+        // model: how long prepares and launches really took, and how
+        // much of that physically ran concurrently (non-zero only with
+        // a launch thread — inline service interleaves the intervals
+        // on one thread, so their intersection is empty).
+        st.phases.wall_prepare_s = st.prep_intervals.iter().map(|(a, b)| b - a).sum();
+        st.phases.wall_execute_s = st.exec_intervals.iter().map(|(a, b)| b - a).sum();
+        st.phases.wall_overlap_s = overlap_seconds(&st.prep_intervals, &st.exec_intervals);
 
         ShardReport {
             shard: self.id,
@@ -1213,6 +1333,44 @@ mod tests {
             serial.span_s
         );
         assert!(piped.span_s >= piped.busy_s, "span bounds busy");
+    }
+
+    #[test]
+    fn launched_depths_match_serial_results_bit_for_bit() {
+        // The wall-clock tentpole's invariant: moving the executor to
+        // a launch thread re-times service physically, it must never
+        // change what is computed. Digests, FLOPs, token counts and
+        // served window sets are identical to the inline serial loop
+        // at depths 0 (degenerates to inline), 1, 2 and 4.
+        use crate::runtime::replica::{ExecutorFactory, MockReplicaFactory};
+        let serial = {
+            let (mock, shard) = pipelined_shard(0, 0.0);
+            shard.run(&mock, &StealPool::new(works(6, 0)))
+        };
+        assert!(serial.result_digest != 0);
+        for depth in [0usize, 1, 2, 4] {
+            // A small real executor occupancy (sleep per work unit) so
+            // the measured launch intervals are provably non-empty —
+            // occupancy never changes outputs, so digests still match.
+            let wall_delay = if depth > 0 { 1e-6 } else { 0.0 };
+            let (_, shard) = pipelined_shard(depth, 0.0);
+            let exec = MockReplicaFactory::new("m", 0.0).with_wall_delay(wall_delay).build();
+            let launched = shard.run_launched(exec, &StealPool::new(works(6, 0)));
+            assert_eq!(launched.result_digest, serial.result_digest, "depth {depth}");
+            assert_eq!(launched.metrics.windows(), serial.metrics.windows());
+            assert_eq!(launched.metrics.flops, serial.metrics.flops);
+            assert_eq!(launched.metrics.seq_tokens, serial.metrics.seq_tokens);
+            assert_eq!(launched.metrics.per_stream, serial.metrics.per_stream);
+            if depth > 0 {
+                // The launch thread measured real, non-empty executor
+                // intervals (occupied launches cannot measure zero).
+                assert!(
+                    launched.phases.wall_execute_s > 0.0,
+                    "depth {depth}: launch intervals were recorded"
+                );
+                assert!(launched.phases.wall_prepare_s > 0.0, "real prepare work was timed");
+            }
+        }
     }
 
     #[test]

@@ -5,7 +5,9 @@
 use std::path::PathBuf;
 
 use crate::baselines::Variant;
-use crate::config::{artifacts_dir, env_usize, ExperimentConfig, PipelineConfig, ServingConfig};
+use crate::config::{
+    artifacts_dir, env_bool, env_usize, ExperimentConfig, PipelineConfig, ServingConfig,
+};
 use crate::coordinator::session::StreamSession;
 use crate::json::{self, Value};
 use crate::model::probe::{Probe, ProbeBuilder};
@@ -436,8 +438,9 @@ fn cache_load(key: &str) -> Option<VariantEval> {
 /// experiment config, `num_shards` executor replicas, pool size from
 /// the shard count (env `CF_WORKERS` overrides the thread count,
 /// `CF_BATCH` / `CF_BATCH_BUCKET` override the per-shard batching
-/// knobs, `CF_PIPELINE` the pipelined-execution depth — see
-/// `docs/ARCHITECTURE.md`).
+/// knobs, `CF_PIPELINE` the pipelined-execution depth, `CF_LAUNCH`
+/// whether pipelined shards run per-shard launch threads — the full
+/// knob/env matrix is `docs/OPERATIONS.md`).
 pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     let mut s = ServingConfig::default();
     s.pipeline = cfg.pipeline.clone();
@@ -446,6 +449,7 @@ pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     s.max_batch = env_usize("CF_BATCH", s.max_batch);
     s.batch_bucket = env_usize("CF_BATCH_BUCKET", s.batch_bucket);
     s.pipeline_depth = env_usize("CF_PIPELINE", s.pipeline_depth);
+    s.launch = env_bool("CF_LAUNCH", s.launch);
     s
 }
 

@@ -5,7 +5,9 @@
 //! plus a request's life from bitstream to `ShardedReport` and where
 //! batching / stealing / backpressure intercept it — lives in
 //! [`docs/ARCHITECTURE.md`](../docs/ARCHITECTURE.md) at the
-//! repository root.
+//! repository root. The operator's reference (every serving knob:
+//! default, env override, interaction matrix, measuring figure) is
+//! [`docs/OPERATIONS.md`](../docs/OPERATIONS.md).
 //!
 //! Layer map:
 //! * [`codec`], [`video`], [`net`] — substrates: a software inter-frame
@@ -16,27 +18,31 @@
 //!   selective KV-cache refresh with RoPE position correction.
 //! * [`runtime`], [`model`] — PJRT execution of the AOT-compiled JAX/
 //!   Pallas artifacts (feature `pjrt`; manifest-only stub otherwise),
-//!   per-shard executor replica factories ([`runtime::replica`]),
-//!   cross-stream batched execution ([`runtime::batch`]), model
-//!   descriptors, the anomaly probe.
+//!   per-shard executor replica factories and launch-thread executor
+//!   ownership ([`runtime::replica`], `Send` executors behind a
+//!   bounded lane), cross-stream batched execution
+//!   ([`runtime::batch`]), model descriptors, the anomaly probe.
 //! * [`coordinator`], [`baselines`] — the serving layer, single-shard
 //!   ([`coordinator::serve`]) and sharded: consistent stream->shard
 //!   placement, per-shard EDF admission queues and KV budgets,
 //!   within-shard cross-stream batch formation
 //!   ([`coordinator::queue::AdmissionQueue::pop_batch`]), pipelined
 //!   batch execution (`pipeline=N` overlaps a batch's prepare with
-//!   the previous batch's prefill launch inside every shard), and
-//!   cross-shard work stealing driven by a thread pool
-//!   ([`coordinator::shard`], [`coordinator::dispatch`]) — plus the
-//!   four comparison systems.
+//!   the previous batch's prefill launch inside every shard —
+//!   physically so under `launch=1`, with measured wall overlap in
+//!   the reports), and cross-shard work stealing driven by a thread
+//!   pool ([`coordinator::shard`], [`coordinator::dispatch`]) — plus
+//!   the four comparison systems.
 //! * [`exp`] — one experiment runner per paper table/figure, plus
 //!   [`exp::fig20_scaling`] (shard-scaling throughput),
-//!   [`exp::fig21_batching`] (cross-stream batched prefill) and
-//!   [`exp::fig22_pipeline`] (pipelined shard execution), beyond the
-//!   paper.
+//!   [`exp::fig21_batching`] (cross-stream batched prefill),
+//!   [`exp::fig22_pipeline`] (pipelined shard execution) and
+//!   [`exp::fig23_wallclock`] (launch-thread wall-clock overlap),
+//!   beyond the paper.
 //! * [`util`], [`json`], [`config`] — support: PRNG, stats, micro-bench
 //!   harness, property-test helper, panic-isolating thread pool with
-//!   join/fan-in ([`util::threadpool`]), JSON, typed configs.
+//!   join/fan-in and bounded single-owner lanes ([`util::threadpool`]),
+//!   JSON, typed configs.
 
 pub mod baselines;
 pub mod codec;

@@ -31,7 +31,11 @@ use super::mock::Executor;
 use super::tensor::Tensor;
 
 /// One prepared executor call, ready to be fused into a batch.
-#[derive(Debug)]
+///
+/// Requests are plain owned data (`Send`), so a prepared batch can be
+/// handed to a per-shard launch thread and executed while the shard
+/// prepares the next one ([`crate::runtime::replica::LaunchedExecutor`]).
+#[derive(Clone, Debug)]
 pub struct BatchRequest {
     pub model: String,
     /// Bucketed artifact name (e.g. `prefill_incr_n96_o288`). Requests
@@ -100,6 +104,14 @@ pub struct RetiredTiming {
 /// provides ring backpressure by only calling [`PipelineClock::prepare`]
 /// after the batch `depth` slots ago has retired (retiring updates
 /// `exec_done`, which gates the next prepare).
+///
+/// This clock is the *model*; with launch threads enabled (`launch=`,
+/// [`crate::runtime::replica::LaunchedExecutor`]) the same two-resource
+/// schedule also runs physically, and the shard reports **measured**
+/// wall-clock phase times next to these virtual ones
+/// ([`crate::coordinator::metrics::PhaseTimes`]) so model and reality
+/// can be reconciled: the virtual clock prices executor work by
+/// `delay_s`, the wall clock measures whatever the host actually did.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PipelineClock {
     /// Completion of the most recent prepare (CPU side).

@@ -8,12 +8,24 @@
 //!   request path only uploads activations;
 //! * per-family wall-clock + FLOP statistics feed Fig 6 / Fig 19.
 //!
-//! The engine is deliberately single-threaded (`RefCell` state): the
-//! coordinator owns it from one executor thread, mirroring a serialized
-//! accelerator queue. The sharded serving layer
-//! ([`crate::coordinator::dispatch`]) scales out by constructing one
-//! engine *replica per shard* ([`super::replica`]) rather than sharing
-//! one engine across threads.
+//! The engine is deliberately single-threaded (`RefCell` state): at
+//! any moment exactly one thread owns and drives it, mirroring a
+//! serialized accelerator queue. That owner may *change once*: the
+//! [`Executor`](super::mock::Executor) trait is `Send`, so a shard can
+//! move its replica onto a dedicated launch thread
+//! ([`super::replica::LaunchedExecutor`]) — ownership transfers, the
+//! state is never shared, and `RefCell` remains sound. The sharded
+//! serving layer ([`crate::coordinator::dispatch`]) scales out by
+//! constructing one engine *replica per shard* ([`super::replica`])
+//! rather than sharing one engine across threads. (Caveat for the
+//! `pjrt` flavour, which CI never compiles: the `Send` supertrait on
+//! `Executor` requires the `xla` binding types to be `Send`. If a
+//! binding turns out `!Send`, building inside the launch thread does
+//! **not** help — the bound is on the trait, not the call site — so
+//! that backend would need a thread-confined wrapper asserting `Send`
+//! at the boundary (sound only if every call stays on the owning
+//! thread, which the launch-lane design guarantees), or the bound
+//! relaxed per backend. Tracked in ROADMAP.)
 //!
 //! Cross-stream batching ([`super::batch`]): the AOT artifacts carry
 //! no batch dimension, so this engine's `execute_batch` is the looping

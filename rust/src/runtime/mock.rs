@@ -30,7 +30,20 @@ use super::tensor::Tensor;
 /// ([`crate::runtime::batch`]): the default implementation loops —
 /// correct everywhere — and executors that can fuse shape-compatible
 /// requests override it to amortize launch cost across the batch.
-pub trait Executor {
+///
+/// # The `Send` contract
+///
+/// Every executor is `Send`: it may be **moved** to another thread
+/// after construction. The wall-clock pipelined serving layer relies
+/// on this — each shard hands its replica to a dedicated *launch
+/// thread* ([`crate::runtime::replica::LaunchedExecutor`]) that owns
+/// it for the rest of the run and consumes prepared batches from a
+/// bounded channel while the shard thread prepares the next batch.
+/// The bound is `Send`, **not** `Sync`: after the hand-off exactly one
+/// thread ever touches the executor (calls are proxied over the
+/// channel), so implementations are free to keep single-threaded
+/// interior state (the PJRT engine's lazy compile cache, for example).
+pub trait Executor: Send {
     fn execute(
         &self,
         model: &str,
@@ -83,6 +96,27 @@ pub struct MockEngine {
     /// n costs `1 + (n-1) * batch_marginal` launches in total, so
     /// per-request cost falls toward `batch_marginal` as n grows.
     pub batch_marginal: f64,
+    /// *Wall-clock* seconds per unit of artifact work, held as real
+    /// elapsed time on the calling thread. Unlike `delay_s` (a virtual
+    /// price that costs no wall time) this emulates accelerator
+    /// occupancy — the launch blocks for the kernel's duration while
+    /// the device, not the host CPU, does the work — so the wall-clock
+    /// overlap experiments (fig23) can measure a launch thread
+    /// physically occupied while the shard thread prepares. Outputs
+    /// and virtual timing are unaffected; the default 0 keeps every
+    /// other test wall-free.
+    pub wall_delay_s: f64,
+}
+
+/// Hold the calling thread for `seconds` of wall time. Sleeps rather
+/// than spins: a real launch blocks on a device completion event and
+/// leaves the host CPU free — which is exactly what lets another
+/// thread's prepare phase run underneath it, whatever the core count.
+fn occupy_wall(seconds: f64) {
+    if seconds <= 0.0 {
+        return;
+    }
+    std::thread::sleep(std::time::Duration::from_secs_f64(seconds));
 }
 
 pub fn test_spec(name: &str) -> ModelSpec {
@@ -125,7 +159,7 @@ impl MockEngine {
     pub fn new(model: &str) -> Self {
         let mut specs = HashMap::new();
         specs.insert(model.to_string(), test_spec(model));
-        MockEngine { specs, delay_s: 0.0, batch_marginal: 0.25 }
+        MockEngine { specs, delay_s: 0.0, batch_marginal: 0.25, wall_delay_s: 0.0 }
     }
 
     /// Relative work of one launch of `artifact`, in arbitrary "token"
@@ -241,6 +275,7 @@ impl Executor for MockEngine {
         inputs: &[Tensor],
     ) -> Result<(Vec<Tensor>, f64), EngineError> {
         let out = self.eval(model, artifact, inputs)?;
+        occupy_wall(self.wall_delay_s * Self::work_units(artifact));
         Ok((out, self.delay_s * Self::work_units(artifact)))
     }
 
@@ -268,9 +303,12 @@ impl Executor for MockEngine {
         outcomes.resize_with(reqs.len(), || None);
         for (_, artifact, idxs) in groups {
             let n = idxs.len() as f64;
-            let fused_s =
-                self.delay_s * Self::work_units(artifact) * (1.0 + (n - 1.0) * self.batch_marginal);
+            let amortized = 1.0 + (n - 1.0) * self.batch_marginal;
+            let fused_s = self.delay_s * Self::work_units(artifact) * amortized;
             let per_req_s = fused_s / n;
+            // One wall spin per fused group: the batch occupies the
+            // device for its amortized (not summed) launch cost.
+            occupy_wall(self.wall_delay_s * Self::work_units(artifact) * amortized);
             for i in idxs {
                 let out = self.eval(&reqs[i].model, &reqs[i].artifact, &reqs[i].inputs)?;
                 outcomes[i] = Some(BatchOutcome { outputs: out, exec_s: per_req_s });

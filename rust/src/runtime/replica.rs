@@ -1,25 +1,60 @@
-//! Executor replica construction for the sharded serving layer.
+//! Executor replica construction — and launch-thread ownership — for
+//! the sharded serving layer.
 //!
 //! The engine is single-threaded by design (serialized accelerator
 //! queue, see [`super::engine`]); scale-out therefore happens by
 //! *replication*, not sharing: the dispatcher hands each shard a
 //! factory, and the shard builds its own executor **on its own worker
-//! thread**. Only the factory crosses threads, so the engine itself
-//! never needs to be `Send`.
+//! thread**. Only the factory crosses threads at construction time.
+//!
+//! Ownership may then move once more. Every [`Executor`] is `Send`, so
+//! a shard running wall-clock pipelined service (`launch=1`,
+//! `pipeline>=1`) transfers its replica into a [`LaunchedExecutor`]: a
+//! dedicated **launch thread** that owns the executor and consumes
+//! prepared [`BatchRequest`] groups from a *bounded* channel
+//! ([`Lane`]), so `execute_batch` physically runs while the shard
+//! thread prepares the next batch. The executor is owned by exactly
+//! one thread at every moment — `Send`, never `Sync` — and the bounded
+//! queue is the backpressure seam: a shard that outruns its launch
+//! thread stalls in `submit_batch` instead of queueing unboundedly.
 //!
 //! Replicas built here are the executors the shard loop hands batches
 //! to (`Executor::execute_batch`, [`super::batch`]): mock replicas
 //! fuse and amortize, engine replicas fall back to looping. See
-//! `docs/ARCHITECTURE.md` for where replicas sit in the request path.
+//! `docs/ARCHITECTURE.md` ("Wall-clock overlap") and
+//! `docs/OPERATIONS.md` for where replicas and launch threads sit in
+//! the request path.
 
 use std::path::PathBuf;
 
-use super::engine::Engine;
+use crate::util;
+use crate::util::threadpool::{JobHandle, Lane};
+
+use super::batch::{BatchOutcome, BatchRequest};
+use super::engine::{Engine, EngineError};
+use super::manifest::ModelSpec;
 use super::mock::{Executor, MockEngine};
+use super::tensor::Tensor;
 
 /// Builds one executor replica per shard. Implementations must be
 /// cheap to share (`Send + Sync`); `build` is called from the shard's
-/// worker thread.
+/// worker thread, and — because every [`Executor`] is `Send` — the
+/// product may then be *moved* to the shard's dedicated launch thread
+/// ([`LaunchedExecutor`]), which owns it for the rest of the run.
+///
+/// ```
+/// use codecflow::runtime::mock::Executor;
+/// use codecflow::runtime::replica::{ExecutorFactory, MockReplicaFactory};
+///
+/// // Build on one thread, hand the executor across: the `Send`
+/// // bound on `Executor` is what makes the move legal.
+/// let factory = MockReplicaFactory::new("m", 0.0);
+/// let exec = factory.build();
+/// let spec = std::thread::spawn(move || exec.spec("m").expect("spec"))
+///     .join()
+///     .expect("launch thread");
+/// assert_eq!(spec.name, "m");
+/// ```
 pub trait ExecutorFactory: Send + Sync {
     fn build(&self) -> Box<dyn Executor>;
 
@@ -58,11 +93,23 @@ pub struct MockReplicaFactory {
     /// Virtual executor seconds per unit of artifact work (see
     /// `MockEngine::work_units`); 0 makes the executor free.
     pub delay_s: f64,
+    /// Wall-clock seconds per unit of artifact work, held as real
+    /// elapsed time per launch (see `MockEngine::wall_delay_s`); 0
+    /// (the default) keeps replicas wall-free. The fig23 wall-clock
+    /// overlap sweep sets this so the launch thread has real
+    /// occupancy to hide.
+    pub wall_delay_s: f64,
 }
 
 impl MockReplicaFactory {
     pub fn new(model: &str, delay_s: f64) -> Self {
-        MockReplicaFactory { model: model.to_string(), delay_s }
+        MockReplicaFactory { model: model.to_string(), delay_s, wall_delay_s: 0.0 }
+    }
+
+    /// Builder-style wall-occupancy override (fig23).
+    pub fn with_wall_delay(mut self, wall_delay_s: f64) -> Self {
+        self.wall_delay_s = wall_delay_s;
+        self
     }
 }
 
@@ -70,11 +117,117 @@ impl ExecutorFactory for MockReplicaFactory {
     fn build(&self) -> Box<dyn Executor> {
         let mut m = MockEngine::new(&self.model);
         m.delay_s = self.delay_s;
+        m.wall_delay_s = self.wall_delay_s;
         Box::new(m)
     }
 
     fn describe(&self) -> String {
         format!("mock replica ({}, {:.0}us/work-unit)", self.model, self.delay_s * 1e6)
+    }
+}
+
+/// One batch's round trip through the launch thread: the outcomes plus
+/// the wall-clock interval the executor was physically occupied
+/// (measured *on the launch thread*, so the shard can intersect it
+/// with its own prepare intervals — `PhaseTimes::wall_overlap_s`).
+pub struct LaunchedBatch {
+    pub outcomes: Result<Vec<BatchOutcome>, EngineError>,
+    /// Wall seconds (same epoch as [`crate::util::now`]) the launch
+    /// started / finished executing.
+    pub wall_start: f64,
+    pub wall_end: f64,
+}
+
+/// An executor moved onto a dedicated **launch thread**, exposed back
+/// to the shard as an [`Executor`] handle.
+///
+/// Ownership: the wrapped `Box<dyn Executor>` lives on the launch
+/// thread for the rest of the run (the move is what the trait's `Send`
+/// bound buys). Every trait call is proxied over the thread's bounded
+/// [`Lane`] and serializes FIFO — the same single-device-queue
+/// semantics the engine had when the shard owned it directly, so
+/// results are bit-identical to inline execution.
+///
+/// The asynchronous seam is [`LaunchedExecutor::submit_batch`]: it
+/// enqueues a prepared batch and returns immediately with a ticket,
+/// so the shard thread runs the *next* batch's prepare phase while
+/// this batch executes. The lane holds at most `depth + 1` queued
+/// commands (`depth` in-flight batches plus one interleaved
+/// synchronous call), so a shard that outruns its executor blocks in
+/// `submit_batch` — bounded-channel backpressure, never an unbounded
+/// queue.
+///
+/// Panic containment: a panic inside any executor call is caught on
+/// the launch thread and re-raised on the shard thread at the join
+/// point, where the dispatcher's per-shard isolation handles it
+/// exactly like an inline fault.
+pub struct LaunchedExecutor {
+    lane: Lane<Box<dyn Executor>>,
+}
+
+impl LaunchedExecutor {
+    /// Move `exec` onto a new launch thread serving a pipeline of
+    /// `depth` in-flight batches (bounded queue of `depth + 1`).
+    pub fn new(exec: Box<dyn Executor>, depth: usize) -> LaunchedExecutor {
+        LaunchedExecutor { lane: Lane::new("cf-launch", depth.max(1) + 1, exec) }
+    }
+
+    /// Enqueue a prepared batch for execution on the launch thread and
+    /// return without waiting (unless the bounded queue is full). The
+    /// ticket's `join` yields the outcomes plus the measured wall
+    /// interval; a launch-thread panic surfaces there as `Err`.
+    pub fn submit_batch(&self, reqs: Vec<BatchRequest>) -> JobHandle<LaunchedBatch> {
+        self.lane.spawn(move |exec| {
+            let wall_start = util::now();
+            let outcomes = exec.execute_batch(&reqs);
+            LaunchedBatch { outcomes, wall_start, wall_end: util::now() }
+        })
+    }
+}
+
+impl Executor for LaunchedExecutor {
+    /// Synchronous proxy: inputs cross to the launch thread, the call
+    /// runs in FIFO order behind any in-flight batch (device-queue
+    /// semantics), and the result crosses back.
+    ///
+    /// The hand-off **copies** the input tensors (`to_vec`) — the
+    /// price of moving activations to the owning thread, analogous to
+    /// a host-to-device staging copy. The hot path the lane exists
+    /// for — fused prefill batches via
+    /// [`LaunchedExecutor::submit_batch`] — *moves* its requests
+    /// without copying; only prepare/finish-time solo calls (ViT,
+    /// embeddings, decode steps) pay the copy. `launch=false` keeps
+    /// the fully inline, copy-free path available.
+    fn execute(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64), EngineError> {
+        let (model, artifact) = (model.to_string(), artifact.to_string());
+        let inputs = inputs.to_vec();
+        match self.lane.spawn(move |exec| exec.execute(&model, &artifact, &inputs)).join() {
+            Ok(result) => result,
+            Err(msg) => panic!("launch thread panicked: {msg}"),
+        }
+    }
+
+    fn spec(&self, model: &str) -> Option<ModelSpec> {
+        let model = model.to_string();
+        match self.lane.spawn(move |exec| exec.spec(&model)).join() {
+            Ok(spec) => spec,
+            Err(msg) => panic!("launch thread panicked: {msg}"),
+        }
+    }
+
+    /// Synchronous batch proxy (submit + wait). The pipelined shard
+    /// loop uses [`LaunchedExecutor::submit_batch`] instead to overlap;
+    /// this entry point keeps the handle a drop-in [`Executor`].
+    fn execute_batch(&self, reqs: &[BatchRequest]) -> Result<Vec<BatchOutcome>, EngineError> {
+        match self.submit_batch(reqs.to_vec()).join() {
+            Ok(run) => run.outcomes,
+            Err(msg) => panic!("launch thread panicked: {msg}"),
+        }
     }
 }
 
@@ -90,5 +243,94 @@ mod tests {
         // Each replica resolves the same spec independently.
         assert_eq!(a.spec("m").unwrap().llm_dim, b.spec("m").unwrap().llm_dim);
         assert!(f.describe().contains("mock"));
+        assert_eq!(f.wall_delay_s, 0.0, "wall occupancy off by default");
+        let spun = MockReplicaFactory::new("m", 0.0).with_wall_delay(1e-7);
+        assert!(spun.wall_delay_s > 0.0);
+    }
+
+    #[test]
+    fn launched_executor_matches_inline_execution() {
+        // The handle must be a bit-for-bit drop-in: same outputs, same
+        // virtual pricing, for both solo calls and batches.
+        let inline = MockReplicaFactory::new("m", 1e-4).build();
+        let launched = LaunchedExecutor::new(MockReplicaFactory::new("m", 1e-4).build(), 2);
+
+        assert_eq!(launched.spec("m").unwrap().vocab, inline.spec("m").unwrap().vocab);
+
+        let inputs = vec![Tensor::f32(&[2], vec![0.5, -1.5])];
+        let (out_a, s_a) = inline.execute("m", "vit_encode_n16", &inputs).unwrap();
+        let (out_b, s_b) = launched.execute("m", "vit_encode_n16", &inputs).unwrap();
+        assert_eq!(out_a, out_b);
+        assert_eq!(s_a, s_b);
+
+        let reqs = vec![
+            BatchRequest {
+                model: "m".to_string(),
+                artifact: "prefill_full_t96".to_string(),
+                inputs: vec![Tensor::f32(&[1], vec![1.0])],
+            },
+            BatchRequest {
+                model: "m".to_string(),
+                artifact: "prefill_full_t96".to_string(),
+                inputs: vec![Tensor::f32(&[1], vec![2.0])],
+            },
+        ];
+        let fused_inline = inline.execute_batch(&reqs).unwrap();
+        let fused_launched = launched.execute_batch(&reqs).unwrap();
+        for (a, b) in fused_inline.iter().zip(&fused_launched) {
+            assert_eq!(a.outputs, b.outputs);
+            assert_eq!(a.exec_s, b.exec_s);
+        }
+    }
+
+    #[test]
+    fn submit_batch_overlaps_and_reports_wall_interval() {
+        let launched = LaunchedExecutor::new(MockReplicaFactory::new("m", 0.0).build(), 2);
+        let reqs = vec![BatchRequest {
+            model: "m".to_string(),
+            artifact: "prefill_full_t96".to_string(),
+            inputs: vec![Tensor::f32(&[1], vec![3.0])],
+        }];
+        let before = util::now();
+        let ticket = launched.submit_batch(reqs.clone());
+        // The shard thread is free here (this is the overlap window).
+        let run = ticket.join().expect("launch thread healthy");
+        let outcomes = run.outcomes.expect("batch executed");
+        assert_eq!(outcomes.len(), 1);
+        assert!(run.wall_start >= before);
+        assert!(run.wall_end >= run.wall_start);
+        // Same outputs as the synchronous path.
+        let sync = launched.execute_batch(&reqs).unwrap();
+        assert_eq!(sync[0].outputs, outcomes[0].outputs);
+    }
+
+    #[test]
+    fn launch_thread_panic_surfaces_at_the_join() {
+        struct Faulty;
+        impl Executor for Faulty {
+            fn execute(
+                &self,
+                _model: &str,
+                _artifact: &str,
+                _inputs: &[Tensor],
+            ) -> Result<(Vec<Tensor>, f64), EngineError> {
+                panic!("device fault");
+            }
+            fn spec(&self, _model: &str) -> Option<ModelSpec> {
+                None
+            }
+        }
+        let launched = LaunchedExecutor::new(Box::new(Faulty), 1);
+        // execute_batch defaults to the looping fallback -> execute
+        // panics on the launch thread; the ticket reports it.
+        let err = launched
+            .submit_batch(vec![BatchRequest {
+                model: "m".to_string(),
+                artifact: "decode_step".to_string(),
+                inputs: Vec::new(),
+            }])
+            .join()
+            .unwrap_err();
+        assert!(err.contains("device fault"), "got: {err}");
     }
 }

@@ -7,6 +7,15 @@
 //! so windows from different shards execute concurrently. Jobs are
 //! panic-isolated — a panicking job is caught, reported through its
 //! [`JobHandle`], and never takes a worker thread down with it.
+//!
+//! [`Lane`] is the second substrate: a *dedicated* worker thread that
+//! owns a piece of state (for the serving layer, an executor replica —
+//! see [`crate::runtime::replica::LaunchedExecutor`]) and consumes
+//! jobs from a **bounded** FIFO queue. Where the pool fans independent
+//! jobs across threads, a lane serializes jobs against one owned
+//! resource and pushes back on producers when it falls behind:
+//! [`Lane::spawn`] blocks once `capacity` jobs are queued, so a fast
+//! producer stalls instead of queueing unboundedly.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
@@ -154,6 +163,88 @@ impl Drop for ThreadPool {
     }
 }
 
+type LaneJob<S> = Box<dyn FnOnce(&mut S) + Send + 'static>;
+
+/// A dedicated worker thread owning a state value `S`, fed by a
+/// **bounded** FIFO queue of jobs `FnOnce(&mut S) -> R`.
+///
+/// The state is moved onto the lane thread at construction and never
+/// leaves it — callers only reach it through submitted closures, so
+/// `S` needs `Send` but never `Sync`. This is the ownership model the
+/// wall-clock pipelined serving layer uses for executors: the shard
+/// thread prepares batches while the lane thread, which owns the
+/// executor, runs them ([`crate::runtime::replica::LaunchedExecutor`]).
+///
+/// Backpressure: [`Lane::spawn`] blocks once `capacity` jobs are
+/// queued (bounded `sync_channel`), so a producer that outruns the
+/// lane stalls instead of queueing unboundedly. Panics inside a job
+/// are caught and surfaced through the job's [`JobHandle`] — the lane
+/// thread survives and keeps draining (the state is reused as-is, the
+/// same `AssertUnwindSafe` contract the pool uses).
+pub struct Lane<S> {
+    tx: Option<mpsc::SyncSender<LaneJob<S>>>,
+    handle: Option<thread::JoinHandle<()>>,
+    capacity: usize,
+}
+
+impl<S: Send + 'static> Lane<S> {
+    /// Spawn the lane thread, moving `state` onto it. `capacity` is
+    /// the bounded queue depth (must be >= 1): the number of jobs that
+    /// may wait unserviced before `spawn` blocks the producer.
+    pub fn new(name: &str, capacity: usize, state: S) -> Lane<S> {
+        assert!(capacity > 0, "lane queue must hold at least one job");
+        let (tx, rx) = mpsc::sync_channel::<LaneJob<S>>(capacity);
+        let handle = thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                let mut state = state;
+                while let Ok(job) = rx.recv() {
+                    job(&mut state);
+                }
+            })
+            .expect("spawn lane thread");
+        Lane { tx: Some(tx), handle: Some(handle), capacity }
+    }
+
+    /// Bounded queue depth this lane was built with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Submit a job against the lane's state; **blocks** while the
+    /// queue holds `capacity` unserviced jobs (backpressure). The
+    /// returned handle fans the result back in; a panic inside the job
+    /// surfaces as `Err(message)` there.
+    pub fn spawn<F, R>(&self, f: F) -> JobHandle<R>
+    where
+        F: FnOnce(&mut S) -> R + Send + 'static,
+        R: Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        let job: LaneJob<S> = Box::new(move |state| {
+            let result = catch_unwind(AssertUnwindSafe(|| f(state))).map_err(panic_message);
+            let _ = tx.send(result);
+        });
+        self.tx
+            .as_ref()
+            .expect("lane alive")
+            .send(job)
+            .expect("lane thread alive");
+        JobHandle { rx }
+    }
+}
+
+impl<S> Drop for Lane<S> {
+    fn drop(&mut self) {
+        // Closing the channel ends the drain loop after queued jobs
+        // finish; join so the owned state is dropped before we return.
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +325,107 @@ mod tests {
         let handles: Vec<_> = (0..20usize).map(|i| pool.spawn(move || i)).collect();
         let out = join_all(handles);
         for (i, r) in out.into_iter().enumerate() {
+            assert_eq!(r, Ok(i));
+        }
+    }
+
+    #[test]
+    fn lane_owns_state_and_runs_jobs_fifo() {
+        let lane = Lane::new("t-lane", 4, Vec::<usize>::new());
+        let handles: Vec<_> = (0..10usize)
+            .map(|i| {
+                lane.spawn(move |log: &mut Vec<usize>| {
+                    log.push(i);
+                    i * 2
+                })
+            })
+            .collect();
+        for (i, r) in join_all(handles).into_iter().enumerate() {
+            assert_eq!(r, Ok(i * 2));
+        }
+        // State persists across jobs, in submission order.
+        let log = lane.spawn(|log: &mut Vec<usize>| log.clone()).join().unwrap();
+        assert_eq!(log, (0..10).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn lane_panic_reported_and_state_survives() {
+        let lane = Lane::new("t-lane", 2, 0usize);
+        lane.spawn(|n| *n += 1).join().unwrap();
+        let err = lane
+            .spawn(|_: &mut usize| -> usize { panic!("lane job fault") })
+            .join()
+            .unwrap_err();
+        assert!(err.contains("lane job fault"), "got: {err}");
+        // The lane thread and its state are still alive.
+        assert_eq!(lane.spawn(|n| *n + 41).join(), Ok(42));
+    }
+
+    #[test]
+    fn lane_bounded_queue_blocks_producer() {
+        // The backpressure contract: with a full queue, spawn stalls
+        // the producer until the lane drains — work never queues
+        // unboundedly. A gate holds the lane busy on its first job;
+        // a producer thread then submits capacity + 2 more jobs and
+        // must be unable to get past the bound until the gate opens.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Condvar;
+        use std::time::Duration;
+
+        let capacity = 2;
+        let lane = Arc::new(Lane::new("t-lane", capacity, ()));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let submitted = Arc::new(AtomicUsize::new(0));
+
+        let g = Arc::clone(&gate);
+        let blocker = lane.spawn(move |_| {
+            let (lock, cv) = &*g;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+
+        let producer = {
+            let lane = Arc::clone(&lane);
+            let submitted = Arc::clone(&submitted);
+            thread::spawn(move || {
+                let handles: Vec<_> = (0..capacity + 2)
+                    .map(|i| {
+                        let h = lane.spawn(move |_| i);
+                        submitted.fetch_add(1, Ordering::SeqCst);
+                        h
+                    })
+                    .collect();
+                join_all(handles)
+            })
+        };
+
+        // Give the producer ample time: it must stall at the queue
+        // bound (capacity slots; the gated job occupies the worker).
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while submitted.load(Ordering::SeqCst) < capacity
+            && std::time::Instant::now() < deadline
+        {
+            thread::sleep(Duration::from_millis(5));
+        }
+        thread::sleep(Duration::from_millis(50));
+        let stalled_at = submitted.load(Ordering::SeqCst);
+        assert!(
+            stalled_at <= capacity + 1,
+            "producer ran {stalled_at} submissions past a {capacity}-deep queue"
+        );
+
+        // Open the gate: the lane drains and the producer completes.
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        blocker.join().unwrap();
+        let results = producer.join().unwrap();
+        assert_eq!(submitted.load(Ordering::SeqCst), capacity + 2);
+        for (i, r) in results.into_iter().enumerate() {
             assert_eq!(r, Ok(i));
         }
     }

@@ -1,0 +1,121 @@
+//! Documentation gates: the operator's guide cannot drift from the
+//! serving-config parser, and the markdown guides cannot grow dead
+//! relative links. Runs in `cargo test` and as a dedicated CI step.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use codecflow::config::ServingConfig;
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR = <repo>/rust
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .to_path_buf()
+}
+
+fn read(path: &Path) -> String {
+    fs::read_to_string(path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// The acceptance gate for the operator's guide: every key the parser
+/// accepts must appear in docs/OPERATIONS.md as a documented knob
+/// (`` `key=` `` — the form the knob tables use). Paired with the
+/// config unit test asserting every listed key parses, this pins the
+/// doc and the code to each other in both directions.
+#[test]
+fn operations_guide_lists_every_serving_knob() {
+    let doc = read(&repo_root().join("docs/OPERATIONS.md"));
+    let mut missing = Vec::new();
+    for key in ServingConfig::knob_keys() {
+        // A knob is "documented" when the guide shows it in CLI form.
+        if !doc.contains(&format!("`{key}=")) {
+            missing.push(*key);
+        }
+    }
+    assert!(
+        missing.is_empty(),
+        "docs/OPERATIONS.md is missing knob(s) accepted by ServingConfig::set: {missing:?}"
+    );
+}
+
+/// Extract `](target)` markdown link targets from one document.
+fn relative_link_targets(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while let Some(pos) = text[i..].find("](") {
+        let start = i + pos + 2;
+        let Some(len) = text[start..].find(')') else {
+            // Unclosed `](` (malformed link or stray token): skip past
+            // it and keep scanning — one bad link must not hide every
+            // later link in the file from the checker.
+            i = start;
+            continue;
+        };
+        let target = &text[start..start + len];
+        i = start + len;
+        let t = target.trim();
+        let skip = t.is_empty()
+            || t.starts_with("http://")
+            || t.starts_with("https://")
+            || t.starts_with("mailto:")
+            || t.starts_with('#');
+        if !skip {
+            // Drop any #anchor suffix; the file is what must exist.
+            let file = t.split('#').next().unwrap_or(t);
+            if !file.is_empty() {
+                out.push(file.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// Link check over the guides: every relative link in docs/*.md and
+/// rust/README.md must resolve to an existing file, so the new
+/// operator/architecture guides cannot rot as files move.
+#[test]
+fn markdown_relative_links_resolve() {
+    let root = repo_root();
+    let mut files: Vec<PathBuf> = vec![root.join("rust/README.md")];
+    for entry in fs::read_dir(root.join("docs")).expect("docs/ exists") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) == Some("md") {
+            files.push(path);
+        }
+    }
+    assert!(files.len() >= 3, "expected README + at least two guides, got {files:?}");
+
+    let mut dead: Vec<String> = Vec::new();
+    for file in &files {
+        let text = read(file);
+        let dir = file.parent().expect("md file has a parent");
+        for target in relative_link_targets(&text) {
+            let resolved = dir.join(&target);
+            if !resolved.exists() {
+                dead.push(format!("{} -> {target}", file.display()));
+            }
+        }
+    }
+    assert!(dead.is_empty(), "dead relative markdown link(s):\n{}", dead.join("\n"));
+}
+
+#[test]
+fn link_extraction_understands_the_syntax() {
+    let md = "See [a](docs/A.md), [b](https://x.y/z), [c](#local), \
+              [d](../up.md#sect) and [e](mailto:x@y).";
+    let targets = relative_link_targets(md);
+    assert_eq!(targets, vec!["docs/A.md".to_string(), "../up.md".to_string()]);
+
+    // An unclosed `](` must not hide the links after it. (The tail
+    // after the malformed token still contains a ')', so the broken
+    // "link" swallows up to that paren — what matters is that scanning
+    // continues and later links are still extracted.)
+    let broken = "bad [x](no-close then [ok](docs/B.md) and [ok2](docs/C.md)";
+    let targets = relative_link_targets(broken);
+    assert!(
+        targets.contains(&"docs/C.md".to_string()),
+        "links after a malformed one must still be scanned: {targets:?}"
+    );
+}

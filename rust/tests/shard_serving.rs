@@ -248,6 +248,144 @@ fn pipelined_dispatch_is_bit_identical_to_serial_across_shards() {
 }
 
 #[test]
+fn wall_clock_launch_is_bit_identical_to_serial_at_every_depth() {
+    // The wall-clock tentpole's contract, end to end: moving each
+    // shard's executor onto a dedicated launch thread (`launch=1`)
+    // re-times service physically but must never change what is
+    // computed. For the same corpus on the same shard layout, the
+    // inline serial loop (depth 0), the virtual-only pipelined loop
+    // (`launch=0`) and the launch-threaded loop must produce
+    // bit-identical logits and KV contents (equal result digests),
+    // identical FLOPs/tokens, and the same served window sets at
+    // depths 1, 2 and 4.
+    let clips = clips(8);
+    let run = |depth: usize, launch: bool| {
+        let mut cfg = sharded_cfg(2);
+        cfg.max_batch = 4;
+        cfg.admit_wave = 8;
+        cfg.batch_bucket = 10_000;
+        cfg.pipeline_depth = depth;
+        cfg.launch = launch;
+        Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+    };
+    let serial = run(0, false);
+    assert!(serial.result_digest != 0);
+    assert_eq!(serial.phases.wall_overlap_s, 0.0, "one thread cannot overlap itself");
+    let sorted = |r: &codecflow::coordinator::dispatch::ShardedReport| {
+        let mut a = r.answers.clone();
+        a.sort();
+        a
+    };
+    for depth in [1usize, 2, 4] {
+        let inline = run(depth, false);
+        let launched = run(depth, true);
+        for (r, label) in [(&inline, "inline"), (&launched, "launched")] {
+            assert_eq!(r.result_digest, serial.result_digest, "depth {depth} {label}");
+            assert_eq!(r.merged.windows(), serial.merged.windows(), "depth {depth} {label}");
+            assert_eq!(r.merged.flops, serial.merged.flops);
+            assert_eq!(r.merged.flops_padded, serial.merged.flops_padded);
+            assert_eq!(r.merged.seq_tokens, serial.merged.seq_tokens);
+            assert_eq!(r.merged.per_stream, serial.merged.per_stream);
+            assert_eq!(sorted(r), sorted(&serial));
+        }
+        // The launched run measured real phase intervals and reports
+        // a per-shard wall overlap efficiency in [0, 1].
+        assert!(launched.phases.wall_prepare_s > 0.0, "depth {depth}: prepare was timed");
+        for shard in &launched.shards {
+            let eff = shard.wall_overlap_efficiency();
+            assert!((0.0..=1.0).contains(&eff), "shard {} eff {eff}", shard.shard);
+        }
+        assert!(launched.report("launched").contains("wall_overlap_eff"));
+    }
+}
+
+#[test]
+fn launch_thread_panic_is_contained_to_its_shard_with_kv_settled() {
+    // An executor whose fused launch panics *on the launch thread*
+    // (`launch=1`, pipeline>=1) must take down only its own shard: the
+    // fault crosses back over the bounded channel, re-raises on the
+    // shard thread at retire, and the dispatcher isolates it. The
+    // healthy shard — running the same launch-threaded loop under KV
+    // pressure — keeps settling its KV pool in FIFO batch order and
+    // serves every remaining stream to completion.
+    use codecflow::runtime::batch::{BatchOutcome, BatchRequest};
+    use codecflow::runtime::engine::EngineError;
+    use codecflow::runtime::manifest::ModelSpec;
+    use codecflow::runtime::mock::{Executor, MockEngine};
+    use codecflow::runtime::tensor::Tensor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct PanicsOnBatch {
+        inner: MockEngine,
+    }
+    impl Executor for PanicsOnBatch {
+        fn execute(
+            &self,
+            model: &str,
+            artifact: &str,
+            inputs: &[Tensor],
+        ) -> Result<(Vec<Tensor>, f64), EngineError> {
+            self.inner.execute(model, artifact, inputs)
+        }
+        fn spec(&self, model: &str) -> Option<ModelSpec> {
+            self.inner.spec(model)
+        }
+        fn execute_batch(
+            &self,
+            _reqs: &[BatchRequest],
+        ) -> Result<Vec<BatchOutcome>, EngineError> {
+            panic!("fused kernel fault on the launch thread");
+        }
+    }
+    struct FaultyLaunchFactory {
+        calls: AtomicUsize,
+    }
+    impl ExecutorFactory for FaultyLaunchFactory {
+        fn build(&self) -> Box<dyn Executor> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                Box::new(PanicsOnBatch { inner: MockEngine::new("m") })
+            } else {
+                Box::new(MockEngine::new("m"))
+            }
+        }
+    }
+
+    let mut cfg = sharded_cfg(2);
+    cfg.workers = 1; // deterministic: shard 0 builds first and faults
+    cfg.max_batch = 4;
+    cfg.pipeline_depth = 2;
+    cfg.launch = true;
+    // Starve the KV budget so the healthy shard must settle (and
+    // evict from) its pool throughout — proving settlement survives a
+    // sibling's launch-thread death.
+    cfg.kv_budget_bytes = 2 << 20;
+    // One stream admitted per wave: the faulty shard takes exactly one
+    // stream down with it, everything else survives.
+    cfg.admit_wave = 1;
+    cfg.steal = true;
+    let report = Dispatcher::new("m", cfg).run(
+        Arc::new(FaultyLaunchFactory { calls: AtomicUsize::new(0) }),
+        &clips(4),
+        Variant::CodecFlow,
+        2.0,
+    );
+    assert_eq!(report.shards.len(), 1, "only the healthy shard reports");
+    assert_eq!(
+        report.merged.per_stream.len(),
+        3,
+        "the healthy shard serves every stream the dead one hadn't claimed"
+    );
+    assert_eq!(report.merged.windows(), 9);
+    for count in report.merged.per_stream.values() {
+        assert_eq!(*count, 3, "surviving streams fully served");
+    }
+    assert!(
+        report.merged.kv_evictions > 0,
+        "healthy shard kept settling its starved KV pool"
+    );
+}
+
+#[test]
 fn panic_inside_overlapped_prepare_is_contained_to_its_shard() {
     // An executor that faults during the *prepare* phase (the ViT
     // encode runs inside prepare, overlapped behind the previous
