@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig24_hetero` — regenerates Fig 24
+//! (heterogeneous executor backends with codec-guided batch routing:
+//! sustainable streams vs routing policy x stream count on a per-shard
+//! fast + quant backend pool).
+fn main() {
+    codecflow::exp::fig24_hetero::run();
+}

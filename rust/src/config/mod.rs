@@ -163,6 +163,35 @@ pub struct ServingConfig {
     /// modelled in virtual time only). Results are bit-identical
     /// either way.
     pub launch: bool,
+    /// Whether `launch` was explicitly set (CLI `launch=` or env
+    /// `CF_LAUNCH`) rather than left at its default. The dispatcher
+    /// warns about the `launch=1` + `pipeline=0` no-op only for an
+    /// *explicit* request — default configs must not be scolded for a
+    /// knob the operator never touched.
+    pub launch_explicit: bool,
+    /// Backend pool per shard (`backend=`, env `CF_BACKEND`): `fast`
+    /// (the homogeneous full-precision default), `quant` (the
+    /// quantized-CPU flavour only), or `hetero` (both, each on its own
+    /// launch thread, with fused prefill batches routed per batch by
+    /// `route=`).
+    pub backend: String,
+    /// Routing policy for heterogeneous pools (`route=`, env
+    /// `CF_ROUTE`): `fixed` (everything on the fast primary),
+    /// `static-split` (every 2nd batch offloads, signal-blind), or
+    /// `codec` (the default: sparse patch-budget buckets and
+    /// slack-deadline batches offload to the cheap backend). With a
+    /// single backend every policy degenerates to it.
+    pub route: String,
+    /// Relative cost of the quant backend (`quant_ratio=`): virtual
+    /// (and, on mock replicas, wall) seconds per unit of work as a
+    /// fraction of the fast backend's. Clamped to [0, 1] at use.
+    pub quant_ratio: f64,
+    /// Batch-aware EDF slack in seconds (`batch_slack=`): when
+    /// choosing a batch seed, the shard may slip past the earliest
+    /// deadline by up to this much if a denser same-bucket batch forms
+    /// there. `0` (the default) is bit-identical to strict EDF
+    /// seeding.
+    pub batch_slack: f64,
 }
 
 impl Default for ServingConfig {
@@ -181,6 +210,11 @@ impl Default for ServingConfig {
             batch_bucket: 48,
             pipeline_depth: 0,
             launch: true,
+            launch_explicit: false,
+            backend: "fast".to_string(),
+            route: "codec".to_string(),
+            quant_ratio: 0.4,
+            batch_slack: 0.0,
         }
     }
 }
@@ -209,7 +243,15 @@ impl ServingConfig {
             "batch" | "max_batch" => parse_into(value, &mut self.max_batch),
             "batch_bucket" => parse_into(value, &mut self.batch_bucket),
             "pipeline" | "pipeline_depth" => parse_into(value, &mut self.pipeline_depth),
-            "launch" => parse_flag(value, &mut self.launch),
+            "launch" => {
+                let ok = parse_flag(value, &mut self.launch);
+                self.launch_explicit |= ok;
+                ok
+            }
+            "backend" => parse_choice(value, &mut self.backend, &["fast", "quant", "hetero"]),
+            "route" => parse_choice(value, &mut self.route, &["fixed", "static-split", "codec"]),
+            "quant_ratio" => parse_into(value, &mut self.quant_ratio),
+            "batch_slack" => parse_into(value, &mut self.batch_slack),
             _ => self.pipeline.set(key, value),
         };
         // The docs contract, both directions: knob_keys ⊆ set is unit-
@@ -246,6 +288,10 @@ impl ServingConfig {
             "pipeline",
             "pipeline_depth",
             "launch",
+            "backend",
+            "route",
+            "quant_ratio",
+            "batch_slack",
             "window_frames",
             "stride_frac",
             "gop",
@@ -271,6 +317,20 @@ fn parse_into<T: std::str::FromStr>(value: &str, slot: &mut T) -> bool {
             true
         }
         Err(_) => false,
+    }
+}
+
+/// Enumerated knob syntax (`backend=`, `route=`): the value must be
+/// one of `allowed` (case-insensitive, stored lowercased); anything
+/// else is rejected and the slot untouched — a typo'd policy name
+/// must not silently select a default.
+fn parse_choice(value: &str, slot: &mut String, allowed: &[&str]) -> bool {
+    let v = value.trim().to_ascii_lowercase();
+    if allowed.contains(&v.as_str()) {
+        *slot = v;
+        true
+    } else {
+        false
     }
 }
 
@@ -373,8 +433,10 @@ mod tests {
         assert!(c.set("pipeline_depth", "1"), "long form accepted too");
         assert_eq!(c.pipeline_depth, 1);
         assert!(c.launch, "launch threads on by default");
+        assert!(!c.launch_explicit, "defaulted launch is not an explicit request");
         assert!(c.set("launch", "false"));
         assert!(!c.launch);
+        assert!(c.launch_explicit, "setting launch= marks it explicit");
         assert!(c.set("launch", "true"));
         assert!(c.launch);
         // Boolean knobs take the full flag syntax, same as the env
@@ -393,6 +455,27 @@ mod tests {
         assert_eq!(c.pipeline.gop, 8);
         assert!(!c.set("nope", "1"));
 
+        // Heterogeneous-backend knobs.
+        assert_eq!(c.backend, "fast", "homogeneous by default");
+        assert_eq!(c.route, "codec");
+        assert!((c.quant_ratio - 0.4).abs() < 1e-12);
+        assert_eq!(c.batch_slack, 0.0, "strict EDF seeding by default");
+        assert!(c.set("backend", "hetero"));
+        assert_eq!(c.backend, "hetero");
+        assert!(c.set("backend", "QUANT"), "choices are case-insensitive");
+        assert_eq!(c.backend, "quant");
+        assert!(!c.set("backend", "gpu"), "unknown pool rejected");
+        assert_eq!(c.backend, "quant", "rejected value leaves the knob untouched");
+        assert!(c.set("route", "static-split"));
+        assert_eq!(c.route, "static-split");
+        assert!(c.set("route", "fixed"));
+        assert!(!c.set("route", "random"), "unknown policy rejected");
+        assert_eq!(c.route, "fixed");
+        assert!(c.set("quant_ratio", "0.25"));
+        assert!((c.quant_ratio - 0.25).abs() < 1e-12);
+        assert!(c.set("batch_slack", "1.5"));
+        assert!((c.batch_slack - 1.5).abs() < 1e-12);
+
         c.kv_budget_bytes = 100;
         c.num_shards = 4;
         assert_eq!(c.shard_kv_budget(), 25);
@@ -410,6 +493,9 @@ mod tests {
                 "steal" | "launch" => "true",
                 "stride_frac" => "0.5",
                 "mv_threshold" | "alpha" => "0.25",
+                "backend" => "hetero",
+                "route" => "codec",
+                "quant_ratio" => "0.5",
                 _ => "2",
             };
             assert!(c.set(key, value), "knob_keys lists `{key}` but set() rejects it");

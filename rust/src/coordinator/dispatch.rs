@@ -21,18 +21,23 @@
 //! narrated in `docs/ARCHITECTURE.md`; every knob is documented in
 //! `docs/OPERATIONS.md`.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Once};
 
 use crate::baselines::Variant;
 use crate::codec::types::Frame;
 use crate::config::ServingConfig;
 use crate::runtime::batch::BatchStats;
-use crate::runtime::replica::ExecutorFactory;
+use crate::runtime::replica::{backend_kinds, Backend, ExecutorFactory};
 use crate::util;
 use crate::util::threadpool::ThreadPool;
 
-use super::metrics::{Metrics, PhaseTimes};
+use super::metrics::{merge_backend_stats, BackendStats, Metrics, PhaseTimes};
 use super::shard::{assign_shard, Shard, ShardReport, StealPool, StreamWork};
+
+/// One warning per process for the launch=1/pipeline=0 no-op (see
+/// [`Dispatcher::run`]).
+static LAUNCH_NOOP_WARNING: Once = Once::new();
 
 /// Merged result of a sharded serving run.
 #[derive(Debug)]
@@ -64,6 +69,15 @@ pub struct ShardedReport {
     /// streams, same shards, any `pipeline=` depth) produce equal
     /// digests.
     pub result_digest: u64,
+    /// Per-stream digest slices (each stream is served by exactly one
+    /// shard, so the per-shard maps are disjoint and merge losslessly).
+    pub stream_digests: HashMap<u64, u64>,
+    /// Streams with at least one quant-served window, sorted.
+    pub quant_streams: Vec<u64>,
+    /// Per-backend stats merged by name across shards (batches, jobs,
+    /// virtual exec seconds, measured wall occupancy, accuracy-proxy
+    /// penalty).
+    pub backends: Vec<BackendStats>,
 }
 
 impl ShardedReport {
@@ -100,6 +114,32 @@ impl ShardedReport {
             self.phases.wall_overlap_s,
             self.phases.wall_overlap_efficiency() * 100.0
         ));
+        if !self.backends.is_empty() {
+            let span: f64 = self.shards.iter().map(|r| r.span_s).sum();
+            let mut line = String::from("backends:");
+            for b in &self.backends {
+                line.push_str(&format!(
+                    " {}[batches={} jobs={} exec={:.3}s wall={:.3}s util={:.0}% \
+                     penalty={:.2}]",
+                    b.name,
+                    b.batches,
+                    b.jobs,
+                    b.exec_s,
+                    b.wall_s,
+                    b.utilization(span) * 100.0,
+                    b.accuracy_penalty
+                ));
+            }
+            line.push('\n');
+            out.push_str(&line);
+            if !self.quant_streams.is_empty() {
+                out.push_str(&format!(
+                    "quant-served streams: {} of {}\n",
+                    self.quant_streams.len(),
+                    self.streams
+                ));
+            }
+        }
         for r in &self.shards {
             out.push_str(&format!(
                 "  shard {}: windows={} streams={} stolen={} busy={:.3}s span={:.3}s \
@@ -149,6 +189,21 @@ impl Dispatcher {
     ) -> ShardedReport {
         let num_shards = self.cfg.num_shards.max(1);
         let stride_s = self.cfg.pipeline.stride_frames() as f64 / fps;
+        if self.cfg.launch && self.cfg.launch_explicit && self.cfg.pipeline_depth == 0 {
+            // An *explicit* `launch=1` asks for per-shard launch
+            // threads, but with `pipeline=0` there is never a prepared
+            // batch to overlap: the executor stays inline. Say so once
+            // instead of silently degenerating (see the
+            // docs/OPERATIONS.md interaction matrix). Default configs
+            // (launch merely defaulted on) are not scolded.
+            LAUNCH_NOOP_WARNING.call_once(|| {
+                eprintln!(
+                    "warning: launch=1 has no effect at pipeline=0 (no prepared batch to \
+                     overlap; the executor stays inline) — set pipeline>=1 to enable \
+                     launch threads"
+                );
+            });
+        }
 
         let streams: Vec<StreamWork> = clips
             .iter()
@@ -167,14 +222,17 @@ impl Dispatcher {
 
         let cfg = self.cfg.clone();
         let model = self.model.clone();
+        let kinds = backend_kinds(&cfg.backend);
         let results = tp.try_map((0..num_shards).collect::<Vec<usize>>(), move |sid| {
-            // Each shard builds its own executor replica on this
-            // worker thread; under `launch=1` + `pipeline>=1` the
-            // replica is then *moved* onto the shard's dedicated
-            // launch thread (`Shard::run_launched`) so fused prefills
-            // physically overlap the next batch's prepare. Either way
-            // the engine is owned by exactly one thread at a time.
-            let exec = factory.build();
+            // Each shard builds its own backend pool on this worker
+            // thread (`backend=`: the homogeneous default is one fast
+            // replica); under `launch=1` + `pipeline>=1` — or whenever
+            // the pool is heterogeneous — each backend is then *moved*
+            // onto its own dedicated launch thread
+            // (`Shard::run_backends`) so fused prefills physically
+            // overlap the next batch's prepare (and each other, across
+            // backends). Either way every engine is owned by exactly
+            // one thread at a time.
             let shard = Shard {
                 id: sid,
                 cfg: cfg.clone(),
@@ -182,9 +240,14 @@ impl Dispatcher {
                 variant,
                 fps,
             };
-            if cfg.launch && cfg.pipeline_depth > 0 {
-                shard.run_launched(exec, &pool)
+            if kinds.len() > 1 || (cfg.launch && cfg.pipeline_depth > 0) {
+                let backends: Vec<Backend> = kinds
+                    .iter()
+                    .map(|&k| Backend::new(k, factory.build_backend(k, cfg.quant_ratio)))
+                    .collect();
+                shard.run_backends(backends, &pool)
             } else {
+                let exec = factory.build_backend(kinds[0], cfg.quant_ratio);
                 shard.run(exec.as_ref(), &pool)
             }
         });
@@ -205,6 +268,9 @@ impl Dispatcher {
         let mut batching = BatchStats::default();
         let mut phases = PhaseTimes::default();
         let mut result_digest = 0u64;
+        let mut stream_digests: HashMap<u64, u64> = HashMap::new();
+        let mut quant_streams: Vec<u64> = Vec::new();
+        let mut backends: Vec<BackendStats> = Vec::new();
         for r in &shards {
             merged.merge(&r.metrics);
             sustainable += r.metrics.sustainable_streams(stride_s);
@@ -213,7 +279,14 @@ impl Dispatcher {
             batching.merge(&r.batching);
             phases.merge(&r.phases);
             result_digest ^= r.result_digest;
+            for (stream, digest) in &r.stream_digests {
+                stream_digests.insert(*stream, *digest);
+            }
+            quant_streams.extend_from_slice(&r.quant_streams);
+            merge_backend_stats(&mut backends, &r.backends);
         }
+        quant_streams.sort_unstable();
+        quant_streams.dedup();
 
         ShardedReport {
             shards,
@@ -227,6 +300,9 @@ impl Dispatcher {
             batching,
             phases,
             result_digest,
+            stream_digests,
+            quant_streams,
+            backends,
         }
     }
 }
@@ -304,6 +380,32 @@ mod tests {
             r1.sustainable_streams
         );
         assert!(r4.report("scaling").contains("aggregate sustainable"));
+    }
+
+    #[test]
+    fn hetero_dispatch_reports_per_backend_stats_and_quant_scope() {
+        let mut cfg = cfg(2);
+        cfg.max_batch = 4;
+        cfg.admit_wave = 8;
+        cfg.pipeline_depth = 2;
+        assert!(cfg.set("backend", "hetero"));
+        assert!(cfg.set("route", "codec"));
+        let report = Dispatcher::new("m", cfg).run(factory(), &clips(8), Variant::CodecFlow, 2.0);
+        assert_eq!(report.merged.windows(), 24);
+        assert_eq!(report.backends.len(), 2, "both pool members report");
+        assert_eq!(report.backends[0].name, "fast");
+        assert_eq!(report.backends[1].name, "quant");
+        assert_eq!(report.backends[0].jobs + report.backends[1].jobs, 24);
+        assert!(report.backends[1].batches > 0, "codec routing used the quant backend");
+        assert!(report.backends[1].accuracy_penalty > 0.0);
+        assert!(!report.quant_streams.is_empty());
+        assert_eq!(report.stream_digests.len(), 8, "one digest slice per stream");
+        let folded = report.stream_digests.values().fold(0u64, |a, &d| a ^ d);
+        assert_eq!(folded, report.result_digest, "slices XOR back to the digest");
+        let text = report.report("hetero");
+        assert!(text.contains("backends:"));
+        assert!(text.contains("quant["));
+        assert!(text.contains("quant-served streams"));
     }
 
     #[test]

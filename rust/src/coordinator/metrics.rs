@@ -84,6 +84,72 @@ impl PhaseTimes {
     }
 }
 
+/// Per-backend serving statistics of a heterogeneous pool
+/// ([`crate::runtime::replica::BackendSet`]): how many routed batches
+/// and jobs each backend executed, its virtual executor seconds, its
+/// measured wall occupancy, and the summed accuracy-proxy penalty its
+/// outcomes surfaced (non-zero only on lossy backends — see
+/// [`BatchOutcome::quant_penalty`](crate::runtime::batch::BatchOutcome)).
+/// One entry per backend per shard, merged by name across shards into
+/// the `ShardedReport`.
+#[derive(Clone, Debug, Default)]
+pub struct BackendStats {
+    /// Backend name (`fast` or `quant` — the inline single-executor
+    /// paths report one entry named after their configured kind).
+    pub name: String,
+    /// Whether this backend is the lossy quantized flavour.
+    pub quant: bool,
+    /// Routed batch launches executed.
+    pub batches: usize,
+    /// Jobs (windows) across those launches.
+    pub jobs: usize,
+    /// Virtual executor seconds charged by this backend.
+    pub exec_s: f64,
+    /// Measured wall seconds this backend's launches occupied.
+    pub wall_s: f64,
+    /// Summed accuracy-proxy penalty surfaced by this backend's
+    /// **batch** outcomes (solo executor calls have no penalty
+    /// channel — their quantization shows in the digests but is not
+    /// summed here).
+    pub accuracy_penalty: f64,
+}
+
+impl BackendStats {
+    pub fn named(name: &str, quant: bool) -> BackendStats {
+        BackendStats { name: name.to_string(), quant, ..Default::default() }
+    }
+
+    /// Fraction of a span this backend's virtual executor time filled.
+    pub fn utilization(&self, span_s: f64) -> f64 {
+        if span_s > 0.0 {
+            (self.exec_s / span_s).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Fold another shard's stats for the same backend into this one.
+    pub fn merge(&mut self, other: &BackendStats) {
+        self.batches += other.batches;
+        self.jobs += other.jobs;
+        self.exec_s += other.exec_s;
+        self.wall_s += other.wall_s;
+        self.accuracy_penalty += other.accuracy_penalty;
+    }
+}
+
+/// Merge per-shard backend stats into a by-name aggregate (shards run
+/// identical pools, so names line up; a backend unseen so far is
+/// appended).
+pub fn merge_backend_stats(into: &mut Vec<BackendStats>, other: &[BackendStats]) {
+    for o in other {
+        match into.iter_mut().find(|b| b.name == o.name) {
+            Some(b) => b.merge(o),
+            None => into.push(o.clone()),
+        }
+    }
+}
+
 /// Total intersection seconds between two sets of `(start, end)` wall
 /// intervals. Each set comes from one thread's sequential phases, so
 /// within a set intervals are non-overlapping; the inputs need not be
@@ -353,6 +419,37 @@ mod tests {
         // Unsorted input tolerated; empty sets are zero.
         assert!((overlap_seconds(&[(2.0, 4.0), (0.0, 1.0)], &[(0.5, 3.0)]) - 1.5).abs() < 1e-12);
         assert_eq!(overlap_seconds(&[], &[(0.0, 1.0)]), 0.0);
+    }
+
+    #[test]
+    fn backend_stats_merge_by_name_and_compute_utilization() {
+        let mut fast = BackendStats::named("fast", false);
+        fast.batches = 4;
+        fast.jobs = 10;
+        fast.exec_s = 2.0;
+        fast.wall_s = 1.0;
+        let mut quant = BackendStats::named("quant", true);
+        quant.batches = 2;
+        quant.jobs = 5;
+        quant.exec_s = 0.5;
+        quant.accuracy_penalty = 1.25;
+        assert!((fast.utilization(4.0) - 0.5).abs() < 1e-12);
+        assert_eq!(BackendStats::named("x", false).utilization(0.0), 0.0);
+        assert!(fast.utilization(0.5) <= 1.0, "clamped");
+
+        // Two shards' stats fold by name; an unseen backend appends.
+        let mut merged: Vec<BackendStats> = Vec::new();
+        merge_backend_stats(&mut merged, &[fast.clone(), quant.clone()]);
+        merge_backend_stats(&mut merged, &[fast.clone()]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].name, "fast");
+        assert_eq!(merged[0].batches, 8);
+        assert_eq!(merged[0].jobs, 20);
+        assert!((merged[0].exec_s - 4.0).abs() < 1e-12);
+        assert_eq!(merged[1].name, "quant");
+        assert!(merged[1].quant);
+        assert_eq!(merged[1].batches, 2);
+        assert!((merged[1].accuracy_penalty - 1.25).abs() < 1e-12);
     }
 
     #[test]

@@ -21,11 +21,20 @@
 //! `frontend_workers` pool, pruning, ViT, request assembly) overlaps
 //! the previous batch's launch — physically, under `launch=1`, on a
 //! per-shard launch thread owning the executor
-//! ([`crate::runtime::replica::LaunchedExecutor`]). Bit-identical
-//! results, per-phase times, and both the virtual and the measured
-//! wall-clock overlap efficiency land in the reports
-//! ([`metrics::PhaseTimes`]). See `docs/ARCHITECTURE.md` for the full
-//! request path and `docs/OPERATIONS.md` for every knob.
+//! ([`crate::runtime::replica::LaunchedExecutor`]). With
+//! `backend=hetero` each shard runs a **heterogeneous backend pool**
+//! ([`crate::runtime::replica::BackendSet`]): a full-precision `fast`
+//! primary plus a quantized-CPU `quant` flavour, each on its own
+//! launch thread, with every formed batch routed at launch by the
+//! `route=` policy ([`crate::runtime::batch::RoutePolicy`] — the
+//! `codec` policy steers sparse/slack batches to the cheap backend by
+//! the admission-time patch-budget bucket and deadline slack).
+//! Bit-identical results on exact backends, per-phase times,
+//! per-backend utilization/batch/wall stats, and both the virtual and
+//! the measured wall-clock overlap efficiency land in the reports
+//! ([`metrics::PhaseTimes`], [`metrics::BackendStats`]). See
+//! `docs/ARCHITECTURE.md` for the full request path and
+//! `docs/OPERATIONS.md` for every knob.
 
 pub mod dispatch;
 pub mod metrics;
@@ -35,7 +44,7 @@ pub mod session;
 pub mod shard;
 
 pub use dispatch::{Dispatcher, ShardedReport};
-pub use metrics::{Metrics, PhaseTimes};
+pub use metrics::{BackendStats, Metrics, PhaseTimes};
 pub use queue::{AdmissionQueue, WindowJob};
 pub use serve::{ServeReport, Server};
 pub use session::StreamSession;

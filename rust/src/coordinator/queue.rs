@@ -157,6 +157,31 @@ impl AdmissionQueue {
         eligible: impl Fn(&WindowJob) -> bool,
         compat: impl Fn(&WindowJob, &WindowJob) -> bool,
     ) -> Vec<WindowJob> {
+        self.pop_batch_slack(max_batch, 0.0, eligible, |_| true, compat)
+    }
+
+    /// [`AdmissionQueue::pop_batch_eligible`] with **batch-aware EDF
+    /// seeding** (`batch_slack=`): when `slack_s > 0`, the seed may
+    /// slip past the earliest eligible deadline to any eligible job
+    /// arriving within `slack_s` of it, *if* seeding there forms a
+    /// strictly larger batch — deadline-aware bin packing over the
+    /// patch-budget buckets. The earliest-deadline job is bypassed by
+    /// at most `slack_s` of deadline per pop and stays queued (it
+    /// seeds a later batch once nothing denser sits inside its slack
+    /// window). `seed_ok` gates *alternate* seeds only (the default
+    /// seed keeps today's semantics exactly) — the shard passes its
+    /// next-unserved-window check so a slipped seed can never leapfrog
+    /// an earlier window of its own stream. With `slack_s = 0` this is
+    /// bit-identical to [`AdmissionQueue::pop_batch_eligible`]
+    /// (unit-tested below).
+    pub fn pop_batch_slack(
+        &mut self,
+        max_batch: usize,
+        slack_s: f64,
+        eligible: impl Fn(&WindowJob) -> bool,
+        seed_ok: impl Fn(&WindowJob) -> bool,
+        compat: impl Fn(&WindowJob, &WindowJob) -> bool,
+    ) -> Vec<WindowJob> {
         let max_batch = max_batch.max(1);
         if self.jobs.is_empty() {
             return Vec::new();
@@ -175,19 +200,52 @@ impl AdmissionQueue {
             self.jobs[a].arrival_s.partial_cmp(&self.jobs[b].arrival_s).unwrap()
         });
 
-        let mut picked: Vec<usize> = vec![order[0]];
-        for &i in &order[1..] {
-            if picked.len() >= max_batch {
-                break;
+        // Greedy fill from a given seed position, scanning the rest in
+        // deadline order (for seed 0 this is exactly the historical
+        // `pop_batch` loop).
+        let jobs = &self.jobs;
+        let form = |seed_pos: usize| -> Vec<usize> {
+            let mut picked: Vec<usize> = vec![order[seed_pos]];
+            for (pos, &i) in order.iter().enumerate() {
+                if pos == seed_pos {
+                    continue;
+                }
+                if picked.len() >= max_batch {
+                    break;
+                }
+                let cand = &jobs[i];
+                if picked.iter().all(|&p| compat(&jobs[p], cand)) {
+                    picked.push(i);
+                }
             }
-            let cand = &self.jobs[i];
-            if picked.iter().all(|&p| compat(&self.jobs[p], cand)) {
-                picked.push(i);
+            picked
+        };
+
+        let mut picked = form(0);
+        if slack_s > 0.0 && picked.len() < max_batch {
+            let d0 = jobs[order[0]].arrival_s;
+            for p in 1..order.len() {
+                let cand = &jobs[order[p]];
+                if cand.arrival_s > d0 + slack_s {
+                    break; // beyond the slack window (order is sorted)
+                }
+                if !seed_ok(cand) {
+                    continue;
+                }
+                let alt = form(p);
+                // Strictly larger only: equal-size batches keep the
+                // earliest seed (no gratuitous deadline slip).
+                if alt.len() > picked.len() {
+                    picked = alt;
+                    if picked.len() >= max_batch {
+                        break;
+                    }
+                }
             }
         }
 
         // Remove the picked jobs in one pass, returning them in the
-        // order they were selected (deadline order).
+        // order they were selected (seed first, then deadline order).
         let picked_set: HashSet<usize> = picked.iter().copied().collect();
         let mut removed: HashMap<usize, WindowJob> = HashMap::with_capacity(picked.len());
         let mut kept = VecDeque::with_capacity(self.jobs.len() - picked.len());
@@ -210,6 +268,14 @@ impl AdmissionQueue {
     /// Pending jobs of one stream — O(1), from the occupancy map.
     pub fn pending_for(&self, stream: u64) -> usize {
         self.pending.get(&stream).copied().unwrap_or(0)
+    }
+
+    /// Latest arrival among the queued jobs — the backlog tail. The
+    /// codec routing policy compares a batch's deadline against this
+    /// to assess slack deterministically (arrival arithmetic, no wall
+    /// clock). `None` when the queue is empty.
+    pub fn tail_arrival(&self) -> Option<f64> {
+        self.jobs.iter().map(|j| j.arrival_s).reduce(f64::max)
     }
 
     fn note_removed(&mut self, stream: u64) {
@@ -390,6 +456,100 @@ mod tests {
         let rest = q.pop_batch_eligible(4, |_| true, |_, _| true);
         assert_eq!(rest.len(), 1);
         assert_eq!(rest[0].stream, 1);
+    }
+
+    #[test]
+    fn pop_batch_slack_zero_is_bit_identical_to_strict_edf() {
+        // The satellite's contract: slack=0 must reproduce
+        // pop_batch_eligible exactly, drain order included, under
+        // random pushes and pops with frequent arrival ties.
+        quick::check(0x51ACC, 40, |g| {
+            let mut a = AdmissionQueue::new(4);
+            let mut b = AdmissionQueue::new(4);
+            for i in 0..g.usize_in(1, 24) {
+                let j = bjob(
+                    g.usize_in(1, 4) as u64,
+                    i,
+                    g.usize_in(0, 4) as f64,
+                    g.usize_in(0, 2),
+                );
+                a.push(j.clone());
+                b.push(j);
+            }
+            let compat =
+                |x: &WindowJob, y: &WindowJob| x.bucket == y.bucket && x.stream != y.stream;
+            loop {
+                let x = a.pop_batch_eligible(3, |_| true, compat);
+                let y = b.pop_batch_slack(3, 0.0, |_| true, |_| true, compat);
+                assert_eq!(x, y, "slack=0 must not change batch formation");
+                if x.is_empty() {
+                    break;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pop_batch_slack_slips_the_seed_to_a_denser_bucket_within_the_window() {
+        let filled = || {
+            let mut q = AdmissionQueue::new(8);
+            q.push(bjob(1, 0, 1.0, 0)); // earliest deadline, lone bucket
+            q.push(bjob(2, 0, 1.2, 1));
+            q.push(bjob(3, 0, 1.3, 1));
+            q.push(bjob(4, 0, 1.4, 1)); // dense bucket, 0.2-0.4s later
+            q
+        };
+        let compat = |a: &WindowJob, b: &WindowJob| a.bucket == b.bucket && a.stream != b.stream;
+
+        // Strict EDF: the lone job seeds and serves alone.
+        let mut q = filled();
+        let strict = q.pop_batch_slack(4, 0.0, |_| true, |_| true, compat);
+        assert_eq!(strict.len(), 1);
+        assert_eq!(strict[0].stream, 1);
+
+        // Slack covering the dense bucket: the seed slips 0.2s and the
+        // batch triples; the bypassed job stays queued and seeds next.
+        let mut q = filled();
+        let slipped = q.pop_batch_slack(4, 0.5, |_| true, |_| true, compat);
+        assert_eq!(slipped.len(), 3, "denser seed within slack wins");
+        assert!(slipped.iter().all(|j| j.bucket == 1));
+        assert_eq!(q.pending_for(1), 1, "bypassed job still queued");
+        let next = q.pop_batch_slack(4, 0.5, |_| true, |_| true, compat);
+        assert_eq!(next.len(), 1);
+        assert_eq!(next[0].stream, 1, "bypassed job seeds the next batch");
+
+        // Slack too small to reach the dense bucket: strict behaviour.
+        let mut q = filled();
+        let tight = q.pop_batch_slack(4, 0.1, |_| true, |_| true, compat);
+        assert_eq!(tight.len(), 1);
+        assert_eq!(tight[0].stream, 1);
+
+        // seed_ok gates alternate seeds only: with the dense bucket's
+        // jobs vetoed as seeds, the earliest job seeds as in strict
+        // EDF (they may still *join* a compatible seed, here none).
+        let mut q = filled();
+        let gated = q.pop_batch_slack(4, 0.5, |_| true, |j| j.bucket != 1, compat);
+        assert_eq!(gated.len(), 1);
+        assert_eq!(gated[0].stream, 1);
+
+        // An equal-size alternative never slips the seed.
+        let mut q = AdmissionQueue::new(8);
+        q.push(bjob(1, 0, 1.0, 0));
+        q.push(bjob(2, 0, 1.1, 1));
+        let same = q.pop_batch_slack(1, 5.0, |_| true, |_| true, compat);
+        assert_eq!(same[0].stream, 1, "no gratuitous deadline slip");
+    }
+
+    #[test]
+    fn tail_arrival_tracks_the_backlog() {
+        let mut q = AdmissionQueue::new(8);
+        assert_eq!(q.tail_arrival(), None);
+        q.push(job(1, 0, 2.0));
+        q.push(job(2, 0, 5.0));
+        q.push(job(3, 0, 3.0));
+        assert_eq!(q.tail_arrival(), Some(5.0));
+        while q.pop().is_some() {}
+        assert_eq!(q.tail_arrival(), None);
     }
 
     #[test]

@@ -290,7 +290,7 @@ mod tests {
     fn codecflow_outcome(
         (outputs, exec_s): (Vec<crate::runtime::tensor::Tensor>, f64),
     ) -> BatchOutcome {
-        BatchOutcome { outputs, exec_s }
+        BatchOutcome { outputs, exec_s, quant_penalty: 0.0 }
     }
 
     #[test]

@@ -33,15 +33,32 @@
 //! * with `launch = 1` (the default) the overlap is **wall-clock
 //!   real**, not just modelled: [`Shard::run_launched`] moves the
 //!   shard's executor (every [`Executor`] is `Send`) onto a dedicated
-//!   *launch thread* ([`LaunchedExecutor`]) that consumes prepared
-//!   batches from a bounded channel, so `execute_batch` physically
-//!   runs while the shard thread prepares the next batch. Launch
-//!   ownership: the shard thread keeps the sessions, queue and KV
-//!   pool; the launch thread owns the executor; the only traffic
-//!   between them is prepared [`BatchRequest`]s one way and outcomes
-//!   (with measured wall intervals) the other. The report carries
-//!   both the virtual overlap model and the measured one
-//!   ([`PhaseTimes::wall_overlap_s`]).
+//!   *launch thread*
+//!   ([`LaunchedExecutor`](crate::runtime::replica::LaunchedExecutor))
+//!   that consumes prepared batches from a bounded channel, so
+//!   `execute_batch` physically runs while the shard thread prepares
+//!   the next batch. Launch ownership: the shard thread keeps the
+//!   sessions, queue and KV pool; the launch thread owns the executor;
+//!   the only traffic between them is prepared [`BatchRequest`]s one
+//!   way and outcomes (with measured wall intervals) the other. The
+//!   report carries both the virtual overlap model and the measured
+//!   one ([`PhaseTimes::wall_overlap_s`]);
+//! * with `backend = hetero`, the shard runs a **heterogeneous
+//!   backend pool** ([`Shard::run_backends`], [`BackendSet`]): N named
+//!   backends — the full-precision `fast` primary plus the
+//!   quantized-CPU `quant` flavour — each on its *own* launch thread,
+//!   so two backends physically execute at once. Every formed batch
+//!   is routed at launch by the shard's
+//!   [`RoutePolicy`] (`route=`): the `codec` policy sends
+//!   sparse-patch-budget and slack-deadline batches to the cheap
+//!   backend and keeps dense, late batches on the fast one. Solo
+//!   calls (ViT, embeddings, decode) stay on the primary; retirement
+//!   is global-FIFO across the pool (per-backend launch order is
+//!   preserved by each backend's own lane), so KV settlement is
+//!   unchanged. Virtual time generalizes per backend
+//!   ([`MultiPipelineClock`]), and per-backend batch/wall/utilization
+//!   stats — including the quant backend's surfaced accuracy-proxy
+//!   penalty — land in [`ShardReport::backends`].
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -54,13 +71,16 @@ use crate::kvc::pool::KvPool;
 use crate::kvc::records::WindowState;
 use crate::pipeline::frontend::WindowFrames;
 use crate::pipeline::infer::{PendingWindow, WindowResult};
-use crate::runtime::batch::{BatchOutcome, BatchRequest, BatchStats, PipelineClock};
+use crate::runtime::batch::{
+    route_policy, BatchOutcome, BatchRequest, BatchStats, MultiPipelineClock, RoutePolicy,
+    RouteQuery,
+};
 use crate::runtime::mock::Executor;
-use crate::runtime::replica::{LaunchedBatch, LaunchedExecutor};
+use crate::runtime::replica::{backend_kinds, Backend, BackendKind, BackendSet, LaunchedBatch};
 use crate::util;
 use crate::util::threadpool::{join_all, JobHandle, ThreadPool};
 
-use super::metrics::{overlap_seconds, Metrics, PhaseTimes};
+use super::metrics::{overlap_seconds, BackendStats, Metrics, PhaseTimes};
 use super::queue::{AdmissionQueue, WindowJob};
 use super::session::StreamSession;
 
@@ -162,6 +182,20 @@ pub struct ShardReport {
     /// equal digests mean bit-identical results, whatever the service
     /// interleaving. Pipelining must not change it.
     pub result_digest: u64,
+    /// Per-stream slices of [`ShardReport::result_digest`] (XOR of the
+    /// stream's window digests). Cross-backend determinism is asserted
+    /// at this granularity: two runs differing only in routing policy
+    /// diverge exactly on the streams the quant backend touched.
+    pub stream_digests: HashMap<u64, u64>,
+    /// Streams that had at least one window served by a quant backend
+    /// (sorted). Quantization perturbs that window's logits and KV, so
+    /// every later window of the stream inherits the perturbation —
+    /// stream granularity is the natural blast radius.
+    pub quant_streams: Vec<u64>,
+    /// Per-backend routing/cost stats (one entry per pool member; a
+    /// single inline executor reports one entry named after its
+    /// configured kind).
+    pub backends: Vec<BackendStats>,
 }
 
 impl ShardReport {
@@ -339,26 +373,30 @@ pub struct Shard {
 /// Where a ring batch's prefill launch stands while it rides toward
 /// its finish turn.
 enum LaunchState {
-    /// Executed inline on the shard thread (`launch=0`): the outputs
-    /// are already materialized, only the finish phase is deferred.
-    Done { outcomes: Vec<BatchOutcome> },
-    /// Physically in flight on the shard's launch thread
-    /// ([`LaunchedExecutor::submit_batch`]): the ticket is cashed at
-    /// retire, which is where a launch-thread fault (panic or engine
-    /// error) surfaces and kills this shard — the same containment as
-    /// an inline fault.
+    /// Executed synchronously (inline on the shard thread, or a
+    /// blocking call through the routed backend's lane under
+    /// `launch=0`): the outputs are already materialized with their
+    /// measured wall seconds, only the finish phase is deferred.
+    Done { outcomes: Vec<BatchOutcome>, wall_s: f64 },
+    /// Physically in flight on one of the shard's launch threads
+    /// ([`crate::runtime::replica::LaunchedExecutor::submit_batch`]):
+    /// the ticket is cashed at retire, which is where a launch-thread
+    /// fault (panic or engine error) surfaces and kills this shard —
+    /// the same containment as an inline fault.
     Flying(JobHandle<LaunchedBatch>),
 }
 
 /// One prepared-and-launched batch riding the pipeline ring until its
 /// finish turn. The launch has been issued (inline and already done,
-/// or physically running on the launch thread — [`LaunchState`]);
-/// what is deferred is the finish phase — KV-state assembly, answer
-/// decoding, metrics and KV-pool settlement — which retires strictly
-/// in batch order.
+/// or physically running on the routed backend's launch thread —
+/// [`LaunchState`]); what is deferred is the finish phase — KV-state
+/// assembly, answer decoding, metrics and KV-pool settlement — which
+/// retires strictly in batch order across the whole backend pool.
 struct InFlight {
     pending: Vec<(WindowJob, usize, PendingWindow)>,
     launch: LaunchState,
+    /// Backend index the batch was routed to (0 without a pool).
+    backend: usize,
     /// Artifact name per member (fusion-group accounting at retire).
     artifacts: Vec<String>,
     batch_arrival: f64,
@@ -374,6 +412,24 @@ struct InFlight {
 /// admission, batch formation, finish accounting and KV settlement.
 struct ShardState<'e> {
     exec: &'e dyn Executor,
+    /// The shard's heterogeneous backend pool, when one is running
+    /// (`Shard::run_backends`). `None` keeps the legacy single-inline-
+    /// executor paths byte-for-byte.
+    set: Option<&'e BackendSet>,
+    /// Per-batch backend router (`route=`). Consulted once per formed
+    /// batch, in service order — stateful policies stay deterministic.
+    policy: Box<dyn RoutePolicy>,
+    /// Issue routed launches asynchronously on the backend's launch
+    /// thread (`launch=1`); `false` blocks through the lane instead —
+    /// virtual-only overlap, results identical. Note: with a pool the
+    /// blocking call still crosses the backend's bounded channel, so
+    /// `launch=0` wall intervals include that round-trip (the true
+    /// inline path is `set = None`, the pool-less configurations).
+    physical: bool,
+    /// Window cadence in seconds (deadline arithmetic for routing).
+    stride_s: f64,
+    /// Batch-aware EDF seed slack (`batch_slack=`), seconds.
+    batch_slack: f64,
     queue: AdmissionQueue,
     kv: KvPool,
     metrics: Metrics,
@@ -383,6 +439,13 @@ struct ShardState<'e> {
     batching: BatchStats,
     phases: PhaseTimes,
     result_digest: u64,
+    /// Per-stream XOR slices of `result_digest`.
+    stream_digests: HashMap<u64, u64>,
+    /// Streams with at least one quant-served window.
+    quant_streams: HashSet<u64>,
+    /// Per-backend routing/cost accounting (index-aligned with `set`;
+    /// a single entry named after the configured kind without a pool).
+    backend_stats: Vec<BackendStats>,
     /// Streams with a prepared-but-unfinished window in the ring.
     /// Batch formation excludes them: a stream's next window must not
     /// prepare before its predecessor's KV lands (`finish`), or the
@@ -390,14 +453,14 @@ struct ShardState<'e> {
     in_flight: HashSet<u64>,
     clock: f64,
     busy: f64,
-    /// The two chained virtual clocks of the pipelined loop (CPU-side
-    /// prepares, executor-side stages); retiring a batch advances the
-    /// executor clock, which is also the ring's backpressure gate
-    /// (batch k's prepare cannot start before batch k-depth-1 fully
-    /// retired — [`PipelineClock`]).
-    pipe: PipelineClock,
+    /// The chained virtual clocks of the pipelined loop: one CPU-side
+    /// prepare chain, one executor chain **per backend**, and the ring
+    /// gate (batch k's prepare cannot start before batch k-depth-1
+    /// fully retired — [`MultiPipelineClock`]). With one backend this
+    /// is exactly the PR-3 [`crate::runtime::batch::PipelineClock`].
+    pipe: MultiPipelineClock,
     /// Measured wall intervals of the shard thread's prepare phases /
-    /// the executor's batch launches ([`util::now`] epoch). Their
+    /// the executors' batch launches ([`util::now`] epoch). Their
     /// intersection ([`overlap_seconds`]) is the *measured* overlap
     /// reported next to the virtual model in
     /// [`PhaseTimes::wall_overlap_s`].
@@ -408,9 +471,34 @@ struct ShardState<'e> {
 }
 
 impl<'e> ShardState<'e> {
-    fn new(exec: &'e dyn Executor, cfg: &ServingConfig) -> ShardState<'e> {
+    fn new(
+        exec: &'e dyn Executor,
+        cfg: &ServingConfig,
+        set: Option<&'e BackendSet>,
+        stride_s: f64,
+    ) -> ShardState<'e> {
+        let backend_stats = match set {
+            Some(s) => (0..s.len())
+                .map(|i| BackendStats::named(s.kind(i).name(), s.kind(i) == BackendKind::Quant))
+                .collect(),
+            None => {
+                // Inline single-executor path: name the one backend
+                // after the configured kind so `backend=quant` at
+                // `pipeline=0` keeps its quant attribution (stats,
+                // quant-served streams) instead of reporting a
+                // misleading exact "inline" entry.
+                let kinds = backend_kinds(&cfg.backend);
+                let kind = if kinds.len() == 1 { kinds[0] } else { BackendKind::Fast };
+                vec![BackendStats::named(kind.name(), kind == BackendKind::Quant)]
+            }
+        };
         ShardState {
             exec,
+            set,
+            policy: route_policy(&cfg.route),
+            physical: cfg.launch,
+            stride_s,
+            batch_slack: cfg.batch_slack.max(0.0),
             queue: AdmissionQueue::new(cfg.queue_depth),
             kv: KvPool::new(cfg.shard_kv_budget()),
             metrics: Metrics::default(),
@@ -420,14 +508,56 @@ impl<'e> ShardState<'e> {
             batching: BatchStats::default(),
             phases: PhaseTimes::default(),
             result_digest: 0,
+            stream_digests: HashMap::new(),
+            quant_streams: HashSet::new(),
+            backend_stats,
             in_flight: HashSet::new(),
             clock: 0.0,
             busy: 0.0,
-            pipe: PipelineClock::default(),
+            pipe: MultiPipelineClock::new(set.map(|s| s.len()).unwrap_or(1)),
             prep_intervals: Vec::new(),
             exec_intervals: Vec::new(),
             streams_served: 0,
             stolen_streams: 0,
+        }
+    }
+
+    /// Pick the backend for a formed batch: consult the routing policy
+    /// with the batch's admission-time patch-budget bucket and its
+    /// deterministic deadline slack (batch deadline vs the backlog
+    /// tail's arrival — pure arrival arithmetic, so routing never
+    /// reads a wall clock and digests stay reproducible). Without a
+    /// pool (or with one backend) this is always 0.
+    fn route_batch(&mut self, bucket: usize, jobs: usize, batch_arrival: f64) -> usize {
+        let backends = self.set.map(|s| s.len()).unwrap_or(1);
+        if backends < 2 {
+            return 0;
+        }
+        let slack_s = match self.queue.tail_arrival() {
+            Some(tail) => batch_arrival + self.stride_s - tail,
+            None => self.stride_s,
+        };
+        let q = RouteQuery { bucket, jobs, slack_s, backends };
+        self.policy.route(&q).min(backends - 1)
+    }
+
+    /// Fold one routed launch into the per-backend stats and mark the
+    /// quant blast radius.
+    fn record_launch(
+        &mut self,
+        backend: usize,
+        outcomes: &[BatchOutcome],
+        wall_s: f64,
+        streams: impl Iterator<Item = u64>,
+    ) {
+        let stats = &mut self.backend_stats[backend];
+        stats.batches += 1;
+        stats.jobs += outcomes.len();
+        stats.exec_s += outcomes.iter().map(|o| o.exec_s).sum::<f64>();
+        stats.accuracy_penalty += outcomes.iter().map(|o| o.quant_penalty).sum::<f64>();
+        stats.wall_s += wall_s;
+        if stats.quant {
+            self.quant_streams.extend(streams);
         }
     }
 
@@ -507,21 +637,33 @@ impl<'e> ShardState<'e> {
     /// predecessor's compute. The pipelined loop additionally keeps
     /// any stream with an in-flight window out of formation entirely
     /// (seed included): its next window depends on KV that has not
-    /// landed yet.
+    /// landed yet. With `batch_slack > 0` the seed may slip past the
+    /// earliest deadline (by at most the slack) onto a denser bucket
+    /// ([`AdmissionQueue::pop_batch_slack`]); slipped seeds are gated
+    /// to next-unserved windows so a stream can never leapfrog its
+    /// own queued predecessor.
     fn form_batch(&mut self, max_batch: usize, pipelined: bool) -> Vec<WindowJob> {
+        let slack = self.batch_slack;
         let ShardState { queue, sessions, index, in_flight, .. } = self;
+        let next_unserved = |j: &WindowJob| {
+            index
+                .get(&j.stream)
+                .map(|&i| sessions[i].next_window_idx() == j.window_idx)
+                .unwrap_or(false)
+        };
         let compat = |a: &WindowJob, b: &WindowJob| {
-            a.bucket == b.bucket
-                && a.stream != b.stream
-                && index
-                    .get(&b.stream)
-                    .map(|&i| sessions[i].next_window_idx() == b.window_idx)
-                    .unwrap_or(false)
+            a.bucket == b.bucket && a.stream != b.stream && next_unserved(b)
         };
         if pipelined {
-            queue.pop_batch_eligible(max_batch, |j| !in_flight.contains(&j.stream), compat)
+            queue.pop_batch_slack(
+                max_batch,
+                slack,
+                |j| !in_flight.contains(&j.stream),
+                &next_unserved,
+                compat,
+            )
         } else {
-            queue.pop_batch(max_batch, compat)
+            queue.pop_batch_slack(max_batch, slack, |_| true, &next_unserved, compat)
         }
     }
 
@@ -548,19 +690,25 @@ impl<'e> ShardState<'e> {
             Some((_, toks)) => toks.push(r.seq_tokens),
             None => fused_groups.push((artifact, vec![r.seq_tokens])),
         }
-        self.result_digest ^= window_digest(
+        let digest = window_digest(
             job.stream,
             job.window_idx,
             &r,
             self.sessions[idx].engine.prev_state(),
         );
+        self.result_digest ^= digest;
+        *self.stream_digests.entry(job.stream).or_insert(0) ^= digest;
         served.push((job.stream, idx));
         (r, prep_share, exec_share)
     }
 
-    /// The PR-2 serial service step, bit-for-bit: prepare every job,
-    /// one fused launch, finish + amortized timing + KV settlement.
+    /// The PR-2 serial service step, bit-for-bit on a single backend:
+    /// prepare every job, one fused (routed) launch, finish +
+    /// amortized timing + KV settlement.
     fn serve_serial_batch(&mut self, jobs: Vec<WindowJob>) {
+        // All members share the seed's bucket (compat requires it) —
+        // the admission-time codec signal the router reads.
+        let bucket = jobs.first().map(|j| j.bucket).unwrap_or(0);
         // Phase 1 — per job, everything up to the prefill launch.
         let wall_prep_start = util::now();
         let mut pending = Vec::with_capacity(jobs.len());
@@ -584,22 +732,36 @@ impl<'e> ShardState<'e> {
             return;
         }
 
-        // Phase 2 — one fused launch for the whole batch (the
-        // executor loops internally if it cannot fuse). Serial service
-        // runs it on the shard thread: its wall interval is disjoint
-        // from every prepare interval, so measured overlap stays 0.
-        let wall_exec_start = util::now();
-        let outcomes = self.exec.execute_batch(&requests).expect("batched prefill");
-        self.exec_intervals.push((wall_exec_start, util::now()));
-
-        // Phase 3 — per job, consume outputs; amortized timing. The
-        // batch launches once every member has arrived; its service
-        // time is the sum of member latencies (each already carrying
-        // its amortized prefill share).
+        // The batch launches once every member has arrived.
         let batch_arrival = pending
             .iter()
             .map(|(job, _, _)| job.arrival_s)
             .fold(f64::NEG_INFINITY, f64::max);
+
+        // Phase 2 — one fused launch for the whole batch (the
+        // executor loops internally if it cannot fuse), routed to a
+        // pool backend when one is running. Serial service blocks on
+        // the launch either way: its wall interval is disjoint from
+        // every prepare interval, so measured overlap stays 0.
+        let backend = self.route_batch(bucket, requests.len(), batch_arrival);
+        let wall_exec_start = util::now();
+        let outcomes = match self.set {
+            Some(set) => set.executor(backend).execute_batch(&requests),
+            None => self.exec.execute_batch(&requests),
+        }
+        .expect("batched prefill");
+        let wall_exec_end = util::now();
+        self.exec_intervals.push((wall_exec_start, wall_exec_end));
+        self.record_launch(
+            backend,
+            &outcomes,
+            wall_exec_end - wall_exec_start,
+            pending.iter().map(|(job, _, _)| job.stream),
+        );
+
+        // Phase 3 — per job, consume outputs; amortized timing. The
+        // batch's service time is the sum of member latencies (each
+        // already carrying its amortized prefill share).
         let service_start = self.clock.max(batch_arrival);
         let mut batch_service = 0.0f64;
         // Fusion accounting per artifact: only same-artifact members
@@ -643,16 +805,16 @@ impl<'e> ShardState<'e> {
     /// prepare, and the fused launch itself. Returns the in-flight
     /// batch for the ring, with its virtual prepare timing assigned —
     /// the launch is *issued* here (inline on the shard thread, or
-    /// handed to the shard's launch thread when `launcher` is set, in
-    /// which case it physically runs while this method's caller
-    /// prepares the next batch), but every effect on session state,
-    /// metrics and the KV pool waits for [`ShardState::retire`].
+    /// routed to one of the pool's launch threads, in which case it
+    /// physically runs while this method's caller prepares the next
+    /// batch), but every effect on session state, metrics and the KV
+    /// pool waits for [`ShardState::retire`].
     fn prepare_pipelined_batch(
         &mut self,
         jobs: Vec<WindowJob>,
         fe_pool: Option<&ThreadPool>,
-        launcher: Option<&LaunchedExecutor>,
     ) -> Option<InFlight> {
+        let bucket = jobs.first().map(|j| j.bucket).unwrap_or(0);
         let wall_prep_start = util::now();
         // Serial half: advance each session's cursor (stale jobs from
         // backpressure drops are skipped, exactly as in serial mode).
@@ -728,27 +890,40 @@ impl<'e> ShardState<'e> {
 
         self.prep_intervals.push((wall_prep_start, util::now()));
 
-        // The fused launch. With a launch thread the requests cross to
-        // it through the bounded channel and execute *while the shard
-        // thread prepares the next batch* — wall-clock overlap; inline
-        // (`launch=0`) the call runs here and only the virtual model
-        // overlaps. Either way the outputs ride the ring until retire.
+        // The fused launch, routed to a backend when a pool runs.
+        // With `launch=1` the requests cross to that backend's launch
+        // thread through its bounded channel and execute *while the
+        // shard thread prepares the next batch* — wall-clock overlap,
+        // and two batches routed to different backends overlap each
+        // other too; with `launch=0` (or no pool) the call blocks here
+        // and only the virtual model overlaps. Either way the outputs
+        // ride the ring until retire.
+        let backend = self.route_batch(bucket, requests.len(), batch_arrival);
         let artifacts: Vec<String> = requests.iter().map(|r| r.artifact.clone()).collect();
-        let launch = match launcher {
-            Some(launched) => LaunchState::Flying(launched.submit_batch(requests)),
+        let launch = match self.set {
+            Some(set) if self.physical => LaunchState::Flying(set.submit(backend, requests)),
+            Some(set) => {
+                let wall_exec_start = util::now();
+                let outcomes =
+                    set.executor(backend).execute_batch(&requests).expect("batched prefill");
+                let wall_exec_end = util::now();
+                self.exec_intervals.push((wall_exec_start, wall_exec_end));
+                LaunchState::Done { outcomes, wall_s: wall_exec_end - wall_exec_start }
+            }
             None => {
                 let wall_exec_start = util::now();
                 let outcomes = self.exec.execute_batch(&requests).expect("batched prefill");
-                self.exec_intervals.push((wall_exec_start, util::now()));
-                LaunchState::Done { outcomes }
+                let wall_exec_end = util::now();
+                self.exec_intervals.push((wall_exec_start, wall_exec_end));
+                LaunchState::Done { outcomes, wall_s: wall_exec_end - wall_exec_start }
             }
         };
 
-        // Virtual prepare timing ([`PipelineClock::prepare`]):
+        // Virtual prepare timing ([`MultiPipelineClock::prepare`]):
         // prepares serialize on the shard's CPU side, cannot start
         // before the batch's jobs have arrived, and are gated by the
         // ring — the most recently retired batch's completion bounds
-        // how far ahead of the executor the CPU may run.
+        // how far ahead of the executors the CPU may run.
         let (prep_start, prep_done) = self.pipe.prepare(batch_arrival, prepare_s);
         for (job, _, _) in &pending {
             self.in_flight.insert(job.stream);
@@ -756,6 +931,7 @@ impl<'e> ShardState<'e> {
         Some(InFlight {
             pending,
             launch,
+            backend,
             artifacts,
             batch_arrival,
             prepare_s,
@@ -778,22 +954,29 @@ impl<'e> ShardState<'e> {
         let InFlight {
             pending,
             launch,
+            backend,
             artifacts,
             batch_arrival,
             prepare_s,
             prep_start,
             prep_done,
         } = fl;
-        let outcomes = match launch {
-            LaunchState::Done { outcomes } => outcomes,
+        let (outcomes, launch_wall_s) = match launch {
+            LaunchState::Done { outcomes, wall_s } => (outcomes, wall_s),
             LaunchState::Flying(ticket) => match ticket.join() {
                 Ok(run) => {
                     self.exec_intervals.push((run.wall_start, run.wall_end));
-                    run.outcomes.expect("batched prefill")
+                    (run.outcomes.expect("batched prefill"), run.wall_end - run.wall_start)
                 }
                 Err(msg) => panic!("launch thread panicked during batched prefill: {msg}"),
             },
         };
+        self.record_launch(
+            backend,
+            &outcomes,
+            launch_wall_s,
+            pending.iter().map(|(job, _, _)| job.stream),
+        );
         let exec_s: f64 = outcomes.iter().map(|o| o.exec_s).sum();
 
         let mut batch_total = 0.0f64;
@@ -811,15 +994,17 @@ impl<'e> ShardState<'e> {
             results.push((job, r));
         }
 
-        // Overlapped timing ([`PipelineClock::retire`]): the executor
-        // stage (launch + finish) starts at `max(prep_done, previous
-        // exec_done)` — whatever part of this batch's prepare did NOT
-        // fit under the previous batch's stage is exposed on the
+        // Overlapped timing ([`MultiPipelineClock::retire`]): the
+        // stage (launch + finish) chains on the routed backend's own
+        // queue, starting at `max(prep_done, that backend's previous
+        // exec_done)` — whatever part of this batch's prepare (or
+        // stage) did NOT fit under the pool frontier is exposed on the
         // critical path. The batch's span advance (net of arrival-idle
         // time) is split across members by their true stage-time
         // share, so per-window charged latency reflects the overlap
-        // (prepare hidden => cheaper windows).
-        let t = self.pipe.retire(prep_done, prepare_s, exec_s + finish_s, batch_arrival);
+        // (prepare hidden => cheaper windows; cheap-backend work that
+        // completes under the fast backend's flight => nearly free).
+        let t = self.pipe.retire(backend, prep_done, prepare_s, exec_s + finish_s, batch_arrival);
         let n = results.len().max(1) as f64;
         for (job, r) in results {
             let share =
@@ -910,16 +1095,17 @@ impl Shard {
     }
 
     /// [`Shard::run`] with wall-clock overlap: takes **ownership** of
-    /// the executor (the `Send` bound on
-    /// [`Executor`] is what allows the move), hands it to a dedicated
-    /// launch thread ([`LaunchedExecutor`]), and serves through the
-    /// returned handle — so with `pipeline >= 1` each batch's fused
-    /// prefill physically runs on the launch thread while this shard
-    /// thread prepares the next batch, consuming prepared
-    /// [`BatchRequest`] groups from a bounded channel (prepare stalls
-    /// when the executor falls `depth + 1` batches behind). Results
-    /// are bit-identical to [`Shard::run`] at every depth; what
-    /// changes is measured wall time ([`PhaseTimes::wall_overlap_s`]).
+    /// the executor (the `Send` bound on [`Executor`] is what allows
+    /// the move), hands it to a dedicated launch thread
+    /// ([`crate::runtime::replica::LaunchedExecutor`]), and serves
+    /// through the returned handle — so with `pipeline >= 1` each
+    /// batch's fused prefill physically runs on the launch thread
+    /// while this shard thread prepares the next batch, consuming
+    /// prepared [`BatchRequest`] groups from a bounded channel
+    /// (prepare stalls when the executor falls `depth + 1` batches
+    /// behind). Results are bit-identical to [`Shard::run`] at every
+    /// depth; what changes is measured wall time
+    /// ([`PhaseTimes::wall_overlap_s`]).
     ///
     /// With `pipeline_depth == 0` there is nothing to overlap: the
     /// executor stays inline and this is exactly [`Shard::run`].
@@ -927,14 +1113,33 @@ impl Shard {
         if self.cfg.pipeline_depth == 0 {
             return self.run(exec.as_ref(), pool);
         }
-        let launched = LaunchedExecutor::new(exec, self.cfg.pipeline_depth);
-        self.run_with(&launched, Some(&launched), pool)
+        self.run_backends(vec![Backend::new(BackendKind::Fast, exec)], pool)
+    }
+
+    /// Serve through a **heterogeneous backend pool**: every backend
+    /// moves onto its own launch thread ([`BackendSet::launch`]), solo
+    /// calls go to the primary (index 0), and each formed batch is
+    /// routed by `cfg.route` at launch time. A pool of one with no
+    /// launch threads requested degenerates to the inline
+    /// [`Shard::run`]. Retirement stays strictly FIFO in issue order
+    /// across the pool, so KV settlement — and the bit-identity
+    /// guarantees of the homogeneous paths — are unchanged; what a
+    /// *lossy* backend changes is which streams' outputs carry its
+    /// (deterministic) quantization, surfaced per stream in
+    /// [`ShardReport::quant_streams`].
+    pub fn run_backends(&self, backends: Vec<Backend>, pool: &StealPool) -> ShardReport {
+        if backends.len() == 1 && !(self.cfg.launch && self.cfg.pipeline_depth > 0) {
+            let b = backends.into_iter().next().expect("one backend");
+            return self.run(b.exec.as_ref(), pool);
+        }
+        let set = BackendSet::launch(backends, self.cfg.pipeline_depth);
+        self.run_with(set.primary(), Some(&set), pool)
     }
 
     fn run_with(
         &self,
         exec: &dyn Executor,
-        launcher: Option<&LaunchedExecutor>,
+        set: Option<&BackendSet>,
         pool: &StealPool,
     ) -> ShardReport {
         let t0 = util::now();
@@ -954,7 +1159,7 @@ impl Shard {
             None
         };
 
-        let mut st = ShardState::new(exec, &self.cfg);
+        let mut st = ShardState::new(exec, &self.cfg, set, stride_s);
         let mut ring: VecDeque<InFlight> = VecDeque::new();
 
         loop {
@@ -990,7 +1195,7 @@ impl Shard {
                 }
                 continue;
             }
-            if let Some(fl) = st.prepare_pipelined_batch(jobs, fe_pool.as_ref(), launcher) {
+            if let Some(fl) = st.prepare_pipelined_batch(jobs, fe_pool.as_ref()) {
                 ring.push_back(fl);
             }
             while ring.len() > depth {
@@ -1010,6 +1215,9 @@ impl Shard {
         st.phases.wall_execute_s = st.exec_intervals.iter().map(|(a, b)| b - a).sum();
         st.phases.wall_overlap_s = overlap_seconds(&st.prep_intervals, &st.exec_intervals);
 
+        let mut quant_streams: Vec<u64> = st.quant_streams.into_iter().collect();
+        quant_streams.sort_unstable();
+
         ShardReport {
             shard: self.id,
             metrics: st.metrics,
@@ -1022,6 +1230,9 @@ impl Shard {
             batching: st.batching,
             phases: st.phases,
             result_digest: st.result_digest,
+            stream_digests: st.stream_digests,
+            quant_streams,
+            backends: st.backend_stats,
         }
     }
 }
@@ -1455,6 +1666,163 @@ mod tests {
                 estimate_patch_bucket(&frames, lo, hi, 32),
                 "window [{lo}, {hi})"
             );
+        }
+    }
+
+    fn hetero_backends(delay_s: f64) -> Vec<Backend> {
+        use crate::runtime::replica::{ExecutorFactory, MockReplicaFactory};
+        let f = MockReplicaFactory::new("m", delay_s);
+        vec![
+            Backend::new(BackendKind::Fast, f.build_backend(BackendKind::Fast, 0.4)),
+            Backend::new(BackendKind::Quant, f.build_backend(BackendKind::Quant, 0.4)),
+        ]
+    }
+
+    #[test]
+    fn hetero_pool_with_fixed_route_matches_the_single_backend_digest() {
+        // route=fixed keeps every batch on the fast primary: the quant
+        // backend idles and results are bit-identical to the
+        // homogeneous launched path (and to the inline serial loop).
+        let serial = {
+            let (mock, shard) = pipelined_shard(2, 0.0);
+            shard.run(&mock, &StealPool::new(works(6, 0)))
+        };
+        let (_, mut shard) = pipelined_shard(2, 0.0);
+        shard.cfg.route = "fixed".to_string();
+        let hetero = shard.run_backends(hetero_backends(0.0), &StealPool::new(works(6, 0)));
+        assert_eq!(hetero.result_digest, serial.result_digest);
+        assert_eq!(hetero.metrics.windows(), serial.metrics.windows());
+        assert!(hetero.quant_streams.is_empty(), "fixed-fast never touches quant");
+        assert_eq!(hetero.backends.len(), 2);
+        assert_eq!(hetero.backends[0].name, "fast");
+        assert_eq!(hetero.backends[1].name, "quant");
+        assert!(hetero.backends[0].batches > 0);
+        assert_eq!(hetero.backends[1].batches, 0, "quant idles under fixed-fast");
+        assert_eq!(hetero.backends[0].jobs, hetero.metrics.windows());
+        // Per-stream digest slices XOR back to the shard digest.
+        let folded = hetero.stream_digests.values().fold(0u64, |a, &d| a ^ d);
+        assert_eq!(folded, hetero.result_digest);
+    }
+
+    #[test]
+    fn codec_routing_is_deterministic_and_scoped_to_quant_streams() {
+        // The cross-backend determinism contract: per (policy, seed)
+        // the digests reproduce exactly, and switching fixed -> codec
+        // moves only the streams the quant backend actually served.
+        let run = |route: &str| {
+            let (_, mut shard) = pipelined_shard(2, 1e-4);
+            shard.cfg.route = route.to_string();
+            shard.cfg.batch_bucket = 48; // fine buckets: the codec signal varies
+            shard.run_backends(hetero_backends(1e-4), &StealPool::new(works(8, 0)))
+        };
+        let fixed = run("fixed");
+        assert!(fixed.quant_streams.is_empty());
+        let codec1 = run("codec");
+        let codec2 = run("codec");
+        assert_eq!(codec1.result_digest, codec2.result_digest, "deterministic per policy");
+        assert_eq!(codec1.stream_digests, codec2.stream_digests);
+        assert_eq!(codec1.quant_streams, codec2.quant_streams);
+        assert!(!codec1.quant_streams.is_empty(), "codec routing must use the quant backend");
+        assert_eq!(codec1.metrics.windows(), fixed.metrics.windows());
+        assert_eq!(codec1.metrics.per_stream, fixed.metrics.per_stream);
+        for (stream, digest) in &fixed.stream_digests {
+            if codec1.quant_streams.contains(stream) {
+                assert_ne!(
+                    codec1.stream_digests[stream], *digest,
+                    "quant-served stream {stream} must carry the quantization"
+                );
+            } else {
+                assert_eq!(
+                    codec1.stream_digests[stream], *digest,
+                    "stream {stream} untouched by quant must match fixed-fast"
+                );
+            }
+        }
+        // Per-backend stats: both backends worked, jobs partition the
+        // window set, and only quant surfaces an accuracy penalty.
+        let b = &codec1.backends;
+        assert_eq!((b[0].name.as_str(), b[1].name.as_str()), ("fast", "quant"));
+        assert!(b[1].quant && b[1].batches > 0);
+        assert!(b[1].accuracy_penalty > 0.0, "lossy backend surfaces its penalty");
+        assert_eq!(b[0].accuracy_penalty, 0.0);
+        assert_eq!(b[0].jobs + b[1].jobs, codec1.metrics.windows());
+    }
+
+    #[test]
+    fn inline_quant_backend_keeps_its_attribution() {
+        // `backend=quant` on the inline path (pipeline=0, no pool)
+        // must still report its one backend as quant — stats named
+        // after the configured kind, every served stream in the quant
+        // blast radius — not as a misleading exact "inline" entry.
+        use crate::runtime::replica::{ExecutorFactory, MockReplicaFactory};
+        let mut cfg = ServingConfig::default();
+        assert!(cfg.set("backend", "quant"));
+        let shard = Shard {
+            id: 0,
+            cfg,
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let exec = MockReplicaFactory::new("m", 0.0).build_backend(BackendKind::Quant, 0.4);
+        let r = shard.run(exec.as_ref(), &StealPool::new(works(3, 0)));
+        assert_eq!(r.metrics.windows(), 9);
+        assert_eq!(r.backends.len(), 1);
+        assert_eq!(r.backends[0].name, "quant");
+        assert!(r.backends[0].quant);
+        assert!(r.backends[0].accuracy_penalty > 0.0, "lossy windows surfaced");
+        assert_eq!(r.quant_streams, vec![0, 1, 2], "every stream is quant-served");
+        // The homogeneous default stays named after its kind too.
+        let fast = Shard {
+            id: 0,
+            cfg: ServingConfig::default(),
+            model: "m".to_string(),
+            variant: Variant::CodecFlow,
+            fps: 2.0,
+        };
+        let r = fast.run(&MockEngine::new("m"), &StealPool::new(works(3, 0)));
+        assert_eq!(r.backends[0].name, "fast");
+        assert!(!r.backends[0].quant);
+        assert!(r.quant_streams.is_empty());
+    }
+
+    #[test]
+    fn batch_slack_zero_is_bit_identical_and_slack_serves_everything_once() {
+        // Satellite contract: batch_slack=0 (the default) is the
+        // strict-EDF behaviour bit-for-bit; a generous slack re-orders
+        // seeding for denser buckets but never changes any result
+        // (per-stream order is preserved, so outputs — and the
+        // order-insensitive digest — are identical).
+        let base = {
+            let (mock, shard) = pipelined_shard(0, 0.0);
+            shard.run(&mock, &StealPool::new(works(6, 0)))
+        };
+        let zero = {
+            let (mock, mut shard) = pipelined_shard(0, 0.0);
+            shard.cfg.batch_slack = 0.0;
+            shard.run(&mock, &StealPool::new(works(6, 0)))
+        };
+        assert_eq!(zero.result_digest, base.result_digest);
+        assert_eq!(zero.metrics.windows(), base.metrics.windows());
+
+        let slack = {
+            let (mock, mut shard) = pipelined_shard(0, 0.0);
+            shard.cfg.batch_slack = 10.0;
+            shard.cfg.batch_bucket = 48; // fine buckets: slack has bins to pack
+            shard.run(&mock, &StealPool::new(works(6, 0)))
+        };
+        assert_eq!(slack.metrics.windows(), base.metrics.windows(), "everything served once");
+        for count in slack.metrics.per_stream.values() {
+            assert_eq!(*count, 3);
+        }
+        assert_eq!(slack.result_digest, base.result_digest, "seed slip never changes results");
+        // Windows of one stream still retire in order.
+        let mut last: HashMap<u64, usize> = HashMap::new();
+        for (stream, k, _) in &slack.answers {
+            if let Some(prev) = last.get(stream) {
+                assert!(k > prev, "stream {stream} window {k} after {prev}");
+            }
+            last.insert(*stream, *k);
         }
     }
 

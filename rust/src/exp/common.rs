@@ -5,9 +5,7 @@
 use std::path::PathBuf;
 
 use crate::baselines::Variant;
-use crate::config::{
-    artifacts_dir, env_bool, env_usize, ExperimentConfig, PipelineConfig, ServingConfig,
-};
+use crate::config::{artifacts_dir, env_usize, ExperimentConfig, PipelineConfig, ServingConfig};
 use crate::coordinator::session::StreamSession;
 use crate::json::{self, Value};
 use crate::model::probe::{Probe, ProbeBuilder};
@@ -439,8 +437,12 @@ fn cache_load(key: &str) -> Option<VariantEval> {
 /// the shard count (env `CF_WORKERS` overrides the thread count,
 /// `CF_BATCH` / `CF_BATCH_BUCKET` override the per-shard batching
 /// knobs, `CF_PIPELINE` the pipelined-execution depth, `CF_LAUNCH`
-/// whether pipelined shards run per-shard launch threads — the full
-/// knob/env matrix is `docs/OPERATIONS.md`).
+/// whether pipelined shards run per-shard launch threads,
+/// `CF_BACKEND` / `CF_ROUTE` the heterogeneous backend pool and its
+/// routing policy — the full knob/env matrix is
+/// `docs/OPERATIONS.md`). Invalid `CF_BACKEND`/`CF_ROUTE` values are
+/// ignored (the validating parser rejects them), keeping the
+/// defaults.
 pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     let mut s = ServingConfig::default();
     s.pipeline = cfg.pipeline.clone();
@@ -449,7 +451,18 @@ pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     s.max_batch = env_usize("CF_BATCH", s.max_batch);
     s.batch_bucket = env_usize("CF_BATCH_BUCKET", s.batch_bucket);
     s.pipeline_depth = env_usize("CF_PIPELINE", s.pipeline_depth);
-    s.launch = env_bool("CF_LAUNCH", s.launch);
+    // Through the validating parser (not env_bool) so an explicit
+    // CF_LAUNCH is *recorded* as explicit — the dispatcher's
+    // launch/pipeline no-op warning only fires for explicit requests.
+    if let Ok(v) = std::env::var("CF_LAUNCH") {
+        s.set("launch", &v);
+    }
+    if let Ok(v) = std::env::var("CF_BACKEND") {
+        s.set("backend", &v);
+    }
+    if let Ok(v) = std::env::var("CF_ROUTE") {
+        s.set("route", &v);
+    }
     s
 }
 

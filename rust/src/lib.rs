@@ -18,9 +18,11 @@
 //!   selective KV-cache refresh with RoPE position correction.
 //! * [`runtime`], [`model`] — PJRT execution of the AOT-compiled JAX/
 //!   Pallas artifacts (feature `pjrt`; manifest-only stub otherwise),
-//!   per-shard executor replica factories and launch-thread executor
-//!   ownership ([`runtime::replica`], `Send` executors behind a
-//!   bounded lane), cross-stream batched execution
+//!   per-shard executor replica factories, launch-thread executor
+//!   ownership and heterogeneous backend pools
+//!   ([`runtime::replica`]: `Send` executors behind bounded lanes,
+//!   `fast` + quantized-`quant` flavours routed per batch by
+//!   [`runtime::batch::RoutePolicy`]), cross-stream batched execution
 //!   ([`runtime::batch`]), model descriptors, the anomaly probe.
 //! * [`coordinator`], [`baselines`] — the serving layer, single-shard
 //!   ([`coordinator::serve`]) and sharded: consistent stream->shard
@@ -36,9 +38,10 @@
 //! * [`exp`] — one experiment runner per paper table/figure, plus
 //!   [`exp::fig20_scaling`] (shard-scaling throughput),
 //!   [`exp::fig21_batching`] (cross-stream batched prefill),
-//!   [`exp::fig22_pipeline`] (pipelined shard execution) and
-//!   [`exp::fig23_wallclock`] (launch-thread wall-clock overlap),
-//!   beyond the paper.
+//!   [`exp::fig22_pipeline`] (pipelined shard execution),
+//!   [`exp::fig23_wallclock`] (launch-thread wall-clock overlap) and
+//!   [`exp::fig24_hetero`] (heterogeneous backends with codec-guided
+//!   routing), beyond the paper.
 //! * [`util`], [`json`], [`config`] — support: PRNG, stats, micro-bench
 //!   harness, property-test helper, panic-isolating thread pool with
 //!   join/fan-in and bounded single-owner lanes ([`util::threadpool`]),

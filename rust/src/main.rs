@@ -5,7 +5,7 @@
 //!                   [workers=N] [shards=N] [streams=N] [key=value ...]
 //! codecflow exp     <table1|table2|fig2|fig3|fig5|fig6|fig11|fig12|fig13|
 //!                    fig14|fig15|fig16|fig17|fig18|fig19|fig20|fig21|
-//!                    fig22|fig23|all>
+//!                    fig22|fig23|fig24|all>
 //! codecflow models              # list models + artifacts
 //! codecflow help
 //! ```
@@ -17,9 +17,13 @@
 //! batch's prepare with the previous batch's prefill launch inside
 //! every shard (0 = serial); `launch=true|false` chooses whether that
 //! overlap is physical (a dedicated launch thread per shard owning
-//! the executor) or modelled in virtual time only. The full knob
-//! reference — defaults, env vars, interactions, which fig20–fig23
-//! sweep measures each — is `docs/OPERATIONS.md`.
+//! the executor) or modelled in virtual time only; `backend=hetero`
+//! gives every shard a second, quantized-CPU backend on its own
+//! launch thread, with batches routed per `route=` (the `codec`
+//! policy steers by the admission-time patch-budget bucket and
+//! deadline slack). The full knob reference — defaults, env vars,
+//! interactions, which fig20–fig24 sweep measures each — is
+//! `docs/OPERATIONS.md`.
 
 use std::sync::Arc;
 
@@ -171,13 +175,16 @@ fn experiment(args: &[String]) {
         "fig23" => {
             exp::fig23_wallclock::run();
         }
+        "fig24" => {
+            exp::fig24_hetero::run();
+        }
         other => eprintln!("unknown experiment {other}"),
     };
     if which == "all" {
         for name in [
             "table1", "table2", "fig2", "fig3", "fig5", "fig6", "fig11", "fig12",
             "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-            "fig21", "fig22", "fig23",
+            "fig21", "fig22", "fig23", "fig24",
         ] {
             println!("\n===== {name} =====");
             run_one(name);
@@ -218,19 +225,23 @@ fn help() {
          \n\
          USAGE:\n\
          \x20 codecflow serve  [--model M] [--variant V] [--frames N] [key=value...]\n\
-         \x20 codecflow exp    <table1|table2|fig2..fig23|all>\n\
+         \x20 codecflow exp    <table1|table2|fig2..fig24|all>\n\
          \x20 codecflow models\n\
          \n\
          serving overrides: workers= shards= streams= admit_wave= steal= queue_depth=\n\
-         \x20                batch= batch_bucket= pipeline= launch= kv_budget_bytes=\n\
+         \x20                batch= batch_bucket= batch_slack= pipeline= launch=\n\
+         \x20                backend= route= quant_ratio= kv_budget_bytes=\n\
          \x20                (workers=N scales to N executor shards; batch=N fuses up\n\
          \x20                to N compatible cross-stream prefills per launch;\n\
          \x20                pipeline=N overlaps batch prepare with the previous\n\
          \x20                batch's prefill launch, 0 = serial; launch=true runs\n\
-         \x20                that overlap on a real per-shard launch thread)\n\
+         \x20                that overlap on a real per-shard launch thread;\n\
+         \x20                backend=hetero adds a quantized-CPU backend per shard,\n\
+         \x20                with batches routed by route=fixed|static-split|codec)\n\
          pipeline overrides: window_frames= stride_frac= gop= mv_threshold= alpha= qp=\n\
          env: CF_ARTIFACTS, CF_VIDEOS, CF_FRAMES, CF_WORKERS, CF_BATCH,\n\
-         \x20    CF_BATCH_BUCKET, CF_PIPELINE, CF_LAUNCH, CF_NO_CACHE\n\
+         \x20    CF_BATCH_BUCKET, CF_PIPELINE, CF_LAUNCH, CF_BACKEND, CF_ROUTE,\n\
+         \x20    CF_NO_CACHE\n\
          docs: docs/OPERATIONS.md (every serving knob: default, env,\n\
          \x20    interactions, which figure measures it)\n\
          \x20    docs/ARCHITECTURE.md (layer map + a request's life)"

@@ -466,7 +466,7 @@ impl<'a> WindowEngine<'a> {
             .exec
             .execute(&request.model, &request.artifact, &request.inputs)
             .expect("prefill");
-        self.finish_window(pending, BatchOutcome { outputs, exec_s })
+        self.finish_window(pending, BatchOutcome { outputs, exec_s, quant_penalty: 0.0 })
     }
 
     /// Run everything *before* the window's LLM prefill launch:
@@ -528,7 +528,10 @@ impl<'a> WindowEngine<'a> {
     pub fn finish_window(&mut self, pending: PendingWindow, outcome: BatchOutcome) -> WindowResult {
         let PendingWindow { start, end, mut times, mut flops, mut flops_padded, pruned_ratio, path } =
             pending;
-        let BatchOutcome { outputs, exec_s } = outcome;
+        // The accuracy-proxy penalty of lossy backends is accounted at
+        // the serving layer (per-backend stats); the engine consumes
+        // the outputs as delivered.
+        let BatchOutcome { outputs, exec_s, quant_penalty: _ } = outcome;
         times.llm_prefill += exec_s;
         let (l, h, hd) = (self.spec.llm_layers, self.spec.llm_heads, self.spec.head_dim);
 

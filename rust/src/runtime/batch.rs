@@ -53,6 +53,12 @@ pub struct BatchOutcome {
     /// This request's share of the (possibly amortized) execution
     /// seconds.
     pub exec_s: f64,
+    /// Accuracy-proxy penalty surfaced by lossy backends: the summed
+    /// absolute output perturbation a quantized executor introduced
+    /// relative to the full-precision path (0 on exact backends). The
+    /// serving layer folds it into per-backend stats so the routing
+    /// policies' cost/accuracy trade is visible in reports.
+    pub quant_penalty: f64,
 }
 
 /// Marker alias for "an executor you can hand batches to". Every
@@ -71,9 +77,129 @@ pub fn execute_looping<E: Executor + ?Sized>(
     reqs.iter()
         .map(|r| {
             exec.execute(&r.model, &r.artifact, &r.inputs)
-                .map(|(outputs, exec_s)| BatchOutcome { outputs, exec_s })
+                .map(|(outputs, exec_s)| BatchOutcome { outputs, exec_s, quant_penalty: 0.0 })
         })
         .collect()
+}
+
+/// What a [`RoutePolicy`] sees about one formed batch at launch time.
+/// Every field is deterministic given the stream set and the serving
+/// knobs — routing must never consult measured wall time, or result
+/// digests would stop being reproducible per (policy, seed).
+#[derive(Clone, Copy, Debug)]
+pub struct RouteQuery {
+    /// Admission-time patch-budget bucket shared by the batch members
+    /// (the codec-estimated token mass, quantized by `batch_bucket=`).
+    pub bucket: usize,
+    /// Jobs fused into this batch.
+    pub jobs: usize,
+    /// Deadline slack in *arrival space*: the batch's deadline
+    /// (latest member arrival + one stride) minus the arrival of the
+    /// shard's current backlog tail. Positive means the shard is
+    /// caught up (the tail job is not yet due when this batch lands);
+    /// strongly negative means the backlog has run ahead of service.
+    /// A decode-free, clock-free proxy for EDF slack.
+    pub slack_s: f64,
+    /// Backends available on this shard (policies must return an index
+    /// `< backends`; with one backend every policy degenerates to 0).
+    pub backends: usize,
+}
+
+/// Picks the executor backend for one formed batch. Implementations
+/// may keep state (counters, running statistics) — one policy instance
+/// lives per shard and is consulted once per batch launch, in service
+/// order, so stateful decisions stay deterministic.
+pub trait RoutePolicy: Send {
+    fn route(&mut self, q: &RouteQuery) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// `route=fixed`: every batch to one backend (index 0 = the fast
+/// primary — the homogeneous baseline the fig24 sweep compares
+/// against).
+pub struct FixedRoute(pub usize);
+
+impl RoutePolicy for FixedRoute {
+    fn route(&mut self, q: &RouteQuery) -> usize {
+        self.0.min(q.backends.saturating_sub(1))
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+/// `route=static-split`: every `every`-th batch to the cheap backend,
+/// ignoring the codec signal entirely — the strawman that shows
+/// *which* batches are offloaded matters, not just how many.
+pub struct StaticSplit {
+    every: usize,
+    counter: usize,
+}
+
+impl StaticSplit {
+    pub fn new(every: usize) -> StaticSplit {
+        StaticSplit { every: every.max(1), counter: 0 }
+    }
+}
+
+impl RoutePolicy for StaticSplit {
+    fn route(&mut self, q: &RouteQuery) -> usize {
+        self.counter += 1;
+        usize::from(q.backends >= 2 && self.counter % self.every == 0)
+    }
+
+    fn name(&self) -> &'static str {
+        "static-split"
+    }
+}
+
+/// `route=codec`: the codec-guided policy. Sparse batches — whose
+/// admission-time patch-budget bucket is at or below the running
+/// median of the buckets seen so far — go to the cheap backend, as do
+/// batches with non-negative deadline slack (the shard is caught up,
+/// so the slower-but-cheaper silicon still makes the deadline). Dense
+/// *and* late batches stay on the fast primary. Both signals are
+/// free: the bucket was computed at admission from codec metadata,
+/// and the slack is arrival arithmetic.
+pub struct CodecRoute {
+    /// Buckets observed so far, kept sorted (running-median state).
+    seen: Vec<usize>,
+}
+
+impl CodecRoute {
+    pub fn new() -> CodecRoute {
+        CodecRoute { seen: Vec::new() }
+    }
+}
+
+impl RoutePolicy for CodecRoute {
+    fn route(&mut self, q: &RouteQuery) -> usize {
+        if q.backends < 2 {
+            return 0;
+        }
+        let pos = self.seen.binary_search(&q.bucket).unwrap_or_else(|e| e);
+        self.seen.insert(pos, q.bucket);
+        let median = self.seen[(self.seen.len() - 1) / 2];
+        let sparse = q.bucket <= median;
+        let slack = q.slack_s >= 0.0;
+        usize::from(sparse || slack)
+    }
+
+    fn name(&self) -> &'static str {
+        "codec"
+    }
+}
+
+/// Policy constructor for the `route=` knob (`fixed`, `static-split`,
+/// `codec`); unknown names fall back to `fixed` on backend 0, the
+/// homogeneous behaviour.
+pub fn route_policy(name: &str) -> Box<dyn RoutePolicy> {
+    match name {
+        "static-split" => Box::new(StaticSplit::new(2)),
+        "codec" => Box::new(CodecRoute::new()),
+        _ => Box::new(FixedRoute(0)),
+    }
 }
 
 /// Timing of one retired batch under the pipelined virtual-time model
@@ -147,6 +273,80 @@ impl PipelineClock {
         let exposed_prepare = prepare_s.min((prep_done - prev).max(0.0));
         let charged = done - prev.max(arrival_s);
         self.exec_done = done;
+        RetiredTiming { exec_start, done, exposed_prepare, charged }
+    }
+}
+
+/// [`PipelineClock`] generalized to a **heterogeneous backend pool**:
+/// one shared CPU-side prepare chain, one executor chain *per
+/// backend*, and a ring gate. A batch retired on backend `b` starts
+/// its stage at `max(prep_done, exec_done[b])`, so two batches routed
+/// to different backends overlap in virtual time exactly as their
+/// launch threads overlap physically. The frontier — the furthest any
+/// backend has progressed — is what a batch is charged against:
+/// cheap-backend work that completes under the fast backend's
+/// in-flight stage adds (almost) nothing to the schedule, which is
+/// precisely the capacity the codec routing policy harvests.
+///
+/// With one backend this is bit-for-bit [`PipelineClock`]: the
+/// frontier, the ring gate and the single chain coincide (unit-tested
+/// below), so the homogeneous paths keep their PR-3/PR-4 timing
+/// exactly.
+#[derive(Clone, Debug)]
+pub struct MultiPipelineClock {
+    /// Completion of the most recent prepare (shared CPU side).
+    pub prep_done: f64,
+    /// Completion of the most recently *retired* batch — the ring's
+    /// backpressure gate, whatever backend ran it.
+    pub ring_gate: f64,
+    /// Per-backend executor-chain completion times.
+    pub exec_done: Vec<f64>,
+}
+
+impl MultiPipelineClock {
+    pub fn new(backends: usize) -> MultiPipelineClock {
+        MultiPipelineClock {
+            prep_done: 0.0,
+            ring_gate: 0.0,
+            exec_done: vec![0.0; backends.max(1)],
+        }
+    }
+
+    /// Furthest virtual time any backend has progressed to.
+    pub fn frontier(&self) -> f64 {
+        self.exec_done.iter().fold(0.0, |a, &b| a.max(b))
+    }
+
+    /// Begin a batch's prepare phase — same gating as
+    /// [`PipelineClock::prepare`], with the ring gate standing in for
+    /// the single exec chain. Returns `(prep_start, prep_done)`.
+    pub fn prepare(&mut self, arrival_s: f64, prepare_s: f64) -> (f64, f64) {
+        let start = self.prep_done.max(arrival_s).max(self.ring_gate);
+        self.prep_done = start + prepare_s;
+        (start, self.prep_done)
+    }
+
+    /// Retire a batch on backend `backend`. The stage chains on that
+    /// backend's own queue; exposure and charge are measured against
+    /// the pool **frontier**, so prepare (or stage) time that fits
+    /// under *any* backend's in-flight work is hidden. Retirement must
+    /// be FIFO in issue order across the whole pool.
+    pub fn retire(
+        &mut self,
+        backend: usize,
+        prep_done: f64,
+        prepare_s: f64,
+        stage_s: f64,
+        arrival_s: f64,
+    ) -> RetiredTiming {
+        let frontier = self.frontier();
+        let prev = self.exec_done[backend];
+        let exec_start = prep_done.max(prev);
+        let done = exec_start + stage_s;
+        let exposed_prepare = prepare_s.min((prep_done - frontier).max(0.0));
+        let charged = (done - frontier.max(arrival_s)).max(0.0);
+        self.exec_done[backend] = done;
+        self.ring_gate = done;
         RetiredTiming { exec_start, done, exposed_prepare, charged }
     }
 }
@@ -286,6 +486,99 @@ mod tests {
         assert_eq!(t2.exposed_prepare, 1.0, "nothing in flight to hide behind");
         assert_eq!(t2.charged, 3.0, "prepare + stage, idle wait excluded");
         assert_eq!(t2.done, 103.0);
+    }
+
+    #[test]
+    fn multi_clock_with_one_backend_matches_pipeline_clock() {
+        // The homogeneous guarantee: every (prepare, retire) sequence
+        // produces identical timing on the two clocks, so the single-
+        // backend serving paths keep their PR-3/PR-4 schedules.
+        use crate::util::quick;
+        quick::check(0x0C10C, 40, |g| {
+            let mut a = PipelineClock::default();
+            let mut b = MultiPipelineClock::new(1);
+            let mut pending: Vec<(f64, f64, f64, f64)> = Vec::new();
+            for _ in 0..g.usize_in(1, 12) {
+                let arrival = g.usize_in(0, 8) as f64;
+                let prep = g.usize_in(0, 5) as f64 * 0.5;
+                let stage = g.usize_in(0, 6) as f64 * 0.5;
+                let (sa, da) = a.prepare(arrival, prep);
+                let (sb, db) = b.prepare(arrival, prep);
+                assert_eq!((sa, da), (sb, db));
+                pending.push((da, prep, stage, arrival));
+                // Depth-1 ring: retire the oldest once one is in flight.
+                if pending.len() > 1 {
+                    let (pd, p, s, at) = pending.remove(0);
+                    let ta = a.retire(pd, p, s, at);
+                    let tb = b.retire(0, pd, p, s, at);
+                    assert_eq!(ta.exec_start, tb.exec_start);
+                    assert_eq!(ta.done, tb.done);
+                    assert_eq!(ta.exposed_prepare, tb.exposed_prepare);
+                    assert_eq!(ta.charged, tb.charged);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn multi_clock_overlaps_backends_and_charges_against_the_frontier() {
+        let mut c = MultiPipelineClock::new(2);
+        // Batch 0 -> fast backend: prepare 1s, stage 10s.
+        let (_, d0) = c.prepare(0.0, 1.0);
+        // Batch 1 -> quant backend: prepared under batch 0's flight.
+        let (_, d1) = c.prepare(0.0, 1.0);
+        let t0 = c.retire(0, d0, 1.0, 10.0, 0.0);
+        assert_eq!(t0.done, 11.0); // 1s prepare + 10s stage
+        // Batch 1 runs on its own chain: starts right after its
+        // prepare, not behind the fast backend's stage…
+        let t1 = c.retire(1, d1, 1.0, 4.0, 0.0);
+        assert_eq!(t1.exec_start, 2.0);
+        assert_eq!(t1.done, 6.0);
+        // …and finishes under the frontier (11.0), charging nothing.
+        assert_eq!(t1.charged, 0.0, "work hidden under the fast backend is free");
+        assert_eq!(c.frontier(), 11.0);
+        // A third batch on the quant chain queues behind batch 1 only.
+        let (_, d2) = c.prepare(0.0, 1.0);
+        let t2 = c.retire(1, d2, 1.0, 4.0, 0.0);
+        assert!(t2.exec_start >= 6.0 && t2.done <= c.frontier() + 4.0);
+    }
+
+    #[test]
+    fn route_policies_are_deterministic_and_respect_backend_count() {
+        let q = |bucket: usize, slack_s: f64, backends: usize| RouteQuery {
+            bucket,
+            jobs: 2,
+            slack_s,
+            backends,
+        };
+        // fixed: always its backend, clamped to the pool.
+        let mut fixed = FixedRoute(0);
+        assert_eq!(fixed.route(&q(9, -5.0, 2)), 0);
+        assert_eq!(fixed.name(), "fixed");
+        let mut pinned = FixedRoute(7);
+        assert_eq!(pinned.route(&q(0, 0.0, 2)), 1, "clamped to the pool");
+        // static-split: every 2nd batch offloads, whatever the signal.
+        let mut split = StaticSplit::new(2);
+        let picks: Vec<usize> = (0..4).map(|_| split.route(&q(3, -1.0, 2))).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+        assert_eq!(split.name(), "static-split");
+        // codec: sparse (<= running median) or slack batches offload;
+        // dense late batches stay on the fast backend.
+        let mut codec = CodecRoute::new();
+        assert_eq!(codec.route(&q(4, -1.0, 2)), 1, "first batch is its own median");
+        assert_eq!(codec.route(&q(9, -1.0, 2)), 0, "dense + late stays fast");
+        assert_eq!(codec.route(&q(9, 1.0, 2)), 1, "slack overrides density");
+        assert_eq!(codec.route(&q(2, -1.0, 2)), 1, "below median offloads");
+        assert_eq!(codec.name(), "codec");
+        // One backend: every policy degenerates to 0.
+        let mut codec1 = CodecRoute::new();
+        assert_eq!(codec1.route(&q(0, 10.0, 1)), 0);
+        assert_eq!(StaticSplit::new(1).route(&q(0, 0.0, 1)), 0);
+        // The knob constructor maps names (unknowns fall back to fixed).
+        assert_eq!(route_policy("codec").name(), "codec");
+        assert_eq!(route_policy("static-split").name(), "static-split");
+        assert_eq!(route_policy("fixed").name(), "fixed");
+        assert_eq!(route_policy("bogus").name(), "fixed");
     }
 
     #[test]

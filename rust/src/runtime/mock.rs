@@ -311,10 +311,99 @@ impl Executor for MockEngine {
             occupy_wall(self.wall_delay_s * Self::work_units(artifact) * amortized);
             for i in idxs {
                 let out = self.eval(&reqs[i].model, &reqs[i].artifact, &reqs[i].inputs)?;
-                outcomes[i] = Some(BatchOutcome { outputs: out, exec_s: per_req_s });
+                outcomes[i] =
+                    Some(BatchOutcome { outputs: out, exec_s: per_req_s, quant_penalty: 0.0 });
             }
         }
         Ok(outcomes.into_iter().map(|o| o.expect("every request priced")).collect())
+    }
+}
+
+/// Default quantization grid of [`QuantEngine`]: coarse enough that
+/// mock activations (|x| ~ 0.1) visibly move, fine enough that their
+/// ordering mostly survives — the "int8-ish" regime.
+pub const QUANT_STEP: f32 = 1.0 / 32.0;
+
+/// Quantized-CPU-flavored executor backend: wraps **any** inner
+/// [`Executor`] with a distinct cost model — every reported virtual
+/// execution second is scaled by `cost_ratio` (cheaper silicon) — and
+/// an accuracy proxy: every f32 output is snapped to a fixed grid
+/// (`step`), with the summed absolute perturbation surfaced per
+/// request as [`BatchOutcome::quant_penalty`]. Outputs stay
+/// deterministic functions of the inputs, just *different* ones than
+/// the full-precision backend produces, so result digests distinguish
+/// quant-served windows while staying reproducible per (policy, seed).
+///
+/// Penalty scope: only the **batch** path surfaces the perturbation
+/// (solo `execute` calls have no penalty channel in their return
+/// type), so a `backend=quant` run's reported `accuracy_penalty`
+/// covers its fused prefills — solo-call quantization still happens
+/// and still shows in the digests, it just is not separately summed.
+///
+/// This is the second backend of the heterogeneous pool
+/// ([`crate::runtime::replica::BackendSet`]): the `ExecutorFactory`
+/// default builds it by wrapping the factory's primary product, and
+/// [`crate::runtime::replica::MockReplicaFactory`] additionally scales
+/// the inner mock's wall occupancy so the cheap backend is cheap in
+/// measured time too.
+pub struct QuantEngine {
+    inner: Box<dyn Executor>,
+    /// Multiplier on the inner executor's reported virtual seconds
+    /// (clamped to [0, 1]: the quant backend is never *slower*).
+    pub cost_ratio: f64,
+    /// Output quantization step.
+    pub step: f32,
+}
+
+impl QuantEngine {
+    pub fn new(inner: Box<dyn Executor>, cost_ratio: f64) -> QuantEngine {
+        QuantEngine { inner, cost_ratio: cost_ratio.clamp(0.0, 1.0), step: QUANT_STEP }
+    }
+
+    /// Snap every f32 output to the grid; returns the summed absolute
+    /// perturbation (the surfaced accuracy-proxy penalty). Integer
+    /// tensors (token ids) pass through untouched.
+    fn quantize(&self, outputs: &mut [Tensor]) -> f64 {
+        let mut err = 0.0f64;
+        for t in outputs.iter_mut() {
+            if let Tensor::F32 { data, .. } = t {
+                for v in data.iter_mut() {
+                    let q = (*v / self.step).round() * self.step;
+                    err += (q - *v).abs() as f64;
+                    *v = q;
+                }
+            }
+        }
+        err
+    }
+}
+
+impl Executor for QuantEngine {
+    fn execute(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64), EngineError> {
+        let (mut outputs, exec_s) = self.inner.execute(model, artifact, inputs)?;
+        self.quantize(&mut outputs);
+        Ok((outputs, exec_s * self.cost_ratio))
+    }
+
+    fn spec(&self, model: &str) -> Option<ModelSpec> {
+        self.inner.spec(model)
+    }
+
+    /// Delegates to the inner executor's batching (fusion and
+    /// amortization are the inner backend's business), then applies
+    /// the quant cost model and surfaces the per-request penalty.
+    fn execute_batch(&self, reqs: &[BatchRequest]) -> Result<Vec<BatchOutcome>, EngineError> {
+        let mut outcomes = self.inner.execute_batch(reqs)?;
+        for o in &mut outcomes {
+            o.quant_penalty += self.quantize(&mut o.outputs);
+            o.exec_s *= self.cost_ratio;
+        }
+        Ok(outcomes)
     }
 }
 
@@ -405,6 +494,71 @@ mod tests {
             .unwrap();
         assert_eq!(batch[0].outputs, out);
         assert_eq!(batch[0].exec_s, secs);
+    }
+
+    #[test]
+    fn quant_engine_is_cheaper_lossy_and_deterministic() {
+        let mut fast = MockEngine::new("m");
+        fast.delay_s = 1e-3;
+        let mut inner = MockEngine::new("m");
+        inner.delay_s = 1e-3;
+        let quant = QuantEngine::new(Box::new(inner), 0.4);
+        assert_eq!(quant.spec("m").unwrap().vocab, fast.spec("m").unwrap().vocab);
+
+        let inputs = vec![Tensor::f32(&[2], vec![0.3, -0.7])];
+        let (full, full_s) = fast.execute("m", "prefill_full_t96", &inputs).unwrap();
+        let (q, q_s) = quant.execute("m", "prefill_full_t96", &inputs).unwrap();
+        // Distinct cost model: strictly cheaper virtual seconds.
+        assert!((q_s - 0.4 * full_s).abs() < 1e-12, "{q_s} != 0.4 * {full_s}");
+        // Lossy: outputs move off the full-precision values, onto the
+        // grid, deterministically.
+        assert_ne!(q, full, "quantization must perturb f32 outputs");
+        for t in &q {
+            if let Tensor::F32 { data, .. } = t {
+                for &v in data {
+                    let snapped = (v / QUANT_STEP).round() * QUANT_STEP;
+                    assert_eq!(v, snapped, "value {v} off the quant grid");
+                }
+            }
+        }
+        let (q2, _) = quant.execute("m", "prefill_full_t96", &inputs).unwrap();
+        assert_eq!(q, q2, "quantized outputs are deterministic");
+    }
+
+    #[test]
+    fn quant_engine_batches_surface_the_accuracy_penalty() {
+        let mut inner = MockEngine::new("m");
+        inner.delay_s = 1e-3;
+        let quant = QuantEngine::new(Box::new(inner), 0.5);
+        let mut exact = MockEngine::new("m");
+        exact.delay_s = 1e-3;
+        let req = |x: f32| BatchRequest {
+            model: "m".to_string(),
+            artifact: "prefill_full_t96".to_string(),
+            inputs: vec![Tensor::f32(&[1], vec![x])],
+        };
+        let reqs = vec![req(1.0), req(2.0)];
+        let lossy = quant.execute_batch(&reqs).unwrap();
+        let full = exact.execute_batch(&reqs).unwrap();
+        for (l, f) in lossy.iter().zip(&full) {
+            assert!(l.quant_penalty > 0.0, "penalty surfaced per request");
+            assert_eq!(f.quant_penalty, 0.0, "exact backend reports none");
+            assert!((l.exec_s - 0.5 * f.exec_s).abs() < 1e-12, "amortization preserved");
+            assert_ne!(l.outputs, f.outputs);
+        }
+        // The surfaced penalty equals the actual perturbation.
+        let mut recompute = 0.0f64;
+        for (l, f) in lossy.iter().zip(&full) {
+            for (lt, ft) in l.outputs.iter().zip(&f.outputs) {
+                if let (Tensor::F32 { data: ld, .. }, Tensor::F32 { data: fd, .. }) = (lt, ft) {
+                    for (a, b) in ld.iter().zip(fd) {
+                        recompute += (a - b).abs() as f64;
+                    }
+                }
+            }
+        }
+        let surfaced: f64 = lossy.iter().map(|o| o.quant_penalty).sum();
+        assert!((surfaced - recompute).abs() < 1e-9, "{surfaced} vs {recompute}");
     }
 
     #[test]

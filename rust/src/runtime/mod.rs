@@ -12,12 +12,16 @@
 //!   device-resident parameter buffers uploaded once and passed by
 //!   reference per call (`execute_b`), per-family execution stats;
 //! * [`batch`] — cross-stream batched execution: `BatchRequest` /
-//!   `execute_batch` API with a looping fallback, plus batch-formation
-//!   accounting ([`batch::BatchStats`]);
+//!   `execute_batch` API with a looping fallback, batch-formation
+//!   accounting ([`batch::BatchStats`]), and the per-batch backend
+//!   routing policies ([`batch::RoutePolicy`]: `fixed`,
+//!   `static-split`, `codec`);
 //! * [`flops`] — analytic FLOP accounting (Fig 13 / Fig 6);
-//! * [`mock`] — deterministic executor for tests without artifacts;
-//! * [`replica`] — executor replica factories for the sharded serving
-//!   layer (one engine per shard, built on the shard's own thread).
+//! * [`mock`] — deterministic executor for tests without artifacts,
+//!   plus the quantized-CPU backend flavour ([`mock::QuantEngine`]);
+//! * [`replica`] — executor replica factories and the heterogeneous
+//!   per-shard backend pool ([`replica::BackendSet`]: N named
+//!   backends, each on its own launch thread).
 
 pub mod batch;
 pub mod engine;
@@ -28,8 +32,14 @@ pub mod replica;
 pub mod tensor;
 pub mod weights;
 
-pub use batch::{BatchOutcome, BatchRequest, BatchStats, BatchedExecutor};
+pub use batch::{
+    route_policy, BatchOutcome, BatchRequest, BatchStats, BatchedExecutor, MultiPipelineClock,
+    RoutePolicy, RouteQuery,
+};
 pub use engine::{Engine, ExecStats};
 pub use manifest::{ArtifactSpec, Manifest, ModelSpec};
-pub use replica::{EngineReplicaFactory, ExecutorFactory, MockReplicaFactory};
+pub use replica::{
+    backend_kinds, Backend, BackendKind, BackendSet, EngineReplicaFactory, ExecutorFactory,
+    MockReplicaFactory,
+};
 pub use tensor::Tensor;

@@ -33,8 +33,52 @@ use crate::util::threadpool::{JobHandle, Lane};
 use super::batch::{BatchOutcome, BatchRequest};
 use super::engine::{Engine, EngineError};
 use super::manifest::ModelSpec;
-use super::mock::{Executor, MockEngine};
+use super::mock::{Executor, MockEngine, QuantEngine};
 use super::tensor::Tensor;
+
+/// The flavour of one backend in a shard's heterogeneous pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The full-precision primary (exact outputs, full cost model).
+    Fast,
+    /// The quantized-CPU flavour ([`QuantEngine`]): cheaper per-token
+    /// virtual + wall cost, lossy outputs with the perturbation
+    /// surfaced as an accuracy-proxy penalty.
+    Quant,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Fast => "fast",
+            BackendKind::Quant => "quant",
+        }
+    }
+}
+
+/// Backend pool selection for the `backend=` knob: `fast` (the
+/// homogeneous default), `quant` (cheap backend only), `hetero` (both,
+/// routed per batch by the `route=` policy). Unknown names fall back
+/// to `fast`; the config parser rejects them before they get here.
+pub fn backend_kinds(backend: &str) -> Vec<BackendKind> {
+    match backend {
+        "quant" => vec![BackendKind::Quant],
+        "hetero" => vec![BackendKind::Fast, BackendKind::Quant],
+        _ => vec![BackendKind::Fast],
+    }
+}
+
+/// One constructed backend, ready to move onto its launch lane.
+pub struct Backend {
+    pub kind: BackendKind,
+    pub exec: Box<dyn Executor>,
+}
+
+impl Backend {
+    pub fn new(kind: BackendKind, exec: Box<dyn Executor>) -> Backend {
+        Backend { kind, exec }
+    }
+}
 
 /// Builds one executor replica per shard. Implementations must be
 /// cheap to share (`Send + Sync`); `build` is called from the shard's
@@ -57,6 +101,20 @@ use super::tensor::Tensor;
 /// ```
 pub trait ExecutorFactory: Send + Sync {
     fn build(&self) -> Box<dyn Executor>;
+
+    /// Build one backend of a heterogeneous pool. The default serves
+    /// the `Fast` flavour straight from [`ExecutorFactory::build`] and
+    /// derives the `Quant` flavour by wrapping a fresh primary in a
+    /// [`QuantEngine`] at `quant_ratio` of its virtual cost — correct
+    /// for any factory; factories with a genuinely cheaper construction
+    /// (e.g. [`MockReplicaFactory`], which also scales the mock's wall
+    /// occupancy) override it.
+    fn build_backend(&self, kind: BackendKind, quant_ratio: f64) -> Box<dyn Executor> {
+        match kind {
+            BackendKind::Fast => self.build(),
+            BackendKind::Quant => Box::new(QuantEngine::new(self.build(), quant_ratio)),
+        }
+    }
 
     /// Human-readable description for serving reports.
     fn describe(&self) -> String {
@@ -121,6 +179,23 @@ impl ExecutorFactory for MockReplicaFactory {
         Box::new(m)
     }
 
+    /// Mock quant backends are cheap in *wall* time too: the inner
+    /// mock's occupancy is scaled by the ratio at construction (the
+    /// [`QuantEngine`] wrapper can only scale the reported virtual
+    /// seconds — the wall spin happens inside the inner executor).
+    fn build_backend(&self, kind: BackendKind, quant_ratio: f64) -> Box<dyn Executor> {
+        match kind {
+            BackendKind::Fast => self.build(),
+            BackendKind::Quant => {
+                let ratio = quant_ratio.clamp(0.0, 1.0);
+                let mut m = MockEngine::new(&self.model);
+                m.delay_s = self.delay_s;
+                m.wall_delay_s = self.wall_delay_s * ratio;
+                Box::new(QuantEngine::new(Box::new(m), ratio))
+            }
+        }
+    }
+
     fn describe(&self) -> String {
         format!("mock replica ({}, {:.0}us/work-unit)", self.model, self.delay_s * 1e6)
     }
@@ -169,7 +244,15 @@ impl LaunchedExecutor {
     /// Move `exec` onto a new launch thread serving a pipeline of
     /// `depth` in-flight batches (bounded queue of `depth + 1`).
     pub fn new(exec: Box<dyn Executor>, depth: usize) -> LaunchedExecutor {
-        LaunchedExecutor { lane: Lane::new("cf-launch", depth.max(1) + 1, exec) }
+        Self::named("cf-launch", exec, depth)
+    }
+
+    /// [`LaunchedExecutor::new`] with an explicit thread name — the
+    /// heterogeneous pool names each backend's lane after its flavour
+    /// (`cf-launch-fast`, `cf-launch-quant`) so stack traces say which
+    /// backend faulted.
+    pub fn named(name: &str, exec: Box<dyn Executor>, depth: usize) -> LaunchedExecutor {
+        LaunchedExecutor { lane: Lane::new(name, depth.max(1) + 1, exec) }
     }
 
     /// Enqueue a prepared batch for execution on the launch thread and
@@ -228,6 +311,71 @@ impl Executor for LaunchedExecutor {
             Ok(run) => run.outcomes,
             Err(msg) => panic!("launch thread panicked: {msg}"),
         }
+    }
+}
+
+/// A shard's **heterogeneous backend pool**: N named backends, each
+/// moved onto its *own* launch thread ([`LaunchedExecutor`]) so two
+/// backends can physically execute at the same time. Index 0 is the
+/// **primary** — the handle sessions use for solo calls (ViT,
+/// embeddings, decode steps), preserving PR-4's single-device-queue
+/// semantics on that backend — while fused prefill batches are routed
+/// per batch to any member by the shard's
+/// [`RoutePolicy`](crate::runtime::batch::RoutePolicy).
+///
+/// Each backend keeps its own FIFO lane (per-backend launch order is
+/// the order batches were routed to it); the *shard* retires batches
+/// in global issue order, so KV settlement stays exactly as FIFO as
+/// the homogeneous path. A pool of one is bit-for-bit the PR-4
+/// `LaunchedExecutor` flow.
+pub struct BackendSet {
+    lanes: Vec<(BackendKind, LaunchedExecutor)>,
+}
+
+impl BackendSet {
+    /// Move every backend onto its own launch thread (bounded lanes of
+    /// `depth + 1`, same backpressure as the homogeneous path).
+    pub fn launch(backends: Vec<Backend>, depth: usize) -> BackendSet {
+        assert!(!backends.is_empty(), "a backend pool needs at least one member");
+        let lanes = backends
+            .into_iter()
+            .map(|b| {
+                let name = format!("cf-launch-{}", b.kind.name());
+                (b.kind, LaunchedExecutor::named(&name, b.exec, depth))
+            })
+            .collect();
+        BackendSet { lanes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    pub fn kind(&self, backend: usize) -> BackendKind {
+        self.lanes[backend].0
+    }
+
+    /// The primary backend's handle — what the shard hands its
+    /// sessions as `&dyn Executor`.
+    pub fn primary(&self) -> &LaunchedExecutor {
+        &self.lanes[0].1
+    }
+
+    /// Backend `backend`'s handle, for synchronous (inline-semantics)
+    /// routed launches.
+    pub fn executor(&self, backend: usize) -> &LaunchedExecutor {
+        &self.lanes[backend].1
+    }
+
+    /// Enqueue a prepared batch on backend `backend`'s launch thread
+    /// and return immediately with the ticket
+    /// ([`LaunchedExecutor::submit_batch`]).
+    pub fn submit(&self, backend: usize, reqs: Vec<BatchRequest>) -> JobHandle<LaunchedBatch> {
+        self.lanes[backend].1.submit_batch(reqs)
     }
 }
 
@@ -302,6 +450,71 @@ mod tests {
         // Same outputs as the synchronous path.
         let sync = launched.execute_batch(&reqs).unwrap();
         assert_eq!(sync[0].outputs, outcomes[0].outputs);
+    }
+
+    #[test]
+    fn backend_kinds_map_the_knob_values() {
+        assert_eq!(backend_kinds("fast"), vec![BackendKind::Fast]);
+        assert_eq!(backend_kinds("quant"), vec![BackendKind::Quant]);
+        assert_eq!(backend_kinds("hetero"), vec![BackendKind::Fast, BackendKind::Quant]);
+        assert_eq!(backend_kinds("???"), vec![BackendKind::Fast], "unknowns fall back");
+        assert_eq!(BackendKind::Fast.name(), "fast");
+        assert_eq!(BackendKind::Quant.name(), "quant");
+    }
+
+    #[test]
+    fn factory_quant_backend_is_cheaper_and_lossy() {
+        let f = MockReplicaFactory::new("m", 1e-3);
+        let fast = f.build_backend(BackendKind::Fast, 0.4);
+        let quant = f.build_backend(BackendKind::Quant, 0.4);
+        let inputs = vec![Tensor::f32(&[1], vec![0.25])];
+        let (out_f, s_f) = fast.execute("m", "prefill_full_t96", &inputs).unwrap();
+        let (out_q, s_q) = quant.execute("m", "prefill_full_t96", &inputs).unwrap();
+        assert!(s_q < s_f, "quant {s_q} !< fast {s_f}");
+        assert_ne!(out_q, out_f, "quant outputs are perturbed");
+        // Deterministic per backend: a second quant replica agrees.
+        let quant2 = f.build_backend(BackendKind::Quant, 0.4);
+        let (out_q2, s_q2) = quant2.execute("m", "prefill_full_t96", &inputs).unwrap();
+        assert_eq!(out_q, out_q2);
+        assert_eq!(s_q, s_q2);
+    }
+
+    #[test]
+    fn backend_set_runs_both_lanes_concurrently_with_fifo_per_backend() {
+        let f = MockReplicaFactory::new("m", 1e-4);
+        let set = BackendSet::launch(
+            vec![
+                Backend::new(BackendKind::Fast, f.build_backend(BackendKind::Fast, 0.5)),
+                Backend::new(BackendKind::Quant, f.build_backend(BackendKind::Quant, 0.5)),
+            ],
+            2,
+        );
+        assert_eq!(set.len(), 2);
+        assert!(!set.is_empty());
+        assert_eq!(set.kind(0), BackendKind::Fast);
+        assert_eq!(set.kind(1), BackendKind::Quant);
+
+        let req = |x: f32| BatchRequest {
+            model: "m".to_string(),
+            artifact: "prefill_full_t96".to_string(),
+            inputs: vec![Tensor::f32(&[1], vec![x])],
+        };
+        // Two batches in flight on *different* lanes at once; both
+        // tickets complete, each with its backend's pricing.
+        let t_fast = set.submit(0, vec![req(1.0)]);
+        let t_quant = set.submit(1, vec![req(1.0)]);
+        let fast = t_fast.join().expect("fast lane healthy").outcomes.expect("fast batch");
+        let quant = t_quant.join().expect("quant lane healthy").outcomes.expect("quant batch");
+        assert!(quant[0].exec_s < fast[0].exec_s);
+        assert!(quant[0].quant_penalty > 0.0);
+        assert_eq!(fast[0].quant_penalty, 0.0);
+        assert_ne!(fast[0].outputs, quant[0].outputs);
+        // The primary handle serves solo calls (device-queue FIFO).
+        assert_eq!(set.primary().spec("m").unwrap().name, "m");
+        // Synchronous routed launch matches the async ticket's result.
+        let sync = set.executor(1).execute_batch(&[req(1.0)]).unwrap();
+        assert_eq!(sync[0].outputs, quant[0].outputs);
+        assert_eq!(sync[0].exec_s, quant[0].exec_s);
     }
 
     #[test]

@@ -529,6 +529,179 @@ fn panic_inside_execute_batch_is_contained_to_its_shard() {
 }
 
 #[test]
+fn cross_backend_determinism_route_codec_diverges_only_on_quant_streams() {
+    // The heterogeneous-backend contract end to end: for the same
+    // stream set, `route=fixed` (fast-only) and `route=codec` (batches
+    // routed across the fast + quant pool) serve identical window
+    // sets, per-stream decoded-id/KV digests reproduce exactly per
+    // (policy, seed), and the two policies' digests differ exactly on
+    // the streams the quant backend touched (quantization is a
+    // per-stream blast radius: a quant-served window's KV feeds every
+    // later window of its stream).
+    let clips = clips(8);
+    let run = |route: &str| {
+        let mut cfg = sharded_cfg(2);
+        cfg.max_batch = 4;
+        cfg.admit_wave = 8;
+        cfg.pipeline_depth = 2;
+        // Stealing is wall-clock-racy across the two shard workers and
+        // routing state is per shard, so pin placement to the hash:
+        // run-to-run determinism is exactly what this test asserts.
+        cfg.steal = false;
+        assert!(cfg.set("backend", "hetero"));
+        assert!(cfg.set("route", route));
+        Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+    };
+    let fixed = run("fixed");
+    assert!(fixed.quant_streams.is_empty(), "fixed-fast never offloads");
+    let codec_a = run("codec");
+    let codec_b = run("codec");
+    assert_eq!(codec_a.result_digest, codec_b.result_digest, "deterministic per policy");
+    assert_eq!(codec_a.stream_digests, codec_b.stream_digests);
+    assert_eq!(codec_a.quant_streams, codec_b.quant_streams);
+    assert!(!codec_a.quant_streams.is_empty(), "codec routing used the quant backend");
+
+    // Same served window sets, stream by stream.
+    assert_eq!(codec_a.merged.windows(), fixed.merged.windows());
+    assert_eq!(codec_a.merged.per_stream, fixed.merged.per_stream);
+    assert_eq!(codec_a.stream_digests.len(), fixed.stream_digests.len());
+
+    // Digest divergence is exactly the quant-served stream set.
+    for (stream, digest) in &fixed.stream_digests {
+        if codec_a.quant_streams.contains(stream) {
+            assert_ne!(
+                codec_a.stream_digests[stream], *digest,
+                "quant-served stream {stream} must carry the quantization"
+            );
+        } else {
+            assert_eq!(
+                codec_a.stream_digests[stream], *digest,
+                "stream {stream} untouched by quant must match fixed-fast bit-for-bit"
+            );
+        }
+    }
+
+    // The per-backend stats partition the work and surface the trade.
+    assert_eq!(codec_a.backends.len(), 2);
+    assert_eq!(codec_a.backends[0].name, "fast");
+    assert_eq!(codec_a.backends[1].name, "quant");
+    assert_eq!(
+        codec_a.backends[0].jobs + codec_a.backends[1].jobs,
+        codec_a.merged.windows()
+    );
+    assert!(codec_a.backends[1].accuracy_penalty > 0.0, "lossy backend surfaces a penalty");
+    assert_eq!(codec_a.backends[0].accuracy_penalty, 0.0, "exact backend surfaces none");
+}
+
+#[test]
+fn quant_backend_launch_panic_is_contained_with_fast_backend_windows_settled() {
+    // A fused launch that panics on ONE backend's launch thread (the
+    // quant lane) must take down only its own shard: the fault crosses
+    // back over that lane's bounded channel and re-raises on the shard
+    // thread at retire — after the windows already retired through the
+    // fast backend's lane settled their KV in FIFO order. The healthy
+    // shard runs the same heterogeneous pool (fast + quant, codec
+    // routing) under KV pressure and serves every remaining stream to
+    // completion on both backends.
+    use codecflow::runtime::batch::{BatchOutcome, BatchRequest};
+    use codecflow::runtime::engine::EngineError;
+    use codecflow::runtime::manifest::ModelSpec;
+    use codecflow::runtime::mock::{Executor, MockEngine, QuantEngine};
+    use codecflow::runtime::replica::BackendKind;
+    use codecflow::runtime::tensor::Tensor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct PanicsOnBatch {
+        inner: MockEngine,
+    }
+    impl Executor for PanicsOnBatch {
+        fn execute(
+            &self,
+            model: &str,
+            artifact: &str,
+            inputs: &[Tensor],
+        ) -> Result<(Vec<Tensor>, f64), EngineError> {
+            self.inner.execute(model, artifact, inputs)
+        }
+        fn spec(&self, model: &str) -> Option<ModelSpec> {
+            self.inner.spec(model)
+        }
+        fn execute_batch(
+            &self,
+            _reqs: &[BatchRequest],
+        ) -> Result<Vec<BatchOutcome>, EngineError> {
+            panic!("quantized kernel fault on the quant backend's launch thread");
+        }
+    }
+    struct FaultyQuantFactory {
+        quant_builds: AtomicUsize,
+    }
+    impl ExecutorFactory for FaultyQuantFactory {
+        fn build(&self) -> Box<dyn Executor> {
+            Box::new(MockEngine::new("m"))
+        }
+        fn build_backend(&self, kind: BackendKind, quant_ratio: f64) -> Box<dyn Executor> {
+            match kind {
+                BackendKind::Fast => self.build(),
+                BackendKind::Quant => {
+                    if self.quant_builds.fetch_add(1, Ordering::SeqCst) == 0 {
+                        // Shard 0's quant lane faults on its first
+                        // fused launch.
+                        Box::new(PanicsOnBatch { inner: MockEngine::new("m") })
+                    } else {
+                        Box::new(QuantEngine::new(self.build(), quant_ratio))
+                    }
+                }
+            }
+        }
+    }
+
+    let mut cfg = sharded_cfg(2);
+    cfg.workers = 1; // deterministic: shard 0 builds first and faults
+    cfg.max_batch = 4;
+    cfg.pipeline_depth = 2;
+    assert!(cfg.set("backend", "hetero"));
+    assert!(cfg.set("route", "codec"));
+    // Starve the KV budget so the healthy shard must keep settling
+    // (and evicting from) its pool throughout.
+    cfg.kv_budget_bytes = 2 << 20;
+    // One stream admitted per wave: the faulty shard takes exactly one
+    // stream down with it, everything else survives.
+    cfg.admit_wave = 1;
+    cfg.steal = true;
+    let report = Dispatcher::new("m", cfg).run(
+        Arc::new(FaultyQuantFactory { quant_builds: AtomicUsize::new(0) }),
+        &clips(4),
+        Variant::CodecFlow,
+        2.0,
+    );
+    assert_eq!(report.shards.len(), 1, "only the healthy shard reports");
+    assert_eq!(
+        report.merged.per_stream.len(),
+        3,
+        "the healthy shard serves every stream the dead one hadn't claimed"
+    );
+    assert_eq!(report.merged.windows(), 9);
+    for count in report.merged.per_stream.values() {
+        assert_eq!(*count, 3, "surviving streams fully served");
+    }
+    assert!(
+        report.merged.kv_evictions > 0,
+        "healthy shard kept settling its starved KV pool"
+    );
+    // The healthy shard's pool really is heterogeneous and its quant
+    // lane is sound (only shard 0's faulted): quant-routed windows
+    // settled, and every served window retired through exactly one
+    // backend. (With admit_wave=1 the healthy shard's singleton
+    // batches are all sparse-or-slack, so codec routing may offload
+    // every one of them — the fast lane still serves the solo calls.)
+    assert_eq!(report.backends.len(), 2);
+    assert!(report.backends[1].jobs > 0, "quant backend settled windows");
+    assert_eq!(report.backends[0].jobs + report.backends[1].jobs, report.merged.windows());
+    assert!(!report.quant_streams.is_empty());
+}
+
+#[test]
 fn shard_worker_panic_is_contained() {
     // A factory whose replicas panic for one shard must not poison the
     // dispatch: the other shards' reports still come back.
