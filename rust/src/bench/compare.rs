@@ -1,0 +1,433 @@
+//! Baseline-vs-current diffing of [`BenchRecord`]s: per-metric
+//! thresholds with higher/lower-better direction semantics, digest
+//! equality as a hard determinism check, and a human-readable report.
+//!
+//! Semantics (all covered by `tests/bench_compare.rs`):
+//! * change is signed percent relative to the baseline; the *bad*
+//!   direction is a drop for higher-better metrics and a rise for
+//!   lower-better ones.
+//! * a metric regresses iff it is gated and its bad change strictly
+//!   exceeds its threshold — landing exactly on the threshold passes.
+//! * ungated (`gate: false`) metrics are reported as info, never fail.
+//! * a missing metric or digest on either side, a config mismatch, a
+//!   figure mismatch, or a schema-version mismatch is an **error**
+//!   (exit 2 from the CLI), never a silent pass.
+//! * any digest *value* difference is a regression regardless of every
+//!   threshold — determinism is not negotiable.
+//! * a `bootstrap: true` baseline (committed seed that was never
+//!   regenerated) is accepted: current values are reported, nothing is
+//!   gated, and the report says how to arm the gate.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::record::{BenchRecord, Direction, Metric};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    Improved,
+    Regressed,
+    Info,
+}
+
+impl Status {
+    fn tag(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Improved => "improved",
+            Status::Regressed => "REGRESSED",
+            Status::Info => "info",
+        }
+    }
+}
+
+/// One metric's baseline-vs-current outcome.
+#[derive(Clone, Debug)]
+pub struct MetricDelta {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Signed percent change relative to the baseline (`+` = value
+    /// rose). `±inf` when the baseline is 0 and the current is not.
+    pub change_pct: f64,
+    /// The threshold that applied (per-metric override or the CLI
+    /// default).
+    pub threshold_pct: f64,
+    pub direction: Direction,
+    pub gate: bool,
+    pub status: Status,
+}
+
+/// One figure's comparison outcome.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub fig: String,
+    pub baseline_rev: String,
+    pub current_rev: String,
+    /// The baseline was an unarmed bootstrap seed: nothing was gated.
+    pub bootstrap: bool,
+    pub deltas: Vec<MetricDelta>,
+    pub digests_checked: usize,
+    /// (name, baseline digest, current digest) for every mismatch.
+    pub digest_mismatches: Vec<(String, u64, u64)>,
+}
+
+impl CompareReport {
+    /// True iff the PR gate must fail: a gated metric regressed past
+    /// its threshold, or any digest moved.
+    pub fn regressed(&self) -> bool {
+        !self.digest_mismatches.is_empty()
+            || self.deltas.iter().any(|d| d.status == Status::Regressed)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "== {} (baseline rev {} -> current rev {}) ==",
+            self.fig, self.baseline_rev, self.current_rev
+        );
+        if self.bootstrap {
+            let _ = writeln!(
+                out,
+                "  baseline is an unarmed bootstrap seed — current values recorded, \
+                 nothing gated;\n  arm the gate with `codecflow bench run \
+                 --update-baselines` and commit baselines/."
+            );
+        }
+        for d in &self.deltas {
+            let _ = writeln!(
+                out,
+                "  [{:>9}] {:<32} {:>14.4} -> {:>14.4}  ({:+.2}%, {} better, ±{}%)",
+                d.status.tag(),
+                d.name,
+                d.baseline,
+                d.current,
+                d.change_pct,
+                d.direction.as_str(),
+                d.threshold_pct
+            );
+        }
+        for (name, b, c) in &self.digest_mismatches {
+            let _ = writeln!(
+                out,
+                "  [DIGEST MISMATCH] {name}: baseline {b:#018x} != current {c:#018x}"
+            );
+        }
+        if self.digest_mismatches.is_empty() && self.digests_checked > 0 {
+            let _ = writeln!(out, "  digests: {} checked, all equal", self.digests_checked);
+        }
+        out
+    }
+}
+
+/// Signed percent change relative to the baseline. Computed as
+/// `(current - baseline) * 100 / |baseline|` so clean decimal cases
+/// (100 -> 95 at threshold 5) land *exactly* on the threshold.
+pub fn change_pct(baseline: f64, current: f64) -> f64 {
+    if current == baseline {
+        0.0
+    } else if baseline == 0.0 {
+        if current > baseline {
+            f64::INFINITY
+        } else {
+            f64::NEG_INFINITY
+        }
+    } else {
+        (current - baseline) * 100.0 / baseline.abs()
+    }
+}
+
+/// Status of one metric given its signed change: the bad direction is
+/// negated change for higher-better metrics; regression is *strictly*
+/// past the threshold (exactly -5% at threshold 5 passes).
+pub fn metric_status(m: &Metric, change: f64, default_threshold_pct: f64) -> (Status, f64) {
+    let t = m.threshold_pct.unwrap_or(default_threshold_pct);
+    if !m.gate {
+        return (Status::Info, t);
+    }
+    let bad = match m.direction {
+        Direction::Higher => -change,
+        Direction::Lower => change,
+    };
+    if bad > t {
+        (Status::Regressed, t)
+    } else if bad < -t {
+        (Status::Improved, t)
+    } else {
+        (Status::Ok, t)
+    }
+}
+
+pub fn compare_records(
+    baseline: &BenchRecord,
+    current: &BenchRecord,
+    default_threshold_pct: f64,
+) -> Result<CompareReport, String> {
+    if baseline.fig != current.fig {
+        return Err(format!(
+            "figure mismatch: baseline is `{}`, current is `{}`",
+            baseline.fig, current.fig
+        ));
+    }
+
+    // An unarmed bootstrap seed: report the current values, gate
+    // nothing. This is the committed state before the first
+    // `bench run --update-baselines` on a machine that can run.
+    if baseline.bootstrap {
+        let deltas = current
+            .metrics
+            .iter()
+            .map(|(name, m)| MetricDelta {
+                name: name.clone(),
+                baseline: m.value,
+                current: m.value,
+                change_pct: 0.0,
+                threshold_pct: m.threshold_pct.unwrap_or(default_threshold_pct),
+                direction: m.direction,
+                gate: m.gate,
+                status: Status::Info,
+            })
+            .collect();
+        return Ok(CompareReport {
+            fig: baseline.fig.clone(),
+            baseline_rev: baseline.git_rev.clone(),
+            current_rev: current.git_rev.clone(),
+            bootstrap: true,
+            deltas,
+            digests_checked: 0,
+            digest_mismatches: Vec::new(),
+        });
+    }
+
+    // Config must match key-for-key: records measured under different
+    // knobs are not comparable, and silently diffing them would turn
+    // every gate into noise.
+    let mut config_diff: Vec<String> = Vec::new();
+    for (k, v) in &baseline.config {
+        match current.config.get(k) {
+            Some(cv) if cv == v => {}
+            Some(cv) => config_diff.push(format!("{k}: baseline `{v}` vs current `{cv}`")),
+            None => config_diff.push(format!("{k}: missing from current")),
+        }
+    }
+    for k in current.config.keys() {
+        if !baseline.config.contains_key(k) {
+            config_diff.push(format!("{k}: missing from baseline"));
+        }
+    }
+    if !config_diff.is_empty() {
+        return Err(format!(
+            "{}: config mismatch — records are not comparable (regenerate baselines \
+             with `codecflow bench run --update-baselines`):\n  {}",
+            baseline.fig,
+            config_diff.join("\n  ")
+        ));
+    }
+
+    // Metric sets must match in both directions: a metric vanishing
+    // from the current run is exactly the silent-regression shape the
+    // gate exists to catch.
+    let missing_current: Vec<&str> = baseline
+        .metrics
+        .keys()
+        .filter(|k| !current.metrics.contains_key(*k))
+        .map(|k| k.as_str())
+        .collect();
+    let missing_baseline: Vec<&str> = current
+        .metrics
+        .keys()
+        .filter(|k| !baseline.metrics.contains_key(*k))
+        .map(|k| k.as_str())
+        .collect();
+    if !missing_current.is_empty() || !missing_baseline.is_empty() {
+        return Err(format!(
+            "{}: metric set mismatch — missing from current: [{}]; missing from \
+             baseline: [{}] (regenerate baselines with `codecflow bench run \
+             --update-baselines`)",
+            baseline.fig,
+            missing_current.join(", "),
+            missing_baseline.join(", ")
+        ));
+    }
+
+    // Digest *names* must match too; values are the hard check below.
+    let digest_names_differ = baseline.digests.keys().ne(current.digests.keys());
+    if digest_names_differ {
+        return Err(format!(
+            "{}: digest set mismatch — baseline has [{}], current has [{}] \
+             (regenerate baselines with `codecflow bench run --update-baselines`)",
+            baseline.fig,
+            baseline.digests.keys().cloned().collect::<Vec<_>>().join(", "),
+            current.digests.keys().cloned().collect::<Vec<_>>().join(", ")
+        ));
+    }
+
+    let mut deltas = Vec::new();
+    for (name, bm) in &baseline.metrics {
+        let cm = &current.metrics[name];
+        let change = change_pct(bm.value, cm.value);
+        // Direction/gate/threshold semantics come from the *baseline*:
+        // the committed record is the contract under review.
+        let (status, threshold_pct) = metric_status(bm, change, default_threshold_pct);
+        deltas.push(MetricDelta {
+            name: name.clone(),
+            baseline: bm.value,
+            current: cm.value,
+            change_pct: change,
+            threshold_pct,
+            direction: bm.direction,
+            gate: bm.gate,
+            status,
+        });
+    }
+
+    let mut digest_mismatches = Vec::new();
+    for (name, bd) in &baseline.digests {
+        let cd = current.digests[name];
+        if *bd != cd {
+            digest_mismatches.push((name.clone(), *bd, cd));
+        }
+    }
+
+    Ok(CompareReport {
+        fig: baseline.fig.clone(),
+        baseline_rev: baseline.git_rev.clone(),
+        current_rev: current.git_rev.clone(),
+        bootstrap: false,
+        deltas,
+        digests_checked: baseline.digests.len(),
+        digest_mismatches,
+    })
+}
+
+pub fn compare_files(
+    baseline: &Path,
+    current: &Path,
+    default_threshold_pct: f64,
+) -> Result<CompareReport, String> {
+    let b = BenchRecord::read(baseline)?;
+    let c = BenchRecord::read(current)?;
+    compare_records(&b, &c, default_threshold_pct)
+}
+
+/// List the `BENCH_*.json` file names directly under `dir`, sorted.
+fn bench_files(dir: &Path) -> Result<Vec<String>, String> {
+    let mut names = Vec::new();
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Compare every committed `BENCH_*.json` baseline against the same
+/// file in the current directory. A baseline with no current record,
+/// or a current record with no baseline, is an error — coverage must
+/// shrink or grow *explicitly* via `--update-baselines`.
+pub fn compare_dirs(
+    baseline_dir: &Path,
+    current_dir: &Path,
+    default_threshold_pct: f64,
+) -> Result<Vec<CompareReport>, String> {
+    let base_names = bench_files(baseline_dir)?;
+    let cur_names = bench_files(current_dir)?;
+    if base_names.is_empty() {
+        return Err(format!("no BENCH_*.json under {}", baseline_dir.display()));
+    }
+    let missing: Vec<&String> =
+        base_names.iter().filter(|n| !cur_names.contains(n)).collect();
+    if !missing.is_empty() {
+        return Err(format!(
+            "baseline record(s) with no current run: {missing:?} — run the full \
+             trajectory (`codecflow bench run`) before comparing"
+        ));
+    }
+    let extra: Vec<&String> =
+        cur_names.iter().filter(|n| !base_names.contains(n)).collect();
+    if !extra.is_empty() {
+        return Err(format!(
+            "current record(s) with no committed baseline: {extra:?} — add baselines \
+             with `codecflow bench run --update-baselines`"
+        ));
+    }
+    base_names
+        .iter()
+        .map(|n| {
+            compare_files(
+                &baseline_dir.join(n),
+                &current_dir.join(n),
+                default_threshold_pct,
+            )
+        })
+        .collect()
+}
+
+/// File-vs-file or directory-vs-directory, matching the CLI surface.
+pub fn compare_paths(
+    baseline: &Path,
+    current: &Path,
+    default_threshold_pct: f64,
+) -> Result<Vec<CompareReport>, String> {
+    if baseline.is_dir() && current.is_dir() {
+        compare_dirs(baseline, current, default_threshold_pct)
+    } else if baseline.is_file() && current.is_file() {
+        Ok(vec![compare_files(baseline, current, default_threshold_pct)?])
+    } else {
+        Err(format!(
+            "`{}` and `{}` must both be files or both be directories of BENCH_*.json",
+            baseline.display(),
+            current.display()
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn record_with(value: f64) -> BenchRecord {
+        let mut rec = BenchRecord::new("figX", "t", 1, BTreeMap::new());
+        rec.metric("m", value, Direction::Higher);
+        rec
+    }
+
+    #[test]
+    fn change_pct_is_exact_on_clean_decimals() {
+        assert_eq!(change_pct(100.0, 95.0), -5.0);
+        assert_eq!(change_pct(100.0, 105.0), 5.0);
+        assert_eq!(change_pct(0.0, 0.0), 0.0);
+        assert_eq!(change_pct(50.0, 50.0), 0.0);
+        assert_eq!(change_pct(0.0, 1.0), f64::INFINITY);
+        assert_eq!(change_pct(0.0, -1.0), f64::NEG_INFINITY);
+        // Negative baselines scale by magnitude.
+        assert_eq!(change_pct(-100.0, -95.0), 5.0);
+    }
+
+    #[test]
+    fn baseline_semantics_drive_the_gate() {
+        // Current record carries different (wrong) semantics; the
+        // baseline's direction is what gates.
+        let base = record_with(100.0);
+        let mut cur = BenchRecord::new("figX", "t", 1, BTreeMap::new());
+        cur.metric("m", 80.0, Direction::Lower);
+        let rep = compare_records(&base, &cur, 5.0).unwrap();
+        assert_eq!(rep.deltas[0].status, Status::Regressed, "higher-better drop of 20%");
+    }
+
+    #[test]
+    fn fig_mismatch_is_an_error() {
+        let base = record_with(1.0);
+        let mut cur = record_with(1.0);
+        cur.fig = "figY".to_string();
+        assert!(compare_records(&base, &cur, 5.0).is_err());
+    }
+}

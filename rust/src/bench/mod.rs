@@ -1,0 +1,184 @@
+//! Continuous benchmarking: schema-versioned `BENCH_<fig>.json`
+//! records, a named small-config trajectory (`codecflow bench run`),
+//! and a baseline-vs-current regression gate (`codecflow bench
+//! compare`) — the harness that keeps every serving-speed claim
+//! (fig20–fig24: scaling, batching, pipelining, wall overlap, hetero
+//! routing) continuously re-measured as the system evolves.
+//!
+//! * [`record`] — the [`BenchRecord`] schema on the zero-dep
+//!   [`crate::json`] module: resolved config (every serving knob),
+//!   seed, git rev, per-metric values with direction and threshold,
+//!   64-bit result digests as lossless hex strings.
+//! * [`compare`] — per-metric threshold diffing with
+//!   higher/lower-better semantics, digest equality as a hard
+//!   determinism check, human-readable report, nonzero exit on
+//!   regression.
+//! * [`runner`] — the fig20–fig24 trajectory with a result cache
+//!   keyed on the complete knob-covering config, plus the committed
+//!   baselines under `baselines/` and their one-command regeneration
+//!   (`codecflow bench run --update-baselines`).
+//!
+//! Operator documentation: `docs/OPERATIONS.md` ("Continuous
+//! benchmarking"). CI wiring: the `bench gate` job in
+//! `.github/workflows/ci.yml`.
+
+pub mod compare;
+pub mod record;
+pub mod runner;
+
+use std::path::PathBuf;
+
+pub use compare::{
+    change_pct, compare_dirs, compare_files, compare_paths, compare_records, CompareReport,
+    MetricDelta, Status,
+};
+pub use record::{config_map, git_rev, BenchRecord, Direction, Metric, SCHEMA_VERSION};
+pub use runner::{baselines_dir, config_key, trajectory, BenchSpec, RunOptions, RunOutcome};
+
+const USAGE: &str = "\
+usage: codecflow bench <run|compare|list>
+  run      [--figs fig20,fig22] [--no-cache] [--update-baselines]
+           execute the small-config trajectory; cached cells (config
+           unchanged) are skipped; records land in reports/BENCH_*.json
+  compare  <baseline> <current> [--threshold PCT]
+           diff two BENCH_*.json files, or two directories of them
+           (e.g. `codecflow bench compare baselines reports`);
+           exit 0 = ok, 1 = regression/digest mismatch, 2 = error
+  list     print the trajectory";
+
+/// The `codecflow bench` CLI. Returns the process exit code:
+/// 0 = ok, 1 = regression or digest mismatch, 2 = usage/IO/schema
+/// error.
+pub fn cli(args: &[String]) -> i32 {
+    match args.first().map(|s| s.as_str()) {
+        Some("run") => cli_run(&args[1..]),
+        Some("compare") => cli_compare(&args[1..]),
+        Some("list") => cli_list(),
+        _ => {
+            eprintln!("{USAGE}");
+            2
+        }
+    }
+}
+
+fn cli_run(args: &[String]) -> i32 {
+    let mut opts = RunOptions::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--figs" => {
+                i += 1;
+                let Some(v) = args.get(i) else {
+                    eprintln!("--figs needs a comma-separated list (e.g. --figs fig20,fig22)");
+                    return 2;
+                };
+                opts.figs = Some(
+                    v.split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect(),
+                );
+            }
+            "--no-cache" => opts.no_cache = true,
+            "--update-baselines" => opts.update_baselines = true,
+            other => {
+                eprintln!("unknown `bench run` argument `{other}`\n{USAGE}");
+                return 2;
+            }
+        }
+        i += 1;
+    }
+    match runner::run(&opts) {
+        Ok(outcomes) => {
+            println!(
+                "[bench] {} figure(s) done ({} from cache)",
+                outcomes.len(),
+                outcomes.iter().filter(|o| o.cached).count()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("bench run failed: {e}");
+            2
+        }
+    }
+}
+
+fn cli_compare(args: &[String]) -> i32 {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut threshold = 5.0f64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--threshold" => {
+                i += 1;
+                let Some(t) = args.get(i).and_then(|v| v.parse::<f64>().ok()) else {
+                    eprintln!("--threshold needs a percentage (e.g. --threshold 5)");
+                    return 2;
+                };
+                if t.is_nan() || t < 0.0 {
+                    eprintln!("--threshold must be a percentage >= 0");
+                    return 2;
+                }
+                threshold = t;
+            }
+            other if other.starts_with("--") => {
+                eprintln!("unknown `bench compare` flag `{other}`\n{USAGE}");
+                return 2;
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+        i += 1;
+    }
+    if paths.len() != 2 {
+        eprintln!(
+            "bench compare needs exactly a <baseline> and a <current> \
+             (two files, or two directories of BENCH_*.json)\n{USAGE}"
+        );
+        return 2;
+    }
+    match compare_paths(&paths[0], &paths[1], threshold) {
+        Err(e) => {
+            eprintln!("bench compare failed: {e}");
+            2
+        }
+        Ok(reports) => {
+            let mut regressed = false;
+            let mut bootstrap = false;
+            for r in &reports {
+                print!("{}", r.render());
+                regressed |= r.regressed();
+                bootstrap |= r.bootstrap;
+            }
+            if regressed {
+                eprintln!(
+                    "REGRESSION: a gated metric fell past its threshold or a result \
+                     digest moved (threshold {threshold}%)."
+                );
+                1
+            } else {
+                if bootstrap {
+                    println!(
+                        "gate unarmed: bootstrap baseline(s) accepted — run \
+                         `codecflow bench run --update-baselines` and commit \
+                         baselines/ to arm the gate."
+                    );
+                }
+                println!(
+                    "bench compare: OK ({} figure(s), default threshold {threshold}%)",
+                    reports.len()
+                );
+                0
+            }
+        }
+    }
+}
+
+fn cli_list() -> i32 {
+    println!("continuous-bench trajectory (small config, run by CI on every PR):");
+    for spec in trajectory() {
+        println!("  {:<7} {}", spec.fig, spec.title);
+    }
+    println!("baselines: {}", baselines_dir().display());
+    0
+}

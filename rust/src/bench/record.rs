@@ -1,0 +1,425 @@
+//! The schema-versioned benchmark record: everything one figure's
+//! continuous-bench cell measured, machine-readable, built on the
+//! zero-dep [`crate::json`] module.
+//!
+//! A `BENCH_<fig>.json` file carries the resolved config (every
+//! serving knob via [`crate::config::ServingConfig::knob_values`] plus
+//! the cell's own `bench.*` dimensions), the seed, the git revision it
+//! was measured at, per-metric values with a regression *direction*
+//! (higher-better vs lower-better), optional per-metric threshold
+//! overrides, and the 64-bit result digests that make determinism a
+//! hard gate. Digests travel as `"0x…"` hex strings
+//! ([`crate::json::u64_hex`]) because JSON numbers here are f64.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::config::ServingConfig;
+use crate::json::{self, Value};
+
+/// Bump when the record layout changes incompatibly. A version
+/// mismatch is an *error* at read time, never a silent pass — stale
+/// baselines must be regenerated, not misread.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Which way "better" points for a metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Higher,
+    Lower,
+}
+
+impl Direction {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Direction> {
+        match s {
+            "higher" => Some(Direction::Higher),
+            "lower" => Some(Direction::Lower),
+            _ => None,
+        }
+    }
+}
+
+/// One measured value with its regression semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    pub value: f64,
+    pub direction: Direction,
+    /// Per-metric threshold override in percent; `None` uses the
+    /// compare CLI's `--threshold` default. Latency-flavoured metrics
+    /// carry a wide override (they include measured CPU stage time),
+    /// the headline capacity metrics gate at the CLI default.
+    pub threshold_pct: Option<f64>,
+    /// `false` = informational only (wall-clock measurements, which
+    /// are machine-dependent): recorded and reported, never gated.
+    pub gate: bool,
+}
+
+/// One figure's bench record (`BENCH_<fig>.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub schema_version: u64,
+    /// Figure id, e.g. `fig21` — names the file `BENCH_fig21.json`.
+    pub fig: String,
+    pub title: String,
+    /// Revision the record was measured at (informational; never
+    /// compared).
+    pub git_rev: String,
+    pub seed: u64,
+    /// `true` on a committed seed baseline that has never been
+    /// regenerated from a real run: `compare` accepts it (recording
+    /// current values) instead of gating, and tells the operator to
+    /// arm the gate with `codecflow bench run --update-baselines`.
+    pub bootstrap: bool,
+    /// The resolved cell config: every serving knob plus `bench.*`
+    /// dimensions. `compare` refuses to diff records whose configs
+    /// differ; the bench result cache hashes this map.
+    pub config: BTreeMap<String, String>,
+    pub metrics: BTreeMap<String, Metric>,
+    /// Named 64-bit result digests; any value change is a hard
+    /// determinism failure in `compare`, no threshold applies.
+    pub digests: BTreeMap<String, u64>,
+}
+
+impl BenchRecord {
+    pub fn new(
+        fig: &str,
+        title: &str,
+        seed: u64,
+        config: BTreeMap<String, String>,
+    ) -> BenchRecord {
+        BenchRecord {
+            schema_version: SCHEMA_VERSION,
+            fig: fig.to_string(),
+            title: title.to_string(),
+            git_rev: git_rev(),
+            seed,
+            bootstrap: false,
+            config,
+            metrics: BTreeMap::new(),
+            digests: BTreeMap::new(),
+        }
+    }
+
+    /// Gated metric at the compare CLI's default threshold.
+    pub fn metric(&mut self, name: &str, value: f64, direction: Direction) {
+        self.metrics.insert(
+            name.to_string(),
+            Metric { value, direction, threshold_pct: None, gate: true },
+        );
+    }
+
+    /// Gated metric with a per-metric threshold override (percent).
+    pub fn metric_with_threshold(
+        &mut self,
+        name: &str,
+        value: f64,
+        direction: Direction,
+        threshold_pct: f64,
+    ) {
+        self.metrics.insert(
+            name.to_string(),
+            Metric { value, direction, threshold_pct: Some(threshold_pct), gate: true },
+        );
+    }
+
+    /// Informational metric: recorded and reported, never gated (wall
+    /// measurements are machine-dependent).
+    pub fn metric_info(&mut self, name: &str, value: f64, direction: Direction) {
+        self.metrics.insert(
+            name.to_string(),
+            Metric { value, direction, threshold_pct: None, gate: false },
+        );
+    }
+
+    pub fn digest(&mut self, name: &str, digest: u64) {
+        self.digests.insert(name.to_string(), digest);
+    }
+
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.fig)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let config: Vec<(&str, Value)> =
+            self.config.iter().map(|(k, v)| (k.as_str(), json::s(v))).collect();
+        let metrics: Vec<(&str, Value)> = self
+            .metrics
+            .iter()
+            .map(|(k, m)| {
+                let mut fields = vec![
+                    ("value", json::num(m.value)),
+                    ("direction", json::s(m.direction.as_str())),
+                    ("gate", Value::Bool(m.gate)),
+                ];
+                if let Some(t) = m.threshold_pct {
+                    fields.push(("threshold_pct", json::num(t)));
+                }
+                (k.as_str(), json::obj(fields))
+            })
+            .collect();
+        let digests: Vec<(&str, Value)> =
+            self.digests.iter().map(|(k, d)| (k.as_str(), json::u64_hex(*d))).collect();
+        json::obj(vec![
+            ("schema_version", json::num(self.schema_version as f64)),
+            ("fig", json::s(&self.fig)),
+            ("title", json::s(&self.title)),
+            ("git_rev", json::s(&self.git_rev)),
+            ("seed", json::num(self.seed as f64)),
+            ("bootstrap", Value::Bool(self.bootstrap)),
+            ("config", json::obj(config)),
+            ("metrics", json::obj(metrics)),
+            ("digests", json::obj(digests)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<BenchRecord, String> {
+        let version = v
+            .get("schema_version")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| "missing `schema_version`".to_string())? as u64;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema version {version} != supported {SCHEMA_VERSION} — regenerate \
+                 with `codecflow bench run --update-baselines`"
+            ));
+        }
+        let str_field = |k: &str| -> Result<String, String> {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("missing field `{k}`"))
+        };
+        let fig = str_field("fig")?;
+        let title = str_field("title")?;
+        let git_rev = str_field("git_rev")?;
+        let seed = v
+            .get("seed")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| "missing `seed`".to_string())? as u64;
+        let bootstrap = v.get("bootstrap").and_then(|x| x.as_bool()).unwrap_or(false);
+
+        let mut config = BTreeMap::new();
+        let cobj = v
+            .get("config")
+            .and_then(|x| x.as_obj())
+            .ok_or_else(|| "missing `config` object".to_string())?;
+        for (k, cv) in cobj {
+            let s = cv
+                .as_str()
+                .ok_or_else(|| format!("config `{k}`: expected a string value"))?;
+            config.insert(k.clone(), s.to_string());
+        }
+
+        let mut metrics = BTreeMap::new();
+        let mobj = v
+            .get("metrics")
+            .and_then(|x| x.as_obj())
+            .ok_or_else(|| "missing `metrics` object".to_string())?;
+        for (name, mv) in mobj {
+            let value = mv
+                .get("value")
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| format!("metric `{name}`: missing `value`"))?;
+            let direction = mv
+                .get("direction")
+                .and_then(|x| x.as_str())
+                .and_then(Direction::parse)
+                .ok_or_else(|| {
+                    format!("metric `{name}`: `direction` must be \"higher\" or \"lower\"")
+                })?;
+            let gate = mv.get("gate").and_then(|x| x.as_bool()).unwrap_or(true);
+            let threshold_pct = mv.get("threshold_pct").and_then(|x| x.as_f64());
+            metrics.insert(name.clone(), Metric { value, direction, threshold_pct, gate });
+        }
+
+        let mut digests = BTreeMap::new();
+        let dobj = v
+            .get("digests")
+            .and_then(|x| x.as_obj())
+            .ok_or_else(|| "missing `digests` object".to_string())?;
+        for (name, dv) in dobj {
+            let d = dv
+                .as_u64_hex()
+                .ok_or_else(|| format!("digest `{name}`: expected a \"0x…\" hex string"))?;
+            digests.insert(name.clone(), d);
+        }
+
+        Ok(BenchRecord {
+            schema_version: version,
+            fig,
+            title,
+            git_rev,
+            seed,
+            bootstrap,
+            config,
+            metrics,
+            digests,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<BenchRecord, String> {
+        let v = Value::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+        BenchRecord::from_json(&v)
+    }
+
+    pub fn read(path: &Path) -> Result<BenchRecord, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        BenchRecord::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Write `BENCH_<fig>.json` under `dir` (created if needed).
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .map_err(|e| format!("write {}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Human-readable one-record summary (printed by `bench run`).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "[bench] {} — {} (rev {}, seed {})",
+            self.fig, self.title, self.git_rev, self.seed
+        );
+        for (name, m) in &self.metrics {
+            let _ = writeln!(
+                out,
+                "  {:<32} {:>14.4}  ({} better{})",
+                name,
+                m.value,
+                m.direction.as_str(),
+                if m.gate { "" } else { ", info-only" }
+            );
+        }
+        for (name, d) in &self.digests {
+            let _ = writeln!(out, "  digest {:<25} {:#018x}", name, d);
+        }
+        out
+    }
+}
+
+/// The resolved serving config as a string map — every knob in
+/// [`ServingConfig::knob_keys`] with its current value, the base of
+/// each figure's bench-cell config (the cell adds its own `bench.*`
+/// dimensions on top). Covering *every* knob is what makes the bench
+/// result cache sound: a behaviour change riding in on any knob
+/// changes this map, hence the cache key.
+pub fn config_map(serving: &ServingConfig) -> BTreeMap<String, String> {
+    serving.knob_values().into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+/// Short git revision for record provenance: `git rev-parse --short
+/// HEAD`, falling back to `GITHUB_SHA`, then `"unknown"`. Purely
+/// informational — `compare` never gates on it.
+pub fn git_rev() -> String {
+    if let Ok(out) =
+        std::process::Command::new("git").args(["rev-parse", "--short", "HEAD"]).output()
+    {
+        if out.status.success() {
+            let rev = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            if !rev.is_empty() {
+                return rev;
+            }
+        }
+    }
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        let short: String = sha.chars().take(12).collect();
+        if !short.is_empty() {
+            return short;
+        }
+    }
+    "unknown".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchRecord {
+        let mut config = BTreeMap::new();
+        config.insert("streams".to_string(), "16".to_string());
+        config.insert("bench.fps".to_string(), "2".to_string());
+        let mut rec = BenchRecord::new("figX", "sample cell", 2026, config);
+        rec.metric("sustainable_streams", 12.5, Direction::Higher);
+        rec.metric_with_threshold("p99_latency_ms", 48.25, Direction::Lower, 25.0);
+        rec.metric_info("wall_s", 1.75, Direction::Lower);
+        rec.digest("cell", 0x9e37_79b9_7f4a_7c15);
+        rec
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let rec = sample();
+        let text = rec.to_json().to_string_pretty();
+        let back = BenchRecord::parse(&text).expect("roundtrip parse");
+        assert_eq!(back, rec);
+        // The digest survives at full 64-bit width.
+        assert_eq!(back.digests["cell"], 0x9e37_79b9_7f4a_7c15);
+        assert!(back.metrics["sustainable_streams"].gate);
+        assert_eq!(back.metrics["p99_latency_ms"].threshold_pct, Some(25.0));
+        assert!(!back.metrics["wall_s"].gate);
+    }
+
+    #[test]
+    fn schema_version_mismatch_is_an_error() {
+        let mut rec = sample();
+        rec.schema_version = SCHEMA_VERSION + 1;
+        let text = rec.to_json().to_string_pretty();
+        let err = BenchRecord::parse(&text).expect_err("future schema must not parse");
+        assert!(err.contains("schema version"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn malformed_records_are_errors_not_defaults() {
+        assert!(BenchRecord::parse("{}").is_err(), "empty object");
+        assert!(BenchRecord::parse("not json").is_err(), "garbage");
+        // A metric without a direction is rejected.
+        let text = r#"{
+            "schema_version": 1, "fig": "f", "title": "t", "git_rev": "r",
+            "seed": 1, "config": {},
+            "metrics": {"x": {"value": 1.0}}, "digests": {}
+        }"#;
+        let err = BenchRecord::parse(text).expect_err("directionless metric");
+        assert!(err.contains("direction"), "unexpected error: {err}");
+        // A digest that is a plain number (lossy) is rejected.
+        let text = r#"{
+            "schema_version": 1, "fig": "f", "title": "t", "git_rev": "r",
+            "seed": 1, "config": {}, "metrics": {},
+            "digests": {"d": 12345}
+        }"#;
+        let err = BenchRecord::parse(text).expect_err("numeric digest");
+        assert!(err.contains("hex"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn file_roundtrip_via_write_to() {
+        let dir = std::env::temp_dir()
+            .join(format!("cf_bench_record_{}", std::process::id()));
+        let rec = sample();
+        let path = rec.write_to(&dir).expect("write");
+        assert!(path.ends_with("BENCH_figX.json"));
+        let back = BenchRecord::read(&path).expect("read back");
+        assert_eq!(back, rec);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_map_covers_every_knob() {
+        let m = config_map(&ServingConfig::default());
+        for key in ServingConfig::knob_keys() {
+            assert!(m.contains_key(*key), "config_map missing knob `{key}`");
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! The continuous-bench trajectory: the named small-config cells of
+//! fig20–fig24 that CI runs on every PR, with a disk result cache
+//! (extending the exp cache under `reports/cache/`) keyed on the
+//! *complete* resolved config — every serving knob
+//! ([`crate::config::ServingConfig::knob_values`]) plus the cell's
+//! `bench.*` dimensions — so a cached figure can never mask a
+//! behaviour change arriving through any knob.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::exp::common::reports_dir;
+use crate::exp::{fig20_scaling, fig21_batching, fig22_pipeline, fig23_wallclock, fig24_hetero};
+
+use super::record::BenchRecord;
+
+/// One trajectory entry: the figure id, what its cell measures, the
+/// full resolved config (the cache key hashes this), and the runner.
+pub struct BenchSpec {
+    pub fig: &'static str,
+    pub title: &'static str,
+    pub config: BTreeMap<String, String>,
+    pub run: fn() -> BenchRecord,
+}
+
+/// The small-config trajectory CI runs on every PR, in figure order.
+pub fn trajectory() -> Vec<BenchSpec> {
+    vec![
+        fig20_scaling::bench_spec(),
+        fig21_batching::bench_spec(),
+        fig22_pipeline::bench_spec(),
+        fig23_wallclock::bench_spec(),
+        fig24_hetero::bench_spec(),
+    ]
+}
+
+/// FNV-1a, the digest flavour used elsewhere in the tree.
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Cache key for one figure's bench cell: the figure id plus a hash of
+/// the complete config map. Because the map embeds every serving knob
+/// via `knob_values()`, changing *any* knob — including one added
+/// after this code was written — changes the key and invalidates the
+/// cached result.
+pub fn config_key(fig: &str, config: &BTreeMap<String, String>) -> String {
+    let mut buf = String::new();
+    for (k, v) in config {
+        buf.push_str(k);
+        buf.push('=');
+        buf.push_str(v);
+        buf.push('\n');
+    }
+    format!("bench_{fig}_{:016x}", fnv64(buf.as_bytes()))
+}
+
+fn cache_path(key: &str) -> PathBuf {
+    let dir = reports_dir().join("cache");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(format!("{key}.json"))
+}
+
+fn cache_disabled(no_cache: bool) -> bool {
+    no_cache || std::env::var("CF_NO_CACHE").is_ok()
+}
+
+fn cache_load(key: &str, no_cache: bool) -> Option<BenchRecord> {
+    if cache_disabled(no_cache) {
+        return None;
+    }
+    let text = std::fs::read_to_string(cache_path(key)).ok()?;
+    BenchRecord::parse(&text).ok()
+}
+
+fn cache_store(key: &str, rec: &BenchRecord, no_cache: bool) {
+    if cache_disabled(no_cache) {
+        return;
+    }
+    let _ = std::fs::write(cache_path(key), rec.to_json().to_string_pretty());
+}
+
+/// Where the committed baselines live: `CF_BASELINES` override, else
+/// the nearest `baselines/` directory walking up from the cwd (the
+/// repo root in a checkout), else `./baselines`.
+pub fn baselines_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CF_BASELINES") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("baselines");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("baselines");
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct RunOptions {
+    /// Figure subset (e.g. `["fig21"]`); `None` runs the full
+    /// trajectory.
+    pub figs: Option<Vec<String>>,
+    /// Skip the result cache in both directions.
+    pub no_cache: bool,
+    /// Also write each record into [`baselines_dir`] — the documented
+    /// one-command baseline regeneration path.
+    pub update_baselines: bool,
+}
+
+pub struct RunOutcome {
+    pub fig: String,
+    /// The record came from the result cache (config unchanged since a
+    /// previous run).
+    pub cached: bool,
+    /// The freshly written `reports/BENCH_<fig>.json`.
+    pub path: PathBuf,
+}
+
+/// Execute the trajectory (or a subset), reusing cached results for
+/// cells whose complete config is unchanged, and (re)write every
+/// record under `reports/`.
+pub fn run(opts: &RunOptions) -> Result<Vec<RunOutcome>, String> {
+    let specs = trajectory();
+    if let Some(figs) = &opts.figs {
+        for f in figs {
+            if !specs.iter().any(|s| s.fig == f.as_str()) {
+                return Err(format!(
+                    "unknown figure `{f}` (trajectory: {})",
+                    specs.iter().map(|s| s.fig).collect::<Vec<_>>().join(", ")
+                ));
+            }
+        }
+    }
+    let mut outcomes = Vec::new();
+    for spec in &specs {
+        if let Some(figs) = &opts.figs {
+            if !figs.iter().any(|f| f == spec.fig) {
+                continue;
+            }
+        }
+        let key = config_key(spec.fig, &spec.config);
+        // A cached record is only trusted when its embedded config is
+        // byte-identical to the spec's — the key hash plus this check
+        // makes a stale hit impossible, not just unlikely.
+        let cached_rec =
+            cache_load(&key, opts.no_cache).filter(|rec| rec.config == spec.config);
+        let cached = cached_rec.is_some();
+        let rec = match cached_rec {
+            Some(rec) => {
+                println!("[bench] {}: cached result reused ({key})", spec.fig);
+                rec
+            }
+            None => {
+                println!("[bench] running {} — {}", spec.fig, spec.title);
+                let rec = (spec.run)();
+                debug_assert_eq!(
+                    rec.config, spec.config,
+                    "a bench_spec's config must equal its record's config"
+                );
+                cache_store(&key, &rec, opts.no_cache);
+                rec
+            }
+        };
+        print!("{}", rec.summary());
+        let path = rec.write_to(&reports_dir())?;
+        println!("[bench] wrote {}", path.display());
+        if opts.update_baselines {
+            let bpath = rec.write_to(&baselines_dir())?;
+            println!("[bench] baseline updated: {}", bpath.display());
+        }
+        outcomes.push(RunOutcome { fig: spec.fig.to_string(), cached, path });
+    }
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+
+    #[test]
+    fn trajectory_is_fig20_through_fig24_with_nonempty_configs() {
+        let specs = trajectory();
+        let figs: Vec<&str> = specs.iter().map(|s| s.fig).collect();
+        assert_eq!(figs, vec!["fig20", "fig21", "fig22", "fig23", "fig24"]);
+        for spec in &specs {
+            assert!(!spec.title.is_empty(), "{} has no title", spec.fig);
+            // Every serving knob must be embedded in the cell config —
+            // the property that makes the cache key sound.
+            for key in ServingConfig::knob_keys() {
+                assert!(
+                    spec.config.contains_key(*key),
+                    "{} config is missing serving knob `{key}`",
+                    spec.fig
+                );
+            }
+            assert!(
+                spec.config.keys().any(|k| k.starts_with("bench.")),
+                "{} config has no bench.* cell dimensions",
+                spec.fig
+            );
+        }
+    }
+
+    /// The satellite bugfix's acceptance test: the result-cache key
+    /// must change when *any* serving knob changes, so a cached figure
+    /// can never mask a behaviour change riding in on a knob.
+    #[test]
+    fn cache_key_covers_every_serving_knob() {
+        let base_cfg = ServingConfig::default();
+        let base_key = config_key("figX", &super::super::record::config_map(&base_cfg));
+        for key in ServingConfig::knob_keys() {
+            let mut c = ServingConfig::default();
+            let value = match *key {
+                "steal" | "launch" => "false",
+                "stride_frac" => "0.35",
+                "mv_threshold" => "0.75",
+                "alpha" => "0.9",
+                "backend" => "hetero",
+                "route" => "fixed",
+                "quant_ratio" => "0.77",
+                "batch_slack" => "3.5",
+                _ => "7",
+            };
+            assert!(c.set(key, value), "knob `{key}` must parse");
+            let changed = config_key("figX", &super::super::record::config_map(&c));
+            assert_ne!(
+                changed, base_key,
+                "changing serving knob `{key}` must invalidate the bench cache key"
+            );
+        }
+        // And the figure id is part of the key.
+        let other = config_key("figY", &super::super::record::config_map(&base_cfg));
+        assert_ne!(other, base_key);
+    }
+
+    #[test]
+    fn fnv_is_the_reference_vector() {
+        // FNV-1a 64-bit reference: hash of the empty string is the
+        // offset basis; "a" is a published vector.
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -303,6 +303,47 @@ impl ServingConfig {
         ]
     }
 
+    /// Current value of every knob in [`ServingConfig::knob_keys`],
+    /// in the same order (aliases repeat the canonical value). This is
+    /// what the bench result cache hashes
+    /// ([`crate::bench::config_key`]): covering *every* accepted knob
+    /// means a cached figure can never mask a behaviour change riding
+    /// in on a knob the key forgot — a unit test pins the two lists to
+    /// each other, so adding a knob to `set()`/`knob_keys()` without a
+    /// value here fails the build's tests.
+    pub fn knob_values(&self) -> Vec<(&'static str, String)> {
+        let p = &self.pipeline;
+        vec![
+            ("workers", self.workers.to_string()),
+            ("shards", self.num_shards.to_string()),
+            ("num_shards", self.num_shards.to_string()),
+            ("streams", self.streams.to_string()),
+            ("frontend_workers", self.frontend_workers.to_string()),
+            ("kv_budget_bytes", self.kv_budget_bytes.to_string()),
+            ("queue_depth", self.queue_depth.to_string()),
+            ("admit_wave", self.admit_wave.to_string()),
+            ("steal", self.steal.to_string()),
+            ("batch", self.max_batch.to_string()),
+            ("max_batch", self.max_batch.to_string()),
+            ("batch_bucket", self.batch_bucket.to_string()),
+            ("pipeline", self.pipeline_depth.to_string()),
+            ("pipeline_depth", self.pipeline_depth.to_string()),
+            ("launch", self.launch.to_string()),
+            ("backend", self.backend.clone()),
+            ("route", self.route.clone()),
+            ("quant_ratio", format!("{}", self.quant_ratio)),
+            ("batch_slack", format!("{}", self.batch_slack)),
+            ("window_frames", p.window_frames.to_string()),
+            ("stride_frac", format!("{}", p.stride_frac)),
+            ("gop", p.gop.to_string()),
+            ("mv_threshold", format!("{}", p.mv_threshold)),
+            ("alpha", format!("{}", p.alpha)),
+            ("qp", p.qp.to_string()),
+            ("decode_tokens", p.decode_tokens.to_string()),
+            ("uplink_mbps", format!("{}", p.uplink_mbps)),
+        ]
+    }
+
     /// Per-shard KV budget: the global budget split evenly, so one
     /// shard's memory pressure cannot evict another shard's caches.
     pub fn shard_kv_budget(&self) -> usize {
@@ -502,6 +543,48 @@ mod tests {
         }
         // And a key outside the list is rejected.
         assert!(!ServingConfig::default().set("not_a_knob", "1"));
+    }
+
+    #[test]
+    fn knob_values_cover_every_knob_in_order() {
+        // The bench result cache hashes knob_values(); this pin is what
+        // makes "the cache key covers every serving knob" a build-time
+        // property instead of a convention.
+        let keys: Vec<&str> =
+            ServingConfig::default().knob_values().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(
+            keys,
+            ServingConfig::knob_keys().to_vec(),
+            "knob_values() must mirror knob_keys() exactly (same keys, same order)"
+        );
+    }
+
+    #[test]
+    fn knob_values_reflect_every_override() {
+        // Setting any advertised knob to a non-default value must change
+        // the recorded value list — the property the bench cache key
+        // invalidation test builds on.
+        let base = ServingConfig::default().knob_values();
+        for key in ServingConfig::knob_keys() {
+            let mut c = ServingConfig::default();
+            let value = match *key {
+                "steal" | "launch" => "false",
+                "stride_frac" => "0.35",
+                "mv_threshold" => "0.75",
+                "alpha" => "0.9",
+                "backend" => "hetero",
+                "route" => "fixed",
+                "quant_ratio" => "0.77",
+                "batch_slack" => "3.5",
+                _ => "7",
+            };
+            assert!(c.set(key, value), "knob `{key}` must parse");
+            assert_ne!(
+                c.knob_values(),
+                base,
+                "overriding `{key}` must be visible in knob_values()"
+            );
+        }
     }
 
     #[test]

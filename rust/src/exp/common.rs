@@ -3,8 +3,10 @@
 //! binaries share expensive runs.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::baselines::Variant;
+use crate::codec::types::Frame;
 use crate::config::{artifacts_dir, env_usize, ExperimentConfig, PipelineConfig, ServingConfig};
 use crate::coordinator::session::StreamSession;
 use crate::json::{self, Value};
@@ -480,4 +482,44 @@ pub fn write_report(name: &str, content: &str) {
     if std::fs::write(&path, content).is_ok() {
         println!("[report] wrote {path:?}");
     }
+}
+
+/// The shared BENCH emitter: every fig runner (and `codecflow bench
+/// run`) writes its schema-versioned machine-readable record through
+/// here, as `reports/BENCH_<fig>.json` — the file `codecflow bench
+/// compare` gates on. Non-fatal on IO error (a report is a byproduct,
+/// not the experiment).
+pub fn write_bench(rec: &crate::bench::BenchRecord) {
+    match rec.write_to(&reports_dir()) {
+        Ok(path) => println!("[bench] wrote {path:?}"),
+        Err(e) => eprintln!("[bench] write failed: {e}"),
+    }
+}
+
+/// Fixed-dimension experiment config for the continuous-bench
+/// trajectory. Deliberately immune to the `CF_VIDEOS` / `CF_FRAMES`
+/// env overrides (CI exports those globally for the test corpus): the
+/// recorded cell config — and with it the bench cache key and the
+/// comparability against committed baselines — must not drift with
+/// the environment.
+pub fn bench_experiment_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.videos = 16;
+    cfg.frames_per_video = 28;
+    cfg.seed = 2026;
+    cfg.model = "m".to_string();
+    cfg
+}
+
+/// Corpus clips for a bench cell: one stream per video, Arc-shared so
+/// every cell of the figure reuses the same frames.
+pub fn bench_clips(cfg: &ExperimentConfig, streams: usize) -> Vec<Arc<Vec<Frame>>> {
+    let corpus = Corpus::generate(CorpusConfig {
+        videos: streams,
+        frames_per_video: cfg.frames_per_video,
+        window_frames: cfg.pipeline.window_frames,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    corpus.clips.into_iter().map(|c| Arc::new(c.frames)).collect()
 }

@@ -8,17 +8,22 @@
 //! reports merged p50/p99 latency and how many streams were served via
 //! work stealing (imbalance absorbed by idle shards).
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::baselines::Variant;
+use crate::bench::{config_map, BenchRecord, BenchSpec, Direction};
 use crate::codec::types::Frame;
-use crate::config::{artifacts_dir, ExperimentConfig};
+use crate::config::{artifacts_dir, ExperimentConfig, ServingConfig};
 use crate::coordinator::dispatch::{Dispatcher, ShardedReport};
-use crate::runtime::replica::{EngineReplicaFactory, ExecutorFactory};
+use crate::runtime::replica::{EngineReplicaFactory, ExecutorFactory, MockReplicaFactory};
 use crate::util::table::Table;
 use crate::video::{Corpus, CorpusConfig};
 
-use super::common::{quick_experiment_cfg, serving_cfg, write_report};
+use super::common::{
+    bench_clips, bench_experiment_cfg, quick_experiment_cfg, serving_cfg, write_bench,
+    write_report,
+};
 
 pub struct Fig20 {
     /// (variant, streams, shards, aggregate sustainable streams)
@@ -105,13 +110,93 @@ pub fn run() -> Option<Fig20> {
         "fig20_scaling.txt",
         &(fig.table.render() + "\n" + &fig.table.to_csv()),
     );
+    write_bench(&bench_run());
     Some(fig)
+}
+
+// ---------------------------------------------------------------------
+// Continuous bench (BENCH_fig20.json): the small CI cell.
+// ---------------------------------------------------------------------
+
+/// Streams in the bench cell (small: CI runs this on every PR).
+const BENCH_STREAMS: usize = 8;
+const BENCH_SHARDS: [usize; 2] = [1, 2];
+/// Virtual seconds per token of artifact work on the mock replicas —
+/// the pricing the fig21–fig24 sweeps use, large enough that virtual
+/// execution dominates latency over the measured CPU stages.
+const BENCH_DELAY_S: f64 = 2e-4;
+const BENCH_FPS: f64 = 2.0;
+const BENCH_TITLE: &str =
+    "shard scaling: sustainable streams, 1 -> 2 shards (CodecFlow, mock replicas)";
+
+/// The bench cell's serving config: the fig20 sweep config with work
+/// stealing disabled. Stealing reacts to wall-clock timing, which
+/// would make per-window latency (and the stolen-stream count)
+/// machine-dependent; with it off the cell is deterministic in
+/// virtual time. Digests are placement-invariant on this homogeneous
+/// pool either way.
+fn bench_cell_cfg(cfg: &ExperimentConfig, shards: usize) -> ServingConfig {
+    let mut s = serving_cfg(cfg, shards);
+    s.steal = false;
+    s.admit_wave = BENCH_STREAMS;
+    s
+}
+
+/// The complete recorded config: every serving knob of the headline
+/// (2-shard) cell plus the cell's own dimensions. The bench cache
+/// hashes exactly this map.
+fn bench_config() -> BTreeMap<String, String> {
+    let cfg = bench_experiment_cfg();
+    let mut m = config_map(&bench_cell_cfg(&cfg, BENCH_SHARDS[1]));
+    m.insert("bench.cells".to_string(), "shards=1,2".to_string());
+    m.insert("bench.streams".to_string(), BENCH_STREAMS.to_string());
+    m.insert("bench.frames_per_video".to_string(), cfg.frames_per_video.to_string());
+    m.insert("bench.seed".to_string(), cfg.seed.to_string());
+    m.insert("bench.mock_delay_s".to_string(), format!("{BENCH_DELAY_S}"));
+    m.insert("bench.fps".to_string(), format!("{BENCH_FPS}"));
+    m.insert("bench.variant".to_string(), "CodecFlow".to_string());
+    m
+}
+
+fn bench_run() -> BenchRecord {
+    let cfg = bench_experiment_cfg();
+    let factory: Arc<dyn ExecutorFactory> =
+        Arc::new(MockReplicaFactory::new(&cfg.model, BENCH_DELAY_S));
+    let clips = bench_clips(&cfg, BENCH_STREAMS);
+    let cell = |shards: usize| {
+        Dispatcher::new(&cfg.model, bench_cell_cfg(&cfg, shards)).run(
+            Arc::clone(&factory),
+            &clips,
+            Variant::CodecFlow,
+            BENCH_FPS,
+        )
+    };
+    let one = cell(BENCH_SHARDS[0]);
+    let two = cell(BENCH_SHARDS[1]);
+    let mut rec = BenchRecord::new("fig20", BENCH_TITLE, cfg.seed, bench_config());
+    let lat = two.merged.latency_summary();
+    rec.metric("sustainable_streams", two.sustainable_streams, Direction::Higher);
+    rec.metric("sustainable_streams_1shard", one.sustainable_streams, Direction::Higher);
+    rec.metric(
+        "shard_scaling_x",
+        two.sustainable_streams / one.sustainable_streams.max(1e-9),
+        Direction::Higher,
+    );
+    rec.metric_with_threshold("p50_latency_ms", lat.p50 * 1e3, Direction::Lower, 25.0);
+    rec.metric_with_threshold("p99_latency_ms", lat.p99 * 1e3, Direction::Lower, 25.0);
+    rec.metric("windows", two.merged.windows() as f64, Direction::Higher);
+    rec.digest("shards1", one.result_digest);
+    rec.digest("shards2", two.result_digest);
+    rec
+}
+
+pub fn bench_spec() -> BenchSpec {
+    BenchSpec { fig: "fig20", title: BENCH_TITLE, config: bench_config(), run: bench_run }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::replica::MockReplicaFactory;
 
     #[test]
     fn sweep_emits_one_row_per_cell_and_scales() {

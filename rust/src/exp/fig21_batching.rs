@@ -14,9 +14,11 @@
 //! (seconds per token of artifact work), so it needs no artifacts and
 //! is deterministic up to wall-clock noise in the non-executor stages.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::baselines::Variant;
+use crate::bench::{config_map, BenchRecord, BenchSpec, Direction};
 use crate::codec::types::Frame;
 use crate::config::{ExperimentConfig, ServingConfig};
 use crate::coordinator::dispatch::{Dispatcher, ShardedReport};
@@ -24,7 +26,9 @@ use crate::runtime::replica::{ExecutorFactory, MockReplicaFactory};
 use crate::util::table::Table;
 use crate::video::{Corpus, CorpusConfig};
 
-use super::common::{serving_cfg, write_report};
+use super::common::{
+    bench_clips, bench_experiment_cfg, serving_cfg, write_bench, write_report,
+};
 
 pub struct Fig21 {
     /// (streams, batch cap, aggregate sustainable streams,
@@ -135,7 +139,84 @@ pub fn run() -> Option<Fig21> {
         "fig21_batching.txt",
         &(fig.table.render() + "\n" + &fig.table.to_csv()),
     );
+    write_bench(&bench_run());
     Some(fig)
+}
+
+// ---------------------------------------------------------------------
+// Continuous bench (BENCH_fig21.json): the small CI cell.
+// ---------------------------------------------------------------------
+
+const BENCH_STREAMS: usize = 16;
+/// Unbatched baseline cap vs fused cap; the headline metrics come from
+/// the second (batched) cell.
+const BENCH_CAPS: [usize; 2] = [1, 8];
+const BENCH_DELAY_S: f64 = 2e-4;
+const BENCH_FPS: f64 = 2.0;
+const BENCH_TITLE: &str =
+    "cross-stream batched prefill: cap 1 -> 8 on one shard (CodecFlow, mock replicas)";
+
+/// The complete recorded config: every serving knob of the headline
+/// (cap-8) cell plus the cell's own dimensions. The bench cache hashes
+/// exactly this map.
+fn bench_config() -> BTreeMap<String, String> {
+    let cfg = bench_experiment_cfg();
+    let mut m = config_map(&cell_cfg(&cfg, BENCH_STREAMS, BENCH_CAPS[1]));
+    m.insert("bench.cells".to_string(), "max_batch=1,8".to_string());
+    m.insert("bench.streams".to_string(), BENCH_STREAMS.to_string());
+    m.insert("bench.frames_per_video".to_string(), cfg.frames_per_video.to_string());
+    m.insert("bench.seed".to_string(), cfg.seed.to_string());
+    m.insert("bench.mock_delay_s".to_string(), format!("{BENCH_DELAY_S}"));
+    m.insert("bench.fps".to_string(), format!("{BENCH_FPS}"));
+    m.insert("bench.variant".to_string(), "CodecFlow".to_string());
+    m
+}
+
+fn bench_run() -> BenchRecord {
+    let cfg = bench_experiment_cfg();
+    let factory: Arc<dyn ExecutorFactory> =
+        Arc::new(MockReplicaFactory::new(&cfg.model, BENCH_DELAY_S));
+    let clips = bench_clips(&cfg, BENCH_STREAMS);
+    let cell = |cap: usize| {
+        Dispatcher::new(&cfg.model, cell_cfg(&cfg, BENCH_STREAMS, cap)).run(
+            Arc::clone(&factory),
+            &clips,
+            Variant::CodecFlow,
+            BENCH_FPS,
+        )
+    };
+    let unbatched = cell(BENCH_CAPS[0]);
+    let fused = cell(BENCH_CAPS[1]);
+    let mut rec = BenchRecord::new("fig21", BENCH_TITLE, cfg.seed, bench_config());
+    let lat = fused.merged.latency_summary();
+    rec.metric("sustainable_streams", fused.sustainable_streams, Direction::Higher);
+    rec.metric(
+        "sustainable_streams_unbatched",
+        unbatched.sustainable_streams,
+        Direction::Higher,
+    );
+    rec.metric(
+        "batch_speedup_x",
+        fused.sustainable_streams / unbatched.sustainable_streams.max(1e-9),
+        Direction::Higher,
+    );
+    rec.metric("mean_batch_size", fused.batching.mean_batch_size(), Direction::Higher);
+    rec.metric_with_threshold(
+        "padding_waste_pct",
+        fused.batching.padding_waste() * 100.0,
+        Direction::Lower,
+        25.0,
+    );
+    rec.metric_with_threshold("p50_latency_ms", lat.p50 * 1e3, Direction::Lower, 25.0);
+    rec.metric_with_threshold("p99_latency_ms", lat.p99 * 1e3, Direction::Lower, 25.0);
+    rec.metric("windows", fused.merged.windows() as f64, Direction::Higher);
+    rec.digest("cap1", unbatched.result_digest);
+    rec.digest("cap8", fused.result_digest);
+    rec
+}
+
+pub fn bench_spec() -> BenchSpec {
+    BenchSpec { fig: "fig21", title: BENCH_TITLE, config: bench_config(), run: bench_run }
 }
 
 #[cfg(test)]

@@ -15,9 +15,11 @@
 //! (seconds per token of artifact work), so it needs no artifacts and
 //! is deterministic up to wall-clock noise in the non-executor stages.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::baselines::Variant;
+use crate::bench::{config_map, BenchRecord, BenchSpec, Direction};
 use crate::codec::types::Frame;
 use crate::config::{ExperimentConfig, ServingConfig};
 use crate::coordinator::dispatch::{Dispatcher, ShardedReport};
@@ -25,7 +27,9 @@ use crate::runtime::replica::{ExecutorFactory, MockReplicaFactory};
 use crate::util::table::Table;
 use crate::video::{Corpus, CorpusConfig};
 
-use super::common::{serving_cfg, write_report};
+use super::common::{
+    bench_clips, bench_experiment_cfg, serving_cfg, write_bench, write_report,
+};
 
 pub struct Fig22 {
     /// (streams, pipeline depth, aggregate sustainable streams,
@@ -137,7 +141,90 @@ pub fn run() -> Option<Fig22> {
         "fig22_pipeline.txt",
         &(fig.table.render() + "\n" + &fig.table.to_csv()),
     );
+    write_bench(&bench_run());
     Some(fig)
+}
+
+// ---------------------------------------------------------------------
+// Continuous bench (BENCH_fig22.json): the small CI cell.
+// ---------------------------------------------------------------------
+
+const BENCH_STREAMS: usize = 16;
+/// Serial loop vs depth-2 pipeline; the headline metrics come from the
+/// second (pipelined) cell.
+const BENCH_DEPTHS: [usize; 2] = [0, 2];
+const BENCH_DELAY_S: f64 = 2e-4;
+const BENCH_FPS: f64 = 2.0;
+const BENCH_TITLE: &str =
+    "pipelined shard execution: depth 0 -> 2 on one shard (CodecFlow, mock replicas)";
+
+/// The complete recorded config: every serving knob of the headline
+/// (depth-2) cell plus the cell's own dimensions. The bench cache
+/// hashes exactly this map.
+fn bench_config() -> BTreeMap<String, String> {
+    let cfg = bench_experiment_cfg();
+    let mut m = config_map(&cell_cfg(&cfg, BENCH_STREAMS, BENCH_DEPTHS[1]));
+    m.insert("bench.cells".to_string(), "pipeline_depth=0,2".to_string());
+    m.insert("bench.streams".to_string(), BENCH_STREAMS.to_string());
+    m.insert("bench.frames_per_video".to_string(), cfg.frames_per_video.to_string());
+    m.insert("bench.seed".to_string(), cfg.seed.to_string());
+    m.insert("bench.mock_delay_s".to_string(), format!("{BENCH_DELAY_S}"));
+    m.insert("bench.fps".to_string(), format!("{BENCH_FPS}"));
+    m.insert("bench.variant".to_string(), "CodecFlow".to_string());
+    m
+}
+
+fn bench_run() -> BenchRecord {
+    let cfg = bench_experiment_cfg();
+    let factory: Arc<dyn ExecutorFactory> =
+        Arc::new(MockReplicaFactory::new(&cfg.model, BENCH_DELAY_S));
+    let clips = bench_clips(&cfg, BENCH_STREAMS);
+    let cell = |depth: usize| {
+        Dispatcher::new(&cfg.model, cell_cfg(&cfg, BENCH_STREAMS, depth)).run(
+            Arc::clone(&factory),
+            &clips,
+            Variant::CodecFlow,
+            BENCH_FPS,
+        )
+    };
+    let serial = cell(BENCH_DEPTHS[0]);
+    let piped = cell(BENCH_DEPTHS[1]);
+    let mut rec = BenchRecord::new("fig22", BENCH_TITLE, cfg.seed, bench_config());
+    let lat = piped.merged.latency_summary();
+    rec.metric("sustainable_streams", piped.sustainable_streams, Direction::Higher);
+    rec.metric(
+        "sustainable_streams_serial",
+        serial.sustainable_streams,
+        Direction::Higher,
+    );
+    rec.metric(
+        "pipeline_speedup_x",
+        piped.sustainable_streams / serial.sustainable_streams.max(1e-9),
+        Direction::Higher,
+    );
+    rec.metric(
+        "overlap_efficiency",
+        piped.phases.overlap_efficiency(),
+        Direction::Higher,
+    );
+    // Pipelining must be bit-transparent: 1.0 when the serial and
+    // pipelined digests agree, 0.0 when they do not. Any drop is a
+    // correctness regression, not a performance one.
+    let digests_match = serial.result_digest == piped.result_digest;
+    rec.metric(
+        "digest_match_across_depths",
+        if digests_match { 1.0 } else { 0.0 },
+        Direction::Higher,
+    );
+    rec.metric_with_threshold("p50_latency_ms", lat.p50 * 1e3, Direction::Lower, 25.0);
+    rec.metric_with_threshold("p99_latency_ms", lat.p99 * 1e3, Direction::Lower, 25.0);
+    rec.digest("depth0", serial.result_digest);
+    rec.digest("depth2", piped.result_digest);
+    rec
+}
+
+pub fn bench_spec() -> BenchSpec {
+    BenchSpec { fig: "fig22", title: BENCH_TITLE, config: bench_config(), run: bench_run }
 }
 
 #[cfg(test)]

@@ -24,9 +24,11 @@
 //! small real wall occupancy so the per-backend wall columns measure
 //! something physical); needs no artifacts.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::baselines::Variant;
+use crate::bench::{config_map, BenchRecord, BenchSpec, Direction};
 use crate::codec::types::Frame;
 use crate::config::{ExperimentConfig, ServingConfig};
 use crate::coordinator::dispatch::{Dispatcher, ShardedReport};
@@ -34,7 +36,9 @@ use crate::runtime::replica::{ExecutorFactory, MockReplicaFactory};
 use crate::util::table::Table;
 use crate::video::{Corpus, CorpusConfig};
 
-use super::common::{serving_cfg, write_report};
+use super::common::{
+    bench_clips, bench_experiment_cfg, serving_cfg, write_bench, write_report,
+};
 
 pub struct Fig24 {
     /// (streams, route policy, aggregate sustainable streams, quant
@@ -158,7 +162,90 @@ pub fn run() -> Option<Fig24> {
         "fig24_hetero.txt",
         &(fig.table.render() + "\n" + &fig.table.to_csv()),
     );
+    write_bench(&bench_run());
     Some(fig)
+}
+
+// ---------------------------------------------------------------------
+// Continuous bench (BENCH_fig24.json): the small CI cell.
+// ---------------------------------------------------------------------
+
+const BENCH_STREAMS: usize = 16;
+/// Fast-only baseline vs codec-guided routing; the headline metrics
+/// come from the second (codec) cell.
+const BENCH_ROUTES: [&str; 2] = ["fixed", "codec"];
+const BENCH_DELAY_S: f64 = 2e-4;
+const BENCH_WALL_DELAY_S: f64 = 1e-5;
+const BENCH_FPS: f64 = 2.0;
+const BENCH_TITLE: &str =
+    "hetero backends: fixed vs codec-guided routing on one shard (CodecFlow, mock replicas)";
+
+/// The complete recorded config: every serving knob of the headline
+/// (codec-routed) cell plus the cell's own dimensions. The bench cache
+/// hashes exactly this map.
+fn bench_config() -> BTreeMap<String, String> {
+    let cfg = bench_experiment_cfg();
+    let mut m = config_map(&cell_cfg(&cfg, BENCH_STREAMS, BENCH_ROUTES[1]));
+    m.insert("bench.cells".to_string(), "route=fixed,codec".to_string());
+    m.insert("bench.streams".to_string(), BENCH_STREAMS.to_string());
+    m.insert("bench.frames_per_video".to_string(), cfg.frames_per_video.to_string());
+    m.insert("bench.seed".to_string(), cfg.seed.to_string());
+    m.insert("bench.mock_delay_s".to_string(), format!("{BENCH_DELAY_S}"));
+    m.insert("bench.mock_wall_delay_s".to_string(), format!("{BENCH_WALL_DELAY_S}"));
+    m.insert("bench.fps".to_string(), format!("{BENCH_FPS}"));
+    m.insert("bench.variant".to_string(), "CodecFlow".to_string());
+    m
+}
+
+/// Routing reads only admission-time codec signals, so capacity, job
+/// shares and digests are deterministic and gated; the per-backend
+/// wall seconds and utilizations are real measurements and recorded
+/// ungated (informational).
+fn bench_run() -> BenchRecord {
+    let cfg = bench_experiment_cfg();
+    let factory: Arc<dyn ExecutorFactory> = Arc::new(
+        MockReplicaFactory::new(&cfg.model, BENCH_DELAY_S).with_wall_delay(BENCH_WALL_DELAY_S),
+    );
+    let clips = bench_clips(&cfg, BENCH_STREAMS);
+    let cell = |route: &str| {
+        Dispatcher::new(&cfg.model, cell_cfg(&cfg, BENCH_STREAMS, route)).run(
+            Arc::clone(&factory),
+            &clips,
+            Variant::CodecFlow,
+            BENCH_FPS,
+        )
+    };
+    let fixed = cell(BENCH_ROUTES[0]);
+    let codec = cell(BENCH_ROUTES[1]);
+    let mut rec = BenchRecord::new("fig24", BENCH_TITLE, cfg.seed, bench_config());
+    let (fast, quant) = (&codec.backends[0], &codec.backends[1]);
+    let jobs = (fast.jobs + quant.jobs).max(1);
+    rec.metric("sustainable_streams", codec.sustainable_streams, Direction::Higher);
+    rec.metric(
+        "sustainable_streams_fixed",
+        fixed.sustainable_streams,
+        Direction::Higher,
+    );
+    rec.metric(
+        "codec_speedup_x",
+        codec.sustainable_streams / fixed.sustainable_streams.max(1e-9),
+        Direction::Higher,
+    );
+    rec.metric(
+        "quant_job_share",
+        quant.jobs as f64 / jobs as f64,
+        Direction::Higher,
+    );
+    rec.metric("accuracy_penalty", quant.accuracy_penalty, Direction::Lower);
+    rec.metric_info("wall_fast_s", fast.wall_s, Direction::Lower);
+    rec.metric_info("wall_quant_s", quant.wall_s, Direction::Lower);
+    rec.digest("fixed", fixed.result_digest);
+    rec.digest("codec", codec.result_digest);
+    rec
+}
+
+pub fn bench_spec() -> BenchSpec {
+    BenchSpec { fig: "fig24", title: BENCH_TITLE, config: bench_config(), run: bench_run }
 }
 
 #[cfg(test)]

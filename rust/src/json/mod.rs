@@ -88,6 +88,16 @@ impl Value {
         }
     }
 
+    /// Parse a `"0x…"` hex string written by [`u64_hex`]. Digests and
+    /// other full-width 64-bit values travel as hex strings because
+    /// JSON numbers here are `f64`, which cannot represent every u64
+    /// exactly.
+    pub fn as_u64_hex(&self) -> Option<u64> {
+        let s = self.as_str()?;
+        let hex = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X"))?;
+        u64::from_str_radix(hex, 16).ok()
+    }
+
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -215,6 +225,14 @@ pub fn num(n: f64) -> Value {
 
 pub fn s(v: &str) -> Value {
     Value::Str(v.to_string())
+}
+
+/// A u64 carried losslessly as a `"0x…"` hex string (16 digits,
+/// zero-padded). `Num` is f64, which silently rounds integers above
+/// 2^53 — fatal for the 64-bit result digests the bench records gate
+/// on. Read back with [`Value::as_u64_hex`].
+pub fn u64_hex(n: u64) -> Value {
+    Value::Str(format!("{n:#018x}"))
 }
 
 struct Parser<'a> {
@@ -432,5 +450,19 @@ mod tests {
         let v = obj(vec![("x", num(1.0)), ("y", arr(vec![s("a")]))]);
         let parsed = Value::parse(&v.to_string_pretty()).unwrap();
         assert_eq!(parsed.path("x").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn u64_hex_roundtrips_full_width() {
+        // Above 2^53: a Num(f64) would round this; the hex string must not.
+        let cases = [0u64, 1, u64::MAX, 0x9e37_79b9_7f4a_7c15];
+        for &n in &cases {
+            let v = u64_hex(n);
+            let parsed = Value::parse(&v.to_string_pretty()).unwrap();
+            assert_eq!(parsed.as_u64_hex(), Some(n), "roundtrip {n:#x}");
+        }
+        // Non-hex strings and plain numbers are not silently accepted.
+        assert_eq!(s("12345").as_u64_hex(), None);
+        assert_eq!(num(5.0).as_u64_hex(), None);
     }
 }

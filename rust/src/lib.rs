@@ -42,12 +42,18 @@
 //!   [`exp::fig23_wallclock`] (launch-thread wall-clock overlap) and
 //!   [`exp::fig24_hetero`] (heterogeneous backends with codec-guided
 //!   routing), beyond the paper.
+//! * [`bench`] — continuous benchmarking: schema-versioned
+//!   `BENCH_<fig>.json` records emitted by the fig20–fig24 runners,
+//!   the `codecflow bench run` small-config trajectory with its
+//!   knob-covering result cache, and the `codecflow bench compare`
+//!   regression gate CI runs against the committed `baselines/`.
 //! * [`util`], [`json`], [`config`] — support: PRNG, stats, micro-bench
 //!   harness, property-test helper, panic-isolating thread pool with
 //!   join/fan-in and bounded single-owner lanes ([`util::threadpool`]),
 //!   JSON, typed configs.
 
 pub mod baselines;
+pub mod bench;
 pub mod codec;
 pub mod config;
 pub mod coordinator;

@@ -6,6 +6,7 @@
 //! codecflow exp     <table1|table2|fig2|fig3|fig5|fig6|fig11|fig12|fig13|
 //!                    fig14|fig15|fig16|fig17|fig18|fig19|fig20|fig21|
 //!                    fig22|fig23|fig24|all>
+//! codecflow bench   <run|compare|list>   # continuous benchmarking
 //! codecflow models              # list models + artifacts
 //! codecflow help
 //! ```
@@ -41,6 +42,7 @@ fn main() {
     match cmd {
         "serve" => serve(&args[1..]),
         "exp" => experiment(&args[1..]),
+        "bench" => std::process::exit(codecflow::bench::cli(&args[1..])),
         "models" => models(),
         _ => help(),
     }
@@ -226,6 +228,9 @@ fn help() {
          USAGE:\n\
          \x20 codecflow serve  [--model M] [--variant V] [--frames N] [key=value...]\n\
          \x20 codecflow exp    <table1|table2|fig2..fig24|all>\n\
+         \x20 codecflow bench  run [--figs F,..] [--no-cache] [--update-baselines]\n\
+         \x20 codecflow bench  compare <baseline> <current> [--threshold PCT]\n\
+         \x20 codecflow bench  list\n\
          \x20 codecflow models\n\
          \n\
          serving overrides: workers= shards= streams= admit_wave= steal= queue_depth=\n\
@@ -241,7 +246,7 @@ fn help() {
          pipeline overrides: window_frames= stride_frac= gop= mv_threshold= alpha= qp=\n\
          env: CF_ARTIFACTS, CF_VIDEOS, CF_FRAMES, CF_WORKERS, CF_BATCH,\n\
          \x20    CF_BATCH_BUCKET, CF_PIPELINE, CF_LAUNCH, CF_BACKEND, CF_ROUTE,\n\
-         \x20    CF_NO_CACHE\n\
+         \x20    CF_NO_CACHE, CF_BASELINES\n\
          docs: docs/OPERATIONS.md (every serving knob: default, env,\n\
          \x20    interactions, which figure measures it)\n\
          \x20    docs/ARCHITECTURE.md (layer map + a request's life)"

@@ -1,0 +1,254 @@
+//! Integration coverage for the continuous-bench regression gate:
+//! threshold boundary math, direction handling, hard digest equality,
+//! error-not-silence on schema/config/metric-set mismatches, bootstrap
+//! baseline acceptance, and the CLI exit codes CI keys off
+//! (0 = ok, 1 = regression, 2 = error).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use codecflow::bench::{
+    cli, compare_dirs, compare_files, compare_records, BenchRecord, Direction, Status,
+};
+
+/// Fresh per-test scratch directory (no clock/randomness: the test
+/// name plus the pid keep parallel tests and reruns apart).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cf_bench_cmp_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+fn args(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+fn record(value: f64, digest: u64) -> BenchRecord {
+    let mut config = BTreeMap::new();
+    config.insert("streams".to_string(), "16".to_string());
+    config.insert("bench.fps".to_string(), "2".to_string());
+    let mut rec = BenchRecord::new("figX", "gate coverage cell", 2026, config);
+    rec.metric("sustainable_streams", value, Direction::Higher);
+    rec.digest("cell", digest);
+    rec
+}
+
+#[test]
+fn identical_records_are_ok_and_cli_exits_zero() {
+    let rec = record(100.0, 0xabcd);
+    let rep = compare_records(&rec, &rec, 5.0).expect("comparable");
+    assert!(!rep.regressed(), "identical records must pass");
+    assert_eq!(rep.digests_checked, 1);
+    assert!(rep.digest_mismatches.is_empty());
+    assert_eq!(rep.deltas[0].change_pct, 0.0);
+    assert_eq!(rep.deltas[0].status, Status::Ok);
+
+    // Same via files and the CLI: the acceptance criterion is exit 0.
+    let dir = scratch("identical");
+    let b = rec.write_to(&dir.join("base")).expect("write baseline");
+    let c = rec.write_to(&dir.join("cur")).expect("write current");
+    let code = cli(&args(&[
+        "compare",
+        b.to_str().unwrap(),
+        c.to_str().unwrap(),
+        "--threshold",
+        "5",
+    ]));
+    assert_eq!(code, 0, "identical runs must exit 0");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn threshold_boundary_is_strict_not_inclusive() {
+    let base = record(100.0, 1);
+    // Exactly -5% at threshold 5 passes (strictly-past semantics)...
+    let rep = compare_records(&base, &record(95.0, 1), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].change_pct, -5.0);
+    assert_eq!(rep.deltas[0].status, Status::Ok);
+    assert!(!rep.regressed());
+    // ...one tick further fails.
+    let rep = compare_records(&base, &record(94.9, 1), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].status, Status::Regressed);
+    assert!(rep.regressed());
+    // Exactly +5% is not yet an improvement; past it is.
+    let rep = compare_records(&base, &record(105.0, 1), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].status, Status::Ok);
+    let rep = compare_records(&base, &record(105.1, 1), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].status, Status::Improved);
+}
+
+#[test]
+fn lower_better_metrics_gate_on_rises() {
+    let cell = |value: f64| {
+        let mut rec = BenchRecord::new("figL", "latency cell", 1, BTreeMap::new());
+        rec.metric("p99_latency_ms", value, Direction::Lower);
+        rec
+    };
+    let base = cell(100.0);
+    let rep = compare_records(&base, &cell(105.0), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].status, Status::Ok, "+5% exactly passes");
+    let rep = compare_records(&base, &cell(106.0), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].status, Status::Regressed, "+6% rise fails");
+    assert!(rep.regressed());
+    let rep = compare_records(&base, &cell(94.0), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].status, Status::Improved, "-6% drop improves");
+}
+
+#[test]
+fn ungated_metrics_never_fail() {
+    let cell = |value: f64| {
+        let mut rec = BenchRecord::new("figW", "wall cell", 1, BTreeMap::new());
+        rec.metric_info("wall_s", value, Direction::Lower);
+        rec
+    };
+    // A 10x wall-clock blowup on an info metric is reported, not gated.
+    let rep = compare_records(&cell(1.0), &cell(10.0), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].status, Status::Info);
+    assert!(!rep.regressed());
+}
+
+#[test]
+fn per_metric_threshold_overrides_the_default() {
+    let cell = |value: f64| {
+        let mut rec = BenchRecord::new("figT", "wide cell", 1, BTreeMap::new());
+        rec.metric_with_threshold("p50_latency_ms", value, Direction::Lower, 25.0);
+        rec
+    };
+    // +20% would fail the 5% default but sits inside the 25% override.
+    let rep = compare_records(&cell(100.0), &cell(120.0), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].status, Status::Ok);
+    assert_eq!(rep.deltas[0].threshold_pct, 25.0);
+    let rep = compare_records(&cell(100.0), &cell(130.0), 5.0).unwrap();
+    assert_eq!(rep.deltas[0].status, Status::Regressed);
+}
+
+#[test]
+fn missing_metric_is_an_error_in_both_directions() {
+    let base = record(100.0, 1);
+    let mut gone = record(100.0, 1);
+    gone.metrics.clear();
+    let err = compare_records(&base, &gone, 5.0).expect_err("vanished metric");
+    assert!(err.contains("metric set mismatch"), "unexpected error: {err}");
+
+    let mut extra = record(100.0, 1);
+    extra.metric("brand_new", 1.0, Direction::Higher);
+    let err = compare_records(&base, &extra, 5.0).expect_err("unbaselined metric");
+    assert!(err.contains("metric set mismatch"), "unexpected error: {err}");
+}
+
+#[test]
+fn digest_value_mismatch_regresses_regardless_of_thresholds() {
+    let base = record(100.0, 0x1111);
+    let cur = record(100.0, 0x2222);
+    // Absurdly generous threshold: digests do not care.
+    let rep = compare_records(&base, &cur, 1000.0).unwrap();
+    assert!(rep.regressed(), "a moved digest is always a regression");
+    assert_eq!(rep.digest_mismatches.len(), 1);
+    assert_eq!(rep.digest_mismatches[0], ("cell".to_string(), 0x1111, 0x2222));
+
+    // And the digest *name set* changing is an error, not a pass.
+    let mut renamed = record(100.0, 0x1111);
+    renamed.digests.clear();
+    renamed.digest("other", 0x1111);
+    let err = compare_records(&base, &renamed, 5.0).expect_err("renamed digest");
+    assert!(err.contains("digest set mismatch"), "unexpected error: {err}");
+}
+
+#[test]
+fn config_mismatch_is_an_error_not_a_diff() {
+    let base = record(100.0, 1);
+    let mut cur = record(100.0, 1);
+    cur.config.insert("streams".to_string(), "64".to_string());
+    let err = compare_records(&base, &cur, 5.0).expect_err("knob changed");
+    assert!(err.contains("config mismatch"), "unexpected error: {err}");
+    assert!(err.contains("streams"), "must name the knob: {err}");
+}
+
+#[test]
+fn schema_version_mismatch_is_an_error_via_files() {
+    let dir = scratch("schema");
+    let rec = record(100.0, 1);
+    let good = rec.write_to(&dir.join("cur")).expect("write current");
+    let stale = rec
+        .to_json()
+        .to_string_pretty()
+        .replace("\"schema_version\": 1", "\"schema_version\": 99");
+    assert_ne!(stale, rec.to_json().to_string_pretty(), "edit must take");
+    let stale_path = dir.join("BENCH_figX.json");
+    std::fs::write(&stale_path, stale).expect("write stale baseline");
+    let err = compare_files(&stale_path, &good, 5.0).expect_err("stale schema");
+    assert!(err.contains("schema version"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bootstrap_baseline_is_accepted_and_says_how_to_arm() {
+    let mut seed = record(0.0, 0);
+    seed.bootstrap = true;
+    // Even with disjoint metrics/digests/config, a bootstrap seed
+    // never errors and never gates.
+    seed.metrics.clear();
+    seed.digests.clear();
+    seed.config.clear();
+    let cur = record(123.0, 0x5555);
+    let rep = compare_records(&seed, &cur, 5.0).expect("bootstrap accepted");
+    assert!(rep.bootstrap);
+    assert!(!rep.regressed());
+    assert_eq!(rep.digests_checked, 0);
+    assert!(rep.render().contains("--update-baselines"), "must say how to arm");
+    for d in &rep.deltas {
+        assert_eq!(d.status, Status::Info);
+    }
+}
+
+#[test]
+fn injected_regression_exits_nonzero_from_the_cli() {
+    let dir = scratch("regression");
+    let (base_dir, cur_dir) = (dir.join("baselines"), dir.join("reports"));
+    record(100.0, 7).write_to(&base_dir).expect("write baseline");
+    // >5% sustainable_streams drop: the acceptance-criterion scenario.
+    record(90.0, 7).write_to(&cur_dir).expect("write current");
+    let code = cli(&args(&[
+        "compare",
+        base_dir.to_str().unwrap(),
+        cur_dir.to_str().unwrap(),
+        "--threshold",
+        "5",
+    ]));
+    assert_eq!(code, 1, "an injected regression must exit 1");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn directory_coverage_must_match_exactly() {
+    let dir = scratch("coverage");
+    let (base_dir, cur_dir) = (dir.join("baselines"), dir.join("reports"));
+    record(100.0, 7).write_to(&base_dir).expect("write baseline");
+    std::fs::create_dir_all(&cur_dir).expect("current dir");
+    // Baseline present, no current run: error, not a pass.
+    let err = compare_dirs(&base_dir, &cur_dir, 5.0).expect_err("missing current");
+    assert!(err.contains("no current run"), "unexpected error: {err}");
+    // Current record with no committed baseline: also an error.
+    record(100.0, 7).write_to(&cur_dir).expect("write current");
+    let mut extra = record(50.0, 9);
+    extra.fig = "figZ".to_string();
+    extra.write_to(&cur_dir).expect("write extra current");
+    let err = compare_dirs(&base_dir, &cur_dir, 5.0).expect_err("unbaselined figure");
+    assert!(err.contains("no committed baseline"), "unexpected error: {err}");
+    // Empty baseline dir: error.
+    let empty = dir.join("empty");
+    std::fs::create_dir_all(&empty).expect("empty dir");
+    let err = compare_dirs(&empty, &cur_dir, 5.0).expect_err("no baselines at all");
+    assert!(err.contains("no BENCH_"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_rejects_bad_usage_with_exit_two() {
+    assert_eq!(cli(&args(&["compare", "only-one-path"])), 2);
+    assert_eq!(cli(&args(&["compare", "a", "b", "--threshold", "nope"])), 2);
+    assert_eq!(cli(&args(&["compare", "a", "b", "--threshold", "-3"])), 2);
+    assert_eq!(cli(&args(&["nonsense"])), 2);
+    assert_eq!(cli(&args(&["run", "--figs", "figNaN"])), 2);
+}
