@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig25_stages` — regenerates Fig 25
+//! (disaggregated stage pools: sustainable streams vs
+//! decode/encode pool shape x stream count, with decode, ViT encode
+//! and prefill launch provisioned as independent lanes on one shard).
+fn main() {
+    codecflow::exp::fig25_stages::run();
+}

@@ -1,5 +1,5 @@
 //! The continuous-bench trajectory: the named small-config cells of
-//! fig20–fig24 that CI runs on every PR, with a disk result cache
+//! fig20–fig25 that CI runs on every PR, with a disk result cache
 //! (extending the exp cache under `reports/cache/`) keyed on the
 //! *complete* resolved config — every serving knob
 //! ([`crate::config::ServingConfig::knob_values`]) plus the cell's
@@ -10,7 +10,9 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use crate::exp::common::reports_dir;
-use crate::exp::{fig20_scaling, fig21_batching, fig22_pipeline, fig23_wallclock, fig24_hetero};
+use crate::exp::{
+    fig20_scaling, fig21_batching, fig22_pipeline, fig23_wallclock, fig24_hetero, fig25_stages,
+};
 
 use super::record::BenchRecord;
 
@@ -31,6 +33,7 @@ pub fn trajectory() -> Vec<BenchSpec> {
         fig22_pipeline::bench_spec(),
         fig23_wallclock::bench_spec(),
         fig24_hetero::bench_spec(),
+        fig25_stages::bench_spec(),
     ]
 }
 
@@ -188,10 +191,10 @@ mod tests {
     use crate::config::ServingConfig;
 
     #[test]
-    fn trajectory_is_fig20_through_fig24_with_nonempty_configs() {
+    fn trajectory_is_fig20_through_fig25_with_nonempty_configs() {
         let specs = trajectory();
         let figs: Vec<&str> = specs.iter().map(|s| s.fig).collect();
-        assert_eq!(figs, vec!["fig20", "fig21", "fig22", "fig23", "fig24"]);
+        assert_eq!(figs, vec!["fig20", "fig21", "fig22", "fig23", "fig24", "fig25"]);
         for spec in &specs {
             assert!(!spec.title.is_empty(), "{} has no title", spec.fig);
             // Every serving knob must be embedded in the cell config —

@@ -120,6 +120,23 @@ pub struct ServingConfig {
     /// Frontend worker threads (decode/prune are parallel; model
     /// execution is serialized per executor replica).
     pub frontend_workers: usize,
+    /// Decode stage-pool lanes per shard (`decode_workers=`, env
+    /// `CF_DECODE_WORKERS`). `1` (the default) keeps the PR-4 launched
+    /// ring byte-for-byte: window decode fans out on the shared
+    /// `frontend_workers` pool and the virtual clock charges the
+    /// per-window sum. `> 1` (with `launch=1` and `pipeline >= 1`)
+    /// switches the shard to disaggregated stage pools: window decode
+    /// runs on this many dedicated bounded lanes and the virtual clock
+    /// charges the decode *makespan* across them. Zero is rejected — a
+    /// stage with no workers can never drain.
+    pub decode_workers: usize,
+    /// ViT-encode stage-pool lanes per shard (`encode_workers=`, env
+    /// `CF_ENCODE_WORKERS`). Same contract as `decode_workers`, for
+    /// the per-frame ViT encode stage: each lane owns its own executor
+    /// replica (same backend flavour as the shard primary), so encodes
+    /// physically overlap while selection and assembly stay in stream
+    /// order on the shard thread. Zero is rejected.
+    pub encode_workers: usize,
     /// KV pool budget in bytes, split evenly across shards
     /// ([`ServingConfig::shard_kv_budget`]).
     pub kv_budget_bytes: usize,
@@ -200,6 +217,8 @@ impl Default for ServingConfig {
             pipeline: PipelineConfig::default(),
             streams: 4,
             frontend_workers: 4,
+            decode_workers: 1,
+            encode_workers: 1,
             kv_budget_bytes: 256 << 20,
             queue_depth: 16,
             num_shards: 1,
@@ -236,6 +255,8 @@ impl ServingConfig {
             "num_shards" | "shards" => parse_into(value, &mut self.num_shards),
             "streams" => parse_into(value, &mut self.streams),
             "frontend_workers" => parse_into(value, &mut self.frontend_workers),
+            "decode_workers" => parse_stage_workers(key, value, &mut self.decode_workers),
+            "encode_workers" => parse_stage_workers(key, value, &mut self.encode_workers),
             "kv_budget_bytes" => parse_into(value, &mut self.kv_budget_bytes),
             "queue_depth" => parse_into(value, &mut self.queue_depth),
             "admit_wave" => parse_into(value, &mut self.admit_wave),
@@ -278,6 +299,8 @@ impl ServingConfig {
             "num_shards",
             "streams",
             "frontend_workers",
+            "decode_workers",
+            "encode_workers",
             "kv_budget_bytes",
             "queue_depth",
             "admit_wave",
@@ -319,6 +342,8 @@ impl ServingConfig {
             ("num_shards", self.num_shards.to_string()),
             ("streams", self.streams.to_string()),
             ("frontend_workers", self.frontend_workers.to_string()),
+            ("decode_workers", self.decode_workers.to_string()),
+            ("encode_workers", self.encode_workers.to_string()),
             ("kv_budget_bytes", self.kv_budget_bytes.to_string()),
             ("queue_depth", self.queue_depth.to_string()),
             ("admit_wave", self.admit_wave.to_string()),
@@ -349,6 +374,28 @@ impl ServingConfig {
     pub fn shard_kv_budget(&self) -> usize {
         (self.kv_budget_bytes / self.num_shards.max(1)).max(1)
     }
+}
+
+/// Stage-pool worker-count syntax (`decode_workers=`,
+/// `encode_workers=`): a positive integer. Zero parses but is
+/// *rejected with a printed reason* — a stage pool with no workers can
+/// never drain, and silently treating it as "disabled" would hide the
+/// typo from the operator. The slot is left untouched on rejection,
+/// same as every other knob.
+fn parse_stage_workers(key: &str, value: &str, slot: &mut usize) -> bool {
+    let mut parsed = 0usize;
+    if !parse_into(value, &mut parsed) {
+        return false;
+    }
+    if parsed == 0 {
+        eprintln!(
+            "codecflow: rejected `{key}=0`: stage pools need at least one worker \
+             (use `{key}=1` for the non-disaggregated default)"
+        );
+        return false;
+    }
+    *slot = parsed;
+    true
 }
 
 fn parse_into<T: std::str::FromStr>(value: &str, slot: &mut T) -> bool {
@@ -516,6 +563,21 @@ mod tests {
         assert!((c.quant_ratio - 0.25).abs() < 1e-12);
         assert!(c.set("batch_slack", "1.5"));
         assert!((c.batch_slack - 1.5).abs() < 1e-12);
+
+        // Stage-pool knobs: positive counts accepted, zero rejected
+        // with the slot untouched (a poolless stage can never drain).
+        assert_eq!(c.decode_workers, 1, "stage pools off by default");
+        assert_eq!(c.encode_workers, 1);
+        assert!(c.set("decode_workers", "3"));
+        assert_eq!(c.decode_workers, 3);
+        assert!(c.set("encode_workers", "2"));
+        assert_eq!(c.encode_workers, 2);
+        assert!(!c.set("decode_workers", "0"), "zero workers rejected");
+        assert_eq!(c.decode_workers, 3, "rejected value leaves the knob untouched");
+        assert!(!c.set("encode_workers", "0"), "zero workers rejected");
+        assert_eq!(c.encode_workers, 2);
+        assert!(!c.set("decode_workers", "many"), "non-numeric rejected");
+        assert_eq!(c.decode_workers, 3);
 
         c.kv_budget_bytes = 100;
         c.num_shards = 4;

@@ -28,6 +28,7 @@ use crate::baselines::Variant;
 use crate::codec::types::Frame;
 use crate::config::ServingConfig;
 use crate::runtime::batch::BatchStats;
+use crate::runtime::mock::Executor;
 use crate::runtime::replica::{backend_kinds, Backend, ExecutorFactory};
 use crate::util;
 use crate::util::threadpool::ThreadPool;
@@ -38,6 +39,10 @@ use super::shard::{assign_shard, Shard, ShardReport, StealPool, StreamWork};
 /// One warning per process for the launch=1/pipeline=0 no-op (see
 /// [`Dispatcher::run`]).
 static LAUNCH_NOOP_WARNING: Once = Once::new();
+
+/// One warning per process for stage-pool knobs set without the
+/// launched ring they ride on.
+static STAGE_NOOP_WARNING: Once = Once::new();
 
 /// Merged result of a sharded serving run.
 #[derive(Debug)]
@@ -78,6 +83,11 @@ pub struct ShardedReport {
     /// virtual exec seconds, measured wall occupancy, accuracy-proxy
     /// penalty).
     pub backends: Vec<BackendStats>,
+    /// `(decode_workers, encode_workers)` when the run served through
+    /// disaggregated stage pools
+    /// ([`Shard::run_staged`](super::shard::Shard::run_staged));
+    /// `None` otherwise. Drives the `stages:` report line.
+    pub stage_workers: Option<(usize, usize)>,
 }
 
 impl ShardedReport {
@@ -114,6 +124,38 @@ impl ShardedReport {
             self.phases.wall_overlap_s,
             self.phases.wall_overlap_efficiency() * 100.0
         ));
+        if let Some((kd, ke)) = self.stage_workers {
+            // Per-stage pool health: virtual work vs the busiest-lane
+            // makespan (utilization — low means over-provisioned or
+            // starved), measured wall occupancy, and the peak
+            // in-flight jobs one batch pushed through the pool. The
+            // pool with the higher utilization is the next one to
+            // scale up.
+            let du = PhaseTimes::stage_utilization(
+                self.phases.decode_work_s,
+                self.phases.decode_span_s,
+                kd,
+            );
+            let eu = PhaseTimes::stage_utilization(
+                self.phases.encode_work_s,
+                self.phases.encode_span_s,
+                ke,
+            );
+            let dp = self.shards.iter().map(|r| r.decode_peak).max().unwrap_or(0);
+            let ep = self.shards.iter().map(|r| r.encode_peak).max().unwrap_or(0);
+            out.push_str(&format!(
+                "stages: decode[workers={kd} util={:.0}% span={:.3}s wall={:.3}s peak={dp}] \
+                 encode[workers={ke} util={:.0}% span={:.3}s wall={:.3}s peak={ep}] \
+                 scale-next={}\n",
+                du * 100.0,
+                self.phases.decode_span_s,
+                self.phases.wall_decode_s,
+                eu * 100.0,
+                self.phases.encode_span_s,
+                self.phases.wall_encode_s,
+                if du >= eu { "decode" } else { "encode" }
+            ));
+        }
         if !self.backends.is_empty() {
             let span: f64 = self.shards.iter().map(|r| r.span_s).sum();
             let mut line = String::from("backends:");
@@ -204,6 +246,20 @@ impl Dispatcher {
                 );
             });
         }
+        // Stage pools ride the launched pipeline ring: without launch
+        // threads and a ring there is no stage boundary to provision.
+        let staged = (self.cfg.decode_workers > 1 || self.cfg.encode_workers > 1)
+            && self.cfg.launch
+            && self.cfg.pipeline_depth > 0;
+        if (self.cfg.decode_workers > 1 || self.cfg.encode_workers > 1) && !staged {
+            STAGE_NOOP_WARNING.call_once(|| {
+                eprintln!(
+                    "warning: decode_workers/encode_workers take effect only with \
+                     launch=1 and pipeline>=1 (stage pools ride the launched ring) — \
+                     serving without stage pools"
+                );
+            });
+        }
 
         let streams: Vec<StreamWork> = clips
             .iter()
@@ -240,7 +296,21 @@ impl Dispatcher {
                 variant,
                 fps,
             };
-            if kinds.len() > 1 || (cfg.launch && cfg.pipeline_depth > 0) {
+            if staged {
+                // Disaggregated stage pools: the launch-thread
+                // backends as usual, plus one executor replica per
+                // encode lane — the same flavour as the primary, so
+                // which replica encodes a frame never changes the
+                // bits (replicas are deterministic).
+                let backends: Vec<Backend> = kinds
+                    .iter()
+                    .map(|&k| Backend::new(k, factory.build_backend(k, cfg.quant_ratio)))
+                    .collect();
+                let replicas: Vec<Box<dyn Executor>> = (0..cfg.encode_workers.max(1))
+                    .map(|_| factory.build_backend(kinds[0], cfg.quant_ratio))
+                    .collect();
+                shard.run_staged(backends, replicas, &pool)
+            } else if kinds.len() > 1 || (cfg.launch && cfg.pipeline_depth > 0) {
                 let backends: Vec<Backend> = kinds
                     .iter()
                     .map(|&k| Backend::new(k, factory.build_backend(k, cfg.quant_ratio)))
@@ -303,6 +373,11 @@ impl Dispatcher {
             stream_digests,
             quant_streams,
             backends,
+            stage_workers: if staged {
+                Some((self.cfg.decode_workers, self.cfg.encode_workers))
+            } else {
+                None
+            },
         }
     }
 }

@@ -46,6 +46,22 @@ pub struct PhaseTimes {
     pub wall_execute_s: f64,
     /// Measured wall seconds prepare and execute ran simultaneously.
     pub wall_overlap_s: f64,
+    /// Virtual seconds of decode-stage work routed through a decode
+    /// pool (stage-pool mode only; zero otherwise).
+    pub decode_work_s: f64,
+    /// Virtual makespan the decode pool contributed: per batch, the
+    /// busiest decode lane's summed job seconds.
+    pub decode_span_s: f64,
+    /// Virtual seconds of ViT-encode-stage work routed through an
+    /// encode pool (stage-pool mode only; zero otherwise).
+    pub encode_work_s: f64,
+    /// Virtual makespan the encode pool contributed: per batch, the
+    /// busiest encode lane's summed job seconds.
+    pub encode_span_s: f64,
+    /// Measured wall seconds decode-pool workers spent occupied.
+    pub wall_decode_s: f64,
+    /// Measured wall seconds encode-pool workers spent occupied.
+    pub wall_encode_s: f64,
 }
 
 impl PhaseTimes {
@@ -72,6 +88,19 @@ impl PhaseTimes {
         }
     }
 
+    /// Utilization of a `workers`-wide stage pool: the fraction of
+    /// the pool's makespan its workers were actually busy
+    /// (work / (span × workers), clamped). 1.0 means perfectly
+    /// balanced lanes; low values tell the operator that pool is
+    /// over-provisioned (or starved by another stage).
+    pub fn stage_utilization(work_s: f64, span_s: f64, workers: usize) -> f64 {
+        if span_s > 0.0 && workers > 0 {
+            (work_s / (span_s * workers as f64)).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+
     /// Fold another shard's phase times into this one.
     pub fn merge(&mut self, other: &PhaseTimes) {
         self.prepare_s += other.prepare_s;
@@ -81,6 +110,12 @@ impl PhaseTimes {
         self.wall_prepare_s += other.wall_prepare_s;
         self.wall_execute_s += other.wall_execute_s;
         self.wall_overlap_s += other.wall_overlap_s;
+        self.decode_work_s += other.decode_work_s;
+        self.decode_span_s += other.decode_span_s;
+        self.encode_work_s += other.encode_work_s;
+        self.encode_span_s += other.encode_span_s;
+        self.wall_decode_s += other.wall_decode_s;
+        self.wall_encode_s += other.wall_encode_s;
     }
 }
 
@@ -404,6 +439,41 @@ mod tests {
         assert!((p.wall_prepare_s - 8.0).abs() < 1e-12);
         assert!((p.wall_overlap_efficiency() - 0.25).abs() < 1e-12);
         assert_eq!(PhaseTimes::default().wall_overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn stage_fields_merge_and_utilization_clamps() {
+        let mut p = PhaseTimes {
+            decode_work_s: 1.5,
+            decode_span_s: 1.0,
+            encode_work_s: 2.0,
+            encode_span_s: 2.0,
+            wall_decode_s: 0.5,
+            wall_encode_s: 0.25,
+            ..Default::default()
+        };
+        p.merge(&PhaseTimes {
+            decode_work_s: 0.5,
+            decode_span_s: 1.0,
+            encode_work_s: 2.0,
+            encode_span_s: 2.0,
+            wall_decode_s: 0.5,
+            wall_encode_s: 0.75,
+            ..Default::default()
+        });
+        assert!((p.decode_work_s - 2.0).abs() < 1e-12);
+        assert!((p.decode_span_s - 2.0).abs() < 1e-12);
+        assert!((p.encode_work_s - 4.0).abs() < 1e-12);
+        assert!((p.wall_decode_s - 1.0).abs() < 1e-12);
+        assert!((p.wall_encode_s - 1.0).abs() < 1e-12);
+        // 2 workers, 2s span, 2s work -> half busy.
+        let u = PhaseTimes::stage_utilization(p.decode_work_s, p.decode_span_s, 2);
+        assert!((u - 0.5).abs() < 1e-12);
+        // Perfectly balanced single lane saturates at 1.0 even when
+        // virtual work slightly exceeds span (accounting slack).
+        assert_eq!(PhaseTimes::stage_utilization(3.0, 2.0, 1), 1.0);
+        // Idle pool (no span) reports zero rather than NaN.
+        assert_eq!(PhaseTimes::stage_utilization(0.0, 0.0, 4), 0.0);
     }
 
     #[test]

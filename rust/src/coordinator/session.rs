@@ -17,7 +17,9 @@ use crate::codec::types::Frame;
 use crate::config::PipelineConfig;
 use crate::net::Link;
 use crate::pipeline::frontend::{Frontend, StreamSource, WindowFrames};
-use crate::pipeline::infer::{PendingWindow, StageTimes, WindowEngine, WindowResult};
+use crate::pipeline::infer::{
+    EncodeJob, EncodedFrame, PendingWindow, StageTimes, WindowEngine, WindowResult,
+};
 use crate::runtime::batch::{BatchOutcome, BatchRequest};
 use crate::runtime::mock::Executor;
 
@@ -182,6 +184,27 @@ impl<'a> StreamSession<'a> {
     pub fn prepare_decoded(&mut self, wf: WindowFrames) -> (BatchRequest, PendingWindow) {
         let frontend_times = Self::frontend_times(&wf);
         self.engine.prepare_window(&wf.frames, wf.start, frontend_times)
+    }
+
+    /// Stage-pool seam, plan half: detach the decoded window's fresh
+    /// ViT encodes as standalone [`EncodeJob`]s for an encode pool.
+    /// `None` when the variant must encode inline (Déjà Vu pixel
+    /// reuse) — fall back to [`StreamSession::prepare_decoded`].
+    pub fn plan_encode(&mut self, wf: &WindowFrames) -> Option<Vec<EncodeJob>> {
+        self.engine.plan_encode(&wf.frames, wf.start)
+    }
+
+    /// Stage-pool seam, absorb half:
+    /// [`StreamSession::prepare_decoded`] for a window whose fresh
+    /// frames were already ViT-encoded (the outputs of this window's
+    /// [`StreamSession::plan_encode`] jobs, in frame order).
+    pub fn prepare_preencoded(
+        &mut self,
+        wf: WindowFrames,
+        encoded: Vec<EncodedFrame>,
+    ) -> (BatchRequest, PendingWindow) {
+        let frontend_times = Self::frontend_times(&wf);
+        self.engine.prepare_window_preencoded(&wf.frames, wf.start, frontend_times, encoded)
     }
 
     /// Consume a (possibly batch-amortized) prefill outcome for a

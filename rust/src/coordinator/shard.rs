@@ -70,7 +70,7 @@ use crate::config::ServingConfig;
 use crate::kvc::pool::KvPool;
 use crate::kvc::records::WindowState;
 use crate::pipeline::frontend::WindowFrames;
-use crate::pipeline::infer::{PendingWindow, WindowResult};
+use crate::pipeline::infer::{EncodedFrame, PendingWindow, WindowResult};
 use crate::runtime::batch::{
     route_policy, BatchOutcome, BatchRequest, BatchStats, MultiPipelineClock, RoutePolicy,
     RouteQuery,
@@ -78,7 +78,7 @@ use crate::runtime::batch::{
 use crate::runtime::mock::Executor;
 use crate::runtime::replica::{backend_kinds, Backend, BackendKind, BackendSet, LaunchedBatch};
 use crate::util;
-use crate::util::threadpool::{join_all, JobHandle, ThreadPool};
+use crate::util::threadpool::{join_all, JobHandle, Lane, ThreadPool};
 
 use super::metrics::{overlap_seconds, BackendStats, Metrics, PhaseTimes};
 use super::queue::{AdmissionQueue, WindowJob};
@@ -196,6 +196,12 @@ pub struct ShardReport {
     /// single inline executor reports one entry named after its
     /// configured kind).
     pub backends: Vec<BackendStats>,
+    /// Peak windows in flight in the decode stage pool within one
+    /// batch (0 when stage pools are off — [`Shard::run_staged`]).
+    pub decode_peak: usize,
+    /// Peak fresh-frame ViT encodes in flight in the encode stage
+    /// pool within one batch (0 when stage pools are off).
+    pub encode_peak: usize,
 }
 
 impl ShardReport {
@@ -370,6 +376,63 @@ pub struct Shard {
     pub fps: f64,
 }
 
+/// Disaggregated per-shard stage pools (ROADMAP "decode, ViT encode,
+/// and LLM prefill as independently scaled services"): a pool of
+/// dedicated decode lanes and a pool of ViT-encode lanes — each lane a
+/// [`Lane`] worker thread fed by a **bounded** FIFO queue, the same
+/// primitive the prefill launch threads ride
+/// ([`crate::runtime::replica::LaunchedExecutor`]) — so all three
+/// pipeline stages are independently provisioned
+/// (`decode_workers=` / `encode_workers=` next to the launch seam).
+///
+/// Decode lanes are stateless (a frontend checks out onto the lane per
+/// job and returns with the decoded window); each encode lane owns its
+/// **own executor replica**, because [`Executor`] is `Send` but not
+/// `Sync` — replicas are deterministic, so which replica encodes a
+/// frame never changes the bits. Queues are bounded at
+/// `pipeline_depth + 1` jobs, mirroring the launch ring: a stage that
+/// falls behind stalls its producer (backpressure) instead of queueing
+/// unboundedly. Work distributes round-robin — windows over decode
+/// lanes, fresh frames over encode lanes — and joins in submission
+/// order, so retirement stays strictly FIFO and KV settlement is
+/// untouched.
+pub struct StagePools {
+    decode: Vec<Lane<()>>,
+    encode: Vec<Lane<Box<dyn Executor>>>,
+}
+
+impl StagePools {
+    /// Build `decode_workers` decode lanes and one encode lane per
+    /// executor replica, each with a bounded queue of
+    /// `depth.max(1) + 1` jobs (the launch lane's ring bound).
+    pub fn new(
+        decode_workers: usize,
+        encode_replicas: Vec<Box<dyn Executor>>,
+        depth: usize,
+    ) -> StagePools {
+        assert!(!encode_replicas.is_empty(), "encode pool needs at least one replica");
+        let cap = depth.max(1) + 1;
+        StagePools {
+            decode: (0..decode_workers.max(1))
+                .map(|i| Lane::new(&format!("cf-decode-{i}"), cap, ()))
+                .collect(),
+            encode: encode_replicas
+                .into_iter()
+                .enumerate()
+                .map(|(i, exec)| Lane::new(&format!("cf-encode-{i}"), cap, exec))
+                .collect(),
+        }
+    }
+
+    pub fn decode_workers(&self) -> usize {
+        self.decode.len()
+    }
+
+    pub fn encode_workers(&self) -> usize {
+        self.encode.len()
+    }
+}
+
 /// Where a ring batch's prefill launch stands while it rides toward
 /// its finish turn.
 enum LaunchState {
@@ -466,6 +529,14 @@ struct ShardState<'e> {
     /// [`PhaseTimes::wall_overlap_s`].
     prep_intervals: Vec<(f64, f64)>,
     exec_intervals: Vec<(f64, f64)>,
+    /// Measured wall intervals of decode-pool / encode-pool jobs
+    /// (stage-pool mode only; summed into
+    /// [`PhaseTimes::wall_decode_s`] / [`PhaseTimes::wall_encode_s`]).
+    decode_intervals: Vec<(f64, f64)>,
+    encode_intervals: Vec<(f64, f64)>,
+    /// Peak per-batch in-flight jobs per stage pool.
+    decode_peak: usize,
+    encode_peak: usize,
     streams_served: usize,
     stolen_streams: usize,
 }
@@ -517,6 +588,10 @@ impl<'e> ShardState<'e> {
             pipe: MultiPipelineClock::new(set.map(|s| s.len()).unwrap_or(1)),
             prep_intervals: Vec::new(),
             exec_intervals: Vec::new(),
+            decode_intervals: Vec::new(),
+            encode_intervals: Vec::new(),
+            decode_peak: 0,
+            encode_peak: 0,
             streams_served: 0,
             stolen_streams: 0,
         }
@@ -813,6 +888,7 @@ impl<'e> ShardState<'e> {
         &mut self,
         jobs: Vec<WindowJob>,
         fe_pool: Option<&ThreadPool>,
+        stages: Option<&StagePools>,
     ) -> Option<InFlight> {
         let bucket = jobs.first().map(|j| j.bucket).unwrap_or(0);
         let wall_prep_start = util::now();
@@ -834,58 +910,175 @@ impl<'e> ShardState<'e> {
         }
 
         // Window decode: each member's frontend is checked out and
-        // decoded on a pool worker (frontends are plain owned state,
-        // one per stream, so the fan-out shares nothing). Decode
-        // output is deterministic; only wall time changes. A worker
-        // panic is re-raised here — the shard dies and the dispatcher
-        // isolates it, the same containment as an inline fault.
-        let decoded: Vec<WindowFrames> = match fe_pool {
-            Some(tp) if slots.len() > 1 => {
-                let mut handles = Vec::with_capacity(slots.len());
-                for &(_, idx, start, end) in &slots {
-                    let mut fe = self.sessions[idx].take_frontend();
-                    handles.push(tp.spawn(move || {
-                        let wf = fe.window(start, end);
-                        (fe, wf)
-                    }));
-                }
-                let mut out: Vec<Option<WindowFrames>> = Vec::with_capacity(slots.len());
-                let mut fault: Option<String> = None;
-                for (result, &(_, idx, _, _)) in join_all(handles).into_iter().zip(&slots) {
-                    match result {
-                        Ok((fe, wf)) => {
-                            self.sessions[idx].put_frontend(fe);
-                            out.push(Some(wf));
-                        }
-                        Err(msg) => {
-                            fault.get_or_insert(msg);
-                            out.push(None);
-                        }
+        // decoded off the shard thread (frontends are plain owned
+        // state, one per stream, so the fan-out shares nothing). With
+        // stage pools the members round-robin across the dedicated
+        // decode lanes (bounded queues — a backlog stalls this
+        // producer); otherwise the legacy per-shard frontend pool fans
+        // them out. Decode output is deterministic; only wall time
+        // changes. A worker panic is re-raised here — the shard dies
+        // and the dispatcher isolates it, the same containment as an
+        // inline fault.
+        let decoded: Vec<WindowFrames> = if let Some(sp) = stages {
+            let kd = sp.decode.len();
+            self.decode_peak = self.decode_peak.max(slots.len());
+            let mut handles = Vec::with_capacity(slots.len());
+            for (i, &(_, idx, start, end)) in slots.iter().enumerate() {
+                let mut fe = self.sessions[idx].take_frontend();
+                handles.push(sp.decode[i % kd].spawn(move |_| {
+                    let t0 = util::now();
+                    let wf = fe.window(start, end);
+                    (fe, wf, t0, util::now())
+                }));
+            }
+            let mut out: Vec<Option<WindowFrames>> = Vec::with_capacity(slots.len());
+            let mut fault: Option<String> = None;
+            for (result, &(_, idx, _, _)) in join_all(handles).into_iter().zip(&slots) {
+                match result {
+                    Ok((fe, wf, t0, t1)) => {
+                        self.sessions[idx].put_frontend(fe);
+                        self.decode_intervals.push((t0, t1));
+                        out.push(Some(wf));
+                    }
+                    Err(msg) => {
+                        fault.get_or_insert(msg);
+                        out.push(None);
                     }
                 }
-                if let Some(msg) = fault {
-                    panic!("overlapped window decode failed: {msg}");
-                }
-                out.into_iter().map(|wf| wf.expect("fault checked")).collect()
             }
-            _ => slots
-                .iter()
-                .map(|&(_, idx, start, end)| self.sessions[idx].decode_window(start, end))
-                .collect(),
+            if let Some(msg) = fault {
+                panic!("decode stage worker panicked: {msg}");
+            }
+            out.into_iter().map(|wf| wf.expect("fault checked")).collect()
+        } else {
+            match fe_pool {
+                Some(tp) if slots.len() > 1 => {
+                    let mut handles = Vec::with_capacity(slots.len());
+                    for &(_, idx, start, end) in &slots {
+                        let mut fe = self.sessions[idx].take_frontend();
+                        handles.push(tp.spawn(move || {
+                            let wf = fe.window(start, end);
+                            (fe, wf)
+                        }));
+                    }
+                    let mut out: Vec<Option<WindowFrames>> = Vec::with_capacity(slots.len());
+                    let mut fault: Option<String> = None;
+                    for (result, &(_, idx, _, _)) in join_all(handles).into_iter().zip(&slots) {
+                        match result {
+                            Ok((fe, wf)) => {
+                                self.sessions[idx].put_frontend(fe);
+                                out.push(Some(wf));
+                            }
+                            Err(msg) => {
+                                fault.get_or_insert(msg);
+                                out.push(None);
+                            }
+                        }
+                    }
+                    if let Some(msg) = fault {
+                        panic!("overlapped window decode failed: {msg}");
+                    }
+                    out.into_iter().map(|wf| wf.expect("fault checked")).collect()
+                }
+                _ => slots
+                    .iter()
+                    .map(|&(_, idx, start, end)| self.sessions[idx].decode_window(start, end))
+                    .collect(),
+            }
         };
 
         // Engine half of prepare: selection, ViT encode, KV gather,
-        // request assembly — on the shard thread, in batch order.
+        // request assembly. Without stage pools everything runs on the
+        // shard thread, in batch order. With an encode pool, each
+        // fresh frame's ViT encode fans round-robin across the encode
+        // lanes (each owning its own deterministic executor replica)
+        // while the stateful plan/absorb halves stay on the shard
+        // thread — results are bit-identical, and the batch's virtual
+        // prepare cost becomes a *makespan*: busiest decode lane +
+        // busiest encode lane + the serial remainder. At one worker
+        // per stage each makespan equals the plain sum, which is
+        // exactly the PR-4 ring's accounting.
         let mut pending = Vec::with_capacity(slots.len());
         let mut requests: Vec<BatchRequest> = Vec::with_capacity(slots.len());
         let mut prepare_s = 0.0f64;
         let mut batch_arrival = f64::NEG_INFINITY;
-        for ((job, idx, _, _), wf) in slots.into_iter().zip(decoded) {
-            let (req, pw) = self.sessions[idx].prepare_decoded(wf);
-            prepare_s += pw.prepare_s();
-            batch_arrival = batch_arrival.max(job.arrival_s);
-            requests.push(req);
-            pending.push((job, idx, pw));
+        if let Some(sp) = stages {
+            let kd = sp.decode.len();
+            let ke = sp.encode.len();
+            // Plan every member and fan all fresh-frame encodes out
+            // before joining any: the whole batch's frames share the
+            // encode lanes.
+            let mut frame_ctr = 0usize;
+            type EncodeHandles = Option<Vec<(usize, JobHandle<EncodedFrame>)>>;
+            let mut members: Vec<(WindowJob, usize, WindowFrames, EncodeHandles)> =
+                Vec::with_capacity(slots.len());
+            for ((job, idx, _, _), wf) in slots.into_iter().zip(decoded) {
+                let handles = self.sessions[idx].plan_encode(&wf).map(|enc_jobs| {
+                    enc_jobs
+                        .into_iter()
+                        .map(|ej| {
+                            let lane = frame_ctr % ke;
+                            frame_ctr += 1;
+                            let h = sp.encode[lane]
+                                .spawn(move |exec: &mut Box<dyn Executor>| ej.run(exec.as_ref()));
+                            (lane, h)
+                        })
+                        .collect::<Vec<_>>()
+                });
+                members.push((job, idx, wf, handles));
+            }
+            self.encode_peak = self.encode_peak.max(frame_ctr);
+
+            // Join in frame order, absorb in batch order; build the
+            // per-lane virtual sums that mirror the physical
+            // round-robin assignment.
+            let mut decode_lane_s = vec![0.0f64; kd];
+            let mut encode_lane_s = vec![0.0f64; ke];
+            let mut serial_s = 0.0f64;
+            for (m, (job, idx, wf, handles)) in members.into_iter().enumerate() {
+                let decode_v = wf.transmit_s + wf.decode_s;
+                decode_lane_s[m % kd] += decode_v;
+                let mut encode_v = 0.0f64;
+                let (req, pw) = match handles {
+                    Some(hs) => {
+                        let mut encoded = Vec::with_capacity(hs.len());
+                        for (lane, h) in hs {
+                            match h.join() {
+                                Ok(e) => {
+                                    self.encode_intervals.push((e.wall_start, e.wall_end));
+                                    encode_lane_s[lane] += e.stage_s();
+                                    encode_v += e.stage_s();
+                                    encoded.push(e);
+                                }
+                                Err(msg) => panic!("encode stage worker panicked: {msg}"),
+                            }
+                        }
+                        self.sessions[idx].prepare_preencoded(wf, encoded)
+                    }
+                    // Sequential cross-frame ViT state (Déjà Vu pixel
+                    // reuse): encode inline, charged as serial work.
+                    None => self.sessions[idx].prepare_decoded(wf),
+                };
+                serial_s += (pw.prepare_s() - decode_v - encode_v).max(0.0);
+                batch_arrival = batch_arrival.max(job.arrival_s);
+                requests.push(req);
+                pending.push((job, idx, pw));
+            }
+            let decode_span = decode_lane_s.iter().cloned().fold(0.0, f64::max);
+            let encode_span = encode_lane_s.iter().cloned().fold(0.0, f64::max);
+            self.phases.decode_work_s += decode_lane_s.iter().sum::<f64>();
+            self.phases.decode_span_s += decode_span;
+            self.phases.encode_work_s += encode_lane_s.iter().sum::<f64>();
+            self.phases.encode_span_s += encode_span;
+            prepare_s = decode_span + encode_span + serial_s;
+        } else {
+            for ((job, idx, _, _), wf) in slots.into_iter().zip(decoded) {
+                let (req, pw) = self.sessions[idx].prepare_decoded(wf);
+                prepare_s += pw.prepare_s();
+                batch_arrival = batch_arrival.max(job.arrival_s);
+                requests.push(req);
+                pending.push((job, idx, pw));
+            }
         }
 
         self.prep_intervals.push((wall_prep_start, util::now()));
@@ -1091,7 +1284,7 @@ impl Shard {
     /// thread (the overlap exists in virtual time only); use
     /// [`Shard::run_launched`] for physical wall-clock overlap.
     pub fn run(&self, exec: &dyn Executor, pool: &StealPool) -> ShardReport {
-        self.run_with(exec, None, pool)
+        self.run_with(exec, None, None, pool)
     }
 
     /// [`Shard::run`] with wall-clock overlap: takes **ownership** of
@@ -1133,13 +1326,44 @@ impl Shard {
             return self.run(b.exec.as_ref(), pool);
         }
         let set = BackendSet::launch(backends, self.cfg.pipeline_depth);
-        self.run_with(set.primary(), Some(&set), pool)
+        self.run_with(set.primary(), Some(&set), None, pool)
+    }
+
+    /// [`Shard::run_backends`] with **disaggregated stage pools**
+    /// ([`StagePools`]): window decode fans across dedicated decode
+    /// lanes and each fresh frame's ViT encode across encode lanes
+    /// (each owning one of `encode_replicas`), while the prefill
+    /// launch lanes stay as in [`Shard::run_backends`] — three
+    /// independently provisioned stages with bounded queues between
+    /// them. Replicas are deterministic, so results are bit-identical
+    /// to [`Shard::run_backends`] at every pool sizing; what changes
+    /// is the virtual prepare makespan (busiest-lane sums instead of
+    /// the serial total) and the measured per-stage wall occupancy
+    /// ([`PhaseTimes::wall_decode_s`] / [`PhaseTimes::wall_encode_s`]).
+    ///
+    /// With `pipeline_depth == 0` there is no prepare loop to
+    /// disaggregate: falls back to [`Shard::run_backends`], dropping
+    /// the replicas.
+    pub fn run_staged(
+        &self,
+        backends: Vec<Backend>,
+        encode_replicas: Vec<Box<dyn Executor>>,
+        pool: &StealPool,
+    ) -> ShardReport {
+        if self.cfg.pipeline_depth == 0 {
+            return self.run_backends(backends, pool);
+        }
+        let set = BackendSet::launch(backends, self.cfg.pipeline_depth);
+        let stages =
+            StagePools::new(self.cfg.decode_workers, encode_replicas, self.cfg.pipeline_depth);
+        self.run_with(set.primary(), Some(&set), Some(&stages), pool)
     }
 
     fn run_with(
         &self,
         exec: &dyn Executor,
         set: Option<&BackendSet>,
+        stages: Option<&StagePools>,
         pool: &StealPool,
     ) -> ShardReport {
         let t0 = util::now();
@@ -1153,7 +1377,13 @@ impl Shard {
         // a fan-out fault is contained to this shard. Only spawned
         // when multi-member batches are possible — the fan-out needs
         // at least two windows to co-schedule.
-        let fe_pool = if depth > 0 && max_batch > 1 && self.cfg.frontend_workers > 1 {
+        // With stage pools active the decode lanes own the fan-out;
+        // the legacy frontend pool would only duplicate threads.
+        let fe_pool = if depth > 0
+            && max_batch > 1
+            && self.cfg.frontend_workers > 1
+            && stages.is_none()
+        {
             Some(ThreadPool::new(self.cfg.frontend_workers))
         } else {
             None
@@ -1195,7 +1425,7 @@ impl Shard {
                 }
                 continue;
             }
-            if let Some(fl) = st.prepare_pipelined_batch(jobs, fe_pool.as_ref()) {
+            if let Some(fl) = st.prepare_pipelined_batch(jobs, fe_pool.as_ref(), stages) {
                 ring.push_back(fl);
             }
             while ring.len() > depth {
@@ -1214,6 +1444,8 @@ impl Shard {
         st.phases.wall_prepare_s = st.prep_intervals.iter().map(|(a, b)| b - a).sum();
         st.phases.wall_execute_s = st.exec_intervals.iter().map(|(a, b)| b - a).sum();
         st.phases.wall_overlap_s = overlap_seconds(&st.prep_intervals, &st.exec_intervals);
+        st.phases.wall_decode_s = st.decode_intervals.iter().map(|(a, b)| b - a).sum();
+        st.phases.wall_encode_s = st.encode_intervals.iter().map(|(a, b)| b - a).sum();
 
         let mut quant_streams: Vec<u64> = st.quant_streams.into_iter().collect();
         quant_streams.sort_unstable();
@@ -1233,6 +1465,8 @@ impl Shard {
             stream_digests: st.stream_digests,
             quant_streams,
             backends: st.backend_stats,
+            decode_peak: st.decode_peak,
+            encode_peak: st.encode_peak,
         }
     }
 }
@@ -1582,6 +1816,155 @@ mod tests {
                 assert!(launched.phases.wall_prepare_s > 0.0, "real prepare work was timed");
             }
         }
+    }
+
+    #[test]
+    fn staged_pools_match_serial_results_bit_for_bit() {
+        // The disaggregation invariant: splitting prepare across
+        // decode lanes and ViT-encode lanes re-times the work, it must
+        // never change what is computed. Digests (whole-shard and
+        // per-stream slices), FLOPs, token counts and served window
+        // sets are identical to the inline serial loop at every pool
+        // shape and depth.
+        use crate::runtime::replica::{ExecutorFactory, MockReplicaFactory};
+        let serial = {
+            let (mock, shard) = pipelined_shard(0, 0.0);
+            shard.run(&mock, &StealPool::new(works(6, 0)))
+        };
+        assert!(serial.result_digest != 0);
+        for depth in [1usize, 2, 4] {
+            for (kd, ke) in [(1usize, 1usize), (2, 1), (1, 2), (2, 2), (3, 2)] {
+                let (_, mut shard) = pipelined_shard(depth, 0.0);
+                shard.cfg.decode_workers = kd;
+                shard.cfg.encode_workers = ke;
+                let f = MockReplicaFactory::new("m", 0.0).with_wall_delay(1e-6);
+                let backends = vec![Backend::new(BackendKind::Fast, f.build())];
+                let replicas: Vec<Box<dyn Executor>> = (0..ke).map(|_| f.build()).collect();
+                let staged =
+                    shard.run_staged(backends, replicas, &StealPool::new(works(6, 0)));
+                let tag = format!("depth {depth} decode {kd} encode {ke}");
+                assert_eq!(staged.result_digest, serial.result_digest, "{tag}");
+                assert_eq!(staged.metrics.windows(), serial.metrics.windows(), "{tag}");
+                assert_eq!(staged.metrics.flops, serial.metrics.flops, "{tag}");
+                assert_eq!(staged.metrics.flops_padded, serial.metrics.flops_padded);
+                assert_eq!(staged.metrics.seq_tokens, serial.metrics.seq_tokens);
+                assert_eq!(staged.metrics.per_stream, serial.metrics.per_stream);
+                // Per-stream digest slices still XOR back to the whole.
+                let folded = staged.stream_digests.values().fold(0u64, |a, &d| a ^ d);
+                assert_eq!(folded, staged.result_digest, "{tag}");
+                // Stage accounting is live: both stages did virtual
+                // work, measured real wall intervals, and the makespan
+                // span never exceeds the summed work of a stage.
+                assert!(staged.phases.decode_work_s > 0.0, "{tag}");
+                assert!(staged.phases.encode_work_s > 0.0, "{tag}");
+                assert!(
+                    staged.phases.decode_span_s <= staged.phases.decode_work_s + 1e-9,
+                    "{tag}: span is the busiest lane, not the sum"
+                );
+                assert!(
+                    staged.phases.encode_span_s <= staged.phases.encode_work_s + 1e-9,
+                    "{tag}"
+                );
+                assert!(staged.phases.wall_decode_s > 0.0, "{tag}: real decode intervals");
+                assert!(staged.phases.wall_encode_s > 0.0, "{tag}: real encode intervals");
+                assert!(staged.decode_peak > 0 && staged.decode_peak <= 4, "{tag}");
+                assert!(staged.encode_peak > 0, "{tag}");
+                // Windows of one stream still finish in order despite
+                // two fan-out stages ahead of the launch ring.
+                let mut last: HashMap<u64, usize> = HashMap::new();
+                for (stream, k, _) in &staged.answers {
+                    if let Some(prev) = last.get(stream) {
+                        assert!(k > prev, "stream {stream} window {k} after {prev}");
+                    }
+                    last.insert(*stream, *k);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn staged_pool_size_one_degenerates_and_depth_zero_falls_back() {
+        // kd = ke = 1 is structurally the launched ring with one lane
+        // per stage: results match run_launched bit-for-bit and the
+        // virtual makespan degenerates to the plain sum (span == work
+        // for both stages). depth 0 short-circuits past the pools
+        // entirely: inline results, zero stage accounting.
+        use crate::runtime::replica::{ExecutorFactory, MockReplicaFactory};
+        let launched = {
+            let (_, shard) = pipelined_shard(2, 0.0);
+            let exec = MockReplicaFactory::new("m", 0.0).with_wall_delay(1e-6).build();
+            shard.run_launched(exec, &StealPool::new(works(6, 0)))
+        };
+        let staged = {
+            let (_, mut shard) = pipelined_shard(2, 0.0);
+            shard.cfg.decode_workers = 1;
+            shard.cfg.encode_workers = 1;
+            let f = MockReplicaFactory::new("m", 0.0).with_wall_delay(1e-6);
+            shard.run_staged(
+                vec![Backend::new(BackendKind::Fast, f.build())],
+                vec![f.build()],
+                &StealPool::new(works(6, 0)),
+            )
+        };
+        assert_eq!(staged.result_digest, launched.result_digest);
+        assert_eq!(staged.stream_digests, launched.stream_digests);
+        assert_eq!(staged.metrics.windows(), launched.metrics.windows());
+        assert_eq!(staged.metrics.per_stream, launched.metrics.per_stream);
+        assert!(
+            (staged.phases.decode_span_s - staged.phases.decode_work_s).abs() < 1e-9,
+            "one decode lane: makespan is the sum"
+        );
+        assert!(
+            (staged.phases.encode_span_s - staged.phases.encode_work_s).abs() < 1e-9,
+            "one encode lane: makespan is the sum"
+        );
+
+        let inline = {
+            let (mock, shard) = pipelined_shard(0, 0.0);
+            shard.run(&mock, &StealPool::new(works(6, 0)))
+        };
+        let fallback = {
+            let (_, mut shard) = pipelined_shard(0, 0.0);
+            shard.cfg.decode_workers = 2;
+            shard.cfg.encode_workers = 2;
+            let f = MockReplicaFactory::new("m", 0.0);
+            shard.run_staged(
+                vec![Backend::new(BackendKind::Fast, f.build())],
+                vec![f.build(), f.build()],
+                &StealPool::new(works(6, 0)),
+            )
+        };
+        assert_eq!(fallback.result_digest, inline.result_digest);
+        assert_eq!(fallback.metrics.windows(), inline.metrics.windows());
+        assert_eq!(fallback.phases.decode_work_s, 0.0, "no stage pools at depth 0");
+        assert_eq!(fallback.phases.encode_work_s, 0.0);
+        assert_eq!(fallback.decode_peak, 0);
+        assert_eq!(fallback.encode_peak, 0);
+    }
+
+    #[test]
+    fn decode_lane_panic_is_isolated_and_reraised_at_join() {
+        // The decode stage's containment mechanism, at the pool level:
+        // a panicking decode job surfaces as Err on its own handle —
+        // exactly what prepare_pipelined_batch re-raises on the shard
+        // thread ("decode stage worker panicked"), the same
+        // shard-death-and-isolate path the dispatcher-level tests
+        // prove end to end for the encode and launch stages. The lane
+        // itself is never poisoned: later jobs on the same lane still
+        // run, and the sibling encode lane's replica stays live.
+        use crate::runtime::replica::{ExecutorFactory, MockReplicaFactory};
+        let f = MockReplicaFactory::new("m", 0.0);
+        let sp = StagePools::new(2, vec![f.build()], 2);
+        assert_eq!(sp.decode_workers(), 2);
+        assert_eq!(sp.encode_workers(), 1);
+        let bad =
+            sp.decode[0].spawn(|_| -> usize { panic!("frontend fault in the decode lane") });
+        let good = sp.decode[0].spawn(|_| 7usize);
+        let err = bad.join().unwrap_err();
+        assert!(err.contains("frontend fault"), "fault carries its message: {err}");
+        assert_eq!(good.join(), Ok(7), "lane survives the fault");
+        let h = sp.encode[0].spawn(|exec: &mut Box<dyn Executor>| exec.spec("m").is_some());
+        assert_eq!(h.join(), Ok(true), "encode replica unaffected");
     }
 
     #[test]

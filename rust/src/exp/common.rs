@@ -462,6 +462,15 @@ pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     if let Ok(v) = std::env::var("CF_BACKEND") {
         s.set("backend", &v);
     }
+    // Stage-pool sizing, also through the validating parser: a
+    // CF_DECODE_WORKERS=0 typo is rejected loudly instead of silently
+    // building an undrainable pool.
+    if let Ok(v) = std::env::var("CF_DECODE_WORKERS") {
+        s.set("decode_workers", &v);
+    }
+    if let Ok(v) = std::env::var("CF_ENCODE_WORKERS") {
+        s.set("encode_workers", &v);
+    }
     if let Ok(v) = std::env::var("CF_ROUTE") {
         s.set("route", &v);
     }

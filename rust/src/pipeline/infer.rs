@@ -208,6 +208,126 @@ impl PendingWindow {
     }
 }
 
+/// One frame's ViT encode detached from the engine, so a stage-pool
+/// worker owning its own executor replica can run it off the shard
+/// thread ([`crate::coordinator::shard`]'s encode pool). Produced by
+/// [`WindowEngine::plan_encode`]; its output folds back in through
+/// [`WindowEngine::prepare_window_preencoded`]. `run` replicates the
+/// non-Déjà-Vu body of the inline `encode_frame` exactly — same
+/// preprocessing, bucketing and `vit_encode` launch — so the folded
+/// result is bit-identical to the single-threaded path.
+pub struct EncodeJob {
+    frame: DecodedFrame,
+    abs_frame: usize,
+    selection: FrameSelection,
+    layout: PatchLayout,
+    model: String,
+    spec: ModelSpec,
+    fused_preproc: bool,
+}
+
+/// Output of one [`EncodeJob::run`]: the frame's visual tokens plus
+/// the stage seconds / FLOPs the encode incurred and the wall
+/// interval it occupied on its worker (per-stage utilization).
+pub struct EncodedFrame {
+    tokens: Vec<VisualToken>,
+    preprocess_s: f64,
+    vit_s: f64,
+    flops: u64,
+    flops_padded: u64,
+    pub wall_start: f64,
+    pub wall_end: f64,
+}
+
+impl EncodedFrame {
+    /// Virtual stage seconds this encode contributes to its window
+    /// (preprocess + ViT execute).
+    pub fn stage_s(&self) -> f64 {
+        self.preprocess_s + self.vit_s
+    }
+}
+
+impl EncodeJob {
+    /// Absolute frame index this job encodes.
+    pub fn abs_frame(&self) -> usize {
+        self.abs_frame
+    }
+
+    /// Run the ViT encode against `exec` — any replica of the planning
+    /// engine's executor. Pure with respect to engine state.
+    pub fn run(&self, exec: &dyn Executor) -> EncodedFrame {
+        let wall_start = util::now();
+        let mut out = EncodedFrame {
+            tokens: Vec::new(),
+            preprocess_s: 0.0,
+            vit_s: 0.0,
+            flops: 0,
+            flops_padded: 0,
+            wall_start,
+            wall_end: wall_start,
+        };
+        let sel = &self.selection;
+        if sel.groups.is_empty() {
+            out.wall_end = util::now();
+            return out;
+        }
+
+        let frame = &self.frame.0;
+        let patch_list: Vec<usize> =
+            sel.groups.iter().flat_map(|&g| self.layout.group_patches(g)).collect();
+        let t0 = util::now();
+        let patches = if self.fused_preproc {
+            preprocess::fused(&self.layout, frame, &patch_list)
+        } else {
+            preprocess::naive(&self.layout, frame, &patch_list)
+        };
+        out.preprocess_s += util::now() - t0;
+
+        // Bucket + pad.
+        let n = patch_list.len();
+        let bucket = ModelSpec::pick_bucket(&self.spec.vit_buckets, n);
+        let pd = self.spec.patch_dim;
+        let mut padded = vec![0.0f32; bucket * pd];
+        padded[..n * pd].copy_from_slice(&patches);
+        let mut pos_ids = vec![0i32; bucket];
+        for (j, &p) in patch_list.iter().enumerate() {
+            pos_ids[j] = p as i32;
+        }
+        let mut mask = vec![0.0f32; bucket];
+        mask[..n].fill(1.0);
+
+        let (outputs, exec_s) = exec
+            .execute(
+                &self.model,
+                &format!("vit_encode_n{bucket}"),
+                &[
+                    Tensor::f32(&[bucket, pd], padded),
+                    Tensor::i32(&[bucket], pos_ids),
+                    Tensor::f32(&[bucket], mask),
+                ],
+            )
+            .expect("vit_encode");
+        out.vit_s += exec_s;
+        out.flops += flops::vit_encode(&self.spec, n);
+        out.flops_padded += flops::vit_encode(&self.spec, bucket);
+
+        let d = self.spec.llm_dim;
+        let toks = outputs[0].as_f32();
+        for (j, &g) in sel.groups.iter().enumerate() {
+            out.tokens.push(VisualToken {
+                frame: self.abs_frame,
+                group: g,
+                is_iframe: sel.is_iframe,
+                emb: toks[j * d..(j + 1) * d].to_vec(),
+            });
+        }
+        // Sort by group for deterministic sequence order.
+        out.tokens.sort_by_key(|t| t.group);
+        out.wall_end = util::now();
+        out
+    }
+}
+
 enum PendingPath {
     /// Full prefill (first window, Recompute mode, or bucket-overflow
     /// fallback).
@@ -491,11 +611,7 @@ impl<'a> WindowEngine<'a> {
         self.ensure_selections(frames, start);
         self.update_change_scores(frames, start);
 
-        // Which frames need fresh ViT tokens?
-        let reuse_possible = matches!(self.opts.kvc, KvcMode::Reuse(_))
-            && self.prev.as_ref().map(|p| p.end_frame > start && p.start_frame <= start)
-                == Some(true);
-        let fresh_lo = if reuse_possible { self.prev.as_ref().unwrap().end_frame } else { start };
+        let (reuse_possible, fresh_lo) = self.fresh_range(start);
 
         let mut fresh_tokens: Vec<VisualToken> = Vec::new();
         let mut possible = 0usize;
@@ -509,6 +625,99 @@ impl<'a> WindowEngine<'a> {
             possible += self.layout.tokens_per_frame();
             retained += toks.len();
             fresh_tokens.extend(toks);
+        }
+        let pruned_ratio =
+            if possible == 0 { 0.0 } else { 1.0 - retained as f64 / possible as f64 };
+
+        let text_embs = self.text_embeddings(&mut times);
+
+        if reuse_possible {
+            self.incremental_prepare(start, end, fresh_tokens, &text_embs, times, flops, flops_padded, pruned_ratio)
+        } else {
+            self.full_prepare(start, end, fresh_tokens, &text_embs, times, flops, flops_padded, pruned_ratio)
+        }
+    }
+
+    /// Which frames of window [start, ..) need fresh ViT tokens:
+    /// returns (overlap KV is reusable, first fresh frame index).
+    fn fresh_range(&self, start: usize) -> (bool, usize) {
+        let reuse_possible = matches!(self.opts.kvc, KvcMode::Reuse(_))
+            && self.prev.as_ref().map(|p| p.end_frame > start && p.start_frame <= start)
+                == Some(true);
+        let fresh_lo = if reuse_possible { self.prev.as_ref().unwrap().end_frame } else { start };
+        (reuse_possible, fresh_lo)
+    }
+
+    /// Stage-pool seam, plan half: advance the stream's selection and
+    /// change-score state for window [start, start+frames.len()) and
+    /// detach each fresh frame's ViT encode as a standalone
+    /// [`EncodeJob`] that may run on another thread against an
+    /// executor replica. Returns `None` when the variant carries
+    /// sequential cross-frame ViT state (Déjà Vu pixel reuse) — the
+    /// caller must then fall back to the inline
+    /// [`WindowEngine::prepare_window`].
+    pub fn plan_encode(&mut self, frames: &[DecodedFrame], start: usize) -> Option<Vec<EncodeJob>> {
+        if self.opts.vit_pixel_reuse.is_some() {
+            return None;
+        }
+        let end = start + frames.len();
+        self.ensure_selections(frames, start);
+        self.update_change_scores(frames, start);
+        let (_, fresh_lo) = self.fresh_range(start);
+        Some(
+            (fresh_lo..end)
+                .map(|abs| EncodeJob {
+                    frame: frames[abs - start].clone(),
+                    abs_frame: abs,
+                    selection: self.selections[abs].clone(),
+                    layout: self.layout,
+                    model: self.model.clone(),
+                    spec: self.spec.clone(),
+                    fused_preproc: self.opts.fused_preproc,
+                })
+                .collect(),
+        )
+    }
+
+    /// Stage-pool seam, absorb half: fold pre-encoded frames (the
+    /// outputs of this window's [`WindowEngine::plan_encode`] jobs,
+    /// run elsewhere, in frame order) back into window preparation.
+    /// Bit-identical to [`WindowEngine::prepare_window`] on the same
+    /// window.
+    pub fn prepare_window_preencoded(
+        &mut self,
+        frames: &[DecodedFrame],
+        start: usize,
+        frontend_times: StageTimes,
+        encoded: Vec<EncodedFrame>,
+    ) -> (BatchRequest, PendingWindow) {
+        let end = start + frames.len();
+        let mut times = frontend_times;
+        let mut flops = 0u64;
+        let mut flops_padded = 0u64;
+
+        // Idempotent when plan_encode already consumed these frames.
+        self.ensure_selections(frames, start);
+        self.update_change_scores(frames, start);
+
+        let (reuse_possible, fresh_lo) = self.fresh_range(start);
+        debug_assert_eq!(
+            encoded.len(),
+            end - fresh_lo,
+            "pre-encoded frames must cover exactly this window's fresh range"
+        );
+
+        let mut fresh_tokens: Vec<VisualToken> = Vec::new();
+        let mut possible = 0usize;
+        let mut retained = 0usize;
+        for e in encoded {
+            times.preprocess += e.preprocess_s;
+            times.vit += e.vit_s;
+            flops += e.flops;
+            flops_padded += e.flops_padded;
+            possible += self.layout.tokens_per_frame();
+            retained += e.tokens.len();
+            fresh_tokens.extend(e.tokens);
         }
         let pruned_ratio =
             if possible == 0 { 0.0 } else { 1.0 - retained as f64 / possible as f64 };
@@ -1333,6 +1542,66 @@ mod tests {
                 assert_eq!(got.fresh_tokens, want.fresh_tokens);
             }
         }
+    }
+
+    #[test]
+    fn preencoded_path_bit_for_bit_matches_prepare_window() {
+        // The stage-pool seam: plan_encode -> EncodeJob::run (here on
+        // the same thread, against the same executor — replicas are
+        // deterministic) -> prepare_window_preencoded must reproduce
+        // prepare_window exactly, on both the full-prefill window and
+        // the incremental (KV-reuse) window.
+        let mock = MockEngine::new("m");
+        let mut inline = WindowEngine::new(&mock, "m", VariantOpts::codecflow(0.25, 0.0));
+        let mut staged = WindowEngine::new(&mock, "m", VariantOpts::codecflow(0.25, 0.0));
+        let all = test_frames(28);
+
+        for (start, end) in [(0usize, 20usize), (4, 24)] {
+            let (req_a, pend_a) =
+                inline.prepare_window(&all[start..end], start, StageTimes::default());
+
+            let jobs = staged
+                .plan_encode(&all[start..end], start)
+                .expect("non-Déjà-Vu variants detach");
+            let encoded: Vec<EncodedFrame> = jobs.iter().map(|j| j.run(&mock)).collect();
+            let (req_b, pend_b) = staged.prepare_window_preencoded(
+                &all[start..end],
+                start,
+                StageTimes::default(),
+                encoded,
+            );
+
+            assert_eq!(req_a.model, req_b.model);
+            assert_eq!(req_a.artifact, req_b.artifact);
+            assert_eq!(req_a.inputs, req_b.inputs, "prefill inputs must match bit-for-bit");
+
+            let out_a = mock.execute_batch(std::slice::from_ref(&req_a)).unwrap().remove(0);
+            let out_b = mock.execute_batch(std::slice::from_ref(&req_b)).unwrap().remove(0);
+            let ra = inline.finish_window(pend_a, out_a);
+            let rb = staged.finish_window(pend_b, out_b);
+            assert_eq!(ra.logits, rb.logits);
+            assert_eq!(ra.pooled, rb.pooled);
+            assert_eq!(ra.decoded_ids, rb.decoded_ids);
+            assert_eq!(ra.seq_tokens, rb.seq_tokens);
+            assert_eq!(ra.flops, rb.flops);
+            assert_eq!(ra.flops_padded, rb.flops_padded);
+            assert_eq!(ra.reused_tokens, rb.reused_tokens);
+            assert_eq!(ra.fresh_tokens, rb.fresh_tokens);
+            assert_eq!(ra.pruned_ratio, rb.pruned_ratio);
+        }
+    }
+
+    #[test]
+    fn dejavu_variant_declines_to_detach_encode() {
+        let mock = MockEngine::new("m");
+        let mut opts = VariantOpts::fullcomp();
+        opts.vit_pixel_reuse = Some(3.0);
+        let mut eng = WindowEngine::new(&mock, "m", opts);
+        let frames = test_frames(20);
+        assert!(eng.plan_encode(&frames, 0).is_none());
+        // The inline path still works after the declined plan.
+        let r = eng.process_window(&frames, 0, StageTimes::default());
+        assert_eq!(r.visual_tokens, 320);
     }
 
     #[test]

@@ -362,71 +362,143 @@ mod tests {
     }
 
     #[test]
-    fn lane_bounded_queue_blocks_producer() {
-        // The backpressure contract: with a full queue, spawn stalls
-        // the producer until the lane drains — work never queues
-        // unboundedly. A gate holds the lane busy on its first job;
-        // a producer thread then submits capacity + 2 more jobs and
-        // must be unable to get past the bound until the gate opens.
-        use std::sync::atomic::{AtomicUsize, Ordering};
+    fn lane_bounded_queue_blocks_producer_at_exact_depth() {
+        // The backpressure contract, pinned exactly: with the worker
+        // wedged on a gated job that has already LEFT the queue, the
+        // queue holds precisely `capacity` unserviced jobs — a
+        // producer completes exactly `capacity` submissions and
+        // stalls on number `capacity + 1`, for every capacity. Work
+        // never queues unboundedly, and never less than the bound
+        // either (the stage pools size their rings on this).
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
         use std::sync::Condvar;
         use std::time::Duration;
 
-        let capacity = 2;
-        let lane = Arc::new(Lane::new("t-lane", capacity, ()));
-        let gate = Arc::new((Mutex::new(false), Condvar::new()));
-        let submitted = Arc::new(AtomicUsize::new(0));
+        for capacity in [1usize, 2, 4] {
+            let lane = Arc::new(Lane::new("t-lane", capacity, ()));
+            let gate = Arc::new((Mutex::new(false), Condvar::new()));
+            let started = Arc::new(AtomicBool::new(false));
+            let submitted = Arc::new(AtomicUsize::new(0));
 
-        let g = Arc::clone(&gate);
-        let blocker = lane.spawn(move |_| {
-            let (lock, cv) = &*g;
-            let mut open = lock.lock().unwrap();
-            while !*open {
-                open = cv.wait(open).unwrap();
+            let g = Arc::clone(&gate);
+            let s = Arc::clone(&started);
+            let blocker = lane.spawn(move |_| {
+                // Signal *after* dequeue: from here on, all `capacity`
+                // queue slots are observably free.
+                s.store(true, Ordering::SeqCst);
+                let (lock, cv) = &*g;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            while !started.load(Ordering::SeqCst) {
+                assert!(std::time::Instant::now() < deadline, "gated job never started");
+                thread::sleep(Duration::from_millis(1));
             }
-        });
 
-        let producer = {
-            let lane = Arc::clone(&lane);
-            let submitted = Arc::clone(&submitted);
-            thread::spawn(move || {
-                let handles: Vec<_> = (0..capacity + 2)
-                    .map(|i| {
-                        let h = lane.spawn(move |_| i);
-                        submitted.fetch_add(1, Ordering::SeqCst);
-                        h
-                    })
-                    .collect();
-                join_all(handles)
+            let producer = {
+                let lane = Arc::clone(&lane);
+                let submitted = Arc::clone(&submitted);
+                thread::spawn(move || {
+                    let handles: Vec<_> = (0..capacity + 2)
+                        .map(|i| {
+                            let h = lane.spawn(move |_| i);
+                            submitted.fetch_add(1, Ordering::SeqCst);
+                            h
+                        })
+                        .collect();
+                    join_all(handles)
+                })
+            };
+
+            // The producer must reach the bound — and then not pass it.
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            while submitted.load(Ordering::SeqCst) < capacity
+                && std::time::Instant::now() < deadline
+            {
+                thread::sleep(Duration::from_millis(1));
+            }
+            thread::sleep(Duration::from_millis(50));
+            let stalled_at = submitted.load(Ordering::SeqCst);
+            assert_eq!(
+                stalled_at, capacity,
+                "producer should stall at exactly the {capacity}-deep bound"
+            );
+
+            // Open the gate: the lane drains and the producer completes.
+            {
+                let (lock, cv) = &*gate;
+                *lock.lock().unwrap() = true;
+                cv.notify_all();
+            }
+            blocker.join().unwrap();
+            let results = producer.join().unwrap();
+            assert_eq!(submitted.load(Ordering::SeqCst), capacity + 2);
+            for (i, r) in results.into_iter().enumerate() {
+                assert_eq!(r, Ok(i));
+            }
+        }
+    }
+
+    #[test]
+    fn lane_concurrent_producers_keep_per_producer_fifo_despite_panics() {
+        // Property test for the stage-pool usage pattern: several
+        // producers share one bounded lane, some jobs panic.
+        // 1. Per-producer FIFO — the lane runs each producer's jobs in
+        //    that producer's submission order (its spawn calls are
+        //    totally ordered; the bounded channel preserves them).
+        // 2. Panic isolation — a faulty job errors only its own
+        //    handle; the lane thread and its state survive every
+        //    fault and later jobs (from any producer) still run.
+        const PRODUCERS: usize = 4;
+        const JOBS: usize = 25;
+        let faulty = |i: usize| i % 7 == 3;
+
+        let lane = Arc::new(Lane::new("t-lane", 3, Vec::<(usize, usize)>::new()));
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let lane = Arc::clone(&lane);
+                thread::spawn(move || {
+                    let handles: Vec<_> = (0..JOBS)
+                        .map(|i| {
+                            lane.spawn(move |log: &mut Vec<(usize, usize)>| {
+                                if i % 7 == 3 {
+                                    panic!("fault p{p} i{i}");
+                                }
+                                log.push((p, i));
+                                (p, i)
+                            })
+                        })
+                        .collect();
+                    join_all(handles)
+                })
             })
-        };
+            .collect();
 
-        // Give the producer ample time: it must stall at the queue
-        // bound (capacity slots; the gated job occupies the worker).
-        let deadline = std::time::Instant::now() + Duration::from_secs(2);
-        while submitted.load(Ordering::SeqCst) < capacity
-            && std::time::Instant::now() < deadline
-        {
-            thread::sleep(Duration::from_millis(5));
+        for (p, t) in producers.into_iter().enumerate() {
+            for (i, r) in t.join().unwrap().into_iter().enumerate() {
+                if faulty(i) {
+                    let err = r.unwrap_err();
+                    assert!(
+                        err.contains(&format!("fault p{p} i{i}")),
+                        "fault must surface on its own handle, got: {err}"
+                    );
+                } else {
+                    assert_eq!(r, Ok((p, i)));
+                }
+            }
         }
-        thread::sleep(Duration::from_millis(50));
-        let stalled_at = submitted.load(Ordering::SeqCst);
-        assert!(
-            stalled_at <= capacity + 1,
-            "producer ran {stalled_at} submissions past a {capacity}-deep queue"
-        );
 
-        // Open the gate: the lane drains and the producer completes.
-        {
-            let (lock, cv) = &*gate;
-            *lock.lock().unwrap() = true;
-            cv.notify_all();
+        // The lane thread and its state survived all faults.
+        let log = lane.spawn(|log: &mut Vec<(usize, usize)>| log.clone()).join().unwrap();
+        let expect: Vec<usize> = (0..JOBS).filter(|&i| !faulty(i)).collect();
+        for p in 0..PRODUCERS {
+            let seq: Vec<usize> =
+                log.iter().filter(|&&(q, _)| q == p).map(|&(_, i)| i).collect();
+            assert_eq!(seq, expect, "producer {p} jobs must run in its submission order");
         }
-        blocker.join().unwrap();
-        let results = producer.join().unwrap();
-        assert_eq!(submitted.load(Ordering::SeqCst), capacity + 2);
-        for (i, r) in results.into_iter().enumerate() {
-            assert_eq!(r, Ok(i));
-        }
+        assert_eq!(log.len(), PRODUCERS * expect.len(), "faulty jobs never mutate state");
     }
 }

@@ -156,6 +156,38 @@ fn digest_value_mismatch_regresses_regardless_of_thresholds() {
 }
 
 #[test]
+fn multi_digest_records_gate_each_digest_independently() {
+    // The fig25 cell records two digests (the single-worker ring and
+    // the tuned stage pools) whose bit-identity IS the claim under
+    // continuous test: a mismatch in any one of several digests must
+    // regress, every digest must be checked, and the mismatch report
+    // must name the cell that moved.
+    let cell = |ring: u64, staged: u64| {
+        let mut rec = BenchRecord::new("fig25", "stage pools cell", 2026, BTreeMap::new());
+        rec.metric("sustainable_streams", 10.0, Direction::Higher);
+        rec.digest("ring", ring);
+        rec.digest("staged", staged);
+        rec
+    };
+    let base = cell(0xaaaa, 0xaaaa);
+    let rep = compare_records(&base, &cell(0xaaaa, 0xaaaa), 5.0).unwrap();
+    assert!(!rep.regressed());
+    assert_eq!(rep.digests_checked, 2, "every digest is checked");
+
+    // Only the staged cell drifting — the exact failure mode stage
+    // pools could introduce (ring untouched, pools corrupt) — trips
+    // the gate and is named.
+    let rep = compare_records(&base, &cell(0xaaaa, 0xbbbb), 5.0).unwrap();
+    assert!(rep.regressed(), "one moved digest out of two must regress");
+    assert_eq!(rep.digest_mismatches.len(), 1);
+    assert_eq!(rep.digest_mismatches[0], ("staged".to_string(), 0xaaaa, 0xbbbb));
+
+    // Both moving: both named.
+    let rep = compare_records(&base, &cell(0xcccc, 0xdddd), 5.0).unwrap();
+    assert_eq!(rep.digest_mismatches.len(), 2);
+}
+
+#[test]
 fn config_mismatch_is_an_error_not_a_diff() {
     let base = record(100.0, 1);
     let mut cur = record(100.0, 1);

@@ -1,0 +1,304 @@
+//! Integration tests for the disaggregated stage pools (decode / ViT
+//! encode / prefill launch as independently provisioned lanes): the
+//! digest-equality barrage across pool shapes and stream counts, the
+//! `stages:` report surface, the no-op degeneration when the launched
+//! ring is off, and per-stage fault containment — a panic on an encode
+//! lane's replica or on the prefill launch thread takes down only its
+//! own shard while the healthy shard keeps settling KV.
+
+use std::sync::Arc;
+
+use codecflow::baselines::Variant;
+use codecflow::codec::types::Frame;
+use codecflow::config::ServingConfig;
+use codecflow::coordinator::dispatch::{Dispatcher, ShardedReport};
+use codecflow::runtime::replica::{ExecutorFactory, MockReplicaFactory};
+use codecflow::video::{Corpus, CorpusConfig};
+
+fn clips(n: usize) -> Vec<Arc<Vec<Frame>>> {
+    Corpus::generate(CorpusConfig { videos: n, frames_per_video: 28, ..Default::default() })
+        .clips
+        .into_iter()
+        .map(|c| Arc::new(c.frames))
+        .collect()
+}
+
+fn mock_factory() -> Arc<dyn ExecutorFactory> {
+    Arc::new(MockReplicaFactory::new("m", 0.0))
+}
+
+/// A launched-ring config with the stage-pool knobs applied through the
+/// CLI surface (so the tests cover `set` plumbing too).
+fn staged_cfg(shards: usize, depth: usize, kd: usize, ke: usize) -> ServingConfig {
+    let mut cfg = ServingConfig::default();
+    assert!(cfg.set("workers", &shards.to_string()));
+    cfg.max_batch = 4;
+    cfg.admit_wave = 8;
+    cfg.batch_bucket = 10_000;
+    cfg.pipeline_depth = depth;
+    assert!(cfg.set("decode_workers", &kd.to_string()));
+    assert!(cfg.set("encode_workers", &ke.to_string()));
+    cfg
+}
+
+fn run(cfg: ServingConfig, clips: &[Arc<Vec<Frame>>]) -> ShardedReport {
+    Dispatcher::new("m", cfg).run(mock_factory(), clips, Variant::CodecFlow, 2.0)
+}
+
+fn sorted(r: &ShardedReport) -> Vec<(u64, usize, bool)> {
+    let mut a = r.answers.clone();
+    a.sort();
+    a
+}
+
+#[test]
+fn stage_pools_are_bit_identical_across_all_pool_shapes_at_16_streams() {
+    // The tentpole's contract end to end: provisioning the decode and
+    // ViT-encode stages as independent lanes re-times prepare, it must
+    // never change what is computed. For the same 16-stream corpus on
+    // the same shard layout, every (decode_workers, encode_workers,
+    // depth) shape — including the degenerate 1/1 pools — produces
+    // bit-identical logits and KV contents (equal result digests and
+    // per-stream digest slices), identical FLOPs/tokens, and the same
+    // served window sets as the serial loop and the launched ring.
+    let clips = clips(16);
+    let serial = {
+        let mut cfg = staged_cfg(2, 0, 1, 1);
+        cfg.launch = false;
+        run(cfg, &clips)
+    };
+    assert!(serial.result_digest != 0);
+    assert!(serial.stage_workers.is_none(), "no pools on the serial path");
+    let launched = run(staged_cfg(2, 2, 1, 1), &clips);
+    assert_eq!(launched.result_digest, serial.result_digest);
+    assert!(launched.stage_workers.is_none(), "1/1 knobs keep the plain ring");
+
+    for (kd, ke, depth) in
+        [(1usize, 2usize, 1usize), (2, 1, 1), (2, 2, 2), (3, 2, 2), (2, 3, 4)]
+    {
+        let staged = run(staged_cfg(2, depth, kd, ke), &clips);
+        let tag = format!("decode {kd} encode {ke} depth {depth}");
+        assert_eq!(staged.stage_workers, Some((kd, ke)), "{tag}");
+        assert_eq!(staged.result_digest, serial.result_digest, "{tag}");
+        assert_eq!(staged.stream_digests, serial.stream_digests, "{tag}");
+        assert_eq!(staged.merged.windows(), serial.merged.windows(), "{tag}");
+        assert_eq!(staged.merged.flops, serial.merged.flops, "{tag}");
+        assert_eq!(staged.merged.flops_padded, serial.merged.flops_padded);
+        assert_eq!(staged.merged.seq_tokens, serial.merged.seq_tokens);
+        assert_eq!(staged.merged.per_stream, serial.merged.per_stream);
+        assert_eq!(sorted(&staged), sorted(&serial), "{tag}");
+        // Per-stream digest slices XOR back to the whole.
+        let folded = staged.stream_digests.values().fold(0u64, |a, &d| a ^ d);
+        assert_eq!(folded, staged.result_digest, "{tag}");
+        // Windows of one stream still retire in order behind two
+        // fan-out stages.
+        let mut last: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+        for (stream, k, _) in &staged.answers {
+            if let Some(prev) = last.get(stream) {
+                assert!(k > prev, "stream {stream} window {k} after {prev}");
+            }
+            last.insert(*stream, *k);
+        }
+    }
+}
+
+#[test]
+fn stage_pools_are_bit_identical_at_64_streams() {
+    // The barrage at scale: 64 streams over 4 shards, tuned pool
+    // shapes vs the single-worker ring — still bit-for-bit.
+    let clips = clips(64);
+    let ring = run(staged_cfg(4, 2, 1, 1), &clips);
+    assert!(ring.result_digest != 0);
+    assert_eq!(ring.merged.windows(), 192, "64 streams x 3 windows");
+    for (kd, ke) in [(2usize, 2usize), (4, 3)] {
+        let staged = run(staged_cfg(4, 2, kd, ke), &clips);
+        let tag = format!("decode {kd} encode {ke}");
+        assert_eq!(staged.result_digest, ring.result_digest, "{tag}");
+        assert_eq!(staged.stream_digests, ring.stream_digests, "{tag}");
+        assert_eq!(staged.merged.windows(), ring.merged.windows(), "{tag}");
+        assert_eq!(staged.merged.per_stream, ring.merged.per_stream, "{tag}");
+        assert_eq!(sorted(&staged), sorted(&ring), "{tag}");
+    }
+}
+
+#[test]
+fn stage_report_prints_per_stage_utilization_and_peaks() {
+    let report = run(staged_cfg(2, 2, 2, 2), &clips(8));
+    assert_eq!(report.stage_workers, Some((2, 2)));
+    assert!(report.phases.decode_work_s > 0.0, "decode lanes did virtual work");
+    assert!(report.phases.encode_work_s > 0.0, "encode lanes did virtual work");
+    let text = report.report("staged");
+    assert!(text.contains("stages:"), "report must carry the stage line:\n{text}");
+    assert!(text.contains("decode[workers=2"), "{text}");
+    assert!(text.contains("encode[workers=2"), "{text}");
+    assert!(text.contains("scale-next="), "{text}");
+}
+
+#[test]
+fn stage_knobs_without_the_launched_ring_are_a_noop() {
+    // decode_workers/encode_workers ride the launched ring; without it
+    // (launch=0, or pipeline=0) the dispatcher warns once, serves on
+    // the plain path, and results match the unknobbed run bit-for-bit.
+    let clips = clips(8);
+    let plain = run(staged_cfg(2, 0, 1, 1), &clips);
+    for mutate in [
+        (|c: &mut ServingConfig| c.launch = false) as fn(&mut ServingConfig),
+        |c: &mut ServingConfig| c.pipeline_depth = 0,
+    ] {
+        let mut cfg = staged_cfg(2, 2, 3, 2);
+        mutate(&mut cfg);
+        let noop = run(cfg, &clips);
+        assert!(noop.stage_workers.is_none(), "no pools without the ring");
+        assert_eq!(noop.result_digest, plain.result_digest);
+        assert_eq!(noop.merged.windows(), plain.merged.windows());
+        assert!(!noop.report("noop").contains("stages:"));
+    }
+}
+
+#[test]
+fn encode_worker_panic_is_contained_to_its_shard_with_kv_settled() {
+    // A ViT fault on one encode lane's replica (the first encode
+    // replica shard 0 builds) crosses back over the lane's bounded
+    // channel, re-raises on the shard thread at join, and the
+    // dispatcher isolates it. The healthy shard — running the same
+    // stage pools under KV pressure — keeps settling its KV pool in
+    // FIFO batch order and serves every remaining stream to
+    // completion, and its report still prints the stage line.
+    use codecflow::runtime::engine::EngineError;
+    use codecflow::runtime::manifest::ModelSpec;
+    use codecflow::runtime::mock::{Executor, MockEngine};
+    use codecflow::runtime::tensor::Tensor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct PanicsOnVit {
+        inner: MockEngine,
+    }
+    impl Executor for PanicsOnVit {
+        fn execute(
+            &self,
+            model: &str,
+            artifact: &str,
+            inputs: &[Tensor],
+        ) -> Result<(Vec<Tensor>, f64), EngineError> {
+            if artifact.starts_with("vit_encode") {
+                panic!("vision tower fault on the encode lane");
+            }
+            self.inner.execute(model, artifact, inputs)
+        }
+        fn spec(&self, model: &str) -> Option<ModelSpec> {
+            self.inner.spec(model)
+        }
+    }
+    // Build order per staged shard: the prefill backend first, then
+    // `encode_workers` encode replicas. Call 1 is therefore shard 0's
+    // first encode lane.
+    struct FaultyEncodeFactory {
+        calls: AtomicUsize,
+    }
+    impl ExecutorFactory for FaultyEncodeFactory {
+        fn build(&self) -> Box<dyn codecflow::runtime::mock::Executor> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) == 1 {
+                Box::new(PanicsOnVit { inner: MockEngine::new("m") })
+            } else {
+                Box::new(MockEngine::new("m"))
+            }
+        }
+    }
+
+    let mut cfg = staged_cfg(2, 2, 2, 2);
+    cfg.workers = 1; // deterministic: shard 0 builds first and faults
+    // Starve the KV budget so the healthy shard must keep settling
+    // (and evicting from) its pool throughout.
+    cfg.kv_budget_bytes = 2 << 20;
+    // One stream admitted per wave: the faulty shard takes exactly one
+    // stream down with it, everything else survives.
+    cfg.admit_wave = 1;
+    cfg.steal = true;
+    let report = Dispatcher::new("m", cfg).run(
+        Arc::new(FaultyEncodeFactory { calls: AtomicUsize::new(0) }),
+        &clips(4),
+        Variant::CodecFlow,
+        2.0,
+    );
+    assert_eq!(report.shards.len(), 1, "only the healthy shard reports");
+    assert_eq!(
+        report.merged.per_stream.len(),
+        3,
+        "the healthy shard serves every stream the dead one hadn't claimed"
+    );
+    assert_eq!(report.merged.windows(), 9);
+    for count in report.merged.per_stream.values() {
+        assert_eq!(*count, 3, "surviving streams fully served");
+    }
+    assert!(report.merged.kv_evictions > 0, "healthy shard kept settling its starved KV pool");
+    assert!(report.report("staged").contains("stages:"), "report stays printable");
+}
+
+#[test]
+fn launch_thread_panic_with_stage_pools_on_is_contained() {
+    // The third stage: a fused launch that panics on the prefill
+    // launch thread while decode/encode pools are active. Only its own
+    // shard dies; the healthy shard's pools keep flowing.
+    use codecflow::runtime::batch::{BatchOutcome, BatchRequest};
+    use codecflow::runtime::engine::EngineError;
+    use codecflow::runtime::manifest::ModelSpec;
+    use codecflow::runtime::mock::{Executor, MockEngine};
+    use codecflow::runtime::tensor::Tensor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct PanicsOnBatch {
+        inner: MockEngine,
+    }
+    impl Executor for PanicsOnBatch {
+        fn execute(
+            &self,
+            model: &str,
+            artifact: &str,
+            inputs: &[Tensor],
+        ) -> Result<(Vec<Tensor>, f64), EngineError> {
+            self.inner.execute(model, artifact, inputs)
+        }
+        fn spec(&self, model: &str) -> Option<ModelSpec> {
+            self.inner.spec(model)
+        }
+        fn execute_batch(&self, _reqs: &[BatchRequest]) -> Result<Vec<BatchOutcome>, EngineError> {
+            panic!("fused kernel fault on the launch thread");
+        }
+    }
+    // Call 0 is shard 0's prefill backend; its encode replicas (calls
+    // 1 and 2) stay healthy — the fault is launch-stage only.
+    struct FaultyLaunchFactory {
+        calls: AtomicUsize,
+    }
+    impl ExecutorFactory for FaultyLaunchFactory {
+        fn build(&self) -> Box<dyn codecflow::runtime::mock::Executor> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                Box::new(PanicsOnBatch { inner: MockEngine::new("m") })
+            } else {
+                Box::new(MockEngine::new("m"))
+            }
+        }
+    }
+
+    let mut cfg = staged_cfg(2, 2, 2, 2);
+    cfg.workers = 1; // deterministic: shard 0 builds first and faults
+    cfg.admit_wave = 1;
+    cfg.steal = true;
+    let report = Dispatcher::new("m", cfg).run(
+        Arc::new(FaultyLaunchFactory { calls: AtomicUsize::new(0) }),
+        &clips(4),
+        Variant::CodecFlow,
+        2.0,
+    );
+    assert_eq!(report.shards.len(), 1, "only the healthy shard reports");
+    assert_eq!(
+        report.merged.per_stream.len(),
+        3,
+        "the healthy shard serves every stream the dead one hadn't claimed"
+    );
+    assert_eq!(report.merged.windows(), 9);
+    for count in report.merged.per_stream.values() {
+        assert_eq!(*count, 3, "surviving streams fully served");
+    }
+    assert!(report.report("staged").contains("stages:"), "report stays printable");
+}
