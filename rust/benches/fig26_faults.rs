@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig26_faults` — regenerates Fig 26
+//! (fault containment: availability and healthy-stream bit-identity
+//! under seeded injected faults — permanent, transient, and the
+//! legacy whole-shard fault domain — at 64 streams on one shard).
+fn main() {
+    codecflow::exp::fig26_faults::run();
+}

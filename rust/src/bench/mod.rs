@@ -2,8 +2,9 @@
 //! records, a named small-config trajectory (`codecflow bench run`),
 //! and a baseline-vs-current regression gate (`codecflow bench
 //! compare`) — the harness that keeps every serving-speed claim
-//! (fig20–fig24: scaling, batching, pipelining, wall overlap, hetero
-//! routing) continuously re-measured as the system evolves.
+//! (fig20–fig26: scaling, batching, pipelining, wall overlap, hetero
+//! routing, stage pools, fault containment) continuously re-measured
+//! as the system evolves.
 //!
 //! * [`record`] — the [`BenchRecord`] schema on the zero-dep
 //!   [`crate::json`] module: resolved config (every serving knob),
@@ -13,7 +14,7 @@
 //!   higher/lower-better semantics, digest equality as a hard
 //!   determinism check, human-readable report, nonzero exit on
 //!   regression.
-//! * [`runner`] — the fig20–fig24 trajectory with a result cache
+//! * [`runner`] — the fig20–fig26 trajectory with a result cache
 //!   keyed on the complete knob-covering config, plus the committed
 //!   baselines under `baselines/` and their one-command regeneration
 //!   (`codecflow bench run --update-baselines`).

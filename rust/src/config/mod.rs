@@ -209,6 +209,38 @@ pub struct ServingConfig {
     /// there. `0` (the default) is bit-identical to strict EDF
     /// seeding.
     pub batch_slack: f64,
+    /// Per-stream fault containment (`quarantine=`, default on): a
+    /// window whose launch or decode faults takes down only its own
+    /// stream — session failed, queued windows purged, KV released —
+    /// while the shard keeps serving; healthy streams stay
+    /// bit-identical to a fault-free run. `quarantine=0` restores the
+    /// legacy behaviour where any fault panics the whole shard.
+    pub quarantine: bool,
+    /// Solo re-execution attempts per faulted batch member beyond the
+    /// isolation attempt (`retries=`, default 0, capped at 16 —
+    /// rejected above). Transient engine faults that clear within the
+    /// budget recover instead of quarantining their stream.
+    pub retries: usize,
+    /// Deterministic **virtual** backoff before retry `n`:
+    /// `retry_backoff * n` seconds charged to the recovering member's
+    /// execute time (`retry_backoff=`, default 0.01, accepted in
+    /// [0, 60]). Never a wall clock, so faulted runs reproduce
+    /// bit-for-bit.
+    pub retry_backoff: f64,
+    /// Supervised shard restarts (`restarts=`, default 0, capped at 8
+    /// — rejected above): a shard that dies (quarantine off, or a
+    /// fault outside the contained paths) is restarted by the
+    /// dispatcher up to this many times, re-admitting its surviving
+    /// streams. Exhausted restarts surface as dead shards and lost
+    /// streams in the sharded report.
+    pub restarts: usize,
+    /// Deterministic fault-injection plan (`fault=`, env `CF_FAULT`;
+    /// empty = no injection). Comma-separated `key:value` pairs —
+    /// `rate:`, `streams:a+b`, `kind:transient|permanent|decode`,
+    /// `nth:`, `fails:`, `seed:`, `backend:` — validated at parse time
+    /// by `runtime::mock::FaultPlan::parse`; malformed specs are
+    /// rejected with a printed reason.
+    pub fault: String,
 }
 
 impl Default for ServingConfig {
@@ -234,6 +266,11 @@ impl Default for ServingConfig {
             route: "codec".to_string(),
             quant_ratio: 0.4,
             batch_slack: 0.0,
+            quarantine: true,
+            retries: 0,
+            retry_backoff: 0.01,
+            restarts: 0,
+            fault: String::new(),
         }
     }
 }
@@ -273,6 +310,11 @@ impl ServingConfig {
             "route" => parse_choice(value, &mut self.route, &["fixed", "static-split", "codec"]),
             "quant_ratio" => parse_into(value, &mut self.quant_ratio),
             "batch_slack" => parse_into(value, &mut self.batch_slack),
+            "quarantine" => parse_flag(value, &mut self.quarantine),
+            "retries" => parse_capped_usize(key, value, &mut self.retries, 16),
+            "retry_backoff" => parse_bounded_f64(key, value, &mut self.retry_backoff, 60.0),
+            "restarts" => parse_capped_usize(key, value, &mut self.restarts, 8),
+            "fault" => parse_fault_spec(value, &mut self.fault),
             _ => self.pipeline.set(key, value),
         };
         // The docs contract, both directions: knob_keys ⊆ set is unit-
@@ -315,6 +357,11 @@ impl ServingConfig {
             "route",
             "quant_ratio",
             "batch_slack",
+            "quarantine",
+            "retries",
+            "retry_backoff",
+            "restarts",
+            "fault",
             "window_frames",
             "stride_frac",
             "gop",
@@ -358,6 +405,11 @@ impl ServingConfig {
             ("route", self.route.clone()),
             ("quant_ratio", format!("{}", self.quant_ratio)),
             ("batch_slack", format!("{}", self.batch_slack)),
+            ("quarantine", self.quarantine.to_string()),
+            ("retries", self.retries.to_string()),
+            ("retry_backoff", format!("{}", self.retry_backoff)),
+            ("restarts", self.restarts.to_string()),
+            ("fault", self.fault.clone()),
             ("window_frames", p.window_frames.to_string()),
             ("stride_frac", format!("{}", p.stride_frac)),
             ("gop", p.gop.to_string()),
@@ -396,6 +448,64 @@ fn parse_stage_workers(key: &str, value: &str, slot: &mut usize) -> bool {
     }
     *slot = parsed;
     true
+}
+
+/// Capped count syntax (`retries=`, `restarts=`): a non-negative
+/// integer no larger than `cap`. Values above the cap are *rejected
+/// with a printed reason* — an absurd retry/restart budget turns a
+/// permanent fault into an unbounded re-execution loop, and silently
+/// clamping would hide the typo from the operator. The slot is left
+/// untouched on rejection, same as every other knob.
+fn parse_capped_usize(key: &str, value: &str, slot: &mut usize, cap: usize) -> bool {
+    let mut parsed = 0usize;
+    if !parse_into(value, &mut parsed) {
+        return false;
+    }
+    if parsed > cap {
+        eprintln!("codecflow: rejected `{key}={parsed}`: the accepted range is 0..={cap}");
+        return false;
+    }
+    *slot = parsed;
+    true
+}
+
+/// Bounded seconds syntax (`retry_backoff=`): a finite number in
+/// `[0, max]`. Out-of-range values are rejected with a printed reason
+/// and the slot left untouched.
+fn parse_bounded_f64(key: &str, value: &str, slot: &mut f64, max: f64) -> bool {
+    let mut parsed = 0.0f64;
+    if !parse_into(value, &mut parsed) {
+        return false;
+    }
+    if !parsed.is_finite() || parsed < 0.0 || parsed > max {
+        eprintln!("codecflow: rejected `{key}={value}`: the accepted range is 0..={max}");
+        return false;
+    }
+    *slot = parsed;
+    true
+}
+
+/// Fault-injection spec syntax (`fault=`, env `CF_FAULT`): validated
+/// end to end by [`crate::runtime::mock::FaultPlan::parse`] so a
+/// malformed plan is rejected *here*, with the parser's reason printed
+/// — not discovered as a silently inert knob mid-run. The empty string
+/// (no injection) is always accepted.
+fn parse_fault_spec(value: &str, slot: &mut String) -> bool {
+    let v = value.trim();
+    if v.is_empty() {
+        slot.clear();
+        return true;
+    }
+    match crate::runtime::mock::FaultPlan::parse(v) {
+        Ok(_) => {
+            *slot = v.to_string();
+            true
+        }
+        Err(reason) => {
+            eprintln!("codecflow: rejected `fault={v}`: {reason}");
+            false
+        }
+    }
 }
 
 fn parse_into<T: std::str::FromStr>(value: &str, slot: &mut T) -> bool {
@@ -593,12 +703,13 @@ mod tests {
         for key in ServingConfig::knob_keys() {
             let mut c = ServingConfig::default();
             let value = match *key {
-                "steal" | "launch" => "true",
+                "steal" | "launch" | "quarantine" => "true",
                 "stride_frac" => "0.5",
                 "mv_threshold" | "alpha" => "0.25",
                 "backend" => "hetero",
                 "route" => "codec",
                 "quant_ratio" => "0.5",
+                "fault" => "rate:0.5",
                 _ => "2",
             };
             assert!(c.set(key, value), "knob_keys lists `{key}` but set() rejects it");
@@ -630,7 +741,7 @@ mod tests {
         for key in ServingConfig::knob_keys() {
             let mut c = ServingConfig::default();
             let value = match *key {
-                "steal" | "launch" => "false",
+                "steal" | "launch" | "quarantine" => "false",
                 "stride_frac" => "0.35",
                 "mv_threshold" => "0.75",
                 "alpha" => "0.9",
@@ -638,6 +749,7 @@ mod tests {
                 "route" => "fixed",
                 "quant_ratio" => "0.77",
                 "batch_slack" => "3.5",
+                "fault" => "rate:0.5",
                 _ => "7",
             };
             assert!(c.set(key, value), "knob `{key}` must parse");
@@ -646,6 +758,70 @@ mod tests {
                 base,
                 "overriding `{key}` must be visible in knob_values()"
             );
+        }
+    }
+
+    #[test]
+    fn fault_knobs_parse_and_reject_out_of_range_values() {
+        let mut c = ServingConfig::default();
+        assert!(c.quarantine, "containment on by default");
+        assert_eq!(c.retries, 0);
+        assert!((c.retry_backoff - 0.01).abs() < 1e-12);
+        assert_eq!(c.restarts, 0);
+        assert_eq!(c.fault, "", "no injection by default");
+
+        assert!(c.set("quarantine", "0"));
+        assert!(!c.quarantine);
+        assert!(c.set("quarantine", "on"));
+        assert!(c.quarantine);
+        assert!(!c.set("quarantine", "maybe"), "unrecognized flag rejected");
+
+        // Retry/restart budgets are capped; out-of-range is an error,
+        // not a clamp.
+        assert!(c.set("retries", "3"));
+        assert_eq!(c.retries, 3);
+        assert!(c.set("retries", "16"), "cap itself accepted");
+        assert_eq!(c.retries, 16);
+        assert!(!c.set("retries", "17"), "above the cap rejected");
+        assert_eq!(c.retries, 16, "rejected value leaves the knob untouched");
+        assert!(!c.set("retries", "-1"), "negative rejected (unsigned parse)");
+        assert!(!c.set("retries", "lots"), "non-numeric rejected");
+        assert!(c.set("restarts", "2"));
+        assert_eq!(c.restarts, 2);
+        assert!(c.set("restarts", "8"), "cap itself accepted");
+        assert!(!c.set("restarts", "9"), "above the cap rejected");
+        assert_eq!(c.restarts, 8);
+
+        // Backoff is bounded seconds.
+        assert!(c.set("retry_backoff", "0.5"));
+        assert!((c.retry_backoff - 0.5).abs() < 1e-12);
+        assert!(c.set("retry_backoff", "0"));
+        assert_eq!(c.retry_backoff, 0.0);
+        assert!(!c.set("retry_backoff", "61"), "above 60s rejected");
+        assert!(!c.set("retry_backoff", "-0.1"), "negative rejected");
+        assert!(!c.set("retry_backoff", "inf"), "non-finite rejected");
+        assert!(!c.set("retry_backoff", "soon"), "non-numeric rejected");
+        assert_eq!(c.retry_backoff, 0.0, "rejected values leave the knob untouched");
+
+        // Fault specs are validated end to end at parse time.
+        assert!(c.set("fault", "rate:0.25,kind:transient,nth:2,fails:2,seed:7"));
+        assert_eq!(c.fault, "rate:0.25,kind:transient,nth:2,fails:2,seed:7");
+        assert!(c.set("fault", "streams:3+5,kind:decode,nth:1"));
+        assert!(c.set("fault", ""), "empty spec clears the plan");
+        assert_eq!(c.fault, "");
+        for bad in [
+            "rate:2",            // rate outside [0, 1]
+            "rate:abc",          // unparseable number
+            "kind:explosive",    // unknown kind
+            "rate:0.5,nth:0",    // nth is 1-based
+            "rate:0.5,fails:0",  // zero failures is no fault
+            "rate:0.5,bogus:1",  // unknown key
+            "rate:0.5,seed",     // not a key:value pair
+            "kind:permanent",    // targets nothing (no rate, no streams)
+            "backend:gpu",       // unknown backend scope
+        ] {
+            assert!(!c.set("fault", bad), "malformed spec {bad:?} must be rejected");
+            assert_eq!(c.fault, "", "rejected spec leaves the knob untouched");
         }
     }
 

@@ -20,20 +20,30 @@
 //! either thread is contained to that shard. The full request path is
 //! narrated in `docs/ARCHITECTURE.md`; every knob is documented in
 //! `docs/OPERATIONS.md`.
+//!
+//! Fault domains: inside a shard a faulting window quarantines only
+//! its stream (`quarantine=`, see [`super::shard`]); a shard whose
+//! worker dies outright is **supervised** — the dispatcher rebuilds
+//! its executor pool and re-admits every stream no surviving report
+//! covers, up to `restarts=` times. Streams still unserved when the
+//! budget runs out are explicit in [`ShardedReport::lost_streams`],
+//! never silently dropped. With the `fault=` knob armed, every built
+//! backend is wrapped in the seeded deterministic
+//! [`FaultInjector`], so all of the above is reproducibly testable.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Once};
 
 use crate::baselines::Variant;
 use crate::codec::types::Frame;
 use crate::config::ServingConfig;
 use crate::runtime::batch::BatchStats;
-use crate::runtime::mock::Executor;
-use crate::runtime::replica::{backend_kinds, Backend, ExecutorFactory};
+use crate::runtime::mock::{Executor, FaultInjector, FaultPlan};
+use crate::runtime::replica::{backend_kinds, Backend, BackendKind, ExecutorFactory};
 use crate::util;
 use crate::util::threadpool::ThreadPool;
 
-use super::metrics::{merge_backend_stats, BackendStats, Metrics, PhaseTimes};
+use super::metrics::{merge_backend_stats, BackendStats, FaultStats, Metrics, PhaseTimes};
 use super::shard::{assign_shard, Shard, ShardReport, StealPool, StreamWork};
 
 /// One warning per process for the launch=1/pipeline=0 no-op (see
@@ -44,11 +54,17 @@ static LAUNCH_NOOP_WARNING: Once = Once::new();
 /// launched ring they ride on.
 static STAGE_NOOP_WARNING: Once = Once::new();
 
+/// One warning per process for `restarts=` on a single-shard
+/// deployment, where the restart domain is the whole deployment.
+static RESTART_SOLO_WARNING: Once = Once::new();
+
 /// Merged result of a sharded serving run.
 #[derive(Debug)]
 pub struct ShardedReport {
     /// Per-shard reports, ordered by shard id. A shard whose worker
-    /// panicked is absent (the panic is logged by the dispatcher).
+    /// panicked is restarted up to `restarts=` times (re-serving every
+    /// stream no surviving report covers); one that stays dead is
+    /// absent here and counted in [`ShardedReport::dead_shards`].
     pub shards: Vec<ShardReport>,
     /// All shards' metrics folded together.
     pub merged: Metrics,
@@ -88,6 +104,20 @@ pub struct ShardedReport {
     /// ([`Shard::run_staged`](super::shard::Shard::run_staged));
     /// `None` otherwise. Drives the `stages:` report line.
     pub stage_workers: Option<(usize, usize)>,
+    /// Shards whose worker died and stayed dead after the `restarts=`
+    /// budget; their never-served streams are
+    /// [`ShardedReport::lost_streams`].
+    pub dead_shards: usize,
+    /// Streams no shard ever served or quarantined, sorted — victims
+    /// of a dead shard that neither stealing nor a supervised restart
+    /// re-admitted. Empty on every healthy run.
+    pub lost_streams: Vec<u64>,
+    /// Supervised shard restarts consumed from the `restarts=` budget.
+    pub restarts_used: usize,
+    /// Stream-level fault accounting merged across shards. Windows
+    /// owed by lost streams are folded into `failed_windows`, so
+    /// [`FaultStats::availability`] also reflects whole-shard loss.
+    pub faults: FaultStats,
 }
 
 impl ShardedReport {
@@ -124,6 +154,39 @@ impl ShardedReport {
             self.phases.wall_overlap_s,
             self.phases.wall_overlap_efficiency() * 100.0
         ));
+        if self.faults.any() || self.dead_shards > 0 {
+            // Fault containment: what was quarantined, shed, retried,
+            // and recovered — and what fraction of the owed windows
+            // was still served. Absent on fully healthy runs.
+            out.push_str(&format!(
+                "faults: quarantined={} failed={} purged={} shed={} retries={} \
+                 recovered={} backoff={:.3}s released={}B\n",
+                self.faults.quarantined.len(),
+                self.faults.failed_windows,
+                self.faults.purged_windows,
+                self.faults.shed_windows,
+                self.faults.retries,
+                self.faults.recovered,
+                self.faults.backoff_s,
+                self.faults.released_bytes
+            ));
+            let served = self.merged.windows();
+            out.push_str(&format!(
+                "availability: {:.1}% ({} of {} windows served)\n",
+                self.faults.availability(served) * 100.0,
+                served,
+                served + self.faults.failed_windows + self.faults.shed_windows
+            ));
+        }
+        if self.dead_shards > 0 || self.restarts_used > 0 {
+            let ids: Vec<String> = self.lost_streams.iter().map(|s| s.to_string()).collect();
+            out.push_str(&format!(
+                "shard supervision: dead={} restarts_used={} lost_streams=[{}]\n",
+                self.dead_shards,
+                self.restarts_used,
+                ids.join(",")
+            ));
+        }
         if let Some((kd, ke)) = self.stage_workers {
             // Per-stage pool health: virtual work vs the busiest-lane
             // makespan (utilization — low means over-provisioned or
@@ -260,6 +323,21 @@ impl Dispatcher {
                 );
             });
         }
+        if self.cfg.restarts > 0 && num_shards == 1 {
+            // Restart supervision still works with one shard, but the
+            // restart domain is then the whole deployment: while the
+            // lone shard replays, nothing else serves. Say so once
+            // (stream-level quarantine is the containment story at
+            // shards=1).
+            RESTART_SOLO_WARNING.call_once(|| {
+                eprintln!(
+                    "warning: restarts={} with shards=1 restarts the whole deployment \
+                     on a shard fault — no healthy shard keeps serving meanwhile; \
+                     rely on quarantine=1 or provision shards>=2",
+                    self.cfg.restarts
+                );
+            });
+        }
 
         let streams: Vec<StreamWork> = clips
             .iter()
@@ -279,57 +357,134 @@ impl Dispatcher {
         let cfg = self.cfg.clone();
         let model = self.model.clone();
         let kinds = backend_kinds(&cfg.backend);
+        // An armed `fault=` plan wraps every built backend in the
+        // seeded deterministic injector; the parse cannot fail here
+        // (the config layer rejected malformed specs at set() time).
+        let plan: Option<Arc<FaultPlan>> = if cfg.fault.is_empty() {
+            None
+        } else {
+            FaultPlan::parse(&cfg.fault).ok().map(Arc::new)
+        };
+        // The serve closure is reusable (Fn behind an Arc): the
+        // supervisor re-invokes it on a restarted shard with a fresh
+        // work pool — and, because executors are built *inside*, a
+        // fresh backend pool too.
+        let serve: Arc<dyn Fn(usize, Arc<StealPool>) -> ShardReport + Send + Sync> = {
+            let cfg = cfg.clone();
+            Arc::new(move |sid: usize, pool: Arc<StealPool>| {
+                // Each shard builds its own backend pool on this worker
+                // thread (`backend=`: the homogeneous default is one fast
+                // replica); under `launch=1` + `pipeline>=1` — or whenever
+                // the pool is heterogeneous — each backend is then *moved*
+                // onto its own dedicated launch thread
+                // (`Shard::run_backends`) so fused prefills physically
+                // overlap the next batch's prepare (and each other, across
+                // backends). Either way every engine is owned by exactly
+                // one thread at a time.
+                let shard = Shard {
+                    id: sid,
+                    cfg: cfg.clone(),
+                    model: model.clone(),
+                    variant,
+                    fps,
+                };
+                if staged {
+                    // Disaggregated stage pools: the launch-thread
+                    // backends as usual, plus one executor replica per
+                    // encode lane — the same flavour as the primary, so
+                    // which replica encodes a frame never changes the
+                    // bits (replicas are deterministic). Encode replicas
+                    // are not fault-injected: the injector intercepts
+                    // batch launches, and encode lanes never launch.
+                    let backends: Vec<Backend> = kinds
+                        .iter()
+                        .map(|&k| Backend::new(k, build_exec(&factory, k, cfg.quant_ratio, &plan)))
+                        .collect();
+                    let replicas: Vec<Box<dyn Executor>> = (0..cfg.encode_workers.max(1))
+                        .map(|_| factory.build_backend(kinds[0], cfg.quant_ratio))
+                        .collect();
+                    shard.run_staged(backends, replicas, &pool)
+                } else if kinds.len() > 1 || (cfg.launch && cfg.pipeline_depth > 0) {
+                    let backends: Vec<Backend> = kinds
+                        .iter()
+                        .map(|&k| Backend::new(k, build_exec(&factory, k, cfg.quant_ratio, &plan)))
+                        .collect();
+                    shard.run_backends(backends, &pool)
+                } else {
+                    let exec = build_exec(&factory, kinds[0], cfg.quant_ratio, &plan);
+                    shard.run(exec.as_ref(), &pool)
+                }
+            })
+        };
+        let serve0 = Arc::clone(&serve);
+        let pool0 = Arc::clone(&pool);
         let results = tp.try_map((0..num_shards).collect::<Vec<usize>>(), move |sid| {
-            // Each shard builds its own backend pool on this worker
-            // thread (`backend=`: the homogeneous default is one fast
-            // replica); under `launch=1` + `pipeline>=1` — or whenever
-            // the pool is heterogeneous — each backend is then *moved*
-            // onto its own dedicated launch thread
-            // (`Shard::run_backends`) so fused prefills physically
-            // overlap the next batch's prepare (and each other, across
-            // backends). Either way every engine is owned by exactly
-            // one thread at a time.
-            let shard = Shard {
-                id: sid,
-                cfg: cfg.clone(),
-                model: model.clone(),
-                variant,
-                fps,
-            };
-            if staged {
-                // Disaggregated stage pools: the launch-thread
-                // backends as usual, plus one executor replica per
-                // encode lane — the same flavour as the primary, so
-                // which replica encodes a frame never changes the
-                // bits (replicas are deterministic).
-                let backends: Vec<Backend> = kinds
-                    .iter()
-                    .map(|&k| Backend::new(k, factory.build_backend(k, cfg.quant_ratio)))
-                    .collect();
-                let replicas: Vec<Box<dyn Executor>> = (0..cfg.encode_workers.max(1))
-                    .map(|_| factory.build_backend(kinds[0], cfg.quant_ratio))
-                    .collect();
-                shard.run_staged(backends, replicas, &pool)
-            } else if kinds.len() > 1 || (cfg.launch && cfg.pipeline_depth > 0) {
-                let backends: Vec<Backend> = kinds
-                    .iter()
-                    .map(|&k| Backend::new(k, factory.build_backend(k, cfg.quant_ratio)))
-                    .collect();
-                shard.run_backends(backends, &pool)
-            } else {
-                let exec = factory.build_backend(kinds[0], cfg.quant_ratio);
-                shard.run(exec.as_ref(), &pool)
-            }
+            serve0(sid, Arc::clone(&pool0))
         });
-        let wall_s = util::now() - t0;
 
         let mut shards: Vec<ShardReport> = Vec::with_capacity(num_shards);
+        let mut dead: Vec<usize> = Vec::new();
         for (sid, r) in results.into_iter().enumerate() {
             match r {
                 Ok(rep) => shards.push(rep),
-                Err(msg) => eprintln!("shard {sid} worker panicked: {msg}"),
+                Err(msg) => {
+                    eprintln!("shard {sid} worker panicked: {msg}");
+                    dead.push(sid);
+                }
             }
         }
+
+        // Supervised restart: a dead shard gets a fresh executor pool
+        // and a fresh work pool holding every stream no surviving
+        // report served (or quarantined) — its claimed-and-lost
+        // streams plus any home streams still queued when it died.
+        // Re-served streams replay from scratch on clean state, so
+        // their digests are bit-identical to a fault-free run of the
+        // same streams. Streams still unserved when the budget runs
+        // out become `lost_streams`, and the shard counts as dead.
+        let mut restarts_used = 0usize;
+        while let Some(&sid) = dead.first() {
+            let unserved = unserved_streams(clips.len(), &shards);
+            if unserved.is_empty() {
+                // Stealing (or an earlier restart) already covered
+                // every dead shard's streams; nothing to re-admit and
+                // nothing lost — no budget spent.
+                dead.clear();
+                break;
+            }
+            if restarts_used >= self.cfg.restarts {
+                break;
+            }
+            restarts_used += 1;
+            let work: Vec<StreamWork> = unserved
+                .iter()
+                .map(|&stream| StreamWork {
+                    stream,
+                    home_shard: sid,
+                    frames: Arc::clone(&clips[stream as usize]),
+                })
+                .collect();
+            let rpool = Arc::new(StealPool::new(work));
+            let serve1 = Arc::clone(&serve);
+            let retry = tp.try_map(vec![sid], move |sid| serve1(sid, Arc::clone(&rpool)));
+            match retry.into_iter().next().expect("one restarted shard") {
+                Ok(rep) => {
+                    dead.remove(0);
+                    shards.push(rep);
+                }
+                // Died again: the same sid stays first in line and the
+                // loop retries it while budget remains.
+                Err(msg) => eprintln!("shard {sid} restart failed: {msg}"),
+            }
+        }
+        shards.sort_by_key(|r| r.shard);
+        let dead_shards = dead.len();
+        let lost_streams = if dead.is_empty() {
+            Vec::new()
+        } else {
+            unserved_streams(clips.len(), &shards)
+        };
+        let wall_s = util::now() - t0;
 
         let mut merged = Metrics::default();
         let mut answers = Vec::new();
@@ -341,6 +496,7 @@ impl Dispatcher {
         let mut stream_digests: HashMap<u64, u64> = HashMap::new();
         let mut quant_streams: Vec<u64> = Vec::new();
         let mut backends: Vec<BackendStats> = Vec::new();
+        let mut faults = FaultStats::default();
         for r in &shards {
             merged.merge(&r.metrics);
             sustainable += r.metrics.sustainable_streams(stride_s);
@@ -354,9 +510,19 @@ impl Dispatcher {
             }
             quant_streams.extend_from_slice(&r.quant_streams);
             merge_backend_stats(&mut backends, &r.backends);
+            faults.merge(&r.faults);
         }
         quant_streams.sort_unstable();
         quant_streams.dedup();
+        // Windows owed by lost streams count as failed, so the merged
+        // availability reflects whole-shard loss as well as
+        // stream-level faults.
+        let wf = self.cfg.pipeline.window_frames;
+        let stride = self.cfg.pipeline.stride_frames();
+        for &s in &lost_streams {
+            let frames = clips[s as usize].len();
+            faults.failed_windows += if frames < wf { 0 } else { (frames - wf) / stride + 1 };
+        }
 
         ShardedReport {
             shards,
@@ -378,8 +544,42 @@ impl Dispatcher {
             } else {
                 None
             },
+            dead_shards,
+            lost_streams,
+            restarts_used,
+            faults,
         }
     }
+}
+
+/// Build one executor of `kind`, wrapped in the seeded deterministic
+/// [`FaultInjector`] when a fault plan is armed (`fault=` knob). Each
+/// build gets a fresh injector, so call counting — and therefore the
+/// fault schedule — restarts with the executor it rides on.
+fn build_exec(
+    factory: &Arc<dyn ExecutorFactory>,
+    kind: BackendKind,
+    quant_ratio: f64,
+    plan: &Option<Arc<FaultPlan>>,
+) -> Box<dyn Executor> {
+    let exec = factory.build_backend(kind, quant_ratio);
+    match plan {
+        Some(p) => Box::new(FaultInjector::new(exec, Arc::clone(p), kind.name())),
+        None => exec,
+    }
+}
+
+/// Streams in `0..total` that no collected report served **or**
+/// quarantined — the re-admission set for a supervised restart (a
+/// quarantined stream was handled, deliberately; re-serving it would
+/// just re-fault deterministically).
+fn unserved_streams(total: usize, shards: &[ShardReport]) -> Vec<u64> {
+    let mut seen: HashSet<u64> = HashSet::new();
+    for r in shards {
+        seen.extend(r.metrics.per_stream.keys().copied());
+        seen.extend(r.faults.quarantined.keys().copied());
+    }
+    (0..total as u64).filter(|s| !seen.contains(s)).collect()
 }
 
 #[cfg(test)]
@@ -387,6 +587,7 @@ mod tests {
     use super::*;
     use crate::runtime::replica::MockReplicaFactory;
     use crate::video::{Corpus, CorpusConfig};
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn clips(n: usize) -> Vec<Arc<Vec<Frame>>> {
         Corpus::generate(CorpusConfig { videos: n, frames_per_video: 28, ..Default::default() })
@@ -481,6 +682,86 @@ mod tests {
         assert!(text.contains("backends:"));
         assert!(text.contains("quant["));
         assert!(text.contains("quant-served streams"));
+    }
+
+    /// An executor that dies on first touch — a whole-shard fault the
+    /// stream-level quarantine cannot contain, so supervision must.
+    struct PoisonedExec;
+
+    impl Executor for PoisonedExec {
+        fn execute(
+            &self,
+            _model: &str,
+            _artifact: &str,
+            _inputs: &[crate::runtime::Tensor],
+        ) -> Result<(Vec<crate::runtime::Tensor>, f64), crate::runtime::engine::EngineError>
+        {
+            panic!("poisoned executor");
+        }
+        fn spec(&self, _model: &str) -> Option<crate::runtime::ModelSpec> {
+            panic!("poisoned executor");
+        }
+    }
+
+    /// Factory whose first `poison` builds are [`PoisonedExec`]s:
+    /// deterministic shard deaths, healthy replacements afterwards.
+    struct FlakyFactory {
+        inner: MockReplicaFactory,
+        builds: AtomicUsize,
+        poison: usize,
+    }
+
+    impl ExecutorFactory for FlakyFactory {
+        fn build(&self) -> Box<dyn Executor> {
+            if self.builds.fetch_add(1, Ordering::SeqCst) < self.poison {
+                Box::new(PoisonedExec)
+            } else {
+                self.inner.build()
+            }
+        }
+    }
+
+    fn flaky(poison: usize) -> Arc<dyn ExecutorFactory> {
+        Arc::new(FlakyFactory {
+            inner: MockReplicaFactory::new("m", 0.0),
+            builds: AtomicUsize::new(0),
+            poison,
+        })
+    }
+
+    #[test]
+    fn supervisor_restarts_dead_shard_and_recovers_all_streams() {
+        let clips = clips(6);
+        let mut c = cfg(2);
+        c.restarts = 2;
+        let report = Dispatcher::new("m", c).run(flaky(2), &clips, Variant::CodecFlow, 2.0);
+        assert_eq!(report.merged.windows(), 18, "every window served after restart");
+        assert_eq!(report.dead_shards, 0);
+        assert_eq!(report.restarts_used, 1, "one restart re-admitted everything");
+        assert!(report.lost_streams.is_empty());
+        assert_eq!(report.merged.per_stream.len(), 6);
+        // Re-admitted streams replay from scratch on a fresh executor:
+        // digests are bit-identical to a fault-free run of the clips.
+        let clean = Dispatcher::new("m", cfg(2)).run(factory(), &clips, Variant::CodecFlow, 2.0);
+        assert_eq!(report.stream_digests, clean.stream_digests);
+        assert!(report.report("restart").contains("shard supervision:"));
+    }
+
+    #[test]
+    fn exhausted_restart_budget_reports_dead_shards_and_lost_streams() {
+        let clips = clips(4);
+        let mut c = cfg(2);
+        c.restarts = 1;
+        let report =
+            Dispatcher::new("m", c).run(flaky(usize::MAX), &clips, Variant::CodecFlow, 2.0);
+        assert_eq!(report.merged.windows(), 0, "nothing served");
+        assert!(report.dead_shards >= 1);
+        assert_eq!(report.restarts_used, 1, "budget spent on the failed restart");
+        assert_eq!(report.lost_streams, vec![0, 1, 2, 3]);
+        assert_eq!(report.faults.failed_windows, 12, "3 windows owed per lost stream");
+        let text = report.report("dead");
+        assert!(text.contains("shard supervision: dead="));
+        assert!(text.contains("availability: 0.0%"));
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! Serving metrics: stage latencies, throughput, queue behaviour.
+//! Serving metrics: stage latencies, throughput, queue behaviour, and
+//! fault/availability accounting.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::pipeline::infer::StageTimes;
 use crate::util::stats::Summary;
@@ -211,6 +212,77 @@ pub fn overlap_seconds(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
         }
     }
     total
+}
+
+/// Fault and availability accounting for one shard (merged across
+/// shards into the `ShardedReport`). The denominators live elsewhere —
+/// windows served in [`Metrics::windows`], backpressure drops in
+/// [`Metrics::dropped`] — so this struct carries only what faults
+/// added: windows that *failed* (were owed but never produced a
+/// result, whether they faulted directly, were purged from the queue
+/// at quarantine, or were still unserved when the stream was
+/// abandoned), the retry/backoff work spent recovering transients, and
+/// the per-stream quarantine ledger.
+#[derive(Clone, Debug, Default)]
+pub struct FaultStats {
+    /// Windows lost to faults: the faulting window itself plus every
+    /// remaining (queued or future) window of each quarantined stream.
+    pub failed_windows: usize,
+    /// Subset of `failed_windows` that were sitting in the admission
+    /// queue at quarantine time (purged, never served).
+    pub purged_windows: usize,
+    /// Windows shed by backpressure degradation (the drop-to-newest
+    /// path) — same quantity as [`Metrics::dropped`], restated here so
+    /// availability math reads from one place.
+    pub shed_windows: usize,
+    /// Solo retry attempts spent on faulting members (successful
+    /// recoveries and exhausted budgets both count their attempts).
+    pub retries: usize,
+    /// Retry attempts that ultimately recovered a window.
+    pub recovered: usize,
+    /// Virtual backoff seconds charged to recovered/retried windows.
+    pub backoff_s: f64,
+    /// KV bytes released back to the shard budget by quarantines.
+    pub released_bytes: usize,
+    /// Quarantined streams with the reason each was isolated
+    /// (BTreeMap: deterministic report order).
+    pub quarantined: BTreeMap<u64, String>,
+}
+
+impl FaultStats {
+    /// Any fault activity at all? (Gates the `faults:` report line.)
+    pub fn any(&self) -> bool {
+        self.failed_windows > 0
+            || self.retries > 0
+            || !self.quarantined.is_empty()
+            || self.shed_windows > 0
+    }
+
+    /// Served / owed availability: `served` windows actually produced
+    /// over everything owed (served + failed + shed). 1.0 on a
+    /// fault-free, shed-free run.
+    pub fn availability(&self, served: usize) -> f64 {
+        let owed = served + self.failed_windows + self.shed_windows;
+        if owed == 0 {
+            1.0
+        } else {
+            served as f64 / owed as f64
+        }
+    }
+
+    /// Fold another shard's fault accounting into this one.
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.failed_windows += other.failed_windows;
+        self.purged_windows += other.purged_windows;
+        self.shed_windows += other.shed_windows;
+        self.retries += other.retries;
+        self.recovered += other.recovered;
+        self.backoff_s += other.backoff_s;
+        self.released_bytes += other.released_bytes;
+        for (stream, reason) in &other.quarantined {
+            self.quarantined.entry(*stream).or_insert_with(|| reason.clone());
+        }
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -520,6 +592,42 @@ mod tests {
         assert!(merged[1].quant);
         assert_eq!(merged[1].batches, 2);
         assert!((merged[1].accuracy_penalty - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_stats_availability_and_merge() {
+        let mut f = FaultStats::default();
+        assert!(!f.any());
+        assert_eq!(f.availability(0), 1.0, "fault-free empty run is fully available");
+        assert_eq!(f.availability(10), 1.0);
+
+        f.failed_windows = 3;
+        f.purged_windows = 2;
+        f.retries = 4;
+        f.recovered = 1;
+        f.backoff_s = 0.05;
+        f.released_bytes = 4096;
+        f.quarantined.insert(7, "injected permanent fault".to_string());
+        assert!(f.any());
+        // 9 served of 12 owed (9 + 3 failed).
+        assert!((f.availability(9) - 0.75).abs() < 1e-12);
+        // Shed windows count against availability too.
+        f.shed_windows = 3;
+        assert!((f.availability(9) - 0.6).abs() < 1e-12);
+
+        let mut g = FaultStats::default();
+        g.failed_windows = 1;
+        g.retries = 2;
+        g.quarantined.insert(7, "other reason".to_string());
+        g.quarantined.insert(9, "decode fault".to_string());
+        f.merge(&g);
+        assert_eq!(f.failed_windows, 4);
+        assert_eq!(f.retries, 6);
+        assert_eq!(f.quarantined.len(), 2);
+        // First reason wins on a stream-id collision.
+        assert_eq!(f.quarantined[&7], "injected permanent fault");
+        assert_eq!(f.quarantined[&9], "decode fault");
+        assert_eq!(f.released_bytes, 4096);
     }
 
     #[test]

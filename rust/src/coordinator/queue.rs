@@ -278,6 +278,17 @@ impl AdmissionQueue {
         self.jobs.iter().map(|j| j.arrival_s).reduce(f64::max)
     }
 
+    /// Quarantine support: drop every queued window of `stream` and
+    /// forget its occupancy. Returns the number of jobs purged (the
+    /// serving layer counts them as failed-by-quarantine, distinct
+    /// from backpressure drops — `dropped` is *not* incremented).
+    pub fn purge_stream(&mut self, stream: u64) -> usize {
+        let before = self.jobs.len();
+        self.jobs.retain(|j| j.stream != stream);
+        self.pending.remove(&stream);
+        before - self.jobs.len()
+    }
+
     fn note_removed(&mut self, stream: u64) {
         if let Some(c) = self.pending.get_mut(&stream) {
             *c -= 1;
@@ -538,6 +549,26 @@ mod tests {
         q.push(bjob(2, 0, 1.1, 1));
         let same = q.pop_batch_slack(1, 5.0, |_| true, |_| true, compat);
         assert_eq!(same[0].stream, 1, "no gratuitous deadline slip");
+    }
+
+    #[test]
+    fn purge_stream_removes_only_that_stream_and_counts_it() {
+        let mut q = AdmissionQueue::new(8);
+        q.push(job(1, 0, 1.0));
+        q.push(job(1, 1, 2.0));
+        q.push(job(2, 0, 1.5));
+        let purged = q.purge_stream(1);
+        assert_eq!(purged, 2);
+        assert_eq!(q.pending_for(1), 0);
+        assert_eq!(q.pending_for(2), 1);
+        assert_eq!(q.dropped, 0, "quarantine purges are not backpressure drops");
+        assert_eq!(q.pop().unwrap().stream, 2);
+        // Purging an absent stream is a no-op.
+        assert_eq!(q.purge_stream(7), 0);
+        // The occupancy map stays exact after a purge.
+        q.push(job(1, 2, 3.0));
+        assert_eq!(q.pending_for(1), 1);
+        assert_eq!(q.len(), 1);
     }
 
     #[test]

@@ -172,7 +172,9 @@ impl<'a> StreamSession<'a> {
     /// finished before this session is stepped again.
     pub fn prepare(&mut self) -> Option<(BatchRequest, PendingWindow)> {
         let (start, wf, frontend_times) = self.next_window_input()?;
-        Some(self.engine.prepare_window(&wf.frames, start, frontend_times))
+        let (mut req, pending) = self.engine.prepare_window(&wf.frames, start, frontend_times);
+        req.stream = self.id;
+        Some((req, pending))
     }
 
     /// [`StreamSession::prepare`] for a window whose decode already
@@ -183,7 +185,9 @@ impl<'a> StreamSession<'a> {
     /// [`StreamSession::begin_window`].
     pub fn prepare_decoded(&mut self, wf: WindowFrames) -> (BatchRequest, PendingWindow) {
         let frontend_times = Self::frontend_times(&wf);
-        self.engine.prepare_window(&wf.frames, wf.start, frontend_times)
+        let (mut req, pending) = self.engine.prepare_window(&wf.frames, wf.start, frontend_times);
+        req.stream = self.id;
+        (req, pending)
     }
 
     /// Stage-pool seam, plan half: detach the decoded window's fresh
@@ -204,7 +208,10 @@ impl<'a> StreamSession<'a> {
         encoded: Vec<EncodedFrame>,
     ) -> (BatchRequest, PendingWindow) {
         let frontend_times = Self::frontend_times(&wf);
-        self.engine.prepare_window_preencoded(&wf.frames, wf.start, frontend_times, encoded)
+        let (mut req, pending) =
+            self.engine.prepare_window_preencoded(&wf.frames, wf.start, frontend_times, encoded);
+        req.stream = self.id;
+        (req, pending)
     }
 
     /// Consume a (possibly batch-amortized) prefill outcome for a

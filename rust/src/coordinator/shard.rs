@@ -58,7 +58,19 @@
 //!   unchanged. Virtual time generalizes per backend
 //!   ([`MultiPipelineClock`]), and per-backend batch/wall/utilization
 //!   stats — including the quant backend's surfaced accuracy-proxy
-//!   penalty — land in [`ShardReport::backends`].
+//!   penalty — land in [`ShardReport::backends`];
+//! * the fault domain is the **stream**, not the shard (`quarantine=`,
+//!   on by default): a window whose launch faults — engine error or
+//!   launch-lane panic — is re-executed solo (batch-of-one is
+//!   bit-identical to fused service, so healthy batch-mates keep their
+//!   digests) with up to `retries=` further attempts under
+//!   deterministic *virtual* backoff (`retry_backoff=`, never a wall
+//!   clock); a member that exhausts its budget quarantines only its
+//!   own stream ([`ShardState::quarantine`]: session marked served-out,
+//!   queued windows purged, KV released back to the shard's budget)
+//!   while the shard keeps serving. `quarantine=0` restores the
+//!   legacy fault-kills-the-shard behaviour. Per-stream fault
+//!   accounting lands in [`ShardReport::faults`].
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -75,12 +87,12 @@ use crate::runtime::batch::{
     route_policy, BatchOutcome, BatchRequest, BatchStats, MultiPipelineClock, RoutePolicy,
     RouteQuery,
 };
-use crate::runtime::mock::Executor;
+use crate::runtime::mock::{Executor, FaultPlan};
 use crate::runtime::replica::{backend_kinds, Backend, BackendKind, BackendSet, LaunchedBatch};
 use crate::util;
 use crate::util::threadpool::{join_all, JobHandle, Lane, ThreadPool};
 
-use super::metrics::{overlap_seconds, BackendStats, Metrics, PhaseTimes};
+use super::metrics::{overlap_seconds, BackendStats, FaultStats, Metrics, PhaseTimes};
 use super::queue::{AdmissionQueue, WindowJob};
 use super::session::StreamSession;
 
@@ -202,6 +214,12 @@ pub struct ShardReport {
     /// Peak fresh-frame ViT encodes in flight in the encode stage
     /// pool within one batch (0 when stage pools are off).
     pub encode_peak: usize,
+    /// Per-stream fault containment accounting: quarantined streams
+    /// (with first-fault reasons), failed/purged/shed window counts,
+    /// retry volume and recoveries, virtual backoff charged, and KV
+    /// bytes released back to the budget by quarantines. All zeros on
+    /// a fault-free run.
+    pub faults: FaultStats,
 }
 
 impl ShardReport {
@@ -437,15 +455,19 @@ impl StagePools {
 /// its finish turn.
 enum LaunchState {
     /// Executed synchronously (inline on the shard thread, or a
-    /// blocking call through the routed backend's lane under
-    /// `launch=0`): the outputs are already materialized with their
-    /// measured wall seconds, only the finish phase is deferred.
-    Done { outcomes: Vec<BatchOutcome>, wall_s: f64 },
+    /// blocking round trip through the routed backend's lane under
+    /// `launch=0`): the fused result — outcomes plus measured wall
+    /// seconds, or the captured fault — is already materialized, only
+    /// the finish phase (and any fault isolation) is deferred.
+    Done { fused: Result<(Vec<BatchOutcome>, f64), String> },
     /// Physically in flight on one of the shard's launch threads
     /// ([`crate::runtime::replica::LaunchedExecutor::submit_batch`]):
     /// the ticket is cashed at retire, which is where a launch-thread
-    /// fault (panic or engine error) surfaces and kills this shard —
-    /// the same containment as an inline fault.
+    /// fault (panic or engine error) surfaces — under `quarantine=`
+    /// (the default) it is contained to the faulting member's stream
+    /// via solo isolation ([`ShardState::cash_or_isolate`]); with
+    /// containment off it kills this shard, exactly like an inline
+    /// fault.
     Flying(JobHandle<LaunchedBatch>),
 }
 
@@ -460,8 +482,10 @@ struct InFlight {
     launch: LaunchState,
     /// Backend index the batch was routed to (0 without a pool).
     backend: usize,
-    /// Artifact name per member (fusion-group accounting at retire).
-    artifacts: Vec<String>,
+    /// The prepared requests, kept until retire: per-member artifact
+    /// names for fusion-group accounting, and the payloads for solo
+    /// re-execution should the fused launch fault.
+    requests: Vec<BatchRequest>,
     batch_arrival: f64,
     /// Summed prepare-phase seconds of the members.
     prepare_s: f64,
@@ -539,6 +563,25 @@ struct ShardState<'e> {
     encode_peak: usize,
     streams_served: usize,
     stolen_streams: usize,
+    /// Contain faults to the faulting stream (`quarantine=`, default
+    /// on). Off restores the legacy behaviour: any launch/decode
+    /// fault panics the shard thread and the dispatcher isolates (or
+    /// restarts) the whole shard.
+    contain: bool,
+    /// Solo re-execution budget per faulted member beyond the
+    /// isolation attempt (`retries=`).
+    retries: usize,
+    /// Virtual seconds of backoff charged before retry `n` is
+    /// `retry_backoff * n` (`retry_backoff=`) — deterministic, never
+    /// a wall clock, so digests stay reproducible under retries.
+    retry_backoff: f64,
+    /// The shard-side view of the injection plan (`fault=`): consulted
+    /// only for *decode*-kind faults, which fire inside the prepare
+    /// phase where no executor call exists to fail. Execute-kind
+    /// faults arrive through the [`FaultInjector`]-wrapped executor.
+    plan: Option<FaultPlan>,
+    /// Per-stream fault containment accounting for the report.
+    faults: FaultStats,
 }
 
 impl<'e> ShardState<'e> {
@@ -594,6 +637,17 @@ impl<'e> ShardState<'e> {
             encode_peak: 0,
             streams_served: 0,
             stolen_streams: 0,
+            contain: cfg.quarantine,
+            retries: cfg.retries,
+            retry_backoff: cfg.retry_backoff.max(0.0),
+            // The spec was validated at parse time; a malformed value
+            // smuggled past `ServingConfig::set` is simply inert here.
+            plan: if cfg.fault.is_empty() {
+                None
+            } else {
+                FaultPlan::parse(&cfg.fault).ok()
+            },
+            faults: FaultStats::default(),
         }
     }
 
@@ -633,6 +687,157 @@ impl<'e> ShardState<'e> {
         stats.wall_s += wall_s;
         if stats.quant {
             self.quant_streams.extend(streams);
+        }
+    }
+
+    /// One synchronous fused launch with fault capture: engine errors
+    /// ([`crate::runtime::batch::EngineError`]) and launch-lane panics
+    /// both surface as `Err(message)` instead of unwinding the shard
+    /// thread. With a backend pool the call makes the blocking round
+    /// trip through the routed backend's lane (so lane faults are
+    /// observable as join errors, never re-raised by the panicking
+    /// executor proxy); without one it runs inline. Measured wall
+    /// intervals are recorded on success.
+    fn try_execute(
+        &mut self,
+        backend: usize,
+        requests: &[BatchRequest],
+    ) -> Result<(Vec<BatchOutcome>, f64), String> {
+        match self.set {
+            Some(set) => match set.submit(backend, requests.to_vec()).join() {
+                Ok(run) => {
+                    self.exec_intervals.push((run.wall_start, run.wall_end));
+                    match run.outcomes {
+                        Ok(o) => Ok((o, run.wall_end - run.wall_start)),
+                        Err(e) => Err(e.to_string()),
+                    }
+                }
+                Err(msg) => Err(msg),
+            },
+            None => {
+                let t0 = util::now();
+                match self.exec.execute_batch(requests) {
+                    Ok(o) => {
+                        let t1 = util::now();
+                        self.exec_intervals.push((t0, t1));
+                        Ok((o, t1 - t0))
+                    }
+                    Err(e) => Err(e.to_string()),
+                }
+            }
+        }
+    }
+
+    /// Cash a fused launch or isolate its members. On success, fold
+    /// the launch into the per-backend stats and hand every member its
+    /// outcome. On a fused fault (`execute_batch` is all-or-nothing,
+    /// so one bad member poisons the whole result), each member is
+    /// re-executed **solo** — a batch of one is bit-identical to fused
+    /// service, so healthy members keep their digests — with up to
+    /// `1 + retries` attempts; retry `n` is preceded by
+    /// `retry_backoff * n` virtual seconds of backoff, charged to the
+    /// recovering member's execute time (wall-clock free, so runs
+    /// reproduce). A member that exhausts its budget comes back as
+    /// `Err(reason)` for the caller to quarantine. With containment
+    /// off (`quarantine=0`) the fused fault panics the shard thread —
+    /// the legacy shard-death path the dispatcher isolates.
+    fn cash_or_isolate(
+        &mut self,
+        backend: usize,
+        requests: &[BatchRequest],
+        fused: Result<(Vec<BatchOutcome>, f64), String>,
+    ) -> Vec<Result<BatchOutcome, String>> {
+        let msg = match fused {
+            Ok((outcomes, wall_s)) => {
+                self.record_launch(backend, &outcomes, wall_s, requests.iter().map(|r| r.stream));
+                return outcomes.into_iter().map(Ok).collect();
+            }
+            Err(msg) => msg,
+        };
+        if !self.contain {
+            panic!("batched prefill failed: {msg}");
+        }
+        let mut out = Vec::with_capacity(requests.len());
+        for req in requests {
+            let solo = std::slice::from_ref(req);
+            let mut failed_attempts = 0usize;
+            let mut backoff = 0.0f64;
+            let mut verdict: Result<BatchOutcome, String> = Err(msg.clone());
+            for attempt in 0..=self.retries {
+                if attempt > 0 {
+                    let pause = self.retry_backoff * attempt as f64;
+                    backoff += pause;
+                    self.faults.backoff_s += pause;
+                    self.faults.retries += 1;
+                }
+                match self.try_execute(backend, solo) {
+                    Ok((mut outcomes, wall_s)) => {
+                        let mut o = outcomes.remove(0);
+                        // The recovery cost (backoff pauses) rides the
+                        // recovered member, not its batch-mates.
+                        o.exec_s += backoff;
+                        self.record_launch(
+                            backend,
+                            std::slice::from_ref(&o),
+                            wall_s,
+                            std::iter::once(req.stream),
+                        );
+                        verdict = Ok(o);
+                        break;
+                    }
+                    Err(m) => {
+                        failed_attempts += 1;
+                        verdict = Err(m);
+                    }
+                }
+            }
+            if verdict.is_ok() && failed_attempts > 0 {
+                self.faults.recovered += 1;
+            }
+            out.push(verdict);
+        }
+        out
+    }
+
+    /// Quarantine a stream: the fault domain shrinks from shard to
+    /// stream. Every window the stream was still owed — the faulting
+    /// one, anything queued (purged here), and the not-yet-queued
+    /// remainder of its session — is counted failed; its KV is
+    /// released back to the shard's budget (and the engine-side cache
+    /// evicted) so healthy streams inherit the headroom; its session
+    /// cursor is exhausted so no later admission or stale queue entry
+    /// can resurrect it. Idempotent per stream; the first fault's
+    /// reason sticks.
+    fn quarantine(&mut self, stream: u64, reason: &str) {
+        if self.faults.quarantined.contains_key(&stream) {
+            return;
+        }
+        self.faults.quarantined.insert(stream, reason.to_string());
+        self.faults.purged_windows += self.queue.purge_stream(stream);
+        self.in_flight.remove(&stream);
+        if let Some(&idx) = self.index.get(&stream) {
+            let served = self.metrics.per_stream.get(&stream).copied().unwrap_or(0);
+            self.faults.failed_windows +=
+                self.sessions[idx].window_count().saturating_sub(served);
+            let bytes = self.sessions[idx].kv_bytes();
+            if bytes > 0 {
+                self.faults.released_bytes += bytes;
+                self.kv.release(stream);
+                self.sessions[idx].engine.evict_kv();
+            }
+            self.sessions[idx].seek(usize::MAX); // clamps to window_count
+        }
+    }
+
+    /// Consult the injection plan for a decode-kind fault on this
+    /// window. Decode faults fire inside the prepare phase — there is
+    /// no executor call to fail, so the plan is read shard-side.
+    fn decode_fault(&self, stream: u64, window_idx: usize) -> Option<String> {
+        let plan = self.plan.as_ref()?;
+        if plan.fires_decode(stream, window_idx) {
+            Some(format!("injected decode fault: stream {stream} window {window_idx}"))
+        } else {
+            None
         }
     }
 
@@ -796,6 +1001,17 @@ impl<'e> ShardState<'e> {
             if job.window_idx < self.sessions[idx].next_window_idx() {
                 continue; // stale job (already superseded)
             }
+            // Decode-kind injected faults fire here at depth 0: the
+            // serial prepare decodes inline, so the faulting member is
+            // quarantined before any engine work (containment off
+            // keeps the legacy shard-death).
+            if let Some(msg) = self.decode_fault(job.stream, job.window_idx) {
+                if self.contain {
+                    self.quarantine(job.stream, &msg);
+                    continue;
+                }
+                panic!("window decode failed: {msg}");
+            }
             self.sessions[idx].seek(job.window_idx);
             if let Some((req, pw)) = self.sessions[idx].prepare() {
                 requests.push(req);
@@ -817,22 +1033,12 @@ impl<'e> ShardState<'e> {
         // executor loops internally if it cannot fuse), routed to a
         // pool backend when one is running. Serial service blocks on
         // the launch either way: its wall interval is disjoint from
-        // every prepare interval, so measured overlap stays 0.
+        // every prepare interval, so measured overlap stays 0. A
+        // fused fault is isolated per member (or, with containment
+        // off, panics the shard) — see [`ShardState::cash_or_isolate`].
         let backend = self.route_batch(bucket, requests.len(), batch_arrival);
-        let wall_exec_start = util::now();
-        let outcomes = match self.set {
-            Some(set) => set.executor(backend).execute_batch(&requests),
-            None => self.exec.execute_batch(&requests),
-        }
-        .expect("batched prefill");
-        let wall_exec_end = util::now();
-        self.exec_intervals.push((wall_exec_start, wall_exec_end));
-        self.record_launch(
-            backend,
-            &outcomes,
-            wall_exec_end - wall_exec_start,
-            pending.iter().map(|(job, _, _)| job.stream),
-        );
+        let fused = self.try_execute(backend, &requests);
+        let verdicts = self.cash_or_isolate(backend, &requests, fused);
 
         // Phase 3 — per job, consume outputs; amortized timing. The
         // batch's service time is the sum of member latencies (each
@@ -846,7 +1052,14 @@ impl<'e> ShardState<'e> {
         // (stream, session idx) of finished members, for the KV pass
         // below.
         let mut served: Vec<(u64, usize)> = Vec::new();
-        for ((i, (job, idx, pw)), outcome) in pending.into_iter().enumerate().zip(outcomes) {
+        for ((i, (job, idx, pw)), verdict) in pending.into_iter().enumerate().zip(verdicts) {
+            let outcome = match verdict {
+                Ok(o) => o,
+                Err(msg) => {
+                    self.quarantine(job.stream, &msg);
+                    continue;
+                }
+            };
             let artifact = requests[i].artifact.as_str();
             let (r, prep_share, exec_share) =
                 self.finish_member(&job, idx, pw, outcome, artifact, &mut fused_groups, &mut served);
@@ -900,6 +1113,17 @@ impl<'e> ShardState<'e> {
             if job.window_idx < self.sessions[idx].next_window_idx() {
                 continue; // stale job (already superseded)
             }
+            // Decode-kind injected faults fire before the window is
+            // dispatched to any decode lane — deterministic whatever
+            // the lane count (containment off keeps the legacy
+            // shard-death the lane-panic path would have produced).
+            if let Some(msg) = self.decode_fault(job.stream, job.window_idx) {
+                if self.contain {
+                    self.quarantine(job.stream, &msg);
+                    continue;
+                }
+                panic!("decode stage worker panicked: {msg}");
+            }
             self.sessions[idx].seek(job.window_idx);
             if let Some((start, end)) = self.sessions[idx].begin_window() {
                 slots.push((job, idx, start, end));
@@ -916,10 +1140,12 @@ impl<'e> ShardState<'e> {
         // decode lanes (bounded queues — a backlog stalls this
         // producer); otherwise the legacy per-shard frontend pool fans
         // them out. Decode output is deterministic; only wall time
-        // changes. A worker panic is re-raised here — the shard dies
-        // and the dispatcher isolates it, the same containment as an
-        // inline fault.
-        let decoded: Vec<WindowFrames> = if let Some(sp) = stages {
+        // changes. A worker panic surfaces as that member's own join
+        // error: under containment (the default) only the faulting
+        // member's stream is quarantined — the lane survives, the
+        // sibling members proceed — while `quarantine=0` re-raises it
+        // here, the legacy shard-death the dispatcher isolates.
+        let decoded: Vec<Option<WindowFrames>> = if let Some(sp) = stages {
             let kd = sp.decode.len();
             self.decode_peak = self.decode_peak.max(slots.len());
             let mut handles = Vec::with_capacity(slots.len());
@@ -932,24 +1158,26 @@ impl<'e> ShardState<'e> {
                 }));
             }
             let mut out: Vec<Option<WindowFrames>> = Vec::with_capacity(slots.len());
-            let mut fault: Option<String> = None;
-            for (result, &(_, idx, _, _)) in join_all(handles).into_iter().zip(&slots) {
+            for (result, slot) in join_all(handles).into_iter().zip(&slots) {
                 match result {
                     Ok((fe, wf, t0, t1)) => {
-                        self.sessions[idx].put_frontend(fe);
+                        self.sessions[slot.1].put_frontend(fe);
                         self.decode_intervals.push((t0, t1));
                         out.push(Some(wf));
                     }
                     Err(msg) => {
-                        fault.get_or_insert(msg);
+                        if !self.contain {
+                            panic!("decode stage worker panicked: {msg}");
+                        }
+                        // The member's frontend went down with the
+                        // panicking job; its stream cannot decode
+                        // further windows.
+                        self.quarantine(slot.0.stream, &format!("decode stage fault: {msg}"));
                         out.push(None);
                     }
                 }
             }
-            if let Some(msg) = fault {
-                panic!("decode stage worker panicked: {msg}");
-            }
-            out.into_iter().map(|wf| wf.expect("fault checked")).collect()
+            out
         } else {
             match fe_pool {
                 Some(tp) if slots.len() > 1 => {
@@ -962,30 +1190,48 @@ impl<'e> ShardState<'e> {
                         }));
                     }
                     let mut out: Vec<Option<WindowFrames>> = Vec::with_capacity(slots.len());
-                    let mut fault: Option<String> = None;
-                    for (result, &(_, idx, _, _)) in join_all(handles).into_iter().zip(&slots) {
+                    for (result, slot) in join_all(handles).into_iter().zip(&slots) {
                         match result {
                             Ok((fe, wf)) => {
-                                self.sessions[idx].put_frontend(fe);
+                                self.sessions[slot.1].put_frontend(fe);
                                 out.push(Some(wf));
                             }
                             Err(msg) => {
-                                fault.get_or_insert(msg);
+                                if !self.contain {
+                                    panic!("overlapped window decode failed: {msg}");
+                                }
+                                self.quarantine(
+                                    slot.0.stream,
+                                    &format!("decode fault: {msg}"),
+                                );
                                 out.push(None);
                             }
                         }
                     }
-                    if let Some(msg) = fault {
-                        panic!("overlapped window decode failed: {msg}");
-                    }
-                    out.into_iter().map(|wf| wf.expect("fault checked")).collect()
+                    out
                 }
                 _ => slots
                     .iter()
-                    .map(|&(_, idx, start, end)| self.sessions[idx].decode_window(start, end))
+                    .map(|&(_, idx, start, end)| {
+                        Some(self.sessions[idx].decode_window(start, end))
+                    })
                     .collect(),
             }
         };
+
+        // Quarantined members fall out here; survivors keep their
+        // original round-robin index so per-lane virtual accounting
+        // still mirrors the physical assignment.
+        let mut members_in: Vec<(usize, WindowJob, usize, WindowFrames)> =
+            Vec::with_capacity(slots.len());
+        for (i, ((job, idx, _, _), wf)) in slots.into_iter().zip(decoded).enumerate() {
+            if let Some(wf) = wf {
+                members_in.push((i, job, idx, wf));
+            }
+        }
+        if members_in.is_empty() {
+            return None;
+        }
 
         // Engine half of prepare: selection, ViT encode, KV gather,
         // request assembly. Without stage pools everything runs on the
@@ -998,8 +1244,8 @@ impl<'e> ShardState<'e> {
         // busiest encode lane + the serial remainder. At one worker
         // per stage each makespan equals the plain sum, which is
         // exactly the PR-4 ring's accounting.
-        let mut pending = Vec::with_capacity(slots.len());
-        let mut requests: Vec<BatchRequest> = Vec::with_capacity(slots.len());
+        let mut pending = Vec::with_capacity(members_in.len());
+        let mut requests: Vec<BatchRequest> = Vec::with_capacity(members_in.len());
         let mut prepare_s = 0.0f64;
         let mut batch_arrival = f64::NEG_INFINITY;
         if let Some(sp) = stages {
@@ -1010,9 +1256,9 @@ impl<'e> ShardState<'e> {
             // encode lanes.
             let mut frame_ctr = 0usize;
             type EncodeHandles = Option<Vec<(usize, JobHandle<EncodedFrame>)>>;
-            let mut members: Vec<(WindowJob, usize, WindowFrames, EncodeHandles)> =
-                Vec::with_capacity(slots.len());
-            for ((job, idx, _, _), wf) in slots.into_iter().zip(decoded) {
+            let mut members: Vec<(usize, WindowJob, usize, WindowFrames, EncodeHandles)> =
+                Vec::with_capacity(members_in.len());
+            for (m, job, idx, wf) in members_in {
                 let handles = self.sessions[idx].plan_encode(&wf).map(|enc_jobs| {
                     enc_jobs
                         .into_iter()
@@ -1025,7 +1271,7 @@ impl<'e> ShardState<'e> {
                         })
                         .collect::<Vec<_>>()
                 });
-                members.push((job, idx, wf, handles));
+                members.push((m, job, idx, wf, handles));
             }
             self.encode_peak = self.encode_peak.max(frame_ctr);
 
@@ -1035,13 +1281,17 @@ impl<'e> ShardState<'e> {
             let mut decode_lane_s = vec![0.0f64; kd];
             let mut encode_lane_s = vec![0.0f64; ke];
             let mut serial_s = 0.0f64;
-            for (m, (job, idx, wf, handles)) in members.into_iter().enumerate() {
+            for (m, job, idx, wf, handles) in members {
                 let decode_v = wf.transmit_s + wf.decode_s;
                 decode_lane_s[m % kd] += decode_v;
                 let mut encode_v = 0.0f64;
                 let (req, pw) = match handles {
                     Some(hs) => {
+                        // Join every handle before deciding: a fault
+                        // must not leave sibling encodes unjoined on
+                        // the bounded lanes.
                         let mut encoded = Vec::with_capacity(hs.len());
+                        let mut fault: Option<String> = None;
                         for (lane, h) in hs {
                             match h.join() {
                                 Ok(e) => {
@@ -1050,8 +1300,20 @@ impl<'e> ShardState<'e> {
                                     encode_v += e.stage_s();
                                     encoded.push(e);
                                 }
-                                Err(msg) => panic!("encode stage worker panicked: {msg}"),
+                                Err(msg) => {
+                                    fault.get_or_insert(msg);
+                                }
                             }
+                        }
+                        if let Some(msg) = fault {
+                            if !self.contain {
+                                panic!("encode stage worker panicked: {msg}");
+                            }
+                            // The encode lane (and its replica)
+                            // survive; only this member's stream is
+                            // lost.
+                            self.quarantine(job.stream, &format!("encode stage fault: {msg}"));
+                            continue;
                         }
                         self.sessions[idx].prepare_preencoded(wf, encoded)
                     }
@@ -1072,7 +1334,7 @@ impl<'e> ShardState<'e> {
             self.phases.encode_span_s += encode_span;
             prepare_s = decode_span + encode_span + serial_s;
         } else {
-            for ((job, idx, _, _), wf) in slots.into_iter().zip(decoded) {
+            for (_, job, idx, wf) in members_in {
                 let (req, pw) = self.sessions[idx].prepare_decoded(wf);
                 prepare_s += pw.prepare_s();
                 batch_arrival = batch_arrival.max(job.arrival_s);
@@ -1082,6 +1344,10 @@ impl<'e> ShardState<'e> {
         }
 
         self.prep_intervals.push((wall_prep_start, util::now()));
+        if pending.is_empty() {
+            // Every member was quarantined during prepare.
+            return None;
+        }
 
         // The fused launch, routed to a backend when a pool runs.
         // With `launch=1` the requests cross to that backend's launch
@@ -1089,27 +1355,18 @@ impl<'e> ShardState<'e> {
         // shard thread prepares the next batch* — wall-clock overlap,
         // and two batches routed to different backends overlap each
         // other too; with `launch=0` (or no pool) the call blocks here
-        // and only the virtual model overlaps. Either way the outputs
-        // ride the ring until retire.
+        // and only the virtual model overlaps. Either way the fused
+        // result — outcomes or a captured fault — rides the ring until
+        // retire, where a fault is isolated per member.
         let backend = self.route_batch(bucket, requests.len(), batch_arrival);
-        let artifacts: Vec<String> = requests.iter().map(|r| r.artifact.clone()).collect();
         let launch = match self.set {
-            Some(set) if self.physical => LaunchState::Flying(set.submit(backend, requests)),
-            Some(set) => {
-                let wall_exec_start = util::now();
-                let outcomes =
-                    set.executor(backend).execute_batch(&requests).expect("batched prefill");
-                let wall_exec_end = util::now();
-                self.exec_intervals.push((wall_exec_start, wall_exec_end));
-                LaunchState::Done { outcomes, wall_s: wall_exec_end - wall_exec_start }
+            Some(set) if self.physical => {
+                // The launch thread consumes its own copy; the
+                // original requests ride the ring for solo
+                // re-execution should the fused launch fault.
+                LaunchState::Flying(set.submit(backend, requests.clone()))
             }
-            None => {
-                let wall_exec_start = util::now();
-                let outcomes = self.exec.execute_batch(&requests).expect("batched prefill");
-                let wall_exec_end = util::now();
-                self.exec_intervals.push((wall_exec_start, wall_exec_end));
-                LaunchState::Done { outcomes, wall_s: wall_exec_end - wall_exec_start }
-            }
+            _ => LaunchState::Done { fused: self.try_execute(backend, &requests) },
         };
 
         // Virtual prepare timing ([`MultiPipelineClock::prepare`]):
@@ -1125,7 +1382,7 @@ impl<'e> ShardState<'e> {
             pending,
             launch,
             backend,
-            artifacts,
+            requests,
             batch_arrival,
             prepare_s,
             prep_start,
@@ -1139,47 +1396,56 @@ impl<'e> ShardState<'e> {
     /// exec_done)` — prepare time under the previous launch is
     /// hidden), and settle the KV pool. Retirement is strictly FIFO,
     /// so evictions and cross-batch KV reuse order exactly as service
-    /// order. A launch-thread fault surfaces here and panics the shard
-    /// thread — the dispatcher's per-shard isolation then contains it
-    /// exactly like an inline fault, with every prior batch's KV
-    /// already settled (FIFO retirement again).
+    /// order. A launch-thread fault surfaces here: under containment
+    /// (the default) the batch is isolated per member
+    /// ([`ShardState::cash_or_isolate`]) and only exhausted members'
+    /// streams are quarantined, with every prior batch's KV already
+    /// settled (FIFO retirement again); `quarantine=0` panics the
+    /// shard thread for the dispatcher to isolate, the legacy
+    /// behaviour.
     fn retire(&mut self, fl: InFlight) {
         let InFlight {
             pending,
             launch,
             backend,
-            artifacts,
+            requests,
             batch_arrival,
             prepare_s,
             prep_start,
             prep_done,
         } = fl;
-        let (outcomes, launch_wall_s) = match launch {
-            LaunchState::Done { outcomes, wall_s } => (outcomes, wall_s),
+        let fused = match launch {
+            LaunchState::Done { fused } => fused,
             LaunchState::Flying(ticket) => match ticket.join() {
                 Ok(run) => {
                     self.exec_intervals.push((run.wall_start, run.wall_end));
-                    (run.outcomes.expect("batched prefill"), run.wall_end - run.wall_start)
+                    match run.outcomes {
+                        Ok(o) => Ok((o, run.wall_end - run.wall_start)),
+                        Err(e) => Err(e.to_string()),
+                    }
                 }
-                Err(msg) => panic!("launch thread panicked during batched prefill: {msg}"),
+                Err(msg) => Err(msg),
             },
         };
-        self.record_launch(
-            backend,
-            &outcomes,
-            launch_wall_s,
-            pending.iter().map(|(job, _, _)| job.stream),
-        );
-        let exec_s: f64 = outcomes.iter().map(|o| o.exec_s).sum();
+        let verdicts = self.cash_or_isolate(backend, &requests, fused);
+        let exec_s: f64 =
+            verdicts.iter().filter_map(|v| v.as_ref().ok()).map(|o| o.exec_s).sum();
 
         let mut batch_total = 0.0f64;
         let mut finish_s = 0.0f64;
         let mut fused_groups: Vec<(&str, Vec<usize>)> = Vec::new();
         let mut served: Vec<(u64, usize)> = Vec::new();
         let mut results: Vec<(WindowJob, WindowResult)> = Vec::with_capacity(pending.len());
-        for ((i, (job, idx, pw)), outcome) in pending.into_iter().enumerate().zip(outcomes) {
+        for ((i, (job, idx, pw)), verdict) in pending.into_iter().enumerate().zip(verdicts) {
             self.in_flight.remove(&job.stream);
-            let artifact = artifacts[i].as_str();
+            let outcome = match verdict {
+                Ok(o) => o,
+                Err(msg) => {
+                    self.quarantine(job.stream, &msg);
+                    continue;
+                }
+            };
+            let artifact = requests[i].artifact.as_str();
             let (r, prep_share, exec_share) =
                 self.finish_member(&job, idx, pw, outcome, artifact, &mut fused_groups, &mut served);
             batch_total += r.times.total();
@@ -1435,6 +1701,9 @@ impl Shard {
         }
         debug_assert!(ring.is_empty(), "pipeline drained before reporting");
         st.metrics.dropped = st.queue.dropped;
+        // Overload shedding counts against availability: a window the
+        // shard chose to drop was still owed to its stream.
+        st.faults.shed_windows = st.queue.dropped;
 
         // Measured wall-clock phase accounting, next to the virtual
         // model: how long prepares and launches really took, and how
@@ -1467,6 +1736,7 @@ impl Shard {
             backends: st.backend_stats,
             decode_peak: st.decode_peak,
             encode_peak: st.encode_peak,
+            faults: st.faults,
         }
     }
 }

@@ -474,6 +474,14 @@ pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     if let Ok(v) = std::env::var("CF_ROUTE") {
         s.set("route", &v);
     }
+    // Deterministic fault injection for the CI fault matrix: a
+    // CF_FAULT spec arms the injector exactly as `fault=` would, and a
+    // malformed spec is rejected loudly by the validating parser
+    // (keeping the fault-free default) rather than silently serving a
+    // different scenario than the matrix asked for.
+    if let Ok(v) = std::env::var("CF_FAULT") {
+        s.set("fault", &v);
+    }
     s
 }
 

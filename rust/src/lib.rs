@@ -32,18 +32,22 @@
 //!   batch execution (`pipeline=N` overlaps a batch's prepare with
 //!   the previous batch's prefill launch inside every shard —
 //!   physically so under `launch=1`, with measured wall overlap in
-//!   the reports), and cross-shard work stealing driven by a thread
-//!   pool ([`coordinator::shard`], [`coordinator::dispatch`]) — plus
-//!   the four comparison systems.
+//!   the reports), cross-shard work stealing driven by a thread
+//!   pool ([`coordinator::shard`], [`coordinator::dispatch`]), and
+//!   per-stream fault containment (quarantine + bounded retry, with
+//!   supervised shard restart above it) — plus the four comparison
+//!   systems.
 //! * [`exp`] — one experiment runner per paper table/figure, plus
 //!   [`exp::fig20_scaling`] (shard-scaling throughput),
 //!   [`exp::fig21_batching`] (cross-stream batched prefill),
 //!   [`exp::fig22_pipeline`] (pipelined shard execution),
-//!   [`exp::fig23_wallclock`] (launch-thread wall-clock overlap) and
+//!   [`exp::fig23_wallclock`] (launch-thread wall-clock overlap),
 //!   [`exp::fig24_hetero`] (heterogeneous backends with codec-guided
-//!   routing), beyond the paper.
+//!   routing), [`exp::fig25_stages`] (disaggregated stage pools) and
+//!   [`exp::fig26_faults`] (availability under seeded fault
+//!   injection), beyond the paper.
 //! * [`bench`] — continuous benchmarking: schema-versioned
-//!   `BENCH_<fig>.json` records emitted by the fig20–fig24 runners,
+//!   `BENCH_<fig>.json` records emitted by the fig20–fig26 runners,
 //!   the `codecflow bench run` small-config trajectory with its
 //!   knob-covering result cache, and the `codecflow bench compare`
 //!   regression gate CI runs against the committed `baselines/`.

@@ -947,6 +947,9 @@ impl<'a> WindowEngine<'a> {
                 Tensor::f32(&[bucket], mask),
                 Tensor::scalar_i32(t_real as i32 - 1),
             ],
+            // The engine has no session identity; the owning
+            // StreamSession stamps its id before the request batches.
+            stream: 0,
         };
         let pending = PendingWindow {
             start,
@@ -1129,6 +1132,8 @@ impl<'a> WindowEngine<'a> {
                 Tensor::f32(&[to_bucket], old_mask),
                 Tensor::scalar_i32(tn_real as i32 - 1),
             ],
+            // Stamped with the session id by the coordinator, as above.
+            stream: 0,
         };
         let refreshed = plan.refresh_idx.len();
         let pending = PendingWindow {

@@ -44,6 +44,14 @@ pub struct BatchRequest {
     pub artifact: String,
     /// Padded inputs, exactly as `Executor::execute` expects them.
     pub inputs: Vec<Tensor>,
+    /// Stream (session) the request belongs to. Purely *attributional*:
+    /// fusing, pricing and outputs never consult it — it exists so the
+    /// fault layer ([`crate::runtime::mock::FaultInjector`]) can target
+    /// a specific stream's launches and so a faulting batch member can
+    /// be quarantined without guessing. Solo prepare-time calls that
+    /// predate stream assignment use 0; the session stamps its id
+    /// before the request reaches a batch.
+    pub stream: u64,
 }
 
 /// Result of one request within a batch.
@@ -427,11 +435,13 @@ mod tests {
                 model: "m".to_string(),
                 artifact: "vit_encode_n16".to_string(),
                 inputs: inp.clone(),
+                stream: 0,
             },
             BatchRequest {
                 model: "m".to_string(),
                 artifact: "decode_step".to_string(),
                 inputs: Vec::new(),
+                stream: 0,
             },
         ];
         let out = execute_looping(&m, &reqs).unwrap();

@@ -13,6 +13,7 @@
 //! default `delay_s = 0` the mock is free, as scheduler tests expect.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::util::prng::Rng;
 
@@ -407,6 +408,273 @@ impl Executor for QuantEngine {
     }
 }
 
+/// What an injected fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Engine error that clears after `fails` consecutive failing
+    /// calls — recoverable within a retry budget.
+    Transient,
+    /// Engine error on every call from the `nth` onward — exhausts any
+    /// retry budget, forcing quarantine.
+    Permanent,
+    /// Frontend decode failure of the stream's `nth` window — fires in
+    /// the decode stage (possibly on a decode-lane worker thread), not
+    /// at the executor, exercising the cross-thread containment path.
+    Decode,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Transient => "transient",
+            FaultKind::Permanent => "permanent",
+            FaultKind::Decode => "decode",
+        }
+    }
+}
+
+/// A seeded, deterministic fault-injection plan, parsed from the
+/// `fault=` knob (env `CF_FAULT`). The spec is comma-separated
+/// `key:value` pairs (`:`/`,`/`+` internal separators, because `=` is
+/// already knob syntax):
+///
+/// * `rate:<0..1>` — target this fraction of streams, chosen by a
+///   seeded hash of the stream id (stable across shards and runs);
+/// * `streams:<a+b+c>` / `stream:<a>` — target these exact streams
+///   instead of a hashed fraction;
+/// * `kind:<transient|permanent|decode>` — what fires
+///   ([`FaultKind`]; default `permanent`);
+/// * `nth:<n>` — which targeted executor call (or, for `decode`, which
+///   window ordinal) fires first, 1-based (default 1);
+/// * `fails:<n>` — consecutive failing calls for `transient` (default
+///   1: the first solo retry already succeeds);
+/// * `seed:<n>` — salt for the `rate` hash (default 0);
+/// * `backend:<fast|quant>` — only fire on that backend's executor.
+///
+/// Everything is a pure function of (plan, stream id, call ordinal):
+/// no wall clock, no global RNG — the same plan over the same stream
+/// set faults the same windows every run, which is what lets the
+/// fault barrage assert healthy-stream digests bit-identical to a
+/// clean run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Fraction of streams targeted via the seeded hash (ignored when
+    /// `streams` is non-empty).
+    pub rate: f64,
+    /// Explicitly targeted stream ids (overrides `rate`).
+    pub streams: Vec<u64>,
+    pub kind: FaultKind,
+    /// First firing call / window ordinal, 1-based.
+    pub nth: usize,
+    /// Consecutive failing calls for [`FaultKind::Transient`].
+    pub fails: usize,
+    /// Restrict firing to one backend flavour (`fast` / `quant`).
+    pub backend: Option<String>,
+}
+
+impl FaultPlan {
+    /// Parse a `fault=` spec. Malformed specs are hard errors (the
+    /// config layer surfaces them as knob rejections, never silent
+    /// defaults).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan {
+            seed: 0,
+            rate: 0.0,
+            streams: Vec::new(),
+            kind: FaultKind::Permanent,
+            nth: 1,
+            fails: 1,
+            backend: None,
+        };
+        if spec.trim().is_empty() {
+            return Err("empty fault spec".to_string());
+        }
+        for pair in spec.split(',') {
+            let (key, value) = pair
+                .split_once(':')
+                .ok_or_else(|| format!("fault spec pair `{pair}` is not key:value"))?;
+            match key.trim() {
+                "rate" => {
+                    let r: f64 = value
+                        .parse()
+                        .map_err(|_| format!("fault rate `{value}` is not a number"))?;
+                    if !(0.0..=1.0).contains(&r) {
+                        return Err(format!("fault rate {r} outside [0, 1]"));
+                    }
+                    plan.rate = r;
+                }
+                "stream" | "streams" => {
+                    for s in value.split('+') {
+                        plan.streams.push(
+                            s.parse()
+                                .map_err(|_| format!("fault stream id `{s}` is not a u64"))?,
+                        );
+                    }
+                }
+                "kind" => {
+                    plan.kind = match value.trim() {
+                        "transient" => FaultKind::Transient,
+                        "permanent" => FaultKind::Permanent,
+                        "decode" => FaultKind::Decode,
+                        other => return Err(format!("unknown fault kind `{other}`")),
+                    };
+                }
+                "nth" => {
+                    let n: usize = value
+                        .parse()
+                        .map_err(|_| format!("fault nth `{value}` is not a count"))?;
+                    if n == 0 {
+                        return Err("fault nth is 1-based; 0 never fires".to_string());
+                    }
+                    plan.nth = n;
+                }
+                "fails" => {
+                    let n: usize = value
+                        .parse()
+                        .map_err(|_| format!("fault fails `{value}` is not a count"))?;
+                    if n == 0 {
+                        return Err("fault fails must be >= 1".to_string());
+                    }
+                    plan.fails = n;
+                }
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| format!("fault seed `{value}` is not a u64"))?;
+                }
+                "backend" => match value.trim() {
+                    b @ ("fast" | "quant") => plan.backend = Some(b.to_string()),
+                    other => return Err(format!("unknown fault backend `{other}`")),
+                },
+                other => return Err(format!("unknown fault spec key `{other}`")),
+            }
+        }
+        if plan.streams.is_empty() && plan.rate <= 0.0 {
+            return Err("fault spec targets nothing: set rate: or streams:".to_string());
+        }
+        Ok(plan)
+    }
+
+    /// Is this stream in the plan's blast radius? Explicit list first;
+    /// otherwise the seeded hash admits `rate` of the id space.
+    pub fn targets(&self, stream: u64) -> bool {
+        if !self.streams.is_empty() {
+            return self.streams.contains(&stream);
+        }
+        if self.rate <= 0.0 {
+            return false;
+        }
+        let mut h = crate::util::Fnv64::new();
+        h.mix(0xFA17);
+        h.mix(self.seed);
+        h.mix(stream);
+        (h.value() % 1000) < (self.rate * 1000.0).round() as u64
+    }
+
+    /// Does the stream's `call`-th targeted executor call (1-based)
+    /// fail? Transient faults clear after `fails` consecutive calls;
+    /// permanent ones never do. Decode plans never fire here — they
+    /// fire in the decode stage via [`FaultPlan::fires_decode`].
+    pub fn fires_call(&self, call: usize) -> bool {
+        match self.kind {
+            FaultKind::Transient => call >= self.nth && call < self.nth + self.fails,
+            FaultKind::Permanent => call >= self.nth,
+            FaultKind::Decode => false,
+        }
+    }
+
+    /// Does decoding the stream's window `window_idx` (0-based) fail?
+    pub fn fires_decode(&self, stream: u64, window_idx: usize) -> bool {
+        self.kind == FaultKind::Decode && self.targets(stream) && window_idx + 1 == self.nth
+    }
+
+    /// Does the plan apply to the backend named `backend`?
+    pub fn backend_matches(&self, backend: &str) -> bool {
+        match self.backend.as_deref() {
+            Some(b) => b == backend,
+            None => true,
+        }
+    }
+}
+
+/// Fault-injecting executor wrapper: the deterministic chaos layer the
+/// containment tests and the fig26 availability figure drive. Wraps
+/// any inner [`Executor`] (same shape as [`QuantEngine`]) and fails
+/// `execute_batch` calls according to an [`FaultPlan`] — per targeted
+/// stream, counting that stream's batched launches (a fused batch
+/// counts as one call for every targeted member it carries), so the
+/// transient-recovery schedule is exact: a `fails:1` transient clears
+/// on the first solo isolation retry, `fails:3` needs `retries=2`.
+///
+/// Only the batch path is intercepted: solo `execute` calls carry no
+/// stream identity (and decode faults fire in the frontend, consulted
+/// directly by the shard via [`FaultPlan::fires_decode`]). Outputs of
+/// non-firing calls are bit-identical to the inner executor's, so
+/// healthy streams keep their digests.
+pub struct FaultInjector {
+    inner: Box<dyn Executor>,
+    plan: Arc<FaultPlan>,
+    /// Backend flavour this replica serves (`fast` / `quant`), matched
+    /// against the plan's `backend:` restriction.
+    backend: String,
+    /// Per-stream count of targeted batched launches seen so far.
+    calls: Mutex<HashMap<u64, usize>>,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Box<dyn Executor>, plan: Arc<FaultPlan>, backend: &str) -> FaultInjector {
+        FaultInjector {
+            inner,
+            plan,
+            backend: backend.to_string(),
+            calls: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl Executor for FaultInjector {
+    fn execute(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64), EngineError> {
+        self.inner.execute(model, artifact, inputs)
+    }
+
+    fn spec(&self, model: &str) -> Option<ModelSpec> {
+        self.inner.spec(model)
+    }
+
+    fn execute_batch(&self, reqs: &[BatchRequest]) -> Result<Vec<BatchOutcome>, EngineError> {
+        if self.plan.backend_matches(&self.backend) {
+            let mut calls = self.calls.lock().expect("fault counter lock");
+            let mut fire: Option<(u64, usize)> = None;
+            let mut seen: Vec<u64> = Vec::new();
+            for r in reqs {
+                if seen.contains(&r.stream) || !self.plan.targets(r.stream) {
+                    continue;
+                }
+                seen.push(r.stream);
+                let c = calls.entry(r.stream).or_insert(0);
+                *c += 1;
+                if fire.is_none() && self.plan.fires_call(*c) {
+                    fire = Some((r.stream, *c));
+                }
+            }
+            drop(calls);
+            if let Some((stream, call)) = fire {
+                return Err(EngineError(format!(
+                    "injected {} fault: stream {stream} launch {call}",
+                    self.plan.kind.name()
+                )));
+            }
+        }
+        self.inner.execute_batch(reqs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -463,6 +731,7 @@ mod tests {
             model: "m".to_string(),
             artifact: "prefill_full_t96".to_string(),
             inputs: vec![Tensor::f32(&[1], vec![x])],
+            stream: 0,
         };
         let reqs = vec![req(1.0), req(2.0), req(3.0), req(4.0)];
         let fused = m.execute_batch(&reqs).unwrap();
@@ -487,6 +756,7 @@ mod tests {
             model: "m".to_string(),
             artifact: "prefill_incr_n48_o96".to_string(),
             inputs: vec![Tensor::f32(&[2], vec![0.5, -0.5])],
+            stream: 0,
         }];
         let batch = m.execute_batch(&reqs).unwrap();
         let (out, secs) = m
@@ -536,6 +806,7 @@ mod tests {
             model: "m".to_string(),
             artifact: "prefill_full_t96".to_string(),
             inputs: vec![Tensor::f32(&[1], vec![x])],
+            stream: 0,
         };
         let reqs = vec![req(1.0), req(2.0)];
         let lossy = quant.execute_batch(&reqs).unwrap();
@@ -570,16 +841,127 @@ mod tests {
                 model: "m".to_string(),
                 artifact: "vit_encode_n16".to_string(),
                 inputs: Vec::new(),
+                stream: 0,
             },
             BatchRequest {
                 model: "m".to_string(),
                 artifact: "prefill_full_t96".to_string(),
                 inputs: Vec::new(),
+                stream: 1,
             },
         ];
         let out = m.execute_batch(&reqs).unwrap();
         // Different artifacts don't fuse: each pays full solo cost.
         assert_eq!(out[0].exec_s, m.execute("m", "vit_encode_n16", &[]).unwrap().1);
         assert_eq!(out[1].exec_s, m.execute("m", "prefill_full_t96", &[]).unwrap().1);
+    }
+
+    #[test]
+    fn fault_plan_parses_the_documented_spec_grammar() {
+        let p = FaultPlan::parse("rate:0.25,kind:transient,seed:7").unwrap();
+        assert_eq!(p.rate, 0.25);
+        assert_eq!(p.kind, FaultKind::Transient);
+        assert_eq!(p.seed, 7);
+        assert_eq!((p.nth, p.fails), (1, 1), "defaults");
+        assert!(p.backend.is_none());
+
+        let p = FaultPlan::parse("stream:3,kind:decode,nth:2").unwrap();
+        assert_eq!(p.streams, vec![3]);
+        assert_eq!(p.kind, FaultKind::Decode);
+        assert_eq!(p.nth, 2);
+
+        let p = FaultPlan::parse("streams:1+3+5,kind:permanent,backend:quant").unwrap();
+        assert_eq!(p.streams, vec![1, 3, 5]);
+        assert_eq!(p.backend.as_deref(), Some("quant"));
+        assert!(p.backend_matches("quant") && !p.backend_matches("fast"));
+
+        // Malformed specs are hard errors, never silent defaults.
+        for bad in [
+            "",
+            "rate",
+            "rate:2.0",
+            "rate:x",
+            "kind:flaky,rate:0.5",
+            "nth:0,rate:0.5",
+            "fails:0,rate:0.5",
+            "backend:gpu,rate:0.5",
+            "bogus:1,rate:0.5",
+            "stream:abc",
+            "kind:transient", // targets nothing
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec `{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn fault_plan_targeting_is_seeded_and_deterministic() {
+        let p = FaultPlan::parse("rate:0.25,seed:7,kind:permanent").unwrap();
+        let hit: Vec<u64> = (0..64).filter(|&s| p.targets(s)).collect();
+        let again: Vec<u64> = (0..64).filter(|&s| p.targets(s)).collect();
+        assert_eq!(hit, again, "targeting is a pure function of (plan, stream)");
+        // Roughly rate * population — loose band, exact set is pinned
+        // by the seed.
+        assert!(hit.len() >= 6 && hit.len() <= 26, "{} streams targeted", hit.len());
+        // A different seed reshuffles the set.
+        let q = FaultPlan::parse("rate:0.25,seed:8,kind:permanent").unwrap();
+        let other: Vec<u64> = (0..64).filter(|&s| q.targets(s)).collect();
+        assert_ne!(hit, other);
+        // Explicit lists override the hash entirely.
+        let e = FaultPlan::parse("streams:2+9").unwrap();
+        assert!(e.targets(2) && e.targets(9) && !e.targets(3));
+        // Transient fire window: calls nth..nth+fails-1.
+        let t = FaultPlan::parse("stream:1,kind:transient,nth:2,fails:3").unwrap();
+        let fires: Vec<bool> = (1..=6).map(|c| t.fires_call(c)).collect();
+        assert_eq!(fires, vec![false, true, true, true, false, false]);
+        // Permanent never clears; decode never fires at the executor.
+        let perm = FaultPlan::parse("stream:1,kind:permanent,nth:3").unwrap();
+        assert!(!perm.fires_call(2) && perm.fires_call(3) && perm.fires_call(100));
+        let dec = FaultPlan::parse("stream:1,kind:decode,nth:2").unwrap();
+        assert!(!dec.fires_call(1) && !dec.fires_call(2));
+        assert!(dec.fires_decode(1, 1) && !dec.fires_decode(1, 0) && !dec.fires_decode(2, 1));
+    }
+
+    #[test]
+    fn fault_injector_fails_targeted_streams_and_spares_the_rest() {
+        let plan = Arc::new(FaultPlan::parse("stream:7,kind:transient,fails:1").unwrap());
+        let mut inner = MockEngine::new("m");
+        inner.delay_s = 1e-3;
+        let clean = MockEngine::new("m");
+        let inj = FaultInjector::new(Box::new(inner), plan, "fast");
+        let req = |stream: u64, x: f32| BatchRequest {
+            model: "m".to_string(),
+            artifact: "prefill_full_t96".to_string(),
+            inputs: vec![Tensor::f32(&[1], vec![x])],
+            stream,
+        };
+        // Fused batch carrying the targeted stream: whole call errs.
+        let err = inj.execute_batch(&[req(3, 1.0), req(7, 2.0)]).unwrap_err();
+        assert!(err.0.contains("stream 7"), "got: {}", err.0);
+        // Solo retry of the healthy member: bit-identical outputs.
+        let solo = inj.execute_batch(&[req(3, 1.0)]).unwrap();
+        let expect = clean.eval("m", "prefill_full_t96", &req(3, 1.0).inputs).unwrap();
+        assert_eq!(solo[0].outputs, expect);
+        // The transient cleared after one failing call: stream 7's
+        // second launch succeeds.
+        let recovered = inj.execute_batch(&[req(7, 2.0)]).unwrap();
+        assert_eq!(recovered[0].outputs, clean.eval("m", "prefill_full_t96", &req(7, 2.0).inputs).unwrap());
+    }
+
+    #[test]
+    fn fault_injector_respects_backend_scope() {
+        let plan = Arc::new(FaultPlan::parse("stream:1,kind:permanent,backend:quant").unwrap());
+        let req = BatchRequest {
+            model: "m".to_string(),
+            artifact: "prefill_full_t96".to_string(),
+            inputs: vec![Tensor::f32(&[1], vec![1.0])],
+            stream: 1,
+        };
+        let fast = FaultInjector::new(Box::new(MockEngine::new("m")), plan.clone(), "fast");
+        assert!(fast.execute_batch(std::slice::from_ref(&req)).is_ok(), "plan scoped to quant");
+        let quant = FaultInjector::new(Box::new(MockEngine::new("m")), plan, "quant");
+        assert!(quant.execute_batch(std::slice::from_ref(&req)).is_err());
+        // Solo execute and spec pass straight through.
+        assert!(quant.execute("m", "decode_step", &[]).is_ok());
+        assert_eq!(quant.spec("m").unwrap().name, "m");
     }
 }

@@ -416,11 +416,13 @@ mod tests {
                 model: "m".to_string(),
                 artifact: "prefill_full_t96".to_string(),
                 inputs: vec![Tensor::f32(&[1], vec![1.0])],
+                stream: 0,
             },
             BatchRequest {
                 model: "m".to_string(),
                 artifact: "prefill_full_t96".to_string(),
                 inputs: vec![Tensor::f32(&[1], vec![2.0])],
+                stream: 0,
             },
         ];
         let fused_inline = inline.execute_batch(&reqs).unwrap();
@@ -438,6 +440,7 @@ mod tests {
             model: "m".to_string(),
             artifact: "prefill_full_t96".to_string(),
             inputs: vec![Tensor::f32(&[1], vec![3.0])],
+            stream: 0,
         }];
         let before = util::now();
         let ticket = launched.submit_batch(reqs.clone());
@@ -498,6 +501,7 @@ mod tests {
             model: "m".to_string(),
             artifact: "prefill_full_t96".to_string(),
             inputs: vec![Tensor::f32(&[1], vec![x])],
+            stream: 0,
         };
         // Two batches in flight on *different* lanes at once; both
         // tickets complete, each with its backend's pricing.
@@ -541,6 +545,7 @@ mod tests {
                 model: "m".to_string(),
                 artifact: "decode_step".to_string(),
                 inputs: Vec::new(),
+                stream: 0,
             }])
             .join()
             .unwrap_err();

@@ -355,6 +355,10 @@ fn launch_thread_panic_is_contained_to_its_shard_with_kv_settled() {
     cfg.max_batch = 4;
     cfg.pipeline_depth = 2;
     cfg.launch = true;
+    // This test pins the legacy whole-shard fault domain: with
+    // containment on (the default) the same fault would be isolated to
+    // the faulting member's stream and the shard would keep serving.
+    cfg.quarantine = false;
     // Starve the KV budget so the healthy shard must settle (and
     // evict from) its pool throughout — proving settlement survives a
     // sibling's launch-thread death.
@@ -383,6 +387,10 @@ fn launch_thread_panic_is_contained_to_its_shard_with_kv_settled() {
         report.merged.kv_evictions > 0,
         "healthy shard kept settling its starved KV pool"
     );
+    // The dead shard and the stream that died with it are explicit.
+    assert_eq!(report.dead_shards, 1);
+    assert_eq!(report.lost_streams.len(), 1, "one claimed stream went down with the shard");
+    assert!(report.report("legacy").contains("shard supervision: dead=1"));
 }
 
 #[test]
@@ -453,6 +461,12 @@ fn panic_inside_overlapped_prepare_is_contained_to_its_shard() {
     for count in report.merged.per_stream.values() {
         assert_eq!(*count, 3, "surviving streams fully served");
     }
+    // The engine half of prepare runs inline on the shard thread, so
+    // this fault sits outside the quarantine-contained paths even with
+    // containment on: it stays a whole-shard fault domain, covered by
+    // `restarts=` supervision rather than per-stream quarantine.
+    assert_eq!(report.dead_shards, 1);
+    assert_eq!(report.lost_streams.len(), 1);
 }
 
 #[test]
@@ -505,6 +519,9 @@ fn panic_inside_execute_batch_is_contained_to_its_shard() {
     let mut cfg = sharded_cfg(2);
     cfg.workers = 1; // deterministic: shard 0 builds first and faults
     cfg.max_batch = 4;
+    // Pin the legacy fault domain: containment on would isolate the
+    // fused fault per member and keep the shard alive.
+    cfg.quarantine = false;
     // One stream admitted per wave: the faulty shard takes exactly one
     // stream down with it (a mid-service crash loses in-flight work,
     // same as the job-at-a-time path), everything else survives.
@@ -662,6 +679,9 @@ fn quant_backend_launch_panic_is_contained_with_fast_backend_windows_settled() {
     cfg.pipeline_depth = 2;
     assert!(cfg.set("backend", "hetero"));
     assert!(cfg.set("route", "codec"));
+    // Pin the legacy fault domain: containment on would isolate the
+    // quant lane's fused fault per member and keep the shard alive.
+    cfg.quarantine = false;
     // Starve the KV budget so the healthy shard must keep settling
     // (and evicting from) its pool throughout.
     cfg.kv_budget_bytes = 2 << 20;
@@ -730,4 +750,223 @@ fn shard_worker_panic_is_contained() {
     // The healthy shard steals the dead shard's pending streams.
     assert_eq!(report.merged.per_stream.len(), 4, "all streams still served");
     assert_eq!(report.merged.windows(), 12);
+    // Shard loss is never silent: the report carries the count, and no
+    // stream was lost (the dead shard died before claiming any).
+    assert_eq!(report.dead_shards, 1);
+    assert_eq!(report.restarts_used, 0, "restarts default to 0");
+    assert!(report.lost_streams.is_empty());
+    assert!(report.report("faulty").contains("shard supervision: dead=1 restarts_used=0"));
+}
+
+/// A launched-ring config with a fault-injection plan armed through
+/// the CLI surface (`fault=` rides `ServingConfig::set`, so the tests
+/// cover the knob plumbing too). `steal=false` pins stream placement;
+/// digests are placement-independent but per-shard stream sets are
+/// not.
+fn fault_cfg(shards: usize, depth: usize, spec: &str) -> ServingConfig {
+    let mut cfg = sharded_cfg(shards);
+    cfg.max_batch = 4;
+    cfg.admit_wave = 8;
+    cfg.batch_bucket = 10_000;
+    cfg.pipeline_depth = depth;
+    cfg.steal = false;
+    assert!(cfg.set("fault", spec), "spec {spec:?} must parse");
+    cfg
+}
+
+#[test]
+fn injected_faults_leave_healthy_stream_digests_bit_identical_across_depths() {
+    // The PR's core contract: a seeded fault plan quarantines exactly
+    // its targeted streams while every healthy stream's per-stream
+    // digest stays bit-identical to a fault-free run — at every
+    // pipeline depth, with the shard itself surviving. CI re-runs this
+    // barrage under other plans by exporting `CF_FAULT`; the
+    // exact-count assertions only apply to the default plan.
+    let from_env = std::env::var("CF_FAULT").ok();
+    let spec = from_env
+        .clone()
+        .unwrap_or_else(|| "streams:1+4+6,kind:permanent,nth:1".to_string());
+    let clips = clips(8);
+    let clean = Dispatcher::new("m", fault_cfg(2, 0, "")).run(
+        mock_factory(),
+        &clips,
+        Variant::CodecFlow,
+        2.0,
+    );
+    assert_eq!(clean.merged.windows(), 24);
+    assert!(!clean.faults.any(), "fault-free run reports no faults");
+    for depth in [0usize, 1, 4] {
+        let faulted = Dispatcher::new("m", fault_cfg(2, depth, &spec)).run(
+            mock_factory(),
+            &clips,
+            Variant::CodecFlow,
+            2.0,
+        );
+        // The shard survives: the fault domain is the stream.
+        assert_eq!(faulted.dead_shards, 0, "depth {depth}");
+        assert!(faulted.lost_streams.is_empty(), "depth {depth}");
+        let q = &faulted.faults.quarantined;
+        // Every stream is accounted for: served, quarantined, or both
+        // (a stream quarantined mid-session keeps its served prefix).
+        for s in 0..8u64 {
+            assert!(
+                faulted.merged.per_stream.contains_key(&s) || q.contains_key(&s),
+                "depth {depth}: stream {s} neither served nor quarantined"
+            );
+        }
+        // Healthy streams are bit-identical to the fault-free run.
+        for (s, d) in &faulted.stream_digests {
+            if !q.contains_key(s) {
+                assert_eq!(clean.stream_digests[s], *d, "depth {depth} stream {s}");
+            }
+        }
+        let avail = faulted.faults.availability(faulted.merged.windows());
+        assert!((0.0..=1.0).contains(&avail), "depth {depth}: {avail}");
+        if from_env.is_none() {
+            let hit: Vec<u64> = q.keys().copied().collect();
+            assert_eq!(hit, vec![1, 4, 6], "depth {depth}");
+            assert_eq!(faulted.merged.per_stream.len(), 5, "depth {depth}");
+            assert_eq!(faulted.merged.windows(), 15, "depth {depth}");
+            assert_eq!(faulted.faults.failed_windows, 9, "3 owed windows per lost stream");
+            assert!((avail - 15.0 / 24.0).abs() < 1e-9, "depth {depth}: {avail}");
+            // nth:1 streams never serve a window, so the merged digest
+            // is exactly the XOR of the healthy streams' clean slices.
+            let healthy = clean
+                .stream_digests
+                .iter()
+                .filter(|(s, _)| !q.contains_key(s))
+                .fold(0u64, |a, (_, d)| a ^ d);
+            assert_eq!(faulted.result_digest, healthy, "depth {depth}");
+            let text = faulted.report("faulted");
+            assert!(text.contains("faults: quarantined=3"), "{text}");
+            assert!(text.contains("availability: 62.5%"), "{text}");
+        }
+    }
+}
+
+#[test]
+fn transient_faults_recover_within_the_retry_budget_bit_identically() {
+    // A transient engine fault that clears within `retries=` solo
+    // attempts costs virtual backoff only: nothing is quarantined and
+    // the full run — recovering stream included — is bit-identical to
+    // a fault-free run.
+    let clips = clips(6);
+    let run = |depth: usize, spec: &str, retries: usize| {
+        let mut cfg = fault_cfg(1, depth, spec);
+        cfg.retries = retries;
+        cfg.retry_backoff = 0.25;
+        Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+    };
+    let clean = run(0, "", 0);
+    assert_eq!(clean.merged.windows(), 18);
+    for depth in [0usize, 2] {
+        let spec = "streams:2,kind:transient,nth:1,fails:3";
+        let healed = run(depth, spec, 3);
+        assert!(
+            healed.faults.quarantined.is_empty(),
+            "depth {depth}: transient fault must heal inside the budget"
+        );
+        assert_eq!(healed.merged.windows(), 18, "depth {depth}");
+        assert_eq!(healed.result_digest, clean.result_digest, "depth {depth}");
+        assert_eq!(healed.stream_digests, clean.stream_digests, "depth {depth}");
+        assert!(healed.faults.retries >= 1, "depth {depth}: retries were spent");
+        assert!(healed.faults.recovered >= 1, "depth {depth}: a member recovered");
+        assert!(healed.faults.backoff_s > 0.0, "backoff charged in virtual time only");
+        assert_eq!(healed.faults.availability(healed.merged.windows()), 1.0);
+        assert!(healed.report("healed").contains("availability: 100.0%"));
+        // The virtual backoff schedule is deterministic: a second run
+        // retries identically and lands on the same digest.
+        let again = run(depth, spec, 3);
+        assert_eq!(again.result_digest, healed.result_digest, "depth {depth}");
+        assert_eq!(again.faults.retries, healed.faults.retries, "depth {depth}");
+        assert_eq!(again.faults.backoff_s, healed.faults.backoff_s, "depth {depth}");
+    }
+}
+
+#[test]
+fn retry_exhaustion_quarantines_only_the_faulting_stream() {
+    // A fault outlasting the retry budget downgrades from recovery to
+    // quarantine — still contained to its stream.
+    let clips = clips(6);
+    let clean = Dispatcher::new("m", fault_cfg(1, 2, "")).run(
+        mock_factory(),
+        &clips,
+        Variant::CodecFlow,
+        2.0,
+    );
+    let mut cfg = fault_cfg(1, 2, "streams:2,kind:transient,nth:1,fails:6");
+    cfg.retries = 1; // budget covers solo calls 2 and 3; the plan fires through call 6
+    let report = Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0);
+    assert_eq!(report.faults.quarantined.len(), 1);
+    assert!(report.faults.quarantined.contains_key(&2), "stream 2 exhausted its budget");
+    assert_eq!(report.faults.recovered, 0, "nothing recovered");
+    assert!(report.faults.retries >= 1, "the budget was spent before quarantining");
+    assert_eq!(report.merged.windows(), 15);
+    assert!(!report.merged.per_stream.contains_key(&2));
+    for (s, d) in &report.stream_digests {
+        assert_eq!(clean.stream_digests[s], *d, "stream {s} unaffected by the quarantine");
+    }
+    assert!(report.report("exhausted").contains("quarantined=1"));
+}
+
+#[test]
+fn quarantine_releases_the_streams_kv_and_purges_its_queue() {
+    // `nth:2` lets stream 3 serve its first window (KV resident) before
+    // the permanent fault fires: quarantine must hand the held bytes
+    // back to the shard's budget and purge the stream's queued tail.
+    let clips = clips(6);
+    let clean = Dispatcher::new("m", fault_cfg(1, 0, "")).run(
+        mock_factory(),
+        &clips,
+        Variant::CodecFlow,
+        2.0,
+    );
+    let cfg = fault_cfg(1, 0, "streams:3,kind:permanent,nth:2");
+    let report = Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0);
+    assert!(report.faults.quarantined.contains_key(&3));
+    assert!(report.faults.released_bytes > 0, "held KV released back to the budget");
+    assert_eq!(report.merged.per_stream.get(&3), Some(&1), "window 0 had already served");
+    assert_eq!(report.faults.failed_windows, 2, "window 1 faulted, window 2 never ran");
+    assert_eq!(report.faults.purged_windows, 1, "window 2 purged from the queue");
+    assert_eq!(report.merged.windows(), 16);
+    for (s, d) in &clean.stream_digests {
+        if *s != 3 {
+            assert_eq!(report.stream_digests[s], *d, "stream {s} bit-identical");
+        }
+    }
+    assert!((report.faults.availability(16) - 16.0 / 18.0).abs() < 1e-12);
+    assert!(report.report("released").contains("released="));
+}
+
+#[test]
+fn backend_pool_faults_are_contained_per_stream_on_the_routed_lane() {
+    // Faults on one backend of a heterogeneous pool quarantine only the
+    // streams routed through it; the pool's lanes and launch threads
+    // keep serving. `route=fixed` pins every batch to the fast lane so
+    // the clean run is a valid bit-identity reference.
+    let clips = clips(8);
+    let run = |spec: &str| {
+        let mut cfg = fault_cfg(2, 2, spec);
+        assert!(cfg.set("backend", "hetero"));
+        assert!(cfg.set("route", "fixed"));
+        Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+    };
+    let clean = run("");
+    assert_eq!(clean.merged.windows(), 24);
+    let faulted = run("streams:0+5,kind:permanent,nth:1,backend:fast");
+    assert_eq!(faulted.dead_shards, 0, "the pool survives its lane's faults");
+    let hit: Vec<u64> = faulted.faults.quarantined.keys().copied().collect();
+    assert_eq!(hit, vec![0, 5]);
+    assert_eq!(faulted.merged.windows(), 18);
+    for (s, d) in &faulted.stream_digests {
+        assert_eq!(clean.stream_digests[s], *d, "stream {s} bit-identical");
+    }
+    // Every served window still retired through the fast lane.
+    assert_eq!(faulted.backends[0].name, "fast");
+    assert_eq!(faulted.backends[0].jobs, 18);
+    assert_eq!(faulted.backends[1].jobs, 0, "fixed routing never offloads");
+    // A plan scoped to the idle quant lane never fires at all.
+    let spared = run("streams:0+5,kind:permanent,nth:1,backend:quant");
+    assert!(spared.faults.quarantined.is_empty(), "quant lane never saw the streams");
+    assert_eq!(spared.result_digest, clean.result_digest);
 }

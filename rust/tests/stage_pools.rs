@@ -207,6 +207,10 @@ fn encode_worker_panic_is_contained_to_its_shard_with_kv_settled() {
 
     let mut cfg = staged_cfg(2, 2, 2, 2);
     cfg.workers = 1; // deterministic: shard 0 builds first and faults
+    // Pin the legacy whole-shard fault domain: with containment on
+    // (the default) the encode-lane fault would quarantine only the
+    // member's stream and the shard would keep serving.
+    cfg.quarantine = false;
     // Starve the KV budget so the healthy shard must keep settling
     // (and evicting from) its pool throughout.
     cfg.kv_budget_bytes = 2 << 20;
@@ -282,6 +286,8 @@ fn launch_thread_panic_with_stage_pools_on_is_contained() {
 
     let mut cfg = staged_cfg(2, 2, 2, 2);
     cfg.workers = 1; // deterministic: shard 0 builds first and faults
+    // Pin the legacy whole-shard fault domain (see the encode test).
+    cfg.quarantine = false;
     cfg.admit_wave = 1;
     cfg.steal = true;
     let report = Dispatcher::new("m", cfg).run(
@@ -301,4 +307,76 @@ fn launch_thread_panic_with_stage_pools_on_is_contained() {
         assert_eq!(*count, 3, "surviving streams fully served");
     }
     assert!(report.report("staged").contains("stages:"), "report stays printable");
+}
+
+#[test]
+fn injected_faults_with_stage_pools_quarantine_streams_bit_identically() {
+    // The fault barrage over stage-pool shapes: a seeded plan
+    // quarantines exactly its targeted streams while every healthy
+    // stream's digest stays bit-identical to a fault-free staged run —
+    // with the decode/encode lanes and the shard itself surviving. CI
+    // re-runs this under other plans via `CF_FAULT`; the exact-count
+    // assertions only apply to the default plan.
+    let from_env = std::env::var("CF_FAULT").ok();
+    let spec =
+        from_env.clone().unwrap_or_else(|| "streams:1+6,kind:permanent,nth:1".to_string());
+    let clips = clips(8);
+    let clean = run(staged_cfg(2, 2, 2, 2), &clips);
+    assert_eq!(clean.merged.windows(), 24);
+    for (kd, ke, depth) in [(1usize, 2usize, 1usize), (2, 2, 2), (2, 3, 4)] {
+        let mut cfg = staged_cfg(2, depth, kd, ke);
+        cfg.steal = false;
+        assert!(cfg.set("fault", &spec), "spec {spec:?} must parse");
+        let faulted = run(cfg, &clips);
+        let tag = format!("decode {kd} encode {ke} depth {depth}");
+        assert_eq!(faulted.dead_shards, 0, "{tag}: the shard survives");
+        assert!(faulted.lost_streams.is_empty(), "{tag}");
+        let q = &faulted.faults.quarantined;
+        for s in 0..8u64 {
+            assert!(
+                faulted.merged.per_stream.contains_key(&s) || q.contains_key(&s),
+                "{tag}: stream {s} neither served nor quarantined"
+            );
+        }
+        for (s, d) in &faulted.stream_digests {
+            if !q.contains_key(s) {
+                assert_eq!(clean.stream_digests[s], *d, "{tag} stream {s}");
+            }
+        }
+        if from_env.is_none() {
+            let hit: Vec<u64> = q.keys().copied().collect();
+            assert_eq!(hit, vec![1, 6], "{tag}");
+            assert_eq!(faulted.merged.windows(), 18, "{tag}");
+            assert_eq!(faulted.faults.failed_windows, 6, "{tag}");
+            let text = faulted.report("staged");
+            assert!(text.contains("faults: quarantined=2"), "{text}");
+            assert!(text.contains("stages:"), "{text}");
+        }
+    }
+}
+
+#[test]
+fn decode_kind_faults_quarantine_before_the_decode_lanes() {
+    // `kind:decode` fires in the frontend — on the shard thread before
+    // the window reaches any decode lane — so containment is identical
+    // whatever the lane count, including the poolless serial path.
+    let clips = clips(8);
+    let clean = run(staged_cfg(2, 2, 2, 2), &clips);
+    for (kd, ke, depth) in [(1usize, 1usize, 0usize), (2, 2, 2)] {
+        let mut cfg = staged_cfg(2, depth, kd, ke);
+        cfg.steal = false;
+        assert!(cfg.set("fault", "streams:2,kind:decode,nth:1"));
+        let faulted = run(cfg, &clips);
+        let tag = format!("decode {kd} encode {ke} depth {depth}");
+        assert_eq!(faulted.dead_shards, 0, "{tag}");
+        assert_eq!(faulted.faults.quarantined.len(), 1, "{tag}");
+        let reason = &faulted.faults.quarantined[&2];
+        assert!(reason.contains("decode"), "{tag}: {reason}");
+        assert!(!faulted.merged.per_stream.contains_key(&2), "{tag}");
+        assert_eq!(faulted.merged.windows(), 21, "{tag}");
+        assert_eq!(faulted.faults.failed_windows, 3, "{tag}");
+        for (s, d) in &faulted.stream_digests {
+            assert_eq!(clean.stream_digests[s], *d, "{tag} stream {s}");
+        }
+    }
 }
