@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig27_kvcompress` — regenerates Fig 27
+//! (cross-window KV compression: sustainable streams per KV budget
+//! with codec-guided 2:1/4:1 block merging vs the uncompressed path,
+//! with a never-calm high-motion control — at 32 streams on one
+//! shard).
+fn main() {
+    codecflow::exp::fig27_kvcompress::run();
+}

@@ -2,8 +2,9 @@
 //! records, a named small-config trajectory (`codecflow bench run`),
 //! and a baseline-vs-current regression gate (`codecflow bench
 //! compare`) — the harness that keeps every serving-speed claim
-//! (fig20–fig26: scaling, batching, pipelining, wall overlap, hetero
-//! routing, stage pools, fault containment) continuously re-measured
+//! (fig20–fig27: scaling, batching, pipelining, wall overlap, hetero
+//! routing, stage pools, fault containment, KV compression)
+//! continuously re-measured
 //! as the system evolves.
 //!
 //! * [`record`] — the [`BenchRecord`] schema on the zero-dep
@@ -14,7 +15,7 @@
 //!   higher/lower-better semantics, digest equality as a hard
 //!   determinism check, human-readable report, nonzero exit on
 //!   regression.
-//! * [`runner`] — the fig20–fig26 trajectory with a result cache
+//! * [`runner`] — the fig20–fig27 trajectory with a result cache
 //!   keyed on the complete knob-covering config, plus the committed
 //!   baselines under `baselines/` and their one-command regeneration
 //!   (`codecflow bench run --update-baselines`).

@@ -241,6 +241,23 @@ pub struct ServingConfig {
     /// by `runtime::mock::FaultPlan::parse`; malformed specs are
     /// rejected with a printed reason.
     pub fault: String,
+    /// Cross-window KV compression (`kv_compress=`, env
+    /// `CF_KV_COMPRESS`, default off): blocks whose codec MV energy
+    /// stays calm for `compress_after=` consecutive windows are merged
+    /// 2:1 then 4:1 in the retained KV, returning budget to the shard
+    /// pool. `kv_compress=0` is bit-identical to the uncompressed
+    /// path.
+    pub kv_compress: bool,
+    /// Calm windows required per compression level
+    /// (`compress_after=`, default 2, capped at 64 — rejected above):
+    /// level 1 (2:1) after this many calm windows, level 2 (4:1) after
+    /// twice as many.
+    pub compress_after: usize,
+    /// Ceiling on the cumulative per-stream accuracy-proxy penalty
+    /// from compression (`compress_penalty_cap=`, default 0.05,
+    /// accepted in [0, 1]); surfaced in reports like a lossy backend's
+    /// `quant_penalty`.
+    pub compress_penalty_cap: f64,
 }
 
 impl Default for ServingConfig {
@@ -271,6 +288,9 @@ impl Default for ServingConfig {
             retry_backoff: 0.01,
             restarts: 0,
             fault: String::new(),
+            kv_compress: false,
+            compress_after: 2,
+            compress_penalty_cap: 0.05,
         }
     }
 }
@@ -315,6 +335,11 @@ impl ServingConfig {
             "retry_backoff" => parse_bounded_f64(key, value, &mut self.retry_backoff, 60.0),
             "restarts" => parse_capped_usize(key, value, &mut self.restarts, 8),
             "fault" => parse_fault_spec(value, &mut self.fault),
+            "kv_compress" => parse_flag(value, &mut self.kv_compress),
+            "compress_after" => parse_capped_usize(key, value, &mut self.compress_after, 64),
+            "compress_penalty_cap" => {
+                parse_bounded_f64(key, value, &mut self.compress_penalty_cap, 1.0)
+            }
             _ => self.pipeline.set(key, value),
         };
         // The docs contract, both directions: knob_keys ⊆ set is unit-
@@ -362,6 +387,9 @@ impl ServingConfig {
             "retry_backoff",
             "restarts",
             "fault",
+            "kv_compress",
+            "compress_after",
+            "compress_penalty_cap",
             "window_frames",
             "stride_frac",
             "gop",
@@ -410,6 +438,9 @@ impl ServingConfig {
             ("retry_backoff", format!("{}", self.retry_backoff)),
             ("restarts", self.restarts.to_string()),
             ("fault", self.fault.clone()),
+            ("kv_compress", self.kv_compress.to_string()),
+            ("compress_after", self.compress_after.to_string()),
+            ("compress_penalty_cap", format!("{}", self.compress_penalty_cap)),
             ("window_frames", p.window_frames.to_string()),
             ("stride_frac", format!("{}", p.stride_frac)),
             ("gop", p.gop.to_string()),
@@ -703,13 +734,14 @@ mod tests {
         for key in ServingConfig::knob_keys() {
             let mut c = ServingConfig::default();
             let value = match *key {
-                "steal" | "launch" | "quarantine" => "true",
+                "steal" | "launch" | "quarantine" | "kv_compress" => "true",
                 "stride_frac" => "0.5",
                 "mv_threshold" | "alpha" => "0.25",
                 "backend" => "hetero",
                 "route" => "codec",
                 "quant_ratio" => "0.5",
                 "fault" => "rate:0.5",
+                "compress_penalty_cap" => "0.5",
                 _ => "2",
             };
             assert!(c.set(key, value), "knob_keys lists `{key}` but set() rejects it");
@@ -742,6 +774,8 @@ mod tests {
             let mut c = ServingConfig::default();
             let value = match *key {
                 "steal" | "launch" | "quarantine" => "false",
+                // kv_compress defaults to off: flip it on to be visible.
+                "kv_compress" => "true",
                 "stride_frac" => "0.35",
                 "mv_threshold" => "0.75",
                 "alpha" => "0.9",
@@ -750,6 +784,7 @@ mod tests {
                 "quant_ratio" => "0.77",
                 "batch_slack" => "3.5",
                 "fault" => "rate:0.5",
+                "compress_penalty_cap" => "0.4",
                 _ => "7",
             };
             assert!(c.set(key, value), "knob `{key}` must parse");
@@ -823,6 +858,35 @@ mod tests {
             assert!(!c.set("fault", bad), "malformed spec {bad:?} must be rejected");
             assert_eq!(c.fault, "", "rejected spec leaves the knob untouched");
         }
+    }
+
+    #[test]
+    fn compression_knobs_parse_and_reject_out_of_range_values() {
+        let mut c = ServingConfig::default();
+        assert!(!c.kv_compress, "compression off by default");
+        assert_eq!(c.compress_after, 2);
+        assert!((c.compress_penalty_cap - 0.05).abs() < 1e-12);
+
+        assert!(c.set("kv_compress", "1"));
+        assert!(c.kv_compress);
+        assert!(c.set("kv_compress", "off"));
+        assert!(!c.kv_compress);
+        assert!(!c.set("kv_compress", "maybe"), "unrecognized flag rejected");
+
+        assert!(c.set("compress_after", "5"));
+        assert_eq!(c.compress_after, 5);
+        assert!(c.set("compress_after", "64"), "cap itself accepted");
+        assert!(!c.set("compress_after", "65"), "above the cap rejected");
+        assert_eq!(c.compress_after, 64, "rejected value leaves the knob untouched");
+        assert!(!c.set("compress_after", "soon"), "non-numeric rejected");
+
+        assert!(c.set("compress_penalty_cap", "0.3"));
+        assert!((c.compress_penalty_cap - 0.3).abs() < 1e-12);
+        assert!(c.set("compress_penalty_cap", "1"), "bound itself accepted");
+        assert!(!c.set("compress_penalty_cap", "1.5"), "above 1 rejected");
+        assert!(!c.set("compress_penalty_cap", "-0.1"), "negative rejected");
+        assert!(!c.set("compress_penalty_cap", "inf"), "non-finite rejected");
+        assert!((c.compress_penalty_cap - 1.0).abs() < 1e-12);
     }
 
     #[test]

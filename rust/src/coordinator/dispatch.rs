@@ -43,7 +43,7 @@ use crate::runtime::replica::{backend_kinds, Backend, BackendKind, ExecutorFacto
 use crate::util;
 use crate::util::threadpool::ThreadPool;
 
-use super::metrics::{merge_backend_stats, BackendStats, FaultStats, Metrics, PhaseTimes};
+use super::metrics::{merge_backend_stats, BackendStats, FaultStats, KvStats, Metrics, PhaseTimes};
 use super::shard::{assign_shard, Shard, ShardReport, StealPool, StreamWork};
 
 /// One warning per process for the launch=1/pipeline=0 no-op (see
@@ -118,6 +118,15 @@ pub struct ShardedReport {
     /// owed by lost streams are folded into `failed_windows`, so
     /// [`FaultStats::availability`] also reflects whole-shard loss.
     pub faults: FaultStats,
+    /// KV footprint + cross-window compression accounting merged
+    /// across shards. The footprint denominator (`settled_*`) is
+    /// recorded on every run; the compression counters are zero with
+    /// `kv_compress=0`. Drives the `kv:` report line.
+    pub kv: KvStats,
+    /// The run's global KV pool budget (`kv_budget_bytes=`, split
+    /// evenly across shards) — the denominator of the report's
+    /// `sustainable_kv` capacity figure.
+    pub kv_budget_bytes: usize,
 }
 
 impl ShardedReport {
@@ -185,6 +194,24 @@ impl ShardedReport {
                 self.dead_shards,
                 self.restarts_used,
                 ids.join(",")
+            ));
+        }
+        if self.kv.any_compression() {
+            // Cross-window KV compression: what was merged, what came
+            // back to the pool, the worst accuracy-proxy penalty any
+            // stream accrued, and the capacity headline — streams the
+            // KV budget keeps resident at the observed mean footprint.
+            // Absent when `kv_compress=0`.
+            out.push_str(&format!(
+                "kv: compressed_streams={} events={} merged_tokens={} saved={}B \
+                 mean_resident={:.0}B sustainable_kv={:.1} penalty<={:.4}\n",
+                self.kv.enabled_streams,
+                self.kv.events,
+                self.kv.merged_tokens,
+                self.kv.bytes_saved,
+                self.kv.mean_resident_bytes(),
+                self.kv.sustainable_kv_streams(self.kv_budget_bytes),
+                self.kv.max_penalty
             ));
         }
         if let Some((kd, ke)) = self.stage_workers {
@@ -497,6 +524,7 @@ impl Dispatcher {
         let mut quant_streams: Vec<u64> = Vec::new();
         let mut backends: Vec<BackendStats> = Vec::new();
         let mut faults = FaultStats::default();
+        let mut kv = KvStats::default();
         for r in &shards {
             merged.merge(&r.metrics);
             sustainable += r.metrics.sustainable_streams(stride_s);
@@ -511,6 +539,7 @@ impl Dispatcher {
             quant_streams.extend_from_slice(&r.quant_streams);
             merge_backend_stats(&mut backends, &r.backends);
             faults.merge(&r.faults);
+            kv.merge(&r.kv);
         }
         quant_streams.sort_unstable();
         quant_streams.dedup();
@@ -548,6 +577,8 @@ impl Dispatcher {
             lost_streams,
             restarts_used,
             faults,
+            kv,
+            kv_budget_bytes: self.cfg.kv_budget_bytes,
         }
     }
 }

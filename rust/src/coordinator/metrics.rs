@@ -285,6 +285,72 @@ impl FaultStats {
     }
 }
 
+/// KV footprint + cross-window compression accounting for one shard
+/// (merged across shards into the `ShardedReport`). The footprint
+/// figures (`settled_*`) are recorded on **every** run — with
+/// compression off they measure the raw resident KV per stream-window,
+/// so fig27's `kv_compress=` arms compare against an identical
+/// denominator. The compression counters stay zero with
+/// `kv_compress=0`.
+#[derive(Clone, Debug, Default)]
+pub struct KvStats {
+    /// Streams admitted with compression enabled (`kv_compress=1`).
+    pub enabled_streams: usize,
+    /// Block-merge steps applied (one per stream per level step).
+    pub events: u64,
+    /// Tokens merged away across all streams.
+    pub merged_tokens: u64,
+    /// KV bytes returned to the pool budget by compression.
+    pub bytes_saved: u64,
+    /// Worst cumulative accuracy-proxy penalty any stream accrued
+    /// (bounded by `compress_penalty_cap=` by construction).
+    pub max_penalty: f64,
+    /// Summed resident KV bytes over all settlements (a settlement is
+    /// one served window entering the pool).
+    pub settled_bytes: u64,
+    /// Settlements with a non-empty resident state.
+    pub settled_windows: u64,
+}
+
+impl KvStats {
+    /// Did any stream run with compression enabled? (Gates the `kv:`
+    /// report line.)
+    pub fn any_compression(&self) -> bool {
+        self.enabled_streams > 0
+    }
+
+    /// Mean resident KV bytes per settled stream-window.
+    pub fn mean_resident_bytes(&self) -> f64 {
+        if self.settled_windows == 0 {
+            0.0
+        } else {
+            self.settled_bytes as f64 / self.settled_windows as f64
+        }
+    }
+
+    /// Streams a KV budget can keep resident at the observed mean
+    /// footprint — fig27's "sustainable streams per KV-GB" axis.
+    pub fn sustainable_kv_streams(&self, budget_bytes: usize) -> f64 {
+        let mean = self.mean_resident_bytes();
+        if mean <= 0.0 {
+            0.0
+        } else {
+            budget_bytes as f64 / mean
+        }
+    }
+
+    /// Fold another shard's KV accounting into this one.
+    pub fn merge(&mut self, other: &KvStats) {
+        self.enabled_streams += other.enabled_streams;
+        self.events += other.events;
+        self.merged_tokens += other.merged_tokens;
+        self.bytes_saved += other.bytes_saved;
+        self.max_penalty = self.max_penalty.max(other.max_penalty);
+        self.settled_bytes += other.settled_bytes;
+        self.settled_windows += other.settled_windows;
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     /// Per-window end-to-end latency (stage sum), seconds.
@@ -304,6 +370,12 @@ pub struct Metrics {
     pub flops_padded: u64,
     /// Total tokens through LLM prefill.
     pub seq_tokens: usize,
+    /// Streams admitted whose variant reuses cross-window KV
+    /// (`KvcMode::Reuse`). Gates the `ovh_kvc=` column of the stage
+    /// report: recompute-only runs have no KV-refresh machinery, so
+    /// printing a zero there misread as "measured, free" — suppress
+    /// the column instead.
+    pub reuse_streams: usize,
 }
 
 impl Metrics {
@@ -367,6 +439,7 @@ impl Metrics {
         self.flops += other.flops;
         self.flops_padded += other.flops_padded;
         self.seq_tokens += other.seq_tokens;
+        self.reuse_streams += other.reuse_streams;
     }
 
     pub fn windows(&self) -> usize {
@@ -407,16 +480,21 @@ impl Metrics {
         let st = &self.stages;
         out.push_str(&format!(
             "stage totals: trans={:.3}s dec={:.3}s pre={:.3}s vit={:.3}s \
-             prefill={:.3}s decode={:.3}s ovh_prune={:.3}s ovh_kvc={:.3}s\n",
+             prefill={:.3}s decode={:.3}s ovh_prune={:.3}s",
             st.transmit,
             st.decode,
             st.preprocess,
             st.vit,
             st.llm_prefill,
             st.llm_decode,
-            st.overhead_prune,
-            st.overhead_kvc
+            st.overhead_prune
         ));
+        // ovh_kvc only exists when some stream actually ran the
+        // KV-refresh path; recompute-only runs suppress the column.
+        if self.reuse_streams > 0 {
+            out.push_str(&format!(" ovh_kvc={:.3}s", st.overhead_kvc));
+        }
+        out.push('\n');
         out.push_str(&format!(
             "flops useful={:.2}G padded={:.2}G tokens={}\n",
             self.flops as f64 / 1e9,
@@ -628,6 +706,66 @@ mod tests {
         assert_eq!(f.quarantined[&7], "injected permanent fault");
         assert_eq!(f.quarantined[&9], "decode fault");
         assert_eq!(f.released_bytes, 4096);
+    }
+
+    #[test]
+    fn report_prints_ovh_kvc_only_for_reuse_runs() {
+        let mut m = Metrics::default();
+        let t = StageTimes { overhead_kvc: 0.25, ..Default::default() };
+        m.record_window(1, &t, 0.0, 0, 0, 0);
+        // No stream ran the KV-refresh path: the column is absent even
+        // though the accumulator field exists (Recompute variants).
+        let text = m.report("recompute");
+        assert!(text.contains("ovh_prune="), "stage totals line still present");
+        assert!(!text.contains("ovh_kvc"), "suppressed without reuse streams:\n{text}");
+        // One reuse stream admitted: the column comes back.
+        m.reuse_streams = 1;
+        assert!(m.report("reuse").contains("ovh_kvc=0.250s"));
+        // And merge carries the gate across shards.
+        let mut agg = Metrics::default();
+        agg.merge(&m);
+        assert_eq!(agg.reuse_streams, 1);
+        assert!(agg.report("merged").contains("ovh_kvc="));
+    }
+
+    #[test]
+    fn kv_stats_merge_and_sustainable_math() {
+        let mut a = KvStats {
+            enabled_streams: 2,
+            events: 3,
+            merged_tokens: 96,
+            bytes_saved: 4096,
+            max_penalty: 0.02,
+            settled_bytes: 4000,
+            settled_windows: 4,
+        };
+        assert!(a.any_compression());
+        assert!((a.mean_resident_bytes() - 1000.0).abs() < 1e-9);
+        // 10 kB budget / 1 kB mean footprint = 10 resident streams.
+        assert!((a.sustainable_kv_streams(10_000) - 10.0).abs() < 1e-9);
+
+        let b = KvStats {
+            enabled_streams: 1,
+            events: 1,
+            merged_tokens: 32,
+            bytes_saved: 1024,
+            max_penalty: 0.05,
+            settled_bytes: 2000,
+            settled_windows: 4,
+        };
+        a.merge(&b);
+        assert_eq!(a.enabled_streams, 3);
+        assert_eq!(a.events, 4);
+        assert_eq!(a.merged_tokens, 128);
+        assert_eq!(a.bytes_saved, 5120);
+        assert!((a.max_penalty - 0.05).abs() < 1e-12, "max, not sum");
+        assert!((a.mean_resident_bytes() - 750.0).abs() < 1e-9);
+
+        // Degenerate: nothing settled -> no NaN, zero capacity.
+        let empty = KvStats::default();
+        assert!(!empty.any_compression());
+        assert_eq!(empty.mean_resident_bytes(), 0.0);
+        assert_eq!(empty.sustainable_kv_streams(1_000_000), 0.0);
     }
 
     #[test]

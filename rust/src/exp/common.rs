@@ -482,6 +482,14 @@ pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     if let Ok(v) = std::env::var("CF_FAULT") {
         s.set("fault", &v);
     }
+    // Cross-window KV compression (the CI kvc matrix turns it on over
+    // the fault plans above): same validating-parser discipline.
+    if let Ok(v) = std::env::var("CF_KV_COMPRESS") {
+        s.set("kv_compress", &v);
+    }
+    if let Ok(v) = std::env::var("CF_COMPRESS_AFTER") {
+        s.set("compress_after", &v);
+    }
     s
 }
 

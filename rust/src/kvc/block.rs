@@ -101,6 +101,36 @@ impl KvBlock {
         self.gather(&(0..t).collect::<Vec<_>>())
     }
 
+    /// Collapse each group of token indices into one averaged token
+    /// (new block with `t = groups.len()`). The deterministic merge
+    /// primitive behind cross-window KV compression: a 2:1 partition
+    /// halves the token axis, applying it twice yields 4:1. Singleton
+    /// groups copy through unchanged, so `merge_tokens` with an
+    /// all-singleton partition equals [`KvBlock::gather`].
+    pub fn merge_tokens(&self, groups: &[Vec<usize>]) -> KvBlock {
+        let mut out = KvBlock::zeros(self.layers, self.heads, groups.len(), self.head_dim);
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                for (j, grp) in groups.iter().enumerate() {
+                    assert!(!grp.is_empty(), "empty merge group");
+                    let dst = out.offset(l, h, j);
+                    for &i in grp {
+                        debug_assert!(i < self.t);
+                        let src = self.offset(l, h, i);
+                        for d in 0..self.head_dim {
+                            out.data[dst + d] += self.data[src + d];
+                        }
+                    }
+                    let inv = 1.0 / grp.len() as f32;
+                    for d in 0..self.head_dim {
+                        out.data[dst + d] *= inv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
     pub fn bytes(&self) -> usize {
         self.data.len() * 4
     }
@@ -150,6 +180,41 @@ mod tests {
         assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0, 0.0]);
         assert_eq!(p.token_slice(0, 0, 4), &[0.0, 0.0]);
         assert_eq!(p.truncate(3), a);
+    }
+
+    #[test]
+    fn merge_singletons_is_gather() {
+        let b = sample(2, 2, 4, 3);
+        let groups: Vec<Vec<usize>> = vec![vec![2], vec![0], vec![3]];
+        let idx: Vec<usize> = groups.iter().map(|g| g[0]).collect();
+        assert_eq!(b.merge_tokens(&groups), b.gather(&idx));
+    }
+
+    #[test]
+    fn merge_pairs_averages() {
+        let b = sample(1, 2, 4, 2);
+        let m = b.merge_tokens(&[vec![0, 1], vec![2, 3]]);
+        assert_eq!(m.t, 2);
+        for h in 0..2 {
+            for d in 0..2 {
+                let want = (b.token_slice(0, h, 0)[d] + b.token_slice(0, h, 1)[d]) / 2.0;
+                assert_eq!(m.token_slice(0, h, 0)[d], want);
+                let want = (b.token_slice(0, h, 2)[d] + b.token_slice(0, h, 3)[d]) / 2.0;
+                assert_eq!(m.token_slice(0, h, 1)[d], want);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_twice_is_four_to_one() {
+        let b = sample(1, 1, 8, 2);
+        let l1 = b.merge_tokens(&[vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]]);
+        let l2 = l1.merge_tokens(&[vec![0, 1], vec![2, 3]]);
+        assert_eq!(l2.t, 2);
+        let direct = b.merge_tokens(&[vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        for (a, c) in l2.data.iter().zip(&direct.data) {
+            assert!((a - c).abs() < 1e-5, "4:1 via two 2:1 steps diverged");
+        }
     }
 
     #[test]

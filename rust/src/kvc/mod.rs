@@ -9,8 +9,13 @@
 //! * [`refresher`] — the policy: overlap tokens from I-frames are
 //!   anchors (recomputed through the prefill path from their cached
 //!   embeddings, without re-running the ViT), P-frame tokens are
-//!   reused with position correction;
-//! * [`pool`] — cross-session KV memory accounting + LRU eviction.
+//!   reused with position correction; extended to a three-way
+//!   compress-vs-refresh-vs-keep plan — blocks whose codec MV energy
+//!   stays calm across consecutive windows are merged 2:1 then 4:1
+//!   ([`refresher::CompressPolicy`], [`refresher::compress_partition`]);
+//! * [`pool`] — cross-session KV memory accounting + LRU eviction,
+//!   with compression ([`pool::KvPool::shrink`]) as a second release
+//!   path composing with quarantine release.
 //!
 //! Known approximation (shared with CacheBlend-style systems): tokens
 //! recomputed in the "new" block attend to *all* reused entries, even
@@ -27,4 +32,4 @@ pub mod rope;
 
 pub use block::KvBlock;
 pub use records::{TokenKind, TokenRecord, WindowState};
-pub use refresher::{plan_window, ReusePlan, RefreshPolicy};
+pub use refresher::{compress_partition, plan_window, CompressPolicy, ReusePlan, RefreshPolicy};

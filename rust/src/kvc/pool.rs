@@ -82,6 +82,25 @@ impl KvPool {
         }
     }
 
+    /// Shrink `session`'s held bytes in place — the second release
+    /// path: cross-window KV compression returning budget to the pool
+    /// without giving up residency. Unlike [`KvPool::hold`] this does
+    /// not bump the LRU clock (compression is not a use) and can never
+    /// trigger eviction (usage only decreases). No-op when the session
+    /// holds nothing (e.g. already quarantine-released — the paths
+    /// compose) or when `new_bytes` is not smaller. Returns the bytes
+    /// freed.
+    pub fn shrink(&mut self, session: u64, new_bytes: usize) -> usize {
+        match self.held.get_mut(&session) {
+            Some(e) if new_bytes < e.0 => {
+                let freed = e.0 - new_bytes;
+                e.0 = new_bytes;
+                freed
+            }
+            _ => 0,
+        }
+    }
+
     pub fn release(&mut self, session: u64) {
         self.held.remove(&session);
     }
@@ -138,5 +157,86 @@ mod tests {
         p.release(1);
         assert_eq!(p.used_bytes(), 0);
         assert!(p.hold(2, 80).is_empty());
+    }
+
+    #[test]
+    fn shrink_frees_without_touching_lru_order() {
+        let mut p = KvPool::new(100);
+        p.hold(1, 40);
+        p.hold(2, 40);
+        // Compress session 1 (the LRU): frees 20 bytes, but does NOT
+        // count as a touch — 1 must still be the next victim.
+        assert_eq!(p.shrink(1, 20), 20);
+        assert_eq!(p.used_bytes(), 60);
+        let evicted = p.hold(3, 50);
+        assert_eq!(evicted, vec![1]);
+        // Growing or absent sessions are no-ops.
+        assert_eq!(p.shrink(2, 90), 0);
+        assert_eq!(p.shrink(99, 1), 0);
+        assert_eq!(p.used_bytes(), 90);
+    }
+
+    /// Satellite barrage: random admit/settle/quarantine/compress/
+    /// release sequences against a mirror ledger. Invariants after
+    /// every op: pool usage equals the ledger sum (allocated + free ==
+    /// capacity, nothing leaks), session counts agree, and compression
+    /// (shrink) composes with quarantine (release) — shrinking a
+    /// released session must not resurrect it.
+    #[test]
+    fn prop_accounting_under_random_op_sequences() {
+        use crate::util::quick;
+        use std::collections::HashMap;
+        quick::check(0x4B50, 60, |g| {
+            let budget = 50 + g.usize_in(0, 200);
+            let mut p = KvPool::new(budget);
+            let mut ledger: HashMap<u64, usize> = HashMap::new();
+            let n_sessions = g.usize_in(2, 8) as u64;
+            for _ in 0..g.usize_in(10, 60) {
+                let s = g.usize_in(0, n_sessions as usize - 1) as u64;
+                match g.usize_in(0, 4) {
+                    // admit / settle: hold fresh bytes
+                    0 | 1 => {
+                        let bytes = g.usize_in(1, 80);
+                        let evicted = p.hold(s, bytes);
+                        ledger.insert(s, bytes);
+                        for v in evicted {
+                            assert_ne!(v, s, "holder must never be evicted");
+                            assert!(
+                                ledger.remove(&v).is_some(),
+                                "evicted a session the ledger did not hold"
+                            );
+                        }
+                    }
+                    // compress: shrink to a smaller footprint
+                    2 => {
+                        let new_bytes = g.usize_in(0, 40);
+                        let freed = p.shrink(s, new_bytes);
+                        match ledger.get_mut(&s) {
+                            Some(b) if new_bytes < *b => {
+                                assert_eq!(freed, *b - new_bytes);
+                                *b = new_bytes;
+                            }
+                            _ => assert_eq!(freed, 0),
+                        }
+                    }
+                    // quarantine / stream end: release
+                    3 => {
+                        p.release(s);
+                        ledger.remove(&s);
+                        // compress-after-quarantine must be inert
+                        assert_eq!(p.shrink(s, 0), 0);
+                        assert!(!p.holds(s));
+                    }
+                    // plain LRU touch
+                    _ => p.touch(s),
+                }
+                // No leaks, no phantom frees: pool == ledger.
+                assert_eq!(p.used_bytes(), ledger.values().sum::<usize>());
+                assert_eq!(p.sessions(), ledger.len());
+                for (&s, &b) in &ledger {
+                    assert!(p.holds(s), "session {s} leaked ({b} bytes)");
+                }
+            }
+        });
     }
 }

@@ -39,6 +39,10 @@ pub struct WindowState {
     pub tokens: Vec<TokenRecord>,
     pub k: KvBlock,
     pub v: KvBlock,
+    /// Cross-window compression level applied to this state: 0 = raw,
+    /// 1 = 2:1 visual-token merge, 2 = 4:1. Bumped by
+    /// [`WindowState::merge_partition`].
+    pub compression_level: u8,
 }
 
 impl WindowState {
@@ -50,6 +54,41 @@ impl WindowState {
         self.k.bytes()
             + self.v.bytes()
             + self.tokens.iter().map(|t| t.emb.len() * 4).sum::<usize>()
+    }
+
+    /// Apply one compression step: collapse every multi-token group of
+    /// `partition` (runs of adjacent same-frame visual tokens, see
+    /// [`crate::kvc::refresher::compress_partition`]) into a single
+    /// averaged token — KV rows and cached embeddings alike; singleton
+    /// groups pass through untouched. The surviving record keeps the
+    /// first member's metadata (frame, merge group, position, I-frame
+    /// flag) so refresh planning and RoPE correction keep working on
+    /// the merged block. Returns the number of tokens merged away.
+    pub fn merge_partition(&mut self, partition: &[Vec<usize>]) -> usize {
+        let before = self.tokens.len();
+        self.k = self.k.merge_tokens(partition);
+        self.v = self.v.merge_tokens(partition);
+        let mut tokens = Vec::with_capacity(partition.len());
+        for grp in partition {
+            let mut rec = self.tokens[grp[0]].clone();
+            if grp.len() > 1 && !rec.emb.is_empty() {
+                let mut emb = vec![0.0f32; rec.emb.len()];
+                for &i in grp {
+                    for (e, x) in emb.iter_mut().zip(&self.tokens[i].emb) {
+                        *e += x;
+                    }
+                }
+                let inv = 1.0 / grp.len() as f32;
+                for e in emb.iter_mut() {
+                    *e *= inv;
+                }
+                rec.emb = emb;
+            }
+            tokens.push(rec);
+        }
+        self.tokens = tokens;
+        self.compression_level += 1;
+        before - self.tokens.len()
     }
 
     /// Indices of visual tokens from frames in [lo, hi).
@@ -100,9 +139,50 @@ mod tests {
             ],
             k: KvBlock::zeros(1, 1, 4, 2),
             v: KvBlock::zeros(1, 1, 4, 2),
+            compression_level: 0,
         };
         assert_eq!(ws.visual_in_range(1, 3), vec![1, 2]);
         assert_eq!(ws.visual_in_range(0, 4).len(), 3);
         assert!(ws.bytes() > 0);
+    }
+
+    #[test]
+    fn merge_partition_halves_and_keeps_metadata() {
+        // Two visual tokens on frame 0, one on frame 1, one text token.
+        let mut ws = WindowState {
+            start_frame: 0,
+            end_frame: 2,
+            tokens: vec![
+                tok(0, 0, true),
+                tok(0, 1, true),
+                tok(1, 2, false),
+                TokenRecord {
+                    kind: TokenKind::Text,
+                    frame: 0,
+                    group: 0,
+                    pos: 3,
+                    is_iframe: false,
+                    emb: vec![],
+                },
+            ],
+            k: KvBlock::from_data(1, 1, 4, 2, (0..8).map(|i| i as f32).collect()),
+            v: KvBlock::zeros(1, 1, 4, 2),
+            compression_level: 0,
+        };
+        let bytes_before = ws.bytes();
+        let merged = ws.merge_partition(&[vec![0, 1], vec![2], vec![3]]);
+        assert_eq!(merged, 1);
+        assert_eq!(ws.compression_level, 1);
+        assert_eq!(ws.seq_len(), 3);
+        // Merged record keeps the first member's metadata.
+        assert_eq!(ws.tokens[0].frame, 0);
+        assert_eq!(ws.tokens[0].pos, 0);
+        assert!(ws.tokens[0].is_iframe);
+        // KV row is the mean of the two source rows.
+        assert_eq!(ws.k.token_slice(0, 0, 0), &[1.0, 2.0]);
+        // Pass-through rows unchanged; footprint shrank.
+        assert_eq!(ws.k.token_slice(0, 0, 1), &[4.0, 5.0]);
+        assert!(ws.bytes() < bytes_before);
+        assert_eq!(ws.visual_in_range(0, 2).len(), 2);
     }
 }

@@ -108,6 +108,59 @@ pub fn text_tokens(ws: &WindowState) -> usize {
     ws.tokens.iter().filter(|t| t.kind == TokenKind::Text).count()
 }
 
+/// Cross-window compression policy — the third arm of the per-block
+/// decision. Together with [`plan_window`] the planner is three-way:
+/// overlap tokens are *refreshed* (policy above), *kept* as-is, or —
+/// when the stream's codec MV energy has stayed below threshold for
+/// `after` consecutive windows — *compressed*: the retained
+/// [`WindowState`] is merged 2:1 (level 1), and 4:1 after `2*after`
+/// calm windows (level 2), up to `max_level`.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressPolicy {
+    /// Calm windows required per compression level (0 disables).
+    pub after: usize,
+    /// Deepest level: 1 = 2:1, 2 = 4:1.
+    pub max_level: u8,
+}
+
+impl CompressPolicy {
+    /// Target compression level after `calm_windows` consecutive
+    /// below-threshold windows.
+    pub fn level_for(&self, calm_windows: usize) -> u8 {
+        if self.after == 0 {
+            return 0;
+        }
+        (calm_windows / self.after).min(self.max_level as usize) as u8
+    }
+}
+
+/// Plan one 2:1 compression step for a retained window state: a
+/// partition of all token indices, in storage order, where runs of
+/// adjacent same-frame visual tokens pair up; text tokens and odd
+/// leftovers stay singleton. Feeding the partition to
+/// [`WindowState::merge_partition`] halves (rounding up, per frame)
+/// the visual token count; applying the next step's partition on the
+/// result reaches 4:1.
+pub fn compress_partition(state: &WindowState) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    let n = state.tokens.len();
+    let mut i = 0;
+    while i < n {
+        let a = &state.tokens[i];
+        if a.kind == TokenKind::Visual && i + 1 < n {
+            let b = &state.tokens[i + 1];
+            if b.kind == TokenKind::Visual && b.frame == a.frame {
+                out.push(vec![i, i + 1]);
+                i += 2;
+                continue;
+            }
+        }
+        out.push(vec![i]);
+        i += 1;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +202,7 @@ mod tests {
             tokens,
             k: KvBlock::zeros(1, 1, t, 2),
             v: KvBlock::zeros(1, 1, t, 2),
+            compression_level: 0,
         }
     }
 
@@ -211,5 +265,111 @@ mod tests {
         for w in plan.reuse_idx.windows(2) {
             assert!(w[0] < w[1]);
         }
+    }
+
+    // ---- degenerate inputs -----------------------------------------
+
+    /// Empty window: zero-width new window, and a prev with no tokens.
+    #[test]
+    fn empty_window_yields_empty_plan() {
+        let prev = prev_state();
+        let plan = plan_window(&prev, 6, 6, &RefreshPolicy::Anchors);
+        assert!(plan.reuse_idx.is_empty() && plan.refresh_idx.is_empty());
+        assert_eq!(plan.fresh_frames, (6, 6));
+
+        let empty = WindowState {
+            start_frame: 0,
+            end_frame: 0,
+            tokens: vec![],
+            k: KvBlock::zeros(1, 1, 0, 2),
+            v: KvBlock::zeros(1, 1, 0, 2),
+            compression_level: 0,
+        };
+        let plan = plan_window(&empty, 0, 4, &RefreshPolicy::Anchors);
+        assert!(plan.reuse_idx.is_empty() && plan.refresh_idx.is_empty());
+        assert_eq!(plan.fresh_frames, (0, 4));
+        assert!(compress_partition(&empty).is_empty());
+    }
+
+    /// All-I-frame GOP: every overlap token is an anchor, so the
+    /// Anchors policy refreshes everything — nothing is reused.
+    #[test]
+    fn all_iframe_gop_refreshes_everything() {
+        let mut prev = prev_state();
+        for t in prev.tokens.iter_mut() {
+            if t.kind == TokenKind::Visual {
+                t.is_iframe = true;
+            }
+        }
+        let plan = plan_window(&prev, 2, 8, &RefreshPolicy::Anchors);
+        assert_eq!(plan.reuse_idx.len(), 0);
+        assert_eq!(plan.refresh_idx.len(), 8);
+    }
+
+    /// Zero-MV stream: every visual token is compress-eligible — the
+    /// level ramps with consecutive calm windows and one partition
+    /// step pairs every same-frame visual run (text stays singleton).
+    #[test]
+    fn zero_mv_stream_compresses_everything() {
+        let pol = CompressPolicy { after: 2, max_level: 2 };
+        assert_eq!(pol.level_for(0), 0);
+        assert_eq!(pol.level_for(1), 0);
+        assert_eq!(pol.level_for(2), 1);
+        assert_eq!(pol.level_for(3), 1);
+        assert_eq!(pol.level_for(4), 2);
+        assert_eq!(pol.level_for(100), 2, "level is capped at max_level");
+
+        let mut prev = prev_state(); // 2 visual tokens per frame + 2 text
+        let part = compress_partition(&prev);
+        // 6 frames * 1 pair + 2 text singletons
+        assert_eq!(part.len(), 8);
+        assert_eq!(part.iter().filter(|g| g.len() == 2).count(), 6);
+        let merged = prev.merge_partition(&part);
+        assert_eq!(merged, 6);
+        assert_eq!(prev.compression_level, 1);
+        assert_eq!(text_tokens(&prev), 2);
+        // Level 2: one visual token per frame left, nothing pairs
+        // within a frame — 2:1 per level bottoms out at one per frame.
+        let part2 = compress_partition(&prev);
+        assert!(part2.iter().all(|g| g.len() == 1));
+    }
+
+    /// Disabled policy (after = 0) never compresses.
+    #[test]
+    fn disabled_policy_never_compresses() {
+        let pol = CompressPolicy { after: 0, max_level: 2 };
+        for calm in 0..50 {
+            assert_eq!(pol.level_for(calm), 0);
+        }
+    }
+
+    /// One-block budget: a single visual token per frame — plan_window
+    /// still classifies it, and compression keeps it (never merges a
+    /// block below one token).
+    #[test]
+    fn one_block_budget_is_kept_not_merged() {
+        let one = WindowState {
+            start_frame: 0,
+            end_frame: 1,
+            tokens: vec![TokenRecord {
+                kind: TokenKind::Visual,
+                frame: 0,
+                group: 0,
+                pos: 0,
+                is_iframe: false,
+                emb: vec![1.0, 2.0],
+            }],
+            k: KvBlock::zeros(1, 1, 1, 2),
+            v: KvBlock::zeros(1, 1, 1, 2),
+            compression_level: 0,
+        };
+        let plan = plan_window(&one, 0, 2, &RefreshPolicy::Anchors);
+        assert_eq!(plan.reuse_idx, vec![0]);
+        assert!(plan.refresh_idx.is_empty());
+        let part = compress_partition(&one);
+        assert_eq!(part, vec![vec![0]]);
+        let mut state = one.clone();
+        assert_eq!(state.merge_partition(&part), 0);
+        assert_eq!(state.seq_len(), 1);
     }
 }

@@ -43,11 +43,12 @@
 //!   [`exp::fig22_pipeline`] (pipelined shard execution),
 //!   [`exp::fig23_wallclock`] (launch-thread wall-clock overlap),
 //!   [`exp::fig24_hetero`] (heterogeneous backends with codec-guided
-//!   routing), [`exp::fig25_stages`] (disaggregated stage pools) and
+//!   routing), [`exp::fig25_stages`] (disaggregated stage pools),
 //!   [`exp::fig26_faults`] (availability under seeded fault
-//!   injection), beyond the paper.
+//!   injection) and [`exp::fig27_kvcompress`] (cross-window KV
+//!   compression capacity), beyond the paper.
 //! * [`bench`] — continuous benchmarking: schema-versioned
-//!   `BENCH_<fig>.json` records emitted by the fig20–fig26 runners,
+//!   `BENCH_<fig>.json` records emitted by the fig20–fig27 runners,
 //!   the `codecflow bench run` small-config trajectory with its
 //!   knob-covering result cache, and the `codecflow bench compare`
 //!   regression gate CI runs against the committed `baselines/`.

@@ -5,7 +5,7 @@
 //!                   [workers=N] [shards=N] [streams=N] [key=value ...]
 //! codecflow exp     <table1|table2|fig2|fig3|fig5|fig6|fig11|fig12|fig13|
 //!                    fig14|fig15|fig16|fig17|fig18|fig19|fig20|fig21|
-//!                    fig22|fig23|fig24|fig25|fig26|all>
+//!                    fig22|fig23|fig24|fig25|fig26|fig27|all>
 //! codecflow bench   <run|compare|list>   # continuous benchmarking
 //! codecflow models              # list models + artifacts
 //! codecflow help
@@ -29,7 +29,7 @@
 //! `retries=` / `restarts=` shrink the fault domain to the stream and
 //! supervise dead shards, with `fault=` arming seeded deterministic
 //! fault injection. The full knob reference — defaults, env vars,
-//! interactions, which fig20–fig26 sweep measures each — is
+//! interactions, which fig20–fig27 sweep measures each — is
 //! `docs/OPERATIONS.md`.
 
 use std::sync::Arc;
@@ -192,13 +192,16 @@ fn experiment(args: &[String]) {
         "fig26" => {
             exp::fig26_faults::run();
         }
+        "fig27" => {
+            exp::fig27_kvcompress::run();
+        }
         other => eprintln!("unknown experiment {other}"),
     };
     if which == "all" {
         for name in [
             "table1", "table2", "fig2", "fig3", "fig5", "fig6", "fig11", "fig12",
             "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-            "fig21", "fig22", "fig23", "fig24", "fig25", "fig26",
+            "fig21", "fig22", "fig23", "fig24", "fig25", "fig26", "fig27",
         ] {
             println!("\n===== {name} =====");
             run_one(name);
@@ -239,7 +242,7 @@ fn help() {
          \n\
          USAGE:\n\
          \x20 codecflow serve  [--model M] [--variant V] [--frames N] [key=value...]\n\
-         \x20 codecflow exp    <table1|table2|fig2..fig26|all>\n\
+         \x20 codecflow exp    <table1|table2|fig2..fig27|all>\n\
          \x20 codecflow bench  run [--figs F,..] [--no-cache] [--update-baselines]\n\
          \x20 codecflow bench  compare <baseline> <current> [--threshold PCT]\n\
          \x20 codecflow bench  list\n\

@@ -15,10 +15,10 @@
 //! token i of `WindowState.{k,v}`, and tokens are stored in ascending
 //! sequence-position order (visual by (frame, group), then text).
 
-use crate::codec::types::{Frame, FrameType};
+use crate::codec::types::{Frame, FrameMeta, FrameType};
 use crate::kvc::block::KvBlock;
 use crate::kvc::records::{TokenKind, TokenRecord, WindowState};
-use crate::kvc::refresher::{plan_window, RefreshPolicy};
+use crate::kvc::refresher::{compress_partition, plan_window, CompressPolicy, RefreshPolicy};
 use crate::kvc::rope;
 use crate::model::prompt::Prompt;
 use crate::runtime::batch::{BatchOutcome, BatchRequest};
@@ -91,6 +91,36 @@ impl VariantOpts {
             decode_tokens: 2,
         }
     }
+}
+
+/// Cross-window KV compression configuration (serving knobs
+/// `kv_compress=` / `compress_after=` / `compress_penalty_cap=`,
+/// threaded by the shard at admit time). Strictly opt-in: an engine
+/// without it set is bit-identical to the pre-compression path.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressionCfg {
+    /// Calm-window schedule (see [`CompressPolicy`]).
+    pub policy: CompressPolicy,
+    /// Ceiling on the cumulative per-stream accuracy-proxy penalty;
+    /// surfaced like `quant_penalty` in serving reports.
+    pub penalty_cap: f64,
+    /// A window is *calm* when every frame's mean codec MV magnitude
+    /// stays below this (the pipeline's `mv_threshold` by default).
+    pub calm_threshold: f32,
+}
+
+/// Cumulative compression activity of one engine (stream).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompressStats {
+    /// Merge steps applied (one per level transition).
+    pub events: u64,
+    /// Tokens merged away across all steps.
+    pub merged_tokens: u64,
+    /// KV + embedding bytes returned to the pool.
+    pub bytes_saved: u64,
+    /// Accuracy-proxy penalty, clamped to `penalty_cap` — the analog
+    /// of a lossy backend's `quant_penalty` for lossy KV retention.
+    pub penalty: f64,
 }
 
 /// Per-stage seconds for one window.
@@ -374,6 +404,16 @@ pub struct WindowEngine<'a> {
     text_emb: Option<Vec<Vec<f32>>>,
     /// Change scores per (frame, group) for CacheBlend selection.
     change_scores: std::collections::HashMap<(usize, usize), f32>,
+    /// Cross-window KV compression (None = disabled, bit-identical to
+    /// the pre-compression path).
+    compression: Option<CompressionCfg>,
+    /// Mean codec MV magnitude per absolute frame (parallel to
+    /// `selections`; only maintained while compression is enabled).
+    mv_energy: Vec<f32>,
+    /// Consecutive windows whose every frame stayed below the calm
+    /// threshold.
+    calm_windows: usize,
+    compress_stats: CompressStats,
 }
 
 impl<'a> WindowEngine<'a> {
@@ -396,6 +436,10 @@ impl<'a> WindowEngine<'a> {
             dv_prev_tokens: Vec::new(),
             text_emb: None,
             change_scores: std::collections::HashMap::new(),
+            compression: None,
+            mv_energy: Vec::new(),
+            calm_windows: 0,
+            compress_stats: CompressStats::default(),
         }
     }
 
@@ -406,6 +450,18 @@ impl<'a> WindowEngine<'a> {
         self.dv_prev_frame = None;
         self.dv_prev_tokens.clear();
         self.change_scores.clear();
+        self.mv_energy.clear();
+        self.calm_windows = 0;
+    }
+
+    /// Enable cross-window KV compression (serving layer, at admit).
+    pub fn set_compression(&mut self, cfg: CompressionCfg) {
+        self.compression = Some(cfg);
+    }
+
+    /// Cumulative compression activity of this stream.
+    pub fn compress_stats(&self) -> CompressStats {
+        self.compress_stats
     }
 
     /// Ensure pruning selections exist for frames [0, upto) given the
@@ -418,6 +474,12 @@ impl<'a> WindowEngine<'a> {
                 continue;
             }
             debug_assert_eq!(abs, self.selections.len(), "frames out of order");
+            if let Some(c) = self.compression {
+                // Codec-guided calm signal: masked mean MV magnitude,
+                // free at decode time (a byproduct of parsing the
+                // bitstream).
+                self.mv_energy.push(frame_mv_energy(meta, c.calm_threshold));
+            }
             let sel = if self.opts.prune.is_some() {
                 let mask = self.analyzer.analyze(&self.layout, meta);
                 self.pruner.select(&mask)
@@ -781,10 +843,12 @@ impl<'a> WindowEngine<'a> {
                 }
 
                 let visual_count = visual.len();
-                let state = WindowState { start_frame: start, end_frame: end, tokens, k, v };
+                let state =
+                    WindowState { start_frame: start, end_frame: end, tokens, k, v, compression_level: 0 };
                 let decoded_ids =
                     self.decode_answer(&state, &logits, &mut times, &mut flops, &mut flops_padded);
                 self.prev = Some(state);
+                self.maybe_compress(start, end, &mut times);
 
                 WindowResult {
                     start,
@@ -877,11 +941,18 @@ impl<'a> WindowEngine<'a> {
 
                 let visual_count = t_total - text_len;
                 let fresh_count = fresh.len();
-                let state =
-                    WindowState { start_frame: start, end_frame: end, tokens, k: k_seq, v: v_seq };
+                let state = WindowState {
+                    start_frame: start,
+                    end_frame: end,
+                    tokens,
+                    k: k_seq,
+                    v: v_seq,
+                    compression_level: 0,
+                };
                 let decoded_ids =
                     self.decode_answer(&state, &logits, &mut times, &mut flops, &mut flops_padded);
                 self.prev = Some(state);
+                self.maybe_compress(start, end, &mut times);
 
                 WindowResult {
                     start,
@@ -1303,6 +1374,60 @@ impl<'a> WindowEngine<'a> {
         ids
     }
 
+    /// Cross-window compression step, run right after the window's
+    /// state is retained: update the calm-window streak from the
+    /// window's codec MV energy and, once the streak crosses the
+    /// `compress_after` schedule, merge the retained KV 2:1 per level
+    /// (4:1 total at level 2). Planning + merge cost is charged to
+    /// `overhead_kvc`; the accuracy-proxy penalty accumulates like a
+    /// lossy backend's `quant_penalty`, clamped to the configured cap.
+    fn maybe_compress(&mut self, start: usize, end: usize, times: &mut StageTimes) {
+        /// Penalty charged per compression level, scaled by the
+        /// fraction of the sequence merged away in the step.
+        const PENALTY_PER_LEVEL: f64 = 0.02;
+        let Some(cfg) = self.compression else { return };
+        let t0 = util::now();
+        let lo = start.min(self.mv_energy.len());
+        let hi = end.min(self.mv_energy.len());
+        // Calm = the window's *mean* per-frame MV energy under the
+        // threshold. Integer motion search makes per-frame energy
+        // spiky (a slow object crossing a pixel boundary lights a few
+        // macroblocks for one frame), so an every-frame test would
+        // reset the streak on genuinely low-motion streams; the mean
+        // rides over the spikes while high-motion windows still clear
+        // the bar.
+        let span = &self.mv_energy[lo..hi];
+        let calm = !span.is_empty()
+            && span.iter().sum::<f32>() / span.len() as f32 < cfg.calm_threshold;
+        if calm {
+            self.calm_windows += 1;
+        } else {
+            self.calm_windows = 0;
+        }
+        let target = cfg.policy.level_for(self.calm_windows);
+        if let Some(state) = self.prev.as_mut() {
+            // The level bumps every pass, so the loop terminates even
+            // when a step bottoms out (one visual token per frame
+            // left: nothing pairs, zero tokens merge).
+            while state.compression_level < target {
+                let bytes_before = state.bytes();
+                let tokens_before = state.seq_len();
+                let partition = compress_partition(state);
+                let merged = state.merge_partition(&partition);
+                if merged > 0 {
+                    self.compress_stats.events += 1;
+                    self.compress_stats.merged_tokens += merged as u64;
+                    self.compress_stats.bytes_saved += (bytes_before - state.bytes()) as u64;
+                    let frac = merged as f64 / tokens_before as f64;
+                    let step = PENALTY_PER_LEVEL * state.compression_level as f64 * frac;
+                    self.compress_stats.penalty =
+                        (self.compress_stats.penalty + step).min(cfg.penalty_cap);
+                }
+            }
+        }
+        times.overhead_kvc += util::now() - t0;
+    }
+
     pub fn prev_state(&self) -> Option<&WindowState> {
         self.prev.as_ref()
     }
@@ -1321,6 +1446,31 @@ fn argmax(xs: &[f32]) -> usize {
         }
     }
     best
+}
+
+/// Codec MV energy of one frame: mean macroblock MV magnitude with
+/// sub-threshold magnitudes masked to zero — the same static-block
+/// test the pruner applies per patch (eq. 1), aggregated per frame.
+/// The mask matters: quarter-pel refinement on sensor noise parks
+/// static-background MVs at ±0.25 px, and without it a perfectly calm
+/// scene would read as uniform low-grade motion. I-frames (empty MV
+/// list — intra frames carry no motion signal) are 0.
+fn frame_mv_energy(meta: &FrameMeta, tau: f32) -> f32 {
+    if meta.mvs.is_empty() {
+        return 0.0;
+    }
+    meta.mvs
+        .iter()
+        .map(|m| {
+            let mag = m.magnitude();
+            if mag > tau {
+                mag
+            } else {
+                0.0
+            }
+        })
+        .sum::<f32>()
+        / meta.mvs.len() as f32
 }
 
 /// Mean absolute pixel difference over one merge group's region.
@@ -1404,6 +1554,40 @@ mod tests {
                 "(frame, group) ordering"
             );
         }
+    }
+
+    #[test]
+    fn compression_shrinks_retained_kv_and_next_window_reuse() {
+        let mock = MockEngine::new("m");
+        let all = test_frames(28);
+        let mut base = WindowEngine::new(&mock, "m", VariantOpts::codecflow(0.25, 0.0));
+        let b1 = base.process_window(&all[0..20], 0, StageTimes::default());
+        let base_bytes = base.prev_state().unwrap().bytes();
+        let b2 = base.process_window(&all[4..24], 4, StageTimes::default());
+
+        let mut eng = WindowEngine::new(&mock, "m", VariantOpts::codecflow(0.25, 0.0));
+        eng.set_compression(CompressionCfg {
+            policy: CompressPolicy { after: 1, max_level: 1 },
+            penalty_cap: 0.05,
+            calm_threshold: f32::MAX, // every window calm: mechanics under test
+        });
+        let c1 = eng.process_window(&all[0..20], 0, StageTimes::default());
+        assert_eq!(c1.logits, b1.logits, "compression acts only after the window completes");
+        let st = eng.prev_state().unwrap();
+        assert_eq!(st.compression_level, 1);
+        assert!(st.bytes() < base_bytes, "retained KV must shrink");
+
+        let c2 = eng.process_window(&all[4..24], 4, StageTimes::default());
+        assert!(c2.reused_tokens > 0, "compressed overlap is still reusable");
+        assert!(
+            c2.reused_tokens < b2.reused_tokens,
+            "merged blocks mean fewer reused tokens ({} vs {})",
+            c2.reused_tokens,
+            b2.reused_tokens
+        );
+        let stats = eng.compress_stats();
+        assert!(stats.events >= 1 && stats.merged_tokens > 0 && stats.bytes_saved > 0);
+        assert!(stats.penalty > 0.0 && stats.penalty <= 0.05, "penalty bounded by the cap");
     }
 
     #[test]

@@ -770,6 +770,13 @@ fn fault_cfg(shards: usize, depth: usize, spec: &str) -> ServingConfig {
     cfg.batch_bucket = 10_000;
     cfg.pipeline_depth = depth;
     cfg.steal = false;
+    // CI's kvc matrix re-runs the fault barrage with compression armed
+    // (CF_KV_COMPRESS=1): every digest invariant below compares runs
+    // built from this same config, so they must keep holding with
+    // merging active on both sides of each comparison.
+    if let Ok(v) = std::env::var("CF_KV_COMPRESS") {
+        assert!(cfg.set("kv_compress", &v), "CF_KV_COMPRESS {v:?} must parse");
+    }
     assert!(cfg.set("fault", spec), "spec {spec:?} must parse");
     cfg
 }
@@ -969,4 +976,168 @@ fn backend_pool_faults_are_contained_per_stream_on_the_routed_lane() {
     let spared = run("streams:0+5,kind:permanent,nth:1,backend:quant");
     assert!(spared.faults.quarantined.is_empty(), "quant lane never saw the streams");
     assert_eq!(spared.result_digest, clean.result_digest);
+}
+
+/// A corpus at an explicit seed: the kv_compress sweep runs the same
+/// contract at several seeds so the bit-identity claim is not an
+/// artifact of the default trace.
+fn clips_seeded(n: usize, seed: u64) -> Vec<Arc<Vec<Frame>>> {
+    Corpus::generate(CorpusConfig {
+        videos: n,
+        frames_per_video: 28,
+        seed,
+        ..Default::default()
+    })
+    .clips
+    .into_iter()
+    .map(|c| Arc::new(c.frames))
+    .collect()
+}
+
+/// The serving shape the compression sweep runs under; `compress`
+/// arms the knobs through the CLI surface (`ServingConfig::set`), so
+/// the sweep covers the plumbing too. `steal=false` pins placement.
+fn kv_cfg(depth: usize, compress: bool) -> ServingConfig {
+    let mut cfg = sharded_cfg(2);
+    cfg.max_batch = 4;
+    cfg.admit_wave = 8;
+    cfg.batch_bucket = 10_000;
+    cfg.pipeline_depth = depth;
+    cfg.steal = false;
+    assert!(cfg.set("kv_compress", if compress { "1" } else { "0" }));
+    assert!(cfg.set("compress_after", "1"));
+    cfg
+}
+
+#[test]
+fn kv_compress_off_is_bit_identical_across_seeds_and_depths() {
+    // The tentpole's digest gate, swept: at seeds {1, 7, 42} and
+    // pipeline depths {0, 2}, a run with `kv_compress=0` set
+    // explicitly must be bit-identical to a baseline whose config
+    // never touches the compression knobs at all — result digest,
+    // per-stream digests and served window sets.
+    for seed in [1u64, 7, 42] {
+        let clips = clips_seeded(8, seed);
+        for depth in [0usize, 2] {
+            let baseline_cfg = {
+                let mut cfg = sharded_cfg(2);
+                cfg.max_batch = 4;
+                cfg.admit_wave = 8;
+                cfg.batch_bucket = 10_000;
+                cfg.pipeline_depth = depth;
+                cfg.steal = false;
+                cfg
+            };
+            let baseline = Dispatcher::new("m", baseline_cfg).run(
+                mock_factory(),
+                &clips,
+                Variant::CodecFlow,
+                2.0,
+            );
+            assert!(baseline.result_digest != 0, "seed {seed} depth {depth}");
+            let off_a = Dispatcher::new("m", kv_cfg(depth, false)).run(
+                mock_factory(),
+                &clips,
+                Variant::CodecFlow,
+                2.0,
+            );
+            let off_b = Dispatcher::new("m", kv_cfg(depth, false)).run(
+                mock_factory(),
+                &clips,
+                Variant::CodecFlow,
+                2.0,
+            );
+            assert_eq!(
+                off_a.result_digest, baseline.result_digest,
+                "seed {seed} depth {depth}: kv_compress=0 must match the untouched path"
+            );
+            assert_eq!(off_a.stream_digests, baseline.stream_digests, "seed {seed} depth {depth}");
+            assert_eq!(off_a.merged.per_stream, baseline.merged.per_stream);
+            assert_eq!(off_a.result_digest, off_b.result_digest, "seed {seed} depth {depth}");
+            assert_eq!(off_a.kv.enabled_streams, 0, "off arms nothing");
+            assert_eq!(off_a.kv.events, 0);
+        }
+    }
+}
+
+#[test]
+fn kv_compress_on_is_reproducible_per_seed_and_depth() {
+    // With compression armed the digests legitimately move (merging
+    // rewrites retained KV), but they must be a pure function of
+    // (corpus seed, config): same seed and depth reproduce exactly,
+    // at every point of the sweep, with service itself unchanged.
+    for seed in [1u64, 7, 42] {
+        let clips = clips_seeded(8, seed);
+        for depth in [0usize, 2] {
+            let run = || {
+                Dispatcher::new("m", kv_cfg(depth, true)).run(
+                    mock_factory(),
+                    &clips,
+                    Variant::CodecFlow,
+                    2.0,
+                )
+            };
+            let on_a = run();
+            let on_b = run();
+            assert_eq!(on_a.result_digest, on_b.result_digest, "seed {seed} depth {depth}");
+            assert_eq!(on_a.stream_digests, on_b.stream_digests, "seed {seed} depth {depth}");
+            assert_eq!(on_a.kv.events, on_b.kv.events, "seed {seed} depth {depth}");
+            assert_eq!(on_a.kv.bytes_saved, on_b.kv.bytes_saved, "seed {seed} depth {depth}");
+            assert_eq!(on_a.kv.enabled_streams, 8, "every stream armed");
+            // Compression frees footprint, never service: the same
+            // windows are served as with compression off.
+            let off = Dispatcher::new("m", kv_cfg(depth, false)).run(
+                mock_factory(),
+                &clips,
+                Variant::CodecFlow,
+                2.0,
+            );
+            assert_eq!(on_a.merged.windows(), off.merged.windows(), "seed {seed} depth {depth}");
+            assert_eq!(on_a.merged.per_stream, off.merged.per_stream);
+            assert!(on_a.kv.events > 0, "seed {seed} depth {depth}: calm streams must merge");
+            assert!(
+                on_a.kv.max_penalty <= kv_cfg(depth, true).compress_penalty_cap + 1e-12,
+                "seed {seed} depth {depth}: penalty {} over cap",
+                on_a.kv.max_penalty
+            );
+        }
+    }
+}
+
+#[test]
+fn kv_compress_composes_with_quarantine_under_injected_faults() {
+    // Compression and fault containment share the KV pool (merging
+    // shrinks a stream's held bytes; quarantine releases them), so
+    // their composition is the double-free hazard. Under a seeded
+    // permanent fault with compression armed: the shard survives, the
+    // targeted stream's (compressed) KV is released back to the
+    // budget, every healthy stream is bit-identical to a fault-free
+    // compression-on run, and the whole composition reproduces.
+    let clips = clips(6);
+    let armed = |spec: &str| {
+        let mut cfg = fault_cfg(1, 2, spec);
+        assert!(cfg.set("kv_compress", "1"));
+        assert!(cfg.set("compress_after", "1"));
+        Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+    };
+    let clean = armed("");
+    assert!(clean.faults.quarantined.is_empty());
+    assert!(clean.kv.events > 0, "compression active in the reference run");
+    // nth:2 lets stream 3 serve (and compress) a window before the
+    // permanent fault fires, so quarantine releases *merged* blocks.
+    let faulted = armed("streams:3,kind:permanent,nth:2");
+    assert_eq!(faulted.dead_shards, 0, "the shard survives");
+    assert!(faulted.faults.quarantined.contains_key(&3));
+    assert!(faulted.faults.released_bytes > 0, "held (compressed) KV released");
+    for (s, d) in &clean.stream_digests {
+        if *s != 3 {
+            assert_eq!(
+                faulted.stream_digests[s], *d,
+                "stream {s} must stay bit-identical under the composition"
+            );
+        }
+    }
+    let again = armed("streams:3,kind:permanent,nth:2");
+    assert_eq!(again.result_digest, faulted.result_digest, "composition reproduces");
+    assert_eq!(again.kv.bytes_saved, faulted.kv.bytes_saved);
 }
