@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig28_slo` — regenerates Fig 28 (SLO classes
+//! under a flash-crowd arrival trace: predictive cost-model routing
+//! vs codec rules on a per-shard fast + quant backend pool).
+fn main() {
+    codecflow::exp::fig28_slo::run();
+}

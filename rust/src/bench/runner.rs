@@ -1,5 +1,5 @@
 //! The continuous-bench trajectory: the named small-config cells of
-//! fig20–fig27 that CI runs on every PR, with a disk result cache
+//! fig20–fig28 that CI runs on every PR, with a disk result cache
 //! (extending the exp cache under `reports/cache/`) keyed on the
 //! *complete* resolved config — every serving knob
 //! ([`crate::config::ServingConfig::knob_values`]) plus the cell's
@@ -12,7 +12,7 @@ use std::path::PathBuf;
 use crate::exp::common::reports_dir;
 use crate::exp::{
     fig20_scaling, fig21_batching, fig22_pipeline, fig23_wallclock, fig24_hetero, fig25_stages,
-    fig26_faults, fig27_kvcompress,
+    fig26_faults, fig27_kvcompress, fig28_slo,
 };
 
 use super::record::BenchRecord;
@@ -37,6 +37,7 @@ pub fn trajectory() -> Vec<BenchSpec> {
         fig25_stages::bench_spec(),
         fig26_faults::bench_spec(),
         fig27_kvcompress::bench_spec(),
+        fig28_slo::bench_spec(),
     ]
 }
 
@@ -194,12 +195,14 @@ mod tests {
     use crate::config::ServingConfig;
 
     #[test]
-    fn trajectory_is_fig20_through_fig27_with_nonempty_configs() {
+    fn trajectory_is_fig20_through_fig28_with_nonempty_configs() {
         let specs = trajectory();
         let figs: Vec<&str> = specs.iter().map(|s| s.fig).collect();
         assert_eq!(
             figs,
-            vec!["fig20", "fig21", "fig22", "fig23", "fig24", "fig25", "fig26", "fig27"]
+            vec![
+                "fig20", "fig21", "fig22", "fig23", "fig24", "fig25", "fig26", "fig27", "fig28"
+            ]
         );
         for spec in &specs {
             assert!(!spec.title.is_empty(), "{} has no title", spec.fig);
@@ -230,7 +233,9 @@ mod tests {
         for key in ServingConfig::knob_keys() {
             let mut c = ServingConfig::default();
             let value = match *key {
-                "steal" | "launch" | "quarantine" => "false",
+                "steal" | "launch" | "quarantine" | "shed" | "predict" => "false",
+                // slo defaults to disarmed: arm it to move the key.
+                "slo" => "critical:0",
                 // kv_compress defaults to off: flip it on to move the key.
                 "kv_compress" => "true",
                 "compress_penalty_cap" => "0.4",

@@ -194,9 +194,12 @@ pub struct ServingConfig {
     pub backend: String,
     /// Routing policy for heterogeneous pools (`route=`, env
     /// `CF_ROUTE`): `fixed` (everything on the fast primary),
-    /// `static-split` (every 2nd batch offloads, signal-blind), or
+    /// `static-split` (every 2nd batch offloads, signal-blind),
     /// `codec` (the default: sparse patch-budget buckets and
-    /// slack-deadline batches offload to the cheap backend). With a
+    /// slack-deadline batches offload to the cheap backend), or `cost`
+    /// (online-fitted per-backend cost model: each batch goes to the
+    /// backend minimizing predicted completion time against its
+    /// pipeline frontier, accuracy penalty as tie-break). With a
     /// single backend every policy degenerates to it.
     pub route: String,
     /// Relative cost of the quant backend (`quant_ratio=`): virtual
@@ -258,6 +261,27 @@ pub struct ServingConfig {
     /// accepted in [0, 1]); surfaced in reports like a lossy backend's
     /// `quant_penalty`.
     pub compress_penalty_cap: f64,
+    /// Per-stream SLO class spec (`slo=`, env `CF_SLO`; empty = no
+    /// critical streams, machinery disarmed and bit-identical to a
+    /// build without it). `critical:a+b+c` marks the listed stream ids
+    /// critical; `critical:every:N` marks every N-th id. Critical
+    /// streams hold their deadlines under overload; besteffort streams
+    /// are quant-routed, frame-skipped or shed first. Validated at
+    /// parse time by `coordinator::queue::SloSpec::parse`.
+    pub slo: String,
+    /// Whether the overload ladder may actually *shed* work (`shed=`,
+    /// env `CF_SHED`, default on): levels 2-3 frame-skip and drop
+    /// queued besteffort windows. `shed=0` keeps the ladder's level
+    /// tracking and reporting but never drops a window — degradation
+    /// stays visible while service stays complete.
+    pub shed: bool,
+    /// Predictive overload detection (`predict=`, env `CF_PREDICT`,
+    /// default on): when the route policy carries a cost model
+    /// (`route=cost`), admission prices the queued backlog with it and
+    /// escalates the degradation ladder *before* deadlines start
+    /// missing (AdaCodec-style). `predict=0` — or a model-less policy
+    /// — falls back to reactive deadline-miss escalation.
+    pub predict: bool,
 }
 
 impl Default for ServingConfig {
@@ -291,6 +315,9 @@ impl Default for ServingConfig {
             kv_compress: false,
             compress_after: 2,
             compress_penalty_cap: 0.05,
+            slo: String::new(),
+            shed: true,
+            predict: true,
         }
     }
 }
@@ -327,7 +354,9 @@ impl ServingConfig {
                 ok
             }
             "backend" => parse_choice(value, &mut self.backend, &["fast", "quant", "hetero"]),
-            "route" => parse_choice(value, &mut self.route, &["fixed", "static-split", "codec"]),
+            "route" => {
+                parse_choice(value, &mut self.route, &["fixed", "static-split", "codec", "cost"])
+            }
             "quant_ratio" => parse_into(value, &mut self.quant_ratio),
             "batch_slack" => parse_into(value, &mut self.batch_slack),
             "quarantine" => parse_flag(value, &mut self.quarantine),
@@ -340,6 +369,9 @@ impl ServingConfig {
             "compress_penalty_cap" => {
                 parse_bounded_f64(key, value, &mut self.compress_penalty_cap, 1.0)
             }
+            "slo" => parse_slo_spec(value, &mut self.slo),
+            "shed" => parse_flag(value, &mut self.shed),
+            "predict" => parse_flag(value, &mut self.predict),
             _ => self.pipeline.set(key, value),
         };
         // The docs contract, both directions: knob_keys ⊆ set is unit-
@@ -390,6 +422,9 @@ impl ServingConfig {
             "kv_compress",
             "compress_after",
             "compress_penalty_cap",
+            "slo",
+            "shed",
+            "predict",
             "window_frames",
             "stride_frac",
             "gop",
@@ -441,6 +476,9 @@ impl ServingConfig {
             ("kv_compress", self.kv_compress.to_string()),
             ("compress_after", self.compress_after.to_string()),
             ("compress_penalty_cap", format!("{}", self.compress_penalty_cap)),
+            ("slo", self.slo.clone()),
+            ("shed", self.shed.to_string()),
+            ("predict", self.predict.to_string()),
             ("window_frames", p.window_frames.to_string()),
             ("stride_frac", format!("{}", p.stride_frac)),
             ("gop", p.gop.to_string()),
@@ -534,6 +572,29 @@ fn parse_fault_spec(value: &str, slot: &mut String) -> bool {
         }
         Err(reason) => {
             eprintln!("codecflow: rejected `fault={v}`: {reason}");
+            false
+        }
+    }
+}
+
+/// SLO class spec syntax (`slo=`, env `CF_SLO`): validated end to end
+/// by [`crate::coordinator::queue::SloSpec::parse`] so a malformed
+/// spec is rejected *here*, with the parser's reason printed — not
+/// discovered as a silently inert knob mid-run. The empty string (no
+/// critical streams) is always accepted.
+fn parse_slo_spec(value: &str, slot: &mut String) -> bool {
+    let v = value.trim();
+    if v.is_empty() {
+        slot.clear();
+        return true;
+    }
+    match crate::coordinator::queue::SloSpec::parse(v) {
+        Ok(_) => {
+            *slot = v.to_string();
+            true
+        }
+        Err(reason) => {
+            eprintln!("codecflow: rejected `slo={v}`: {reason}");
             false
         }
     }
@@ -734,7 +795,7 @@ mod tests {
         for key in ServingConfig::knob_keys() {
             let mut c = ServingConfig::default();
             let value = match *key {
-                "steal" | "launch" | "quarantine" | "kv_compress" => "true",
+                "steal" | "launch" | "quarantine" | "kv_compress" | "shed" | "predict" => "true",
                 "stride_frac" => "0.5",
                 "mv_threshold" | "alpha" => "0.25",
                 "backend" => "hetero",
@@ -742,6 +803,7 @@ mod tests {
                 "quant_ratio" => "0.5",
                 "fault" => "rate:0.5",
                 "compress_penalty_cap" => "0.5",
+                "slo" => "critical:every:2",
                 _ => "2",
             };
             assert!(c.set(key, value), "knob_keys lists `{key}` but set() rejects it");
@@ -773,7 +835,7 @@ mod tests {
         for key in ServingConfig::knob_keys() {
             let mut c = ServingConfig::default();
             let value = match *key {
-                "steal" | "launch" | "quarantine" => "false",
+                "steal" | "launch" | "quarantine" | "shed" | "predict" => "false",
                 // kv_compress defaults to off: flip it on to be visible.
                 "kv_compress" => "true",
                 "stride_frac" => "0.35",
@@ -785,6 +847,7 @@ mod tests {
                 "batch_slack" => "3.5",
                 "fault" => "rate:0.5",
                 "compress_penalty_cap" => "0.4",
+                "slo" => "critical:0",
                 _ => "7",
             };
             assert!(c.set(key, value), "knob `{key}` must parse");
@@ -887,6 +950,39 @@ mod tests {
         assert!(!c.set("compress_penalty_cap", "-0.1"), "negative rejected");
         assert!(!c.set("compress_penalty_cap", "inf"), "non-finite rejected");
         assert!((c.compress_penalty_cap - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_knobs_parse_and_reject_malformed_specs() {
+        let mut c = ServingConfig::default();
+        assert_eq!(c.slo, "", "no critical streams by default");
+        assert!(c.shed, "shedding armed by default");
+        assert!(c.predict, "predictive escalation armed by default");
+
+        assert!(c.set("route", "cost"), "the cost policy is a valid route choice");
+        assert_eq!(c.route, "cost");
+
+        assert!(c.set("slo", "critical:3+7+12"));
+        assert_eq!(c.slo, "critical:3+7+12");
+        assert!(c.set("slo", "critical:every:4"));
+        assert_eq!(c.slo, "critical:every:4");
+        assert!(c.set("slo", ""), "empty spec clears the classes");
+        assert_eq!(c.slo, "");
+        for bad in ["besteffort:1", "critical:every:0", "critical:one", "critical:every:x"] {
+            assert!(!c.set("slo", bad), "malformed spec {bad:?} must be rejected");
+            assert_eq!(c.slo, "", "rejected spec leaves the knob untouched");
+        }
+
+        assert!(c.set("shed", "0"));
+        assert!(!c.shed);
+        assert!(c.set("shed", "on"));
+        assert!(c.shed);
+        assert!(!c.set("shed", "maybe"), "unrecognized flag rejected");
+        assert!(c.set("predict", "false"));
+        assert!(!c.predict);
+        assert!(c.set("predict", "1"));
+        assert!(c.predict);
+        assert!(!c.set("predict", "perhaps"), "unrecognized flag rejected");
     }
 
     #[test]

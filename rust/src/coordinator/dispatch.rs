@@ -32,7 +32,7 @@
 //! [`FaultInjector`], so all of the above is reproducibly testable.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Once};
+use std::sync::Arc;
 
 use crate::baselines::Variant;
 use crate::codec::types::Frame;
@@ -43,20 +43,11 @@ use crate::runtime::replica::{backend_kinds, Backend, BackendKind, ExecutorFacto
 use crate::util;
 use crate::util::threadpool::ThreadPool;
 
-use super::metrics::{merge_backend_stats, BackendStats, FaultStats, KvStats, Metrics, PhaseTimes};
+use super::metrics::{
+    merge_backend_stats, BackendStats, CostModelStats, FaultStats, KvStats, Metrics, PhaseTimes,
+    SloStats,
+};
 use super::shard::{assign_shard, Shard, ShardReport, StealPool, StreamWork};
-
-/// One warning per process for the launch=1/pipeline=0 no-op (see
-/// [`Dispatcher::run`]).
-static LAUNCH_NOOP_WARNING: Once = Once::new();
-
-/// One warning per process for stage-pool knobs set without the
-/// launched ring they ride on.
-static STAGE_NOOP_WARNING: Once = Once::new();
-
-/// One warning per process for `restarts=` on a single-shard
-/// deployment, where the restart domain is the whole deployment.
-static RESTART_SOLO_WARNING: Once = Once::new();
 
 /// Merged result of a sharded serving run.
 #[derive(Debug)]
@@ -127,6 +118,16 @@ pub struct ShardedReport {
     /// evenly across shards) — the denominator of the report's
     /// `sustainable_kv` capacity figure.
     pub kv_budget_bytes: usize,
+    /// Per-SLO-class accounting merged across shards (`slo=` knob):
+    /// stream/window counts, SLO-visible latency, deadline misses and
+    /// every degradation the overload ladder applied to the
+    /// best-effort class. Drives the `slo:` report line — degradation
+    /// is always explicit, never silent.
+    pub slo: SloStats,
+    /// Online cost-model fit quality merged across shards
+    /// (`route=cost`): observation count and one-step-ahead
+    /// prediction error. Drives the `costmodel:` report line.
+    pub costmodel: CostModelStats,
 }
 
 impl ShardedReport {
@@ -212,6 +213,48 @@ impl ShardedReport {
                 self.kv.mean_resident_bytes(),
                 self.kv.sustainable_kv_streams(self.kv_budget_bytes),
                 self.kv.max_penalty
+            ));
+        }
+        if self.slo.any() {
+            // SLO-class health: how each class fared against its
+            // deadline, and *exactly* what the overload ladder did to
+            // the best-effort class (quant-biased, frame-skipped,
+            // shed) — printed whenever `slo=` is armed, so graceful
+            // degradation is explicit, never silent.
+            let c = &self.slo.critical;
+            let b = &self.slo.besteffort;
+            out.push_str(&format!(
+                "slo: critical[streams={} windows={} mean={:.1}ms max={:.1}ms misses={} \
+                 sustained={:.1}] besteffort[streams={} windows={} mean={:.1}ms max={:.1}ms \
+                 misses={} quant={} skipped={} shed={}] degraded_level={}\n",
+                c.streams,
+                c.windows,
+                c.mean_latency_s() * 1e3,
+                c.latency_max_s * 1e3,
+                c.deadline_misses,
+                c.sustained_streams(self.stride_s),
+                b.streams,
+                b.windows,
+                b.mean_latency_s() * 1e3,
+                b.latency_max_s * 1e3,
+                b.deadline_misses,
+                b.quant_degraded,
+                b.skipped_windows,
+                b.shed_windows,
+                self.slo.degraded_level
+            ));
+        }
+        if self.costmodel.any() {
+            // Online cost-model fit: how well `route=cost` predicted
+            // each batch's virtual exec seconds one step ahead.
+            // Absent for policies without a model.
+            out.push_str(&format!(
+                "costmodel: observations={} mean_abs_err={:.4}s predicted={:.3}s \
+                 observed={:.3}s\n",
+                self.costmodel.observations,
+                self.costmodel.mean_abs_err_s(),
+                self.costmodel.predicted_s,
+                self.costmodel.observed_s
             ));
         }
         if let Some((kd, ke)) = self.stage_workers {
@@ -311,11 +354,32 @@ impl Dispatcher {
     /// Serve `clips` (one per stream, frames shared via `Arc` so
     /// repeated sweeps never copy pixel data) with `variant` across
     /// `cfg.num_shards` executor replicas. `fps` converts the frame
-    /// stride to wall-clock cadence.
+    /// stride to wall-clock cadence. All streams start at virtual
+    /// time zero (a synchronized cohort); use
+    /// [`Dispatcher::run_with_offsets`] for staggered arrivals.
     pub fn run(
         &self,
         factory: Arc<dyn ExecutorFactory>,
         clips: &[Arc<Vec<Frame>>],
+        variant: Variant,
+        fps: f64,
+    ) -> ShardedReport {
+        self.run_with_offsets(factory, clips, &[], variant, fps)
+    }
+
+    /// [`Dispatcher::run`] with per-stream virtual start offsets:
+    /// stream `i` begins producing windows at `offsets[i]` seconds on
+    /// the deterministic virtual clock (missing entries mean 0.0).
+    /// This is how the flash-crowd figure shapes its arrival trace —
+    /// a ramp, a spike and a drain are just three offset plateaus.
+    /// Offsets only shift window arrival stamps (admission order and
+    /// queue slack); they never touch frame bits, so `offsets=[]` is
+    /// bit-identical to [`Dispatcher::run`].
+    pub fn run_with_offsets(
+        &self,
+        factory: Arc<dyn ExecutorFactory>,
+        clips: &[Arc<Vec<Frame>>],
+        offsets: &[f64],
         variant: Variant,
         fps: f64,
     ) -> ShardedReport {
@@ -328,13 +392,12 @@ impl Dispatcher {
             // instead of silently degenerating (see the
             // docs/OPERATIONS.md interaction matrix). Default configs
             // (launch merely defaulted on) are not scolded.
-            LAUNCH_NOOP_WARNING.call_once(|| {
-                eprintln!(
-                    "warning: launch=1 has no effect at pipeline=0 (no prepared batch to \
-                     overlap; the executor stays inline) — set pipeline>=1 to enable \
-                     launch threads"
-                );
-            });
+            util::warn_once(
+                "launch-noop",
+                "launch=1 has no effect at pipeline=0 (no prepared batch to \
+                 overlap; the executor stays inline) — set pipeline>=1 to enable \
+                 launch threads",
+            );
         }
         // Stage pools ride the launched pipeline ring: without launch
         // threads and a ring there is no stage boundary to provision.
@@ -342,13 +405,12 @@ impl Dispatcher {
             && self.cfg.launch
             && self.cfg.pipeline_depth > 0;
         if (self.cfg.decode_workers > 1 || self.cfg.encode_workers > 1) && !staged {
-            STAGE_NOOP_WARNING.call_once(|| {
-                eprintln!(
-                    "warning: decode_workers/encode_workers take effect only with \
-                     launch=1 and pipeline>=1 (stage pools ride the launched ring) — \
-                     serving without stage pools"
-                );
-            });
+            util::warn_once(
+                "stage-noop",
+                "decode_workers/encode_workers take effect only with \
+                 launch=1 and pipeline>=1 (stage pools ride the launched ring) — \
+                 serving without stage pools",
+            );
         }
         if self.cfg.restarts > 0 && num_shards == 1 {
             // Restart supervision still works with one shard, but the
@@ -356,14 +418,15 @@ impl Dispatcher {
             // lone shard replays, nothing else serves. Say so once
             // (stream-level quarantine is the containment story at
             // shards=1).
-            RESTART_SOLO_WARNING.call_once(|| {
-                eprintln!(
-                    "warning: restarts={} with shards=1 restarts the whole deployment \
+            util::warn_once(
+                "restart-solo",
+                &format!(
+                    "restarts={} with shards=1 restarts the whole deployment \
                      on a shard fault — no healthy shard keeps serving meanwhile; \
                      rely on quarantine=1 or provision shards>=2",
                     self.cfg.restarts
-                );
-            });
+                ),
+            );
         }
 
         let streams: Vec<StreamWork> = clips
@@ -373,6 +436,7 @@ impl Dispatcher {
                 stream: i as u64,
                 home_shard: assign_shard(i as u64, num_shards),
                 frames: Arc::clone(frames),
+                start_s: offsets.get(i).copied().unwrap_or(0.0),
             })
             .collect();
         let pool = Arc::new(StealPool::new(streams));
@@ -489,6 +553,9 @@ impl Dispatcher {
                     stream,
                     home_shard: sid,
                     frames: Arc::clone(&clips[stream as usize]),
+                    // A re-admitted stream keeps its arrival offset, so
+                    // its replayed windows carry the same stamps.
+                    start_s: offsets.get(stream as usize).copied().unwrap_or(0.0),
                 })
                 .collect();
             let rpool = Arc::new(StealPool::new(work));
@@ -525,6 +592,8 @@ impl Dispatcher {
         let mut backends: Vec<BackendStats> = Vec::new();
         let mut faults = FaultStats::default();
         let mut kv = KvStats::default();
+        let mut slo = SloStats::default();
+        let mut costmodel = CostModelStats::default();
         for r in &shards {
             merged.merge(&r.metrics);
             sustainable += r.metrics.sustainable_streams(stride_s);
@@ -540,6 +609,8 @@ impl Dispatcher {
             merge_backend_stats(&mut backends, &r.backends);
             faults.merge(&r.faults);
             kv.merge(&r.kv);
+            slo.merge(&r.slo);
+            costmodel.merge(&r.costmodel);
         }
         quant_streams.sort_unstable();
         quant_streams.dedup();
@@ -579,6 +650,8 @@ impl Dispatcher {
             faults,
             kv,
             kv_budget_bytes: self.cfg.kv_budget_bytes,
+            slo,
+            costmodel,
         }
     }
 }
@@ -793,6 +866,30 @@ mod tests {
         let text = report.report("dead");
         assert!(text.contains("shard supervision: dead="));
         assert!(text.contains("availability: 0.0%"));
+    }
+
+    #[test]
+    fn offsets_and_slo_classing_report_without_touching_bits() {
+        let clips = clips(4);
+        let base = Dispatcher::new("m", cfg(2)).run(factory(), &clips, Variant::CodecFlow, 2.0);
+        let mut c = cfg(2);
+        c.slo = "critical:every:2".to_string();
+        c.shed = false;
+        // A staggered arrival trace on the homogeneous pool: offsets
+        // shift stamps (admission order, slack), never frame bits.
+        let offs = vec![0.0, 1.5, 3.0, 4.5];
+        let r = Dispatcher::new("m", c)
+            .run_with_offsets(factory(), &clips, &offs, Variant::CodecFlow, 2.0);
+        assert_eq!(r.merged.windows(), base.merged.windows(), "shed=0: every window served");
+        assert_eq!(r.result_digest, base.result_digest, "stamps and classing never touch bits");
+        assert!(r.slo.any());
+        assert_eq!(r.slo.critical.streams, 2, "every:2 tags streams 0 and 2");
+        assert_eq!(r.slo.besteffort.streams, 2);
+        let text = r.report("slo");
+        assert!(text.contains("slo: critical[streams=2"));
+        assert!(text.contains("degraded_level="));
+        assert!(!base.slo.any(), "disarmed run prints no slo line");
+        assert!(!base.report("base").contains("slo:"));
     }
 
     #[test]

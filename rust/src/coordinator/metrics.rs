@@ -351,6 +351,140 @@ impl KvStats {
     }
 }
 
+/// Per-class SLO accounting (one instance per class — critical and
+/// besteffort — per shard, merged across shards into the
+/// `ShardedReport`). Latencies here are the *SLO-visible* latency:
+/// queueing delay plus the window's charged service share, measured in
+/// virtual time so the figures reproduce per seed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloClassStats {
+    /// Streams admitted into this class.
+    pub streams: usize,
+    /// Windows served for this class.
+    pub windows: usize,
+    /// Summed SLO-visible latency over those windows.
+    pub latency_sum_s: f64,
+    /// Worst single-window SLO-visible latency.
+    pub latency_max_s: f64,
+    /// Windows whose SLO-visible latency exceeded the class deadline.
+    pub deadline_misses: usize,
+    /// Queued windows dropped by overload shedding (ladder level 3).
+    pub shed_windows: usize,
+    /// Queued windows frame-skipped by the ladder (level 2: every
+    /// other window of a lagging besteffort stream).
+    pub skipped_windows: usize,
+    /// Windows served on the quant backend *because* the ladder
+    /// degraded them there (level 1), not because routing chose it.
+    pub quant_degraded: usize,
+}
+
+impl SloClassStats {
+    /// Mean SLO-visible latency per served window.
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            self.latency_sum_s / self.windows as f64
+        }
+    }
+
+    /// Streams of this class one executor sustains in real time at the
+    /// observed mean latency — the fig28 per-class axis, same shape as
+    /// [`Metrics::sustainable_streams`].
+    pub fn sustained_streams(&self, stride_s: f64) -> f64 {
+        let mean = self.mean_latency_s();
+        if mean <= 0.0 {
+            0.0
+        } else {
+            stride_s / mean
+        }
+    }
+
+    /// Fold another shard's class accounting into this one.
+    pub fn merge(&mut self, other: &SloClassStats) {
+        self.streams += other.streams;
+        self.windows += other.windows;
+        self.latency_sum_s += other.latency_sum_s;
+        self.latency_max_s = self.latency_max_s.max(other.latency_max_s);
+        self.deadline_misses += other.deadline_misses;
+        self.shed_windows += other.shed_windows;
+        self.skipped_windows += other.skipped_windows;
+        self.quant_degraded += other.quant_degraded;
+    }
+}
+
+/// SLO accounting for one shard (merged across shards): the two class
+/// ledgers plus the worst degradation-ladder level the shard reached.
+/// `enabled` mirrors `slo=` being armed — the `slo:` report line
+/// prints whenever it is, so best-effort degradation is always
+/// explicit, never silent.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloStats {
+    /// Whether the SLO machinery was armed (`slo=` non-empty).
+    pub enabled: bool,
+    pub critical: SloClassStats,
+    pub besteffort: SloClassStats,
+    /// Worst overload-ladder level reached (0 = none, 1 = quant-bias,
+    /// 2 = frame-skip, 3 = shed).
+    pub degraded_level: usize,
+}
+
+impl SloStats {
+    /// Gates the `slo:` report line.
+    pub fn any(&self) -> bool {
+        self.enabled
+    }
+
+    /// Fold another shard's SLO accounting into this one.
+    pub fn merge(&mut self, other: &SloStats) {
+        self.enabled |= other.enabled;
+        self.critical.merge(&other.critical);
+        self.besteffort.merge(&other.besteffort);
+        self.degraded_level = self.degraded_level.max(other.degraded_level);
+    }
+}
+
+/// Cost-model fit accounting for one shard's route policy (merged
+/// across shards): one-step-ahead prediction error of the online
+/// per-backend cost model, surfaced as the `costmodel:` report line.
+/// All zeros (gated off) for policies without a model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostModelStats {
+    /// Batches the model observed (= its update count).
+    pub observations: usize,
+    /// Summed |predicted - observed| virtual seconds, predictions
+    /// taken *before* each update folded its observation in.
+    pub abs_err_s: f64,
+    /// Summed pre-update predictions.
+    pub predicted_s: f64,
+    /// Summed observed virtual exec seconds.
+    pub observed_s: f64,
+}
+
+impl CostModelStats {
+    /// Gates the `costmodel:` report line.
+    pub fn any(&self) -> bool {
+        self.observations > 0
+    }
+
+    /// Mean one-step-ahead absolute error per observed batch.
+    pub fn mean_abs_err_s(&self) -> f64 {
+        if self.observations == 0 {
+            0.0
+        } else {
+            self.abs_err_s / self.observations as f64
+        }
+    }
+
+    /// Fold another shard's fit accounting into this one.
+    pub fn merge(&mut self, other: &CostModelStats) {
+        self.observations += other.observations;
+        self.abs_err_s += other.abs_err_s;
+        self.predicted_s += other.predicted_s;
+        self.observed_s += other.observed_s;
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     /// Per-window end-to-end latency (stage sum), seconds.
@@ -766,6 +900,86 @@ mod tests {
         assert!(!empty.any_compression());
         assert_eq!(empty.mean_resident_bytes(), 0.0);
         assert_eq!(empty.sustainable_kv_streams(1_000_000), 0.0);
+    }
+
+    #[test]
+    fn slo_stats_merge_and_sustained_math() {
+        let mut c = SloClassStats {
+            streams: 2,
+            windows: 4,
+            latency_sum_s: 2.0,
+            latency_max_s: 0.9,
+            deadline_misses: 1,
+            shed_windows: 0,
+            skipped_windows: 0,
+            quant_degraded: 0,
+        };
+        assert!((c.mean_latency_s() - 0.5).abs() < 1e-12);
+        // 2 s stride / 0.5 s mean = 4 sustained streams of this class.
+        assert!((c.sustained_streams(2.0) - 4.0).abs() < 1e-12);
+        assert_eq!(SloClassStats::default().mean_latency_s(), 0.0);
+        assert_eq!(SloClassStats::default().sustained_streams(2.0), 0.0);
+
+        let other = SloClassStats {
+            streams: 1,
+            windows: 2,
+            latency_sum_s: 4.0,
+            latency_max_s: 2.5,
+            deadline_misses: 2,
+            shed_windows: 3,
+            skipped_windows: 1,
+            quant_degraded: 5,
+        };
+        c.merge(&other);
+        assert_eq!(c.streams, 3);
+        assert_eq!(c.windows, 6);
+        assert!((c.latency_sum_s - 6.0).abs() < 1e-12);
+        assert!((c.latency_max_s - 2.5).abs() < 1e-12, "max, not sum");
+        assert_eq!(c.deadline_misses, 3);
+        assert_eq!(c.shed_windows, 3);
+        assert_eq!(c.skipped_windows, 1);
+        assert_eq!(c.quant_degraded, 5);
+
+        // The shard-level wrapper: enabled ORs, ladder level maxes.
+        let mut s = SloStats::default();
+        assert!(!s.any(), "disarmed by default");
+        let armed = SloStats {
+            enabled: true,
+            critical: SloClassStats { windows: 1, ..Default::default() },
+            besteffort: SloClassStats { shed_windows: 2, ..Default::default() },
+            degraded_level: 2,
+        };
+        s.merge(&armed);
+        s.merge(&SloStats { degraded_level: 1, ..Default::default() });
+        assert!(s.any());
+        assert_eq!(s.degraded_level, 2, "worst ladder level wins");
+        assert_eq!(s.critical.windows, 1);
+        assert_eq!(s.besteffort.shed_windows, 2);
+    }
+
+    #[test]
+    fn cost_model_stats_merge_and_error_math() {
+        let mut m = CostModelStats::default();
+        assert!(!m.any(), "gated off with no observations");
+        assert_eq!(m.mean_abs_err_s(), 0.0);
+        m.merge(&CostModelStats {
+            observations: 2,
+            abs_err_s: 0.6,
+            predicted_s: 1.0,
+            observed_s: 1.4,
+        });
+        m.merge(&CostModelStats {
+            observations: 2,
+            abs_err_s: 0.2,
+            predicted_s: 2.0,
+            observed_s: 2.0,
+        });
+        assert!(m.any());
+        assert_eq!(m.observations, 4);
+        assert!((m.abs_err_s - 0.8).abs() < 1e-12);
+        assert!((m.mean_abs_err_s() - 0.2).abs() < 1e-12);
+        assert!((m.predicted_s - 3.0).abs() < 1e-12);
+        assert!((m.observed_s - 3.4).abs() < 1e-12);
     }
 
     #[test]

@@ -51,6 +51,77 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 
+/// Per-stream SLO class assignment, parsed from the `slo=` knob. Two
+/// classes exist: **critical** streams hold their deadlines under
+/// overload; everything else is **besteffort** and is quant-routed,
+/// frame-skipped or shed first when the shard degrades. The default
+/// (`SloSpec::None`, empty spec) marks every stream besteffort and
+/// leaves the SLO machinery disarmed — admission and service are
+/// bit-identical to a build without it.
+///
+/// Grammar, mirroring the `fault=` spec style:
+///
+/// * `critical:3+7+12` — the listed stream ids are critical;
+/// * `critical:every:4` — every stream with `id % 4 == 0` is critical
+///   (a deterministic slice of any population size);
+/// * empty — no critical streams.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SloSpec {
+    /// No critical streams; machinery disarmed.
+    None,
+    /// Explicit critical stream ids (sorted, deduped).
+    Streams(Vec<u64>),
+    /// Every `n`-th stream id is critical (`id % n == 0`).
+    Every(u64),
+}
+
+impl SloSpec {
+    /// Parse an `slo=` spec; `Err` carries a human-readable reason.
+    pub fn parse(spec: &str) -> Result<SloSpec, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(SloSpec::None);
+        }
+        let body = spec
+            .strip_prefix("critical:")
+            .ok_or_else(|| format!("slo spec must start with 'critical:': {spec:?}"))?;
+        if let Some(n) = body.strip_prefix("every:") {
+            let n: u64 = n
+                .parse()
+                .map_err(|_| format!("slo every-count must be an integer: {n:?}"))?;
+            if n == 0 {
+                return Err("slo every-count must be >= 1".to_string());
+            }
+            return Ok(SloSpec::Every(n));
+        }
+        let mut ids = Vec::new();
+        for part in body.split('+') {
+            let id: u64 = part
+                .trim()
+                .parse()
+                .map_err(|_| format!("slo stream id must be an integer: {part:?}"))?;
+            ids.push(id);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        Ok(SloSpec::Streams(ids))
+    }
+
+    /// Whether `stream` is in the critical class.
+    pub fn is_critical(&self, stream: u64) -> bool {
+        match self {
+            SloSpec::None => false,
+            SloSpec::Streams(ids) => ids.binary_search(&stream).is_ok(),
+            SloSpec::Every(n) => stream % n == 0,
+        }
+    }
+
+    /// Whether any stream can be critical (machinery armed).
+    pub fn armed(&self) -> bool {
+        !matches!(self, SloSpec::None)
+    }
+}
+
 /// One pending window of one stream.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WindowJob {
@@ -287,6 +358,34 @@ impl AdmissionQueue {
         self.jobs.retain(|j| j.stream != stream);
         self.pending.remove(&stream);
         before - self.jobs.len()
+    }
+
+    /// Load-shedding support: drop every queued job `victim` accepts,
+    /// keeping the occupancy map exact. Each shed job counts as a
+    /// `dropped` window — sheds are admission-side losses like
+    /// backpressure drops (unlike quarantine purges), so availability
+    /// accounting stays consistent. Returns the number shed.
+    pub fn shed(&mut self, victim: impl Fn(&WindowJob) -> bool) -> usize {
+        let mut shed = 0usize;
+        let mut kept = VecDeque::with_capacity(self.jobs.len());
+        for job in std::mem::take(&mut self.jobs) {
+            if victim(&job) {
+                self.note_removed(job.stream);
+                self.dropped += 1;
+                shed += 1;
+            } else {
+                kept.push_back(job);
+            }
+        }
+        self.jobs = kept;
+        shed
+    }
+
+    /// Iterate the queued jobs in insertion order (read-only). The
+    /// SLO admission path sums predicted costs over the backlog with
+    /// this; it never mutates through it.
+    pub fn iter(&self) -> impl Iterator<Item = &WindowJob> {
+        self.jobs.iter()
     }
 
     fn note_removed(&mut self, stream: u64) {
@@ -581,6 +680,58 @@ mod tests {
         assert_eq!(q.tail_arrival(), Some(5.0));
         while q.pop().is_some() {}
         assert_eq!(q.tail_arrival(), None);
+    }
+
+    #[test]
+    fn slo_spec_parses_classifies_and_rejects() {
+        // Empty spec: disarmed, everything besteffort.
+        let none = SloSpec::parse("").unwrap();
+        assert_eq!(none, SloSpec::None);
+        assert!(!none.armed());
+        assert!(!none.is_critical(0));
+        // Explicit list: sorted, deduped, exact membership.
+        let list = SloSpec::parse("critical:7+3+12+3").unwrap();
+        assert_eq!(list, SloSpec::Streams(vec![3, 7, 12]));
+        assert!(list.armed());
+        assert!(list.is_critical(3) && list.is_critical(12));
+        assert!(!list.is_critical(4));
+        // Modular slice: id % n == 0.
+        let every = SloSpec::parse("critical:every:4").unwrap();
+        assert_eq!(every, SloSpec::Every(4));
+        assert!(every.is_critical(0) && every.is_critical(8));
+        assert!(!every.is_critical(5));
+        assert!(SloSpec::parse("critical:every:1").unwrap().is_critical(9));
+        // Rejections carry reasons.
+        assert!(SloSpec::parse("besteffort:1").is_err());
+        assert!(SloSpec::parse("critical:every:0").is_err());
+        assert!(SloSpec::parse("critical:every:x").is_err());
+        assert!(SloSpec::parse("critical:1+two").is_err());
+    }
+
+    #[test]
+    fn shed_drops_victims_counts_them_and_keeps_occupancy_exact() {
+        let mut q = AdmissionQueue::new(8);
+        q.push(job(1, 0, 1.0));
+        q.push(job(2, 0, 1.5));
+        q.push(job(1, 1, 2.0));
+        q.push(job(3, 0, 2.5));
+        // Shed stream 1 entirely.
+        let n = q.shed(|j| j.stream == 1);
+        assert_eq!(n, 2);
+        assert_eq!(q.dropped, 2, "sheds are admission-side losses like drops");
+        assert_eq!(q.pending_for(1), 0);
+        assert_eq!(q.pending_for(2), 1);
+        assert_eq!(q.len(), 2);
+        // iter() exposes the survivors read-only, insertion order.
+        let streams: Vec<u64> = q.iter().map(|j| j.stream).collect();
+        assert_eq!(streams, vec![2, 3]);
+        // A no-match shed is a no-op.
+        assert_eq!(q.shed(|j| j.stream == 99), 0);
+        assert_eq!(q.dropped, 2);
+        // Occupancy stays exact for later pushes and pops.
+        q.push(job(1, 2, 3.0));
+        assert_eq!(q.pending_for(1), 1);
+        assert_eq!(q.pop().unwrap().stream, 2);
     }
 
     #[test]

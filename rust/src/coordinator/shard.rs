@@ -85,16 +85,19 @@ use crate::kvc::refresher::CompressPolicy;
 use crate::pipeline::frontend::WindowFrames;
 use crate::pipeline::infer::{CompressionCfg, EncodedFrame, KvcMode, PendingWindow, WindowResult};
 use crate::runtime::batch::{
-    route_policy, BatchOutcome, BatchRequest, BatchStats, MultiPipelineClock, RoutePolicy,
-    RouteQuery,
+    route_policy, BatchOutcome, BatchRequest, BatchStats, CostModelFit, MultiPipelineClock,
+    RoutePolicy, RouteQuery,
 };
 use crate::runtime::mock::{Executor, FaultPlan};
 use crate::runtime::replica::{backend_kinds, Backend, BackendKind, BackendSet, LaunchedBatch};
 use crate::util;
 use crate::util::threadpool::{join_all, JobHandle, Lane, ThreadPool};
 
-use super::metrics::{overlap_seconds, BackendStats, FaultStats, KvStats, Metrics, PhaseTimes};
-use super::queue::{AdmissionQueue, WindowJob};
+use super::metrics::{
+    overlap_seconds, BackendStats, CostModelStats, FaultStats, KvStats, Metrics, PhaseTimes,
+    SloStats,
+};
+use super::queue::{AdmissionQueue, SloSpec, WindowJob};
 use super::session::StreamSession;
 
 /// Consistent stream -> shard assignment (FNV-1a over the stream id).
@@ -116,6 +119,12 @@ pub struct StreamWork {
     pub stream: u64,
     pub home_shard: usize,
     pub frames: Arc<Vec<Frame>>,
+    /// Virtual arrival offset of the stream itself (seconds): window k
+    /// arrives at `start_s + (k + 1) * stride`. 0.0 — the synchronized
+    /// cohort every pre-flash-crowd path uses — keeps admission
+    /// arithmetic bit-identical to the historical behaviour; the fig28
+    /// flash-crowd trace staggers it to model ramp, spike and drain.
+    pub start_s: f64,
 }
 
 /// Shared pool of not-yet-claimed streams. Shards prefer their own
@@ -228,6 +237,15 @@ pub struct ShardReport {
     /// returned to the pool, worst accuracy-proxy penalty — all zero
     /// with `kv_compress=0`).
     pub kv: KvStats,
+    /// Per-class SLO accounting (`slo=`): latency/deadline/shed
+    /// ledgers for the critical and besteffort classes plus the worst
+    /// overload-ladder level reached. Disarmed (empty `slo=`) leaves
+    /// it all-zero with `enabled = false`.
+    pub slo: SloStats,
+    /// Routing cost-model fit diagnostics (`route=cost`): one-step-
+    /// ahead prediction error of the online per-backend model. All
+    /// zeros for policies without a model.
+    pub costmodel: CostModelStats,
 }
 
 impl ShardReport {
@@ -490,6 +508,10 @@ struct InFlight {
     launch: LaunchState,
     /// Backend index the batch was routed to (0 without a pool).
     backend: usize,
+    /// The batch's shared patch-budget bucket, kept so retirement can
+    /// feed the (bucket, backend, exec) observation back into the
+    /// routing policy's cost model.
+    bucket: usize,
     /// The prepared requests, kept until retire: per-member artifact
     /// names for fusion-group accounting, and the payloads for solo
     /// re-execution should the fused launch fault.
@@ -593,6 +615,23 @@ struct ShardState<'e> {
     /// KV footprint / compression accounting for the report (the
     /// engine-side merge counters are folded in at report time).
     kv_stats: KvStats,
+    /// Per-stream SLO classing (`slo=`); [`SloSpec::None`] disarms the
+    /// whole machinery and keeps service bit-identical.
+    slo: SloSpec,
+    /// Per-class SLO accounting for the report.
+    slo_stats: SloStats,
+    /// Current overload-ladder level (0 = none, 1 = quant-bias,
+    /// 2 = frame-skip, 3 = shed besteffort) — recomputed every service
+    /// iteration from predicted backlog cost (or observed misses).
+    degrade: usize,
+    /// Allow the lossy ladder actions (`shed=`): off still tracks the
+    /// level but never skips or sheds a window.
+    shed_enabled: bool,
+    /// Escalate from the routing policy's *predicted* backlog cost
+    /// (`predict=`, needs a pricing policy like `route=cost`); off —
+    /// or with a model-less policy — falls back to reacting to
+    /// observed deadline misses.
+    predict_enabled: bool,
 }
 
 impl<'e> ShardState<'e> {
@@ -617,6 +656,14 @@ impl<'e> ShardState<'e> {
                 vec![BackendStats::named(kind.name(), kind == BackendKind::Quant)]
             }
         };
+        // Validated at parse time like the fault plan; a malformed
+        // value smuggled past `ServingConfig::set` disarms.
+        let slo = if cfg.slo.is_empty() {
+            SloSpec::None
+        } else {
+            SloSpec::parse(&cfg.slo).unwrap_or(SloSpec::None)
+        };
+        let slo_stats = SloStats { enabled: slo.armed(), ..SloStats::default() };
         ShardState {
             exec,
             set,
@@ -660,6 +707,11 @@ impl<'e> ShardState<'e> {
             },
             faults: FaultStats::default(),
             kv_stats: KvStats::default(),
+            slo,
+            slo_stats,
+            degrade: 0,
+            shed_enabled: cfg.shed,
+            predict_enabled: cfg.predict,
         }
     }
 
@@ -667,39 +719,73 @@ impl<'e> ShardState<'e> {
     /// with the batch's admission-time patch-budget bucket and its
     /// deterministic deadline slack (batch deadline vs the backlog
     /// tail's arrival — pure arrival arithmetic, so routing never
-    /// reads a wall clock and digests stay reproducible). Without a
-    /// pool (or with one backend) this is always 0.
-    fn route_batch(&mut self, bucket: usize, jobs: usize, batch_arrival: f64) -> usize {
+    /// reads a wall clock and digests stay reproducible). Predictive
+    /// policies additionally receive each backend's exec-frontier gap
+    /// (queued virtual work ahead of this batch) so they can price
+    /// completion time, not just exec time. Without a pool (or with
+    /// one backend) this is always 0.
+    ///
+    /// At degradation-ladder level >= 1, all-besteffort batches bypass
+    /// the policy onto the first quant backend (when one exists):
+    /// deterministic quant-bias that keeps the fast lane clear for
+    /// critical batches under overload. `shed=0` suppresses this like
+    /// every other lossy ladder action — routing falls through to the
+    /// policy so the run stays bit-identical to an unarmed one.
+    fn route_batch(
+        &mut self,
+        bucket: usize,
+        jobs: usize,
+        batch_arrival: f64,
+        has_critical: bool,
+    ) -> usize {
         let backends = self.set.map(|s| s.len()).unwrap_or(1);
         if backends < 2 {
             return 0;
+        }
+        if self.degrade >= 1 && !has_critical && self.shed_enabled {
+            if let Some(set) = self.set {
+                let quant = (0..backends).find(|&i| set.kind(i) == BackendKind::Quant);
+                if let Some(b) = quant {
+                    self.slo_stats.besteffort.quant_degraded += jobs;
+                    return b;
+                }
+            }
         }
         let slack_s = match self.queue.tail_arrival() {
             Some(tail) => batch_arrival + self.stride_s - tail,
             None => self.stride_s,
         };
+        let gaps: Vec<f64> = (0..backends)
+            .map(|b| (self.pipe.exec_done[b] - batch_arrival).max(0.0))
+            .collect();
+        self.policy.frontiers(&gaps);
         let q = RouteQuery { bucket, jobs, slack_s, backends };
         self.policy.route(&q).min(backends - 1)
     }
 
-    /// Fold one routed launch into the per-backend stats and mark the
-    /// quant blast radius.
+    /// Fold one routed launch into the per-backend stats, mark the
+    /// quant blast radius, and feed the observation back into the
+    /// routing policy's cost model (a no-op for stateless policies).
     fn record_launch(
         &mut self,
         backend: usize,
+        bucket: usize,
         outcomes: &[BatchOutcome],
         wall_s: f64,
         streams: impl Iterator<Item = u64>,
     ) {
+        let exec_s: f64 = outcomes.iter().map(|o| o.exec_s).sum();
+        let penalty: f64 = outcomes.iter().map(|o| o.quant_penalty).sum();
         let stats = &mut self.backend_stats[backend];
         stats.batches += 1;
         stats.jobs += outcomes.len();
-        stats.exec_s += outcomes.iter().map(|o| o.exec_s).sum::<f64>();
-        stats.accuracy_penalty += outcomes.iter().map(|o| o.quant_penalty).sum::<f64>();
+        stats.exec_s += exec_s;
+        stats.accuracy_penalty += penalty;
         stats.wall_s += wall_s;
         if stats.quant {
             self.quant_streams.extend(streams);
         }
+        self.policy.observe(backend, bucket, outcomes.len(), exec_s, penalty);
     }
 
     /// One synchronous fused launch with fault capture: engine errors
@@ -756,12 +842,19 @@ impl<'e> ShardState<'e> {
     fn cash_or_isolate(
         &mut self,
         backend: usize,
+        bucket: usize,
         requests: &[BatchRequest],
         fused: Result<(Vec<BatchOutcome>, f64), String>,
     ) -> Vec<Result<BatchOutcome, String>> {
         let msg = match fused {
             Ok((outcomes, wall_s)) => {
-                self.record_launch(backend, &outcomes, wall_s, requests.iter().map(|r| r.stream));
+                self.record_launch(
+                    backend,
+                    bucket,
+                    &outcomes,
+                    wall_s,
+                    requests.iter().map(|r| r.stream),
+                );
                 return outcomes.into_iter().map(Ok).collect();
             }
             Err(msg) => msg,
@@ -790,6 +883,7 @@ impl<'e> ShardState<'e> {
                         o.exec_s += backoff;
                         self.record_launch(
                             backend,
+                            bucket,
                             std::slice::from_ref(&o),
                             wall_s,
                             std::iter::once(req.stream),
@@ -809,6 +903,115 @@ impl<'e> ShardState<'e> {
             out.push(verdict);
         }
         out
+    }
+
+    /// Fold one served window into its stream's SLO class ledger and
+    /// test it against the per-class deadline — critical windows get
+    /// 3 strides of queueing-plus-service budget, besteffort 5 (the
+    /// class whose latency is allowed to stretch under overload).
+    /// Latencies are virtual (queueing delay + charged service), so
+    /// the ledgers reproduce per seed. Disarmed specs record nothing.
+    fn note_slo_window(&mut self, stream: u64, latency_s: f64) {
+        if !self.slo.armed() {
+            return;
+        }
+        let critical = self.slo.is_critical(stream);
+        let deadline = if critical { 3.0 * self.stride_s } else { 5.0 * self.stride_s };
+        let cls = if critical {
+            &mut self.slo_stats.critical
+        } else {
+            &mut self.slo_stats.besteffort
+        };
+        cls.windows += 1;
+        cls.latency_sum_s += latency_s;
+        cls.latency_max_s = cls.latency_max_s.max(latency_s);
+        if latency_s > deadline {
+            cls.deadline_misses += 1;
+        }
+    }
+
+    /// Overload-control ladder (SLO-armed shards only), re-evaluated
+    /// every service iteration. The level is chosen **predictively**
+    /// when the routing policy prices work (`predict=` with
+    /// `route=cost`): the backlog's predicted service seconds are
+    /// compared against one stride of pool capacity — AdaCodec-style
+    /// next-window cost forecasting — so the shard degrades *ahead of*
+    /// the first deadline miss. Model-less policies (or `predict=0`)
+    /// fall back to reacting to observed misses. Levels:
+    ///
+    /// 1. quant-bias: all-besteffort batches route to the quant
+    ///    backend directly ([`ShardState::route_batch`]);
+    /// 2. frame-skip: every other queued besteffort window is shed;
+    /// 3. shed: the entire besteffort backlog is dropped.
+    ///
+    /// Critical jobs are never skipped or shed at any level. `shed=0`
+    /// still tracks the level (the report shows the pressure) but
+    /// suppresses every lossy action — quant-bias included — so an
+    /// armed-but-muted run stays bit-identical. Entirely virtual-time
+    /// driven: deterministic per (policy, seed).
+    fn apply_slo_degradation(&mut self) {
+        if !self.slo.armed() {
+            return;
+        }
+        let backends = self.set.map(|s| s.len()).unwrap_or(1);
+        let predicted: Option<f64> = if self.predict_enabled {
+            match self.policy.predicted_cost(0, 1) {
+                Some(_) => Some(
+                    self.queue
+                        .iter()
+                        .map(|j| self.policy.predicted_cost(j.bucket, 1).unwrap_or(0.0))
+                        .sum(),
+                ),
+                None => None,
+            }
+        } else {
+            None
+        };
+        let level = match predicted {
+            Some(backlog_s) => {
+                // Predicted backlog service seconds vs one stride of
+                // pool capacity: >= 1x is saturation, >= 1.5x lags a
+                // full class, >= 2x is unrecoverable without shedding.
+                let capacity = backends as f64 * self.stride_s;
+                let ratio = if capacity > 0.0 { backlog_s / capacity } else { 0.0 };
+                if ratio >= 2.0 {
+                    3
+                } else if ratio >= 1.5 {
+                    2
+                } else if ratio >= 1.0 {
+                    1
+                } else {
+                    0
+                }
+            }
+            None => {
+                let misses = self.slo_stats.critical.deadline_misses
+                    + self.slo_stats.besteffort.deadline_misses;
+                if misses > 24 {
+                    3
+                } else if misses > 8 {
+                    2
+                } else if misses >= 1 {
+                    1
+                } else {
+                    0
+                }
+            }
+        };
+        self.degrade = level;
+        self.slo_stats.degraded_level = self.slo_stats.degraded_level.max(level);
+        if !self.shed_enabled {
+            return;
+        }
+        let slo = self.slo.clone();
+        if level >= 3 {
+            let shed = self.queue.shed(|j| !slo.is_critical(j.stream));
+            self.slo_stats.besteffort.shed_windows += shed;
+        } else if level >= 2 {
+            let skipped =
+                self.queue.shed(|j| !slo.is_critical(j.stream) && j.window_idx % 2 == 1);
+            self.slo_stats.besteffort.skipped_windows += skipped;
+        }
     }
 
     /// Quarantine a stream: the fault domain shrinks from shard to
@@ -917,13 +1120,22 @@ impl<'e> ShardState<'e> {
                         window_idx: k,
                         start_frame: lo,
                         end_frame: hi,
-                        arrival_s: (k as f64 + 1.0) * stride_s,
+                        // The stream's own arrival offset staggers its
+                        // cadence (0.0 for synchronized cohorts).
+                        arrival_s: work.start_s + (k as f64 + 1.0) * stride_s,
                         bucket: bucket_from_counts(&counts, groups, lo, hi, bucket_gran),
                     });
                 }
                 self.index.insert(sid, self.sessions.len());
                 self.sessions.push(session);
                 self.streams_served += 1;
+                if self.slo.armed() {
+                    if self.slo.is_critical(sid) {
+                        self.slo_stats.critical.streams += 1;
+                    } else {
+                        self.slo_stats.besteffort.streams += 1;
+                    }
+                }
                 if stolen {
                     self.stolen_streams += 1;
                 }
@@ -950,7 +1162,7 @@ impl<'e> ShardState<'e> {
     /// own queued predecessor.
     fn form_batch(&mut self, max_batch: usize, pipelined: bool) -> Vec<WindowJob> {
         let slack = self.batch_slack;
-        let ShardState { queue, sessions, index, in_flight, .. } = self;
+        let ShardState { queue, sessions, index, in_flight, slo, .. } = self;
         let next_unserved = |j: &WindowJob| {
             index
                 .get(&j.stream)
@@ -960,17 +1172,25 @@ impl<'e> ShardState<'e> {
         let compat = |a: &WindowJob, b: &WindowJob| {
             a.bucket == b.bucket && a.stream != b.stream && next_unserved(b)
         };
-        if pipelined {
-            queue.pop_batch_slack(
+        let base = |j: &WindowJob| !pipelined || !in_flight.contains(&j.stream);
+        // SLO-armed shards serve the critical class first: whenever an
+        // eligible critical job is queued, the batch forms from
+        // critical jobs only (besteffort waits its turn), so critical
+        // deadlines hold under overload. Disarmed — the default — this
+        // is bit-identical to the historical formation.
+        if slo.armed() {
+            let batch = queue.pop_batch_slack(
                 max_batch,
                 slack,
-                |j| !in_flight.contains(&j.stream),
+                |j| base(j) && slo.is_critical(j.stream),
                 &next_unserved,
                 compat,
-            )
-        } else {
-            queue.pop_batch_slack(max_batch, slack, |_| true, &next_unserved, compat)
+            );
+            if !batch.is_empty() {
+                return batch;
+            }
         }
+        queue.pop_batch_slack(max_batch, slack, base, &next_unserved, compat)
     }
 
     /// Finish one batch member — the accounting shared verbatim by the
@@ -1020,6 +1240,8 @@ impl<'e> ShardState<'e> {
         // All members share the seed's bucket (compat requires it) —
         // the admission-time codec signal the router reads.
         let bucket = jobs.first().map(|j| j.bucket).unwrap_or(0);
+        let has_critical =
+            self.slo.armed() && jobs.iter().any(|j| self.slo.is_critical(j.stream));
         // Phase 1 — per job, everything up to the prefill launch.
         let wall_prep_start = util::now();
         let mut pending = Vec::with_capacity(jobs.len());
@@ -1067,9 +1289,9 @@ impl<'e> ShardState<'e> {
         // every prepare interval, so measured overlap stays 0. A
         // fused fault is isolated per member (or, with containment
         // off, panics the shard) — see [`ShardState::cash_or_isolate`].
-        let backend = self.route_batch(bucket, requests.len(), batch_arrival);
+        let backend = self.route_batch(bucket, requests.len(), batch_arrival, has_critical);
         let fused = self.try_execute(backend, &requests);
-        let verdicts = self.cash_or_isolate(backend, &requests, fused);
+        let verdicts = self.cash_or_isolate(backend, bucket, &requests, fused);
 
         // Phase 3 — per job, consume outputs; amortized timing. The
         // batch's service time is the sum of member latencies (each
@@ -1103,6 +1325,7 @@ impl<'e> ShardState<'e> {
                 r.flops_padded,
                 r.seq_tokens,
             );
+            self.note_slo_window(job.stream, (service_start - job.arrival_s) + r.times.total());
             self.answers.push((job.stream, job.window_idx, false)); // probe applied by caller
             // Phase split: pure accounting on top of the serial
             // service (nothing is hidden at depth 0).
@@ -1135,6 +1358,8 @@ impl<'e> ShardState<'e> {
         stages: Option<&StagePools>,
     ) -> Option<InFlight> {
         let bucket = jobs.first().map(|j| j.bucket).unwrap_or(0);
+        let has_critical =
+            self.slo.armed() && jobs.iter().any(|j| self.slo.is_critical(j.stream));
         let wall_prep_start = util::now();
         // Serial half: advance each session's cursor (stale jobs from
         // backpressure drops are skipped, exactly as in serial mode).
@@ -1389,7 +1614,7 @@ impl<'e> ShardState<'e> {
         // and only the virtual model overlaps. Either way the fused
         // result — outcomes or a captured fault — rides the ring until
         // retire, where a fault is isolated per member.
-        let backend = self.route_batch(bucket, requests.len(), batch_arrival);
+        let backend = self.route_batch(bucket, requests.len(), batch_arrival, has_critical);
         let launch = match self.set {
             Some(set) if self.physical => {
                 // The launch thread consumes its own copy; the
@@ -1413,6 +1638,7 @@ impl<'e> ShardState<'e> {
             pending,
             launch,
             backend,
+            bucket,
             requests,
             batch_arrival,
             prepare_s,
@@ -1439,6 +1665,7 @@ impl<'e> ShardState<'e> {
             pending,
             launch,
             backend,
+            bucket,
             requests,
             batch_arrival,
             prepare_s,
@@ -1458,7 +1685,7 @@ impl<'e> ShardState<'e> {
                 Err(msg) => Err(msg),
             },
         };
-        let verdicts = self.cash_or_isolate(backend, &requests, fused);
+        let verdicts = self.cash_or_isolate(backend, bucket, &requests, fused);
         let exec_s: f64 =
             verdicts.iter().filter_map(|v| v.as_ref().ok()).map(|o| o.exec_s).sum();
 
@@ -1507,6 +1734,10 @@ impl<'e> ShardState<'e> {
                 r.flops,
                 r.flops_padded,
                 r.seq_tokens,
+            );
+            self.note_slo_window(
+                job.stream,
+                (prep_start - job.arrival_s).max(0.0) + t.charged * share,
             );
             self.answers.push((job.stream, job.window_idx, false)); // probe applied by caller
         }
@@ -1706,6 +1937,11 @@ impl Shard {
                 }
             }
 
+            // Overload control re-evaluates against the fresh backlog
+            // each iteration: predictive (cost-model backlog pricing)
+            // or reactive (observed misses). A no-op when disarmed.
+            st.apply_slo_degradation();
+
             if depth == 0 {
                 let jobs = st.form_batch(max_batch, false);
                 if jobs.is_empty() {
@@ -1763,6 +1999,15 @@ impl Shard {
             kv_stats.max_penalty = kv_stats.max_penalty.max(cs.penalty);
         }
 
+        // Fold the routing policy's cost-model fit (route=cost) into
+        // the report; model-less policies contribute all-zeros.
+        let costmodel = match st.policy.fit() {
+            Some(CostModelFit { observations, abs_err_s, predicted_s, observed_s }) => {
+                CostModelStats { observations, abs_err_s, predicted_s, observed_s }
+            }
+            None => CostModelStats::default(),
+        };
+
         ShardReport {
             shard: self.id,
             metrics: st.metrics,
@@ -1782,6 +2027,8 @@ impl Shard {
             encode_peak: st.encode_peak,
             faults: st.faults,
             kv: kv_stats,
+            slo: st.slo_stats,
+            costmodel,
         }
     }
 }
@@ -1801,6 +2048,7 @@ mod tests {
                 stream: i as u64,
                 home_shard: home,
                 frames: Arc::new(c.frames),
+                start_s: 0.0,
             })
             .collect()
     }
@@ -2607,5 +2855,124 @@ mod tests {
         };
         let r1 = ample.run(&mock, &StealPool::new(works(3, 1)));
         assert_eq!(r1.metrics.kv_evictions, 0, "ample shard unaffected");
+    }
+
+    #[test]
+    fn slo_ladder_escalates_and_sheds_besteffort_only() {
+        // The reactive ladder, driven directly: level 1 never drops,
+        // level 2 frame-skips every other besteffort window, level 3
+        // sheds the whole besteffort backlog — critical jobs survive
+        // every level. (The default `route=fixed` policy prices
+        // nothing, so escalation runs on observed misses here; the
+        // predictive path is exercised end to end by fig28.)
+        let mock = MockEngine::new("m");
+        let mut cfg = ServingConfig::default();
+        assert!(cfg.set("slo", "critical:0"));
+        let mut st = ShardState::new(&mock, &cfg, None, 2.0);
+        let job = |stream: u64, idx: usize| WindowJob {
+            stream,
+            window_idx: idx,
+            start_frame: idx * 4,
+            end_frame: idx * 4 + 20,
+            arrival_s: (idx as f64 + 1.0) * 2.0,
+            bucket: 0,
+        };
+        st.queue.push(job(0, 0)); // critical
+        st.queue.push(job(1, 0));
+        st.queue.push(job(1, 1));
+        st.apply_slo_degradation();
+        assert_eq!(st.degrade, 0, "no misses, no pressure");
+        assert_eq!(st.queue.len(), 3);
+        st.slo_stats.besteffort.deadline_misses = 1;
+        st.apply_slo_degradation();
+        assert_eq!(st.degrade, 1);
+        assert_eq!(st.queue.len(), 3, "quant-bias never drops a window");
+        st.slo_stats.besteffort.deadline_misses = 9;
+        st.apply_slo_degradation();
+        assert_eq!(st.degrade, 2);
+        assert_eq!(st.slo_stats.besteffort.skipped_windows, 1, "odd besteffort window skipped");
+        assert_eq!(st.queue.len(), 2);
+        st.slo_stats.besteffort.deadline_misses = 25;
+        st.apply_slo_degradation();
+        assert_eq!(st.degrade, 3);
+        assert_eq!(st.slo_stats.besteffort.shed_windows, 1);
+        let left: Vec<u64> = st.queue.iter().map(|j| j.stream).collect();
+        assert_eq!(left, vec![0], "critical jobs are never shed");
+        assert_eq!(st.slo_stats.degraded_level, 3, "worst level sticks in the report");
+
+        // shed=0: the level is still tracked, nothing is dropped.
+        let mut muted = ServingConfig::default();
+        assert!(muted.set("slo", "critical:0"));
+        assert!(muted.set("shed", "false"));
+        let mut st = ShardState::new(&mock, &muted, None, 2.0);
+        st.queue.push(job(1, 0));
+        st.slo_stats.besteffort.deadline_misses = 25;
+        st.apply_slo_degradation();
+        assert_eq!(st.degrade, 3);
+        assert_eq!(st.queue.len(), 1, "shed=0 suppresses the lossy actions");
+        assert_eq!(st.slo_stats.besteffort.shed_windows, 0);
+    }
+
+    #[test]
+    fn slo_armed_classes_streams_and_disarmed_stays_bit_identical() {
+        let base = {
+            let (mock, shard) = pipelined_shard(0, 0.0);
+            shard.run(&mock, &StealPool::new(works(4, 0)))
+        };
+        assert!(!base.slo.enabled, "empty slo= leaves the machinery disarmed");
+        assert!(!base.slo.any());
+        assert!(!base.costmodel.any());
+        // Armed with lossy actions muted: classing re-orders batch
+        // formation (critical first) but every window is still served,
+        // so the order-insensitive digest cannot move.
+        let armed = {
+            let (mock, mut shard) = pipelined_shard(0, 0.0);
+            assert!(shard.cfg.set("slo", "critical:every:2"));
+            assert!(shard.cfg.set("shed", "false"));
+            shard.run(&mock, &StealPool::new(works(4, 0)))
+        };
+        assert!(armed.slo.enabled);
+        assert_eq!(armed.slo.critical.streams, 2, "streams 0 and 2");
+        assert_eq!(armed.slo.besteffort.streams, 2);
+        assert_eq!(
+            armed.slo.critical.windows + armed.slo.besteffort.windows,
+            base.metrics.windows(),
+            "every served window lands in exactly one class ledger"
+        );
+        assert!(armed.slo.critical.latency_sum_s > 0.0);
+        assert_eq!(armed.metrics.windows(), base.metrics.windows());
+        assert_eq!(
+            armed.result_digest, base.result_digest,
+            "classing re-orders service, never results"
+        );
+    }
+
+    #[test]
+    fn cost_routing_is_deterministic_probes_both_backends_and_reports_fit() {
+        let run = || {
+            let (_, mut shard) = pipelined_shard(2, 1e-4);
+            shard.cfg.route = "cost".to_string();
+            shard.cfg.batch_bucket = 48; // fine buckets: cells vary
+            shard.run_backends(hetero_backends(1e-4), &StealPool::new(works(8, 0)))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.result_digest, b.result_digest, "deterministic per (policy, seed)");
+        assert_eq!(a.stream_digests, b.stream_digests);
+        assert_eq!(a.quant_streams, b.quant_streams);
+        // Cold start predicts 0 for the unexplored quant backend, so
+        // the router probes it; after that both backends carry work.
+        assert!(a.backends[0].batches > 0 && a.backends[1].batches > 0);
+        assert!(!a.quant_streams.is_empty());
+        assert_eq!(a.backends[0].jobs + a.backends[1].jobs, a.metrics.windows());
+        // The fit ledger observed every launch and its observed total
+        // is exactly the per-backend exec accounting.
+        assert!(a.costmodel.any());
+        assert!(a.costmodel.observations > 0);
+        assert!(
+            (a.costmodel.observed_s - (a.backends[0].exec_s + a.backends[1].exec_s)).abs()
+                < 1e-9
+        );
+        assert_eq!(a.costmodel.observations, b.costmodel.observations);
     }
 }

@@ -474,6 +474,19 @@ pub fn serving_cfg(cfg: &ExperimentConfig, num_shards: usize) -> ServingConfig {
     if let Ok(v) = std::env::var("CF_ROUTE") {
         s.set("route", &v);
     }
+    // SLO classing and overload control (the CI slo matrix layers
+    // these over the fault plans below): same validating-parser
+    // discipline — a malformed CF_SLO spec keeps the disarmed default
+    // instead of silently classing streams differently.
+    if let Ok(v) = std::env::var("CF_SLO") {
+        s.set("slo", &v);
+    }
+    if let Ok(v) = std::env::var("CF_SHED") {
+        s.set("shed", &v);
+    }
+    if let Ok(v) = std::env::var("CF_PREDICT") {
+        s.set("predict", &v);
+    }
     // Deterministic fault injection for the CI fault matrix: a
     // CF_FAULT spec arms the injector exactly as `fault=` would, and a
     // malformed spec is rejected loudly by the validating parser

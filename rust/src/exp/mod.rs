@@ -24,6 +24,7 @@ pub mod fig24_hetero;
 pub mod fig25_stages;
 pub mod fig26_faults;
 pub mod fig27_kvcompress;
+pub mod fig28_slo;
 pub mod fig3;
 pub mod fig5;
 pub mod fig6;

@@ -5,7 +5,7 @@
 //!                   [workers=N] [shards=N] [streams=N] [key=value ...]
 //! codecflow exp     <table1|table2|fig2|fig3|fig5|fig6|fig11|fig12|fig13|
 //!                    fig14|fig15|fig16|fig17|fig18|fig19|fig20|fig21|
-//!                    fig22|fig23|fig24|fig25|fig26|fig27|all>
+//!                    fig22|fig23|fig24|fig25|fig26|fig27|fig28|all>
 //! codecflow bench   <run|compare|list>   # continuous benchmarking
 //! codecflow models              # list models + artifacts
 //! codecflow help
@@ -29,7 +29,7 @@
 //! `retries=` / `restarts=` shrink the fault domain to the stream and
 //! supervise dead shards, with `fault=` arming seeded deterministic
 //! fault injection. The full knob reference — defaults, env vars,
-//! interactions, which fig20–fig27 sweep measures each — is
+//! interactions, which fig20–fig28 sweep measures each — is
 //! `docs/OPERATIONS.md`.
 
 use std::sync::Arc;
@@ -195,13 +195,16 @@ fn experiment(args: &[String]) {
         "fig27" => {
             exp::fig27_kvcompress::run();
         }
+        "fig28" => {
+            exp::fig28_slo::run();
+        }
         other => eprintln!("unknown experiment {other}"),
     };
     if which == "all" {
         for name in [
             "table1", "table2", "fig2", "fig3", "fig5", "fig6", "fig11", "fig12",
             "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-            "fig21", "fig22", "fig23", "fig24", "fig25", "fig26", "fig27",
+            "fig21", "fig22", "fig23", "fig24", "fig25", "fig26", "fig27", "fig28",
         ] {
             println!("\n===== {name} =====");
             run_one(name);
@@ -242,7 +245,7 @@ fn help() {
          \n\
          USAGE:\n\
          \x20 codecflow serve  [--model M] [--variant V] [--frames N] [key=value...]\n\
-         \x20 codecflow exp    <table1|table2|fig2..fig27|all>\n\
+         \x20 codecflow exp    <table1|table2|fig2..fig28|all>\n\
          \x20 codecflow bench  run [--figs F,..] [--no-cache] [--update-baselines]\n\
          \x20 codecflow bench  compare <baseline> <current> [--threshold PCT]\n\
          \x20 codecflow bench  list\n\
@@ -252,7 +255,7 @@ fn help() {
          \x20                batch= batch_bucket= batch_slack= pipeline= launch=\n\
          \x20                decode_workers= encode_workers= backend= route=\n\
          \x20                quant_ratio= kv_budget_bytes= quarantine= retries=\n\
-         \x20                retry_backoff= restarts= fault=\n\
+         \x20                retry_backoff= restarts= fault= slo= shed= predict=\n\
          \x20                (workers=N scales to N executor shards; batch=N fuses up\n\
          \x20                to N compatible cross-stream prefills per launch;\n\
          \x20                pipeline=N overlaps batch prepare with the previous\n\
@@ -262,7 +265,11 @@ fn help() {
          \x20                window-decode and ViT-encode stages as independent\n\
          \x20                lane pools on that ring (bit-identical results);\n\
          \x20                backend=hetero adds a quantized-CPU backend per shard,\n\
-         \x20                with batches routed by route=fixed|static-split|codec;\n\
+         \x20                with batches routed by route=fixed|static-split|codec|cost\n\
+         \x20                (cost = online-fitted per-backend cost model);\n\
+         \x20                slo=critical:SPEC classes streams (e.g. critical:every:4)\n\
+         \x20                with predictive overload control, shed=0 / predict=0\n\
+         \x20                disarm its actions / prediction;\n\
          \x20                quarantine=1 contains a faulting window to its stream,\n\
          \x20                retries=N + retry_backoff=S recover transient engine\n\
          \x20                errors, restarts=N supervises dead shards, fault=SPEC\n\
@@ -270,8 +277,8 @@ fn help() {
          pipeline overrides: window_frames= stride_frac= gop= mv_threshold= alpha= qp=\n\
          env: CF_ARTIFACTS, CF_VIDEOS, CF_FRAMES, CF_WORKERS, CF_BATCH,\n\
          \x20    CF_BATCH_BUCKET, CF_PIPELINE, CF_LAUNCH, CF_DECODE_WORKERS,\n\
-         \x20    CF_ENCODE_WORKERS, CF_BACKEND, CF_ROUTE, CF_FAULT, CF_NO_CACHE,\n\
-         \x20    CF_BASELINES\n\
+         \x20    CF_ENCODE_WORKERS, CF_BACKEND, CF_ROUTE, CF_SLO, CF_SHED,\n\
+         \x20    CF_PREDICT, CF_FAULT, CF_NO_CACHE, CF_BASELINES\n\
          docs: docs/OPERATIONS.md (every serving knob: default, env,\n\
          \x20    interactions, which figure measures it)\n\
          \x20    docs/ARCHITECTURE.md (layer map + a request's life)"

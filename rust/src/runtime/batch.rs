@@ -120,6 +120,41 @@ pub struct RouteQuery {
 pub trait RoutePolicy: Send {
     fn route(&mut self, q: &RouteQuery) -> usize;
     fn name(&self) -> &'static str;
+
+    /// Feed back the *virtual* outcome of a batch this policy routed:
+    /// the backend that ran it, the admission-time patch-budget
+    /// bucket, the jobs fused, the summed virtual exec seconds and
+    /// the summed accuracy-proxy penalty. Called once per launch in
+    /// service order (solo quarantine re-executions included), so a
+    /// learning policy's state stays deterministic per seed. The
+    /// static policies ignore it.
+    fn observe(&mut self, _backend: usize, _bucket: usize, _jobs: usize, _exec_s: f64, _penalty: f64) {
+    }
+
+    /// Present the per-backend frontier gaps — each backend's
+    /// `MultiPipelineClock` exec chain minus the batch arrival,
+    /// clamped at zero — immediately before the matching [`route`]
+    /// call, so completion-time policies can price queueing delay.
+    /// Derived entirely from virtual time; stateless policies ignore
+    /// it.
+    ///
+    /// [`route`]: RoutePolicy::route
+    fn frontiers(&mut self, _gaps: &[f64]) {}
+
+    /// Predicted virtual seconds to serve `jobs` jobs of `bucket` on
+    /// the best backend, if this policy can price it. The admission
+    /// side uses this (AdaCodec-style) to see overload coming from
+    /// queued buckets *before* deadlines start missing. `None` for
+    /// policies without a model, which fall back to reactive
+    /// deadline-miss escalation.
+    fn predicted_cost(&self, _bucket: usize, _jobs: usize) -> Option<f64> {
+        None
+    }
+
+    /// Fit diagnostics, if the policy maintains a cost model.
+    fn fit(&self) -> Option<CostModelFit> {
+        None
+    }
 }
 
 /// `route=fixed`: every batch to one backend (index 0 = the fast
@@ -171,13 +206,43 @@ impl RoutePolicy for StaticSplit {
 /// free: the bucket was computed at admission from codec metadata,
 /// and the slack is arrival arithmetic.
 pub struct CodecRoute {
-    /// Buckets observed so far, kept sorted (running-median state).
-    seen: Vec<usize>,
+    /// Lower half of the buckets seen so far (max-heap): its top is
+    /// the running lower median.
+    lo: std::collections::BinaryHeap<usize>,
+    /// Upper half (min-heap via `Reverse`).
+    hi: std::collections::BinaryHeap<std::cmp::Reverse<usize>>,
 }
 
 impl CodecRoute {
     pub fn new() -> CodecRoute {
-        CodecRoute { seen: Vec::new() }
+        CodecRoute {
+            lo: std::collections::BinaryHeap::new(),
+            hi: std::collections::BinaryHeap::new(),
+        }
+    }
+
+    /// Insert one bucket and return the running **lower** median —
+    /// `sorted[(n - 1) / 2]` over everything inserted so far — in
+    /// O(log n) per launch, replacing the O(n) sorted-`Vec` insert
+    /// this policy used to rescan per batch. Invariant:
+    /// `lo.len() == hi.len()` or `lo.len() == hi.len() + 1`, so the
+    /// lower median is always `lo`'s top.
+    fn push_median(&mut self, bucket: usize) -> usize {
+        use std::cmp::Reverse;
+        match self.lo.peek() {
+            Some(&top) if bucket <= top => self.lo.push(bucket),
+            _ => self.hi.push(Reverse(bucket)),
+        }
+        if self.lo.len() > self.hi.len() + 1 {
+            if let Some(m) = self.lo.pop() {
+                self.hi.push(Reverse(m));
+            }
+        } else if self.hi.len() > self.lo.len() {
+            if let Some(Reverse(m)) = self.hi.pop() {
+                self.lo.push(m);
+            }
+        }
+        *self.lo.peek().expect("lo holds the median after rebalance")
     }
 }
 
@@ -186,9 +251,7 @@ impl RoutePolicy for CodecRoute {
         if q.backends < 2 {
             return 0;
         }
-        let pos = self.seen.binary_search(&q.bucket).unwrap_or_else(|e| e);
-        self.seen.insert(pos, q.bucket);
-        let median = self.seen[(self.seen.len() - 1) / 2];
+        let median = self.push_median(q.bucket);
         let sparse = q.bucket <= median;
         let slack = q.slack_s >= 0.0;
         usize::from(sparse || slack)
@@ -199,13 +262,225 @@ impl RoutePolicy for CodecRoute {
     }
 }
 
+/// Fit diagnostics for a [`CostModel`]: how well the model's
+/// *pre-update* predictions tracked the virtual exec seconds it was
+/// then trained on (one-step-ahead error, the honest measure for an
+/// online fit). Surfaced on the `costmodel:` report line.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostModelFit {
+    /// Batches observed (model updates).
+    pub observations: usize,
+    /// Summed |predicted - observed| virtual seconds.
+    pub abs_err_s: f64,
+    /// Summed pre-update predictions.
+    pub predicted_s: f64,
+    /// Summed observed virtual exec seconds.
+    pub observed_s: f64,
+}
+
+impl CostModelFit {
+    /// Mean one-step-ahead absolute error per observed batch.
+    pub fn mean_abs_err_s(&self) -> f64 {
+        if self.observations == 0 {
+            0.0
+        } else {
+            self.abs_err_s / self.observations as f64
+        }
+    }
+}
+
+/// Online-fitted per-backend cost model: prices each (patch-budget
+/// bucket × backend) cell from observed [`BatchOutcome`] virtual exec
+/// seconds. Two estimators layer per backend:
+///
+/// * an exact **cell mean** — per-job exec seconds for every
+///   (backend, bucket) pair actually observed; preferred whenever the
+///   queried cell has data;
+/// * an incremental **least-squares rate** through the origin on work
+///   units `w = (bucket + 1) × jobs` (`rate = Σ w·y / Σ w²`, each new
+///   observation folded in O(1)) — the interpolator for buckets the
+///   backend has not yet served.
+///
+/// Unobserved backends predict 0.0: deterministic cold start that
+/// makes an unexplored backend look free, so `route=cost` probes every
+/// backend before settling. Updates consume only virtual timing and
+/// admission-order counters — never wall clock — so result digests
+/// stay reproducible per (policy, seed).
+pub struct CostModel {
+    /// Per-backend `(Σ w·y, Σ w²)` regression accumulators.
+    rates: Vec<(f64, f64)>,
+    /// Per-(backend, bucket) `(Σ exec_s, jobs)` observed cells
+    /// (BTreeMap: deterministic iteration, matches report idiom).
+    cells: std::collections::BTreeMap<(usize, usize), (f64, usize)>,
+    /// Per-backend `(Σ quant_penalty, jobs)` accuracy-proxy
+    /// accumulators — the tie-break cost.
+    penalties: Vec<(f64, usize)>,
+    fit: CostModelFit,
+}
+
+impl CostModel {
+    pub fn new() -> CostModel {
+        CostModel {
+            rates: Vec::new(),
+            cells: std::collections::BTreeMap::new(),
+            penalties: Vec::new(),
+            fit: CostModelFit::default(),
+        }
+    }
+
+    /// Backends seen so far (grows lazily with observations).
+    pub fn backends(&self) -> usize {
+        self.rates.len()
+    }
+
+    fn ensure(&mut self, backend: usize) {
+        if self.rates.len() <= backend {
+            self.rates.resize(backend + 1, (0.0, 0.0));
+            self.penalties.resize(backend + 1, (0.0, 0));
+        }
+    }
+
+    /// Predicted virtual exec seconds for `jobs` jobs of `bucket` on
+    /// `backend`: cell mean when observed, regression rate otherwise,
+    /// 0.0 for a cold backend.
+    pub fn predict(&self, backend: usize, bucket: usize, jobs: usize) -> f64 {
+        if let Some(&(sum_s, n)) = self.cells.get(&(backend, bucket)) {
+            if n > 0 {
+                return sum_s / n as f64 * jobs as f64;
+            }
+        }
+        match self.rates.get(backend) {
+            Some(&(swy, sww)) if sww > 0.0 => {
+                let w = (bucket + 1) as f64 * jobs as f64;
+                swy / sww * w
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Mean accuracy-proxy penalty per job on `backend` (0.0 cold).
+    pub fn penalty_per_job(&self, backend: usize) -> f64 {
+        match self.penalties.get(backend) {
+            Some(&(sum, n)) if n > 0 => sum / n as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Fold one observed batch in. Fit diagnostics are charged from
+    /// the *pre-update* prediction, then the observation updates the
+    /// regression, the cell and the penalty mean.
+    pub fn observe(&mut self, backend: usize, bucket: usize, jobs: usize, exec_s: f64, penalty: f64) {
+        if jobs == 0 {
+            return;
+        }
+        let predicted = self.predict(backend, bucket, jobs);
+        self.fit.observations += 1;
+        self.fit.predicted_s += predicted;
+        self.fit.observed_s += exec_s;
+        self.fit.abs_err_s += (predicted - exec_s).abs();
+        self.ensure(backend);
+        let w = (bucket + 1) as f64 * jobs as f64;
+        self.rates[backend].0 += w * exec_s;
+        self.rates[backend].1 += w * w;
+        let cell = self.cells.entry((backend, bucket)).or_insert((0.0, 0));
+        cell.0 += exec_s;
+        cell.1 += jobs;
+        self.penalties[backend].0 += penalty;
+        self.penalties[backend].1 += jobs;
+    }
+
+    pub fn fit(&self) -> CostModelFit {
+        self.fit
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `route=cost`: pick the backend minimizing **predicted completion
+/// time** — the backend's frontier gap (queued virtual work, published
+/// by the shard via [`RoutePolicy::frontiers`]) plus the cost model's
+/// predicted exec seconds for this batch — with the mean accuracy
+/// penalty per job as a small tie-break cost, so an exact backend wins
+/// when the completion times tie. Ties after that break to the lowest
+/// backend index. Entirely virtual-time driven: deterministic per
+/// (policy, seed).
+pub struct CostRoute {
+    model: CostModel,
+    /// Frontier gaps published before the current `route` call.
+    gaps: Vec<f64>,
+}
+
+impl CostRoute {
+    pub fn new() -> CostRoute {
+        CostRoute { model: CostModel::new(), gaps: Vec::new() }
+    }
+}
+
+impl Default for CostRoute {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RoutePolicy for CostRoute {
+    fn route(&mut self, q: &RouteQuery) -> usize {
+        if q.backends < 2 {
+            return 0;
+        }
+        let mut best = 0usize;
+        let mut best_cost = f64::INFINITY;
+        for b in 0..q.backends {
+            let gap = self.gaps.get(b).copied().unwrap_or(0.0);
+            let exec = self.model.predict(b, q.bucket, q.jobs);
+            let penalty = self.model.penalty_per_job(b) * q.jobs as f64 * 1e-3;
+            let cost = gap + exec + penalty;
+            if cost < best_cost {
+                best = b;
+                best_cost = cost;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "cost"
+    }
+
+    fn observe(&mut self, backend: usize, bucket: usize, jobs: usize, exec_s: f64, penalty: f64) {
+        self.model.observe(backend, bucket, jobs, exec_s, penalty);
+    }
+
+    fn frontiers(&mut self, gaps: &[f64]) {
+        self.gaps.clear();
+        self.gaps.extend_from_slice(gaps);
+    }
+
+    fn predicted_cost(&self, bucket: usize, jobs: usize) -> Option<f64> {
+        let backends = self.model.backends().max(1);
+        let mut best = f64::INFINITY;
+        for b in 0..backends {
+            best = best.min(self.model.predict(b, bucket, jobs));
+        }
+        Some(if best.is_finite() { best } else { 0.0 })
+    }
+
+    fn fit(&self) -> Option<CostModelFit> {
+        Some(self.model.fit())
+    }
+}
+
 /// Policy constructor for the `route=` knob (`fixed`, `static-split`,
-/// `codec`); unknown names fall back to `fixed` on backend 0, the
-/// homogeneous behaviour.
+/// `codec`, `cost`); unknown names fall back to `fixed` on backend 0,
+/// the homogeneous behaviour.
 pub fn route_policy(name: &str) -> Box<dyn RoutePolicy> {
     match name {
         "static-split" => Box::new(StaticSplit::new(2)),
         "codec" => Box::new(CodecRoute::new()),
+        "cost" => Box::new(CostRoute::new()),
         _ => Box::new(FixedRoute(0)),
     }
 }
@@ -588,7 +863,108 @@ mod tests {
         assert_eq!(route_policy("codec").name(), "codec");
         assert_eq!(route_policy("static-split").name(), "static-split");
         assert_eq!(route_policy("fixed").name(), "fixed");
+        assert_eq!(route_policy("cost").name(), "cost");
         assert_eq!(route_policy("bogus").name(), "fixed");
+    }
+
+    #[test]
+    fn codec_dual_heap_median_matches_the_naive_reference() {
+        // The O(log n) dual-heap must report exactly the lower median
+        // the old sorted-Vec rescan computed: sorted[(n - 1) / 2].
+        use crate::util::quick;
+        quick::check(0xD0A1, 60, |g| {
+            let mut route = CodecRoute::new();
+            let mut naive: Vec<usize> = Vec::new();
+            for _ in 0..g.usize_in(1, 40) {
+                let bucket = g.usize_in(0, 12);
+                let heap_median = route.push_median(bucket);
+                let pos = naive.binary_search(&bucket).unwrap_or_else(|e| e);
+                naive.insert(pos, bucket);
+                let naive_median = naive[(naive.len() - 1) / 2];
+                assert_eq!(
+                    heap_median, naive_median,
+                    "dual-heap median diverged from sorted-Vec reference"
+                );
+            }
+        });
+        // Pinned values: the even-count case takes the *lower* median.
+        let mut r = CodecRoute::new();
+        assert_eq!(r.push_median(5), 5, "singleton is its own median");
+        assert_eq!(r.push_median(9), 5, "lower of {{5, 9}}");
+        assert_eq!(r.push_median(1), 5, "middle of {{1, 5, 9}}");
+        assert_eq!(r.push_median(2), 2, "lower median of {{1, 2, 5, 9}}");
+    }
+
+    #[test]
+    fn cost_route_learns_rates_and_prices_completion_time() {
+        let q = |bucket: usize, backends: usize| RouteQuery {
+            bucket,
+            jobs: 2,
+            slack_s: -1.0,
+            backends,
+        };
+        // Cold start: every backend predicts 0.0, ties break to 0.
+        let mut cold = CostRoute::new();
+        assert_eq!(cold.route(&q(4, 2)), 0, "cold model ties to the lowest index");
+        assert_eq!(cold.route(&q(4, 1)), 0, "one backend degenerates to 0");
+        assert_eq!(cold.predicted_cost(4, 2), Some(0.0), "cold prediction is zero");
+        // Teach it: backend 0 runs 1.0 s/job at bucket 4, backend 1
+        // runs 0.4 s/job — the quant backend is cheaper.
+        let mut r = CostRoute::new();
+        r.observe(0, 4, 2, 2.0, 0.0);
+        r.observe(1, 4, 2, 0.8, 0.5);
+        assert_eq!(r.route(&q(4, 2)), 1, "cheaper learned backend wins on equal frontiers");
+        // An unseen bucket interpolates via the per-backend rate and
+        // still prefers the cheap backend.
+        assert_eq!(r.route(&q(8, 2)), 1, "regression generalizes to unseen buckets");
+        // A busy frontier flips the decision: queued work on backend 1
+        // outweighs its cheaper exec rate.
+        r.frontiers(&[0.0, 10.0]);
+        assert_eq!(r.route(&q(4, 2)), 0, "frontier gap dominates the exec estimate");
+        r.frontiers(&[0.0, 0.0]);
+        assert_eq!(r.route(&q(4, 2)), 1);
+        // The admission-side prediction tracks the cheapest backend.
+        let predicted = r.predicted_cost(4, 2).unwrap();
+        assert!((predicted - 0.8).abs() < 1e-9, "cell mean: 0.4 s/job x 2 jobs");
+        // Fit diagnostics: first observations were priced cold (0.0),
+        // so the one-step-ahead error equals the observed seconds.
+        let fit = r.fit().unwrap();
+        assert_eq!(fit.observations, 2);
+        assert!((fit.observed_s - 2.8).abs() < 1e-9);
+        assert!((fit.abs_err_s - 2.8).abs() < 1e-9, "cold predictions miss by the full cost");
+        assert!((fit.mean_abs_err_s() - 1.4).abs() < 1e-9);
+        assert_eq!(CostModelFit::default().mean_abs_err_s(), 0.0);
+    }
+
+    #[test]
+    fn cost_route_is_deterministic_and_penalty_breaks_ties() {
+        // Two instances fed the same observe/frontier/route sequence
+        // must pick identically — the digest-reproducibility contract.
+        use crate::util::quick;
+        quick::check(0xC057, 40, |g| {
+            let mut a = CostRoute::new();
+            let mut b = CostRoute::new();
+            for _ in 0..g.usize_in(1, 30) {
+                let backend = g.usize_in(0, 1);
+                let bucket = g.usize_in(0, 9);
+                let jobs = g.usize_in(1, 4);
+                let exec = g.usize_in(1, 8) as f64 * 0.25;
+                a.observe(backend, bucket, jobs, exec, 0.0);
+                b.observe(backend, bucket, jobs, exec, 0.0);
+                let gaps = [g.usize_in(0, 5) as f64, g.usize_in(0, 5) as f64];
+                a.frontiers(&gaps);
+                b.frontiers(&gaps);
+                let query = RouteQuery { bucket, jobs, slack_s: 0.0, backends: 2 };
+                assert_eq!(a.route(&query), b.route(&query));
+            }
+        });
+        // Equal exec rates, but backend 1 carries an accuracy penalty:
+        // the penalty tie-break keeps work on the exact backend.
+        let mut r = CostRoute::new();
+        r.observe(0, 3, 2, 1.0, 0.0);
+        r.observe(1, 3, 2, 1.0, 0.6);
+        let query = RouteQuery { bucket: 3, jobs: 2, slack_s: 0.0, backends: 2 };
+        assert_eq!(r.route(&query), 0, "accuracy penalty breaks the cost tie");
     }
 
     #[test]

@@ -22,6 +22,28 @@ pub fn now() -> f64 {
     epoch.elapsed().as_secs_f64()
 }
 
+/// Print `warning: {msg}` to stderr the first time `key` is seen in
+/// this process; later calls with the same key are silent. One shared
+/// registry replaces the per-site `std::sync::Once` statics the
+/// dispatcher's no-op warnings used to carry. Returns whether the
+/// message was emitted, so callers (and tests) can observe the dedup
+/// without scraping stderr.
+pub fn warn_once(key: &str, msg: &str) -> bool {
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+    // `Mutex::new(None)` is const, so no OnceLock indirection needed;
+    // the set is allocated lazily on the first warning.
+    static WARNED: Mutex<Option<HashSet<String>>> = Mutex::new(None);
+    let mut guard = WARNED.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    let seen = guard.get_or_insert_with(HashSet::new);
+    if seen.insert(key.to_string()) {
+        eprintln!("warning: {msg}");
+        true
+    } else {
+        false
+    }
+}
+
 /// Incremental FNV-1a over 64-bit lanes — the crate's one cheap
 /// fingerprint primitive, shared by stream→shard placement
 /// (`coordinator::shard::assign_shard`), the mock executor's
@@ -53,7 +75,18 @@ impl Fnv64 {
 
 #[cfg(test)]
 mod tests {
-    use super::Fnv64;
+    use super::{warn_once, Fnv64};
+
+    #[test]
+    fn warn_once_emits_once_per_key() {
+        // Keys are namespaced to this test so parallel test binaries
+        // sharing the process-wide registry cannot race it.
+        assert!(warn_once("test-warn-once-a", "first a"));
+        assert!(!warn_once("test-warn-once-a", "second a is suppressed"));
+        assert!(!warn_once("test-warn-once-a", "so is a different message"));
+        assert!(warn_once("test-warn-once-b", "a fresh key emits"));
+        assert!(!warn_once("test-warn-once-b", "once"));
+    }
 
     #[test]
     fn fnv64_is_order_and_value_sensitive() {

@@ -1104,6 +1104,195 @@ fn kv_compress_on_is_reproducible_per_seed_and_depth() {
     }
 }
 
+/// The serving shape the SLO/cost-routing tests run under; the new
+/// knobs ride `ServingConfig::set` so the tests cover the CLI plumbing
+/// too. `steal=false` pins placement (routing and SLO state are per
+/// shard). `route=""` keeps the default homogeneous backend; anything
+/// else arms the heterogeneous pool with that policy.
+fn slo_serving_cfg(depth: usize, route: &str) -> ServingConfig {
+    let mut cfg = sharded_cfg(2);
+    cfg.max_batch = 4;
+    cfg.admit_wave = 8;
+    cfg.batch_bucket = 10_000;
+    cfg.pipeline_depth = depth;
+    cfg.steal = false;
+    if !route.is_empty() {
+        assert!(cfg.set("backend", "hetero"));
+        assert!(cfg.set("route", route));
+    }
+    cfg
+}
+
+#[test]
+fn slo_monitoring_is_bit_identical_to_the_untouched_config() {
+    // Arming SLO classes with shedding disarmed (`shed=0`) is pure
+    // monitoring: on the homogeneous backend the served windows and
+    // every digest must match a run whose config never touches the new
+    // knobs, at every pipeline depth — classing re-orders batch
+    // formation (critical first), it never changes what is computed.
+    let clips = clips(8);
+    for depth in [0usize, 2] {
+        let base = Dispatcher::new("m", slo_serving_cfg(depth, "")).run(
+            mock_factory(),
+            &clips,
+            Variant::CodecFlow,
+            2.0,
+        );
+        assert!(base.result_digest != 0, "depth {depth}");
+        assert!(!base.slo.any(), "untouched config reports no slo line");
+        let armed_cfg = {
+            let mut c = slo_serving_cfg(depth, "");
+            assert!(c.set("slo", "critical:every:2"), "slo spec must parse");
+            assert!(c.set("shed", "0"), "shed knob must parse");
+            c
+        };
+        let armed = Dispatcher::new("m", armed_cfg).run(
+            mock_factory(),
+            &clips,
+            Variant::CodecFlow,
+            2.0,
+        );
+        assert_eq!(armed.result_digest, base.result_digest, "depth {depth}");
+        assert_eq!(armed.stream_digests, base.stream_digests, "depth {depth}");
+        assert_eq!(armed.merged.per_stream, base.merged.per_stream, "depth {depth}");
+        // The ledgers partition the stream set: every:2 marks the even
+        // half of the 8 streams critical.
+        assert!(armed.slo.any(), "depth {depth}: slo accounting armed");
+        assert_eq!(armed.slo.critical.streams, 4, "depth {depth}");
+        assert_eq!(armed.slo.besteffort.streams, 4, "depth {depth}");
+        assert_eq!(
+            armed.slo.critical.windows + armed.slo.besteffort.windows,
+            armed.merged.windows(),
+            "depth {depth}: every served window lands in exactly one class"
+        );
+        let text = armed.report("slo-armed");
+        assert!(text.contains("slo: critical[streams=4"), "{text}");
+        assert!(text.contains("degraded_level="), "{text}");
+        assert!(!base.report("untouched").contains("slo:"));
+    }
+}
+
+#[test]
+fn slo_route_cost_digests_reproduce_per_seed_and_depth() {
+    // The cost policy's determinism gate, swept: with the online cost
+    // model routing a heterogeneous pool and SLO classes armed, the
+    // digests legitimately differ from `route=fixed` (quant offload has
+    // a per-stream blast radius) but must be a pure function of
+    // (corpus seed, config): same seed and depth reproduce exactly.
+    for seed in [1u64, 7] {
+        let clips = clips_seeded(8, seed);
+        for depth in [0usize, 2] {
+            let run = || {
+                let mut cfg = slo_serving_cfg(depth, "cost");
+                assert!(cfg.set("slo", "critical:every:2"));
+                Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+            };
+            let a = run();
+            let b = run();
+            assert!(a.result_digest != 0, "seed {seed} depth {depth}");
+            assert_eq!(a.result_digest, b.result_digest, "seed {seed} depth {depth}");
+            assert_eq!(a.stream_digests, b.stream_digests, "seed {seed} depth {depth}");
+            assert_eq!(a.quant_streams, b.quant_streams, "seed {seed} depth {depth}");
+            assert_eq!(a.merged.per_stream, b.merged.per_stream, "seed {seed} depth {depth}");
+            // The pool's per-backend stats partition the served work.
+            assert_eq!(a.backends.len(), 2, "seed {seed} depth {depth}");
+            assert_eq!(
+                a.backends[0].jobs + a.backends[1].jobs,
+                a.merged.windows(),
+                "seed {seed} depth {depth}"
+            );
+            // The online model observed every batch and its fit
+            // accounting reproduces alongside the digests.
+            assert!(a.costmodel.any(), "seed {seed} depth {depth}: model fitted");
+            assert_eq!(a.costmodel.observations, b.costmodel.observations);
+            assert_eq!(a.costmodel.abs_err_s, b.costmodel.abs_err_s);
+            assert!(a.slo.any(), "seed {seed} depth {depth}");
+            assert_eq!(a.slo.critical.streams, 4, "seed {seed} depth {depth}");
+            let text = a.report("cost");
+            assert!(text.contains("costmodel: observations="), "{text}");
+            assert!(text.contains("slo: critical["), "{text}");
+        }
+    }
+}
+
+#[test]
+fn slo_knob_defaults_are_noops_for_fixed_and_codec_routing() {
+    // The pre-existing policies must be untouched by this PR's knobs:
+    // for both `route=fixed` and `route=codec` on the heterogeneous
+    // pool, a run with `shed=1` and `predict=1` set explicitly through
+    // the CLI surface (their defaults) and `slo=` left disarmed is
+    // bit-identical to a run whose config never mentions them.
+    let clips = clips(8);
+    for route in ["fixed", "codec"] {
+        let bare = Dispatcher::new("m", slo_serving_cfg(2, route)).run(
+            mock_factory(),
+            &clips,
+            Variant::CodecFlow,
+            2.0,
+        );
+        let explicit_cfg = {
+            let mut c = slo_serving_cfg(2, route);
+            assert!(c.set("shed", "1"), "shed knob must parse");
+            assert!(c.set("predict", "1"), "predict knob must parse");
+            c
+        };
+        let explicit = Dispatcher::new("m", explicit_cfg).run(
+            mock_factory(),
+            &clips,
+            Variant::CodecFlow,
+            2.0,
+        );
+        assert_eq!(explicit.result_digest, bare.result_digest, "route {route}");
+        assert_eq!(explicit.stream_digests, bare.stream_digests, "route {route}");
+        assert_eq!(explicit.quant_streams, bare.quant_streams, "route {route}");
+        assert!(!explicit.slo.any(), "route {route}: disarmed slo stays silent");
+        assert!(!explicit.report(route).contains("slo:"), "route {route}");
+    }
+}
+
+#[test]
+fn slo_classing_composes_with_injected_faults_bit_identically() {
+    // SLO classing and fault containment share the queue (shedding
+    // drops windows; quarantine purges them), so their composition is
+    // the hazard. With classing armed in monitoring form (`shed=0`)
+    // under a seeded fault plan: the shard survives, the quarantine
+    // set and every stream digest are bit-identical to the same
+    // faulted run without the SLO knobs, the class ledgers still
+    // account every served window, and the composition reproduces.
+    // CI re-runs this under other plans by exporting `CF_FAULT`.
+    let spec = std::env::var("CF_FAULT")
+        .unwrap_or_else(|_| "streams:1+4+6,kind:permanent,nth:1".to_string());
+    let clips = clips(8);
+    let plain = Dispatcher::new("m", fault_cfg(2, 2, &spec)).run(
+        mock_factory(),
+        &clips,
+        Variant::CodecFlow,
+        2.0,
+    );
+    let armed = || {
+        let mut cfg = fault_cfg(2, 2, &spec);
+        assert!(cfg.set("slo", "critical:every:2"));
+        assert!(cfg.set("shed", "0"));
+        Dispatcher::new("m", cfg).run(mock_factory(), &clips, Variant::CodecFlow, 2.0)
+    };
+    let composed = armed();
+    assert_eq!(composed.dead_shards, 0, "the shard outlives the composition");
+    assert_eq!(composed.result_digest, plain.result_digest);
+    assert_eq!(composed.stream_digests, plain.stream_digests);
+    let q_plain: Vec<u64> = plain.faults.quarantined.keys().copied().collect();
+    let q_composed: Vec<u64> = composed.faults.quarantined.keys().copied().collect();
+    assert_eq!(q_composed, q_plain, "classing never widens the blast radius");
+    assert!(composed.slo.any());
+    assert_eq!(
+        composed.slo.critical.windows + composed.slo.besteffort.windows,
+        composed.merged.windows(),
+        "every window that survived the faults is classed"
+    );
+    assert!(composed.report("composed").contains("slo: critical["));
+    let again = armed();
+    assert_eq!(again.result_digest, composed.result_digest, "composition reproduces");
+}
+
 #[test]
 fn kv_compress_composes_with_quarantine_under_injected_faults() {
     // Compression and fault containment share the KV pool (merging
